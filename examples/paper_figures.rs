@@ -1,0 +1,21 @@
+//! Regenerate every table and figure of the paper's evaluation in one go
+//! (equivalent to `cannikin figures --fig all`); CSVs land in results/.
+//!
+//!     cargo run --release --example paper_figures
+
+use cannikin::figures;
+
+fn main() -> anyhow::Result<()> {
+    figures::overlap_trace()?;
+    figures::fig6()?;
+    figures::fig9()?;
+    figures::fig10()?;
+    figures::table5()?;
+    figures::prediction_error()?;
+    figures::cluster_c_study()?;
+    figures::fig5()?;
+    figures::fig7()?;
+    figures::fig8()?;
+    println!("\nall figure data written under results/");
+    Ok(())
+}

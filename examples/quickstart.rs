@@ -1,0 +1,49 @@
+//! Quickstart: model a heterogeneous cluster, solve OptPerf, and watch
+//! Cannikin learn the same answer online from noisy measurements.
+//!
+//!     cargo run --release --example quickstart
+
+use cannikin::baselines::System;
+use cannikin::cluster;
+use cannikin::coordinator::{BatchPolicy, CannikinPlanner};
+use cannikin::optperf;
+use cannikin::simulator::{workload, ClusterSim};
+
+fn main() -> anyhow::Result<()> {
+    // paper Table 2's 3-GPU heterogeneous cluster + the ResNet-50 profile
+    let cluster = cluster::cluster_a();
+    let w = workload::imagenet();
+    println!(
+        "cluster {:?}: {} nodes, heterogeneity {:.2}x",
+        cluster.name,
+        cluster.n(),
+        cluster.heterogeneity()
+    );
+
+    // 1. the oracle answer: OptPerf from the true performance models
+    let truth = w.cluster_model(&cluster);
+    let total = 128.0;
+    let opt = optperf::solve(&truth, total)?;
+    println!("\ntrue OptPerf at B={total}: {:.4}s, state {:?}", opt.t_pred, opt.state);
+    for (node, b) in cluster.nodes.iter().zip(&opt.batch_sizes) {
+        println!("  {:<12} b = {:>6.2}", node.device.name, b);
+    }
+
+    // 2. Cannikin learns it online from noisy per-batch measurements
+    let mut planner =
+        CannikinPlanner::new(cluster.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Fixed(128));
+    let mut sim = ClusterSim::new(&cluster, &w, 0);
+    println!("\nonline learning (even split -> OptPerf):");
+    for epoch in 0..6 {
+        let plan = planner.plan_epoch(epoch, 0.0);
+        let mut mean = 0.0;
+        for _ in 0..8 {
+            let out = sim.step(&plan.local_f64());
+            planner.observe_epoch(&out.per_node, out.t_batch);
+            mean += out.t_batch / 8.0;
+        }
+        println!("  epoch {epoch}: local={:?}  t_batch={mean:.4}s", plan.local);
+    }
+    println!("\n(true OptPerf {:.4}s — reached by epoch 3, as in paper Fig. 9)", opt.t_pred);
+    Ok(())
+}

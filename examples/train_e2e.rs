@@ -1,0 +1,84 @@
+//! **End-to-end driver** (the session's required validation): train the
+//! AOT-compiled transformer LM for a few hundred real steps of
+//! data-parallel SGD across a simulated-speed heterogeneous cluster, with
+//! every layer composed:
+//!
+//!   Pallas kernels (L1) → JAX grad/apply steps (L2, AOT HLO) → PJRT CPU
+//!   execution ← bucketed ring all-reduce + Eq. 9 aggregation ← Theorem
+//!   4.1 GNS ← OptPerf planner (L3).
+//!
+//! Prereq: `make artifacts` (tiny preset; pass --artifacts for others).
+//! Logs the loss curve to results/train_e2e.jsonl and prints it here.
+//! The run is recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example train_e2e [-- --epochs 12 --steps 25]
+
+use std::path::PathBuf;
+
+use cannikin::cluster;
+use cannikin::coordinator::{train, BatchPolicy, TrainConfig};
+use cannikin::metrics::results_dir;
+use cannikin::simulator::workload;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |key: &str, default: &str| -> String {
+        args.iter()
+            .position(|a| a == &format!("--{key}"))
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    };
+
+    let mut cfg = TrainConfig::quick(
+        PathBuf::from(get("artifacts", "artifacts/tiny")),
+        cluster::cluster_a(),
+        workload::librispeech(), // per-sample-dominated profile: batch spreads across nodes
+    );
+    cfg.epochs = get("epochs", "12").parse()?;
+    cfg.steps_per_epoch = get("steps", "25").parse()?;
+    cfg.lr = 0.08;
+    cfg.corpus_bytes = 128 * 1024;
+    cfg.policy = BatchPolicy::Adaptive;
+    cfg.log_path = Some(results_dir().join("train_e2e.jsonl"));
+    cfg.verbose = true;
+
+    println!(
+        "end-to-end: {} epochs x {} steps on {} workers ({} total steps)\n",
+        cfg.epochs,
+        cfg.steps_per_epoch,
+        cfg.cluster.n(),
+        cfg.epochs * cfg.steps_per_epoch
+    );
+    let report = train(&cfg)?;
+
+    // ASCII loss curve
+    println!("\nloss curve (per-step training loss):");
+    let curve = &report.loss_curve;
+    let max = curve.iter().cloned().fold(f32::MIN, f32::max);
+    let min = curve.iter().cloned().fold(f32::MAX, f32::min);
+    let cols = 64usize;
+    let stride = (curve.len() as f64 / cols as f64).max(1.0);
+    let mut plot = String::new();
+    for row in (0..12).rev() {
+        let lo = min + (max - min) * row as f32 / 12.0;
+        let hi = min + (max - min) * (row + 1) as f32 / 12.0;
+        plot.push_str(&format!("{:>7.3} |", hi));
+        for cidx in 0..cols {
+            let i = ((cidx as f64) * stride) as usize;
+            let v = curve[i.min(curve.len() - 1)];
+            plot.push(if v >= lo && v < hi { '*' } else { ' ' });
+        }
+        plot.push('\n');
+    }
+    println!("{plot}        +{}", "-".repeat(cols));
+    println!(
+        "first loss {:.4} -> last loss {:.4} (eval {:.4}); {:.1}s wall",
+        curve.first().unwrap(),
+        curve.last().unwrap(),
+        report.epochs.last().unwrap().eval_loss,
+        report.real_secs
+    );
+    println!("step log: {}", results_dir().join("train_e2e.jsonl").display());
+    Ok(())
+}

@@ -1,0 +1,151 @@
+"""AOT pipeline: lower the L2 model entry points to HLO **text** + manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the rust side's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/load_hlo).
+
+Outputs (per --out dir):
+  init_params.hlo.txt            (seed:i32) -> tuple(params...)
+  grad_step_b{N}.hlo.txt         (params..., tokens[N,S+1]:i32, weights[N]:f32)
+                                 -> tuple(loss, |g|^2, grads...)
+  apply_step.hlo.txt             (params..., momenta..., grads..., lr:f32)
+                                 -> tuple(params'..., momenta'...)
+  eval_step_b{N}.hlo.txt         (params..., tokens, weights) -> tuple(loss,)
+  manifest.json                  parameter schema, buckets, file map
+
+XLA executables are static-shape, so grad/eval are lowered once per batch
+bucket; the rust HeteroDataLoader pads local batches up to the nearest
+bucket with weight-0 rows (numerically exact — see model.py docstring).
+
+Usage: python -m compile.aot --preset tiny --out ../artifacts/tiny
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+DEFAULT_BUCKETS = {
+    "tiny": [1, 2, 4, 8],
+    "small": [1, 2, 4, 8, 16, 32],
+    "base": [1, 2, 4, 8, 16, 32, 64],
+    "gpt100m": [1, 2, 4, 8, 16, 32, 64],
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_and_write(fn, example_args, path: str) -> int:
+    text = to_hlo_text(jax.jit(fn).lower(*example_args))
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def build(preset: str, out_dir: str, buckets) -> dict:
+    cfg = M.PRESETS[preset]
+    os.makedirs(out_dir, exist_ok=True)
+    schema = M.param_schema(cfg)
+    p_specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in schema]
+    seed_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    lr_spec = jax.ShapeDtypeStruct((), jnp.float32)
+
+    files: dict = {"grad": {}, "eval": {}}
+
+    # init_params
+    files["init"] = "init_params.hlo.txt"
+    lower_and_write(
+        lambda seed: tuple(M.init_params(cfg, seed)),
+        (seed_spec,),
+        os.path.join(out_dir, files["init"]),
+    )
+
+    # grad_step / eval_step per bucket
+    for b in buckets:
+        tok = jax.ShapeDtypeStruct((b, cfg.seq_len + 1), jnp.int32)
+        wts = jax.ShapeDtypeStruct((b,), jnp.float32)
+
+        def gstep(*args):
+            params = list(args[: len(p_specs)])
+            tokens, weights = args[len(p_specs)], args[len(p_specs) + 1]
+            return M.grad_step(cfg, params, tokens, weights)
+
+        name = f"grad_step_b{b}.hlo.txt"
+        files["grad"][str(b)] = name
+        lower_and_write(gstep, (*p_specs, tok, wts), os.path.join(out_dir, name))
+
+        def estep(*args):
+            params = list(args[: len(p_specs)])
+            tokens, weights = args[len(p_specs)], args[len(p_specs) + 1]
+            return (M.eval_step(cfg, params, tokens, weights),)
+
+        name = f"eval_step_b{b}.hlo.txt"
+        files["eval"][str(b)] = name
+        lower_and_write(estep, (*p_specs, tok, wts), os.path.join(out_dir, name))
+
+    # apply_step
+    def astep(*args):
+        n = len(p_specs)
+        params = list(args[:n])
+        momenta = list(args[n : 2 * n])
+        grads = list(args[2 * n : 3 * n])
+        lr = args[3 * n]
+        return M.apply_step(cfg, params, momenta, grads, lr)
+
+    files["apply"] = "apply_step.hlo.txt"
+    lower_and_write(
+        astep, (*p_specs, *p_specs, *p_specs, lr_spec), os.path.join(out_dir, files["apply"])
+    )
+
+    manifest = {
+        "preset": preset,
+        "config": dataclasses.asdict(cfg),
+        "n_params": int(M.n_params(cfg)),
+        "params": [
+            {"name": n, "shape": list(s), "dtype": "f32"} for n, s in schema
+        ],
+        "buckets": list(buckets),
+        "token_dtype": "i32",
+        "artifacts": files,
+        "grad_step_outputs": ["loss", "sqnorm", "grads"],
+        "optimizer": {"kind": "sgd_momentum", "momentum": 0.9},
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="tiny", choices=sorted(M.PRESETS))
+    ap.add_argument("--out", default="../artifacts/tiny")
+    ap.add_argument("--buckets", default=None, help="comma list, e.g. 1,2,4,8")
+    args = ap.parse_args()
+    buckets = (
+        [int(x) for x in args.buckets.split(",")]
+        if args.buckets
+        else DEFAULT_BUCKETS[args.preset]
+    )
+    manifest = build(args.preset, args.out, buckets)
+    n = manifest["n_params"]
+    print(f"wrote {args.out}: preset={args.preset} params={n:,} buckets={buckets}")
+
+
+if __name__ == "__main__":
+    main()

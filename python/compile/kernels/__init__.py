@@ -1,0 +1,4 @@
+# L1: Pallas kernels for the paper's compute hot-spots (interpret=True).
+from .attention import attention  # noqa: F401
+from .fused_linear import fused_linear  # noqa: F401
+from .sqnorm import sqnorm, sqnorm_tree  # noqa: F401

@@ -1,0 +1,115 @@
+"""L1 Pallas kernel: tiled causal self-attention (flash-attention style).
+
+The grid walks (batch*heads, Sq/bq) query tiles.  Each program streams key /
+value tiles through VMEM with an online-softmax accumulator, so the (S, S)
+score matrix never materializes in HBM — the TPU re-think of the CUDA
+flash-attention threadblock loop: BlockSpec + an in-kernel fori_loop express
+the HBM->VMEM schedule, and the two matmuls per tile target the MXU.
+
+interpret=True for CPU-PJRT executability (see fused_linear.py).  Backward
+is a custom_vjp in plain jnp (rematerializes scores per standard practice).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BQ = 64
+_BK = 64
+_NEG_INF = -1e30
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is <= target (keeps the grid exact)."""
+    if dim <= target:
+        return dim
+    for cand in range(target, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+# BlockSpec blocks carry a leading singleton (batch*head) dim; index it away.
+def _attn_kernel3(q_ref, k_ref, v_ref, o_ref, *, scale, bk, seq):
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    bq, d = q.shape
+    qi = pl.program_id(1)
+    q_off = qi * bq
+    qs = q * scale
+
+    def body(j, carry):
+        acc, m_prev, l_prev = carry
+        k_tile = jax.lax.dynamic_slice_in_dim(k, j * bk, bk, axis=0)
+        v_tile = jax.lax.dynamic_slice_in_dim(v, j * bk, bk, axis=0)
+        s = jnp.dot(qs, k_tile.T, preferred_element_type=jnp.float32)
+        rows = q_off + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(cols <= rows, s, _NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = l_prev * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + jnp.dot(p, v_tile, preferred_element_type=jnp.float32)
+        return acc, m_cur, l_cur
+
+    n_kv = seq // bk
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m0 = jnp.full((bq,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_kv, body, (acc0, m0, l0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def attention_fwd3(q, k, v):
+    bh, s, d = q.shape
+    bq = _pick_block(s, _BQ)
+    bk = _pick_block(s, _BK)
+    scale = 1.0 / (d ** 0.5)
+    grid = (bh, s // bq)
+    return pl.pallas_call(
+        functools.partial(_attn_kernel3, scale=scale, bk=bk, seq=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+@jax.custom_vjp
+def attention(q, k, v):
+    """Causal flash attention with jnp backward.  (bh, s, d) -> (bh, s, d)."""
+    return attention_fwd3(q, k, v)
+
+
+def _ref_attn(q, k, v):
+    bh, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None], scores, _NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def _attn_vjp_fwd(q, k, v):
+    return attention_fwd3(q, k, v), (q, k, v)
+
+
+def _attn_vjp_bwd(res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(_ref_attn, q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_attn_vjp_fwd, _attn_vjp_bwd)

@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: fused linear layer (matmul + bias + optional GELU).
+
+This is the MLP hot-spot of the L2 transformer.  The kernel is tiled for a
+TPU-style memory hierarchy: the grid walks (M/bm, N/bn) output tiles, each
+program holds a (bm, K) LHS block and a (K, bn) RHS block in VMEM
+(BlockSpec), accumulates in f32, then applies bias + activation in-register
+before the single store to HBM.  This is the TPU re-think of the CUDA
+"fused epilogue" pattern: instead of a threadblock + shared-memory staging,
+BlockSpec expresses the HBM->VMEM schedule and the MXU consumes whole
+(bm, K)x(K, bn) tiles.
+
+Run with interpret=True everywhere in this repo: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that the
+rust runtime executes.  Gradients flow through a custom_vjp whose backward
+pass is expressed in jnp (standard practice: Pallas forward, XLA backward).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes.  Last dim 128 matches the TPU lane width / MXU edge; the
+# sublane dim is kept small so tiny models still tile.
+_BM = 128
+_BN = 128
+
+
+def _gelu(x):
+    # tanh approximation, matches jax.nn.gelu(approximate=True)
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x * x * x)))
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    x = x_ref[...]
+    w = w_ref[...]
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if activation == "gelu":
+        acc = _gelu(acc)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is <= target (keeps the grid exact)."""
+    if dim <= target:
+        return dim
+    for cand in range(target, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def fused_linear_fwd(x, w, b, activation: str = "gelu"):
+    """y = act(x @ w + b) via the Pallas kernel.  x: (m, k), w: (k, n)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm = _pick_block(m, _BM)
+    bn = _pick_block(n, _BN)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, activation: str = "gelu"):
+    return fused_linear_fwd(x, w, b, activation)
+
+
+def _vjp_fwd(x, w, b, activation):
+    return fused_linear_fwd(x, w, b, activation), (x, w, b)
+
+
+def _vjp_bwd(activation, res, g):
+    # Backward in plain jnp: rematerialize the pre-activation, chain rule.
+    x, w, b = res
+    z = jnp.dot(x, w) + b[None, :]
+    if activation == "gelu":
+        t = jnp.tanh(0.7978845608028654 * (z + 0.044715 * z * z * z))
+        dz = 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * 0.7978845608028654 * (
+            1.0 + 3 * 0.044715 * z * z
+        )
+        g = g * dz
+    dx = jnp.dot(g, w.T)
+    dw = jnp.dot(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package has a reference here; pytest asserts
+allclose(kernel, ref) across a shape/dtype sweep (python/tests/).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gelu_ref(x):
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x * x * x)))
+
+
+def fused_linear_ref(x, w, b, activation: str = "gelu"):
+    y = jnp.dot(x, w) + b[None, :]
+    if activation == "gelu":
+        y = gelu_ref(y)
+    return y
+
+
+def attention_ref(q, k, v):
+    """Causal softmax attention, (bh, s, d)."""
+    bh, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def sqnorm_ref(x):
+    return jnp.sum(jnp.asarray(x, jnp.float32) ** 2)

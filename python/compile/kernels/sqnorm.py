@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: chunked squared-L2-norm reduction.
+
+Computes sum(x*x) over a flat vector, tiled so each program reduces one
+VMEM-resident chunk and accumulates into a scalar output across the
+(sequential) grid.  Used by the L2 grad_step to produce the local |g_i|^2
+the heterogeneous GNS estimators (paper Eq. 10) consume.
+
+No custom_vjp: the kernel is only applied to gradients (no higher-order
+differentiation on this path).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_CHUNK = 4096
+
+
+def _kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0] = jnp.float32(0.0)
+
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[0] += jnp.sum(x * x)
+
+
+def _pick_block(dim: int, target: int) -> int:
+    if dim <= target:
+        return dim
+    for cand in range(target, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def sqnorm(x):
+    """sum(x**2) as f32 scalar via the Pallas reduction kernel."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    chunk = _pick_block(n, _CHUNK)
+    grid = (n // chunk,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((chunk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(flat)
+    return out[0]
+
+
+def sqnorm_tree(tree) -> jnp.ndarray:
+    """Total squared norm across a pytree of arrays."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = jnp.float32(0.0)
+    for leaf in leaves:
+        total = total + sqnorm(leaf)
+    return total

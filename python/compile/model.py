@@ -1,0 +1,199 @@
+"""L2: the DNN being trained — a GPT-style transformer LM in JAX.
+
+This is the model the Cannikin coordinator trains data-parallel across
+heterogeneous (simulated-speed, real-numerics) workers.  Everything here is
+build-time Python: `aot.py` lowers the four entry points to HLO text and the
+rust runtime executes them; Python never runs on the training hot path.
+
+Entry points (all pure functions over flat parameter lists):
+  * init_params(seed)                      -> params
+  * grad_step(params, tokens, weights)     -> (loss, |g|^2, grads...)
+  * apply_step(params, momenta, grads, lr) -> (params', momenta')
+  * eval_step(params, tokens, weights)     -> loss
+
+Parameters travel as a *flat list* of arrays (manifest.json records names,
+shapes, dtypes and order) so the rust side can treat them as opaque literals.
+
+`grad_step` takes per-sample weights so a worker whose local batch b_i is
+smaller than the compiled bucket size can pad with weight-0 rows: the loss
+is the weighted mean over real samples, hence the padded gradient equals the
+unpadded local mean gradient g_i exactly (paper Eq. 1) — pytest-verified.
+The |g|^2 output (via the Pallas sqnorm kernel) feeds the heterogeneous GNS
+estimators (paper Eq. 10).
+
+Hot spots call the L1 Pallas kernels: fused_linear for the MLP, the tiled
+causal-attention kernel, and the chunked sqnorm reduction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention, fused_linear, sqnorm_tree
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256          # byte-level tokenizer
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    seq_len: int = 64
+    mlp_mult: int = 4
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return self.d_model * self.mlp_mult
+
+
+PRESETS = {
+    # tiny: CI / pytest / cargo-test artifact set (fast to lower & execute)
+    "tiny": ModelConfig(vocab=256, d_model=64, n_layers=2, n_heads=2, seq_len=32),
+    # small: the end-to-end example's model (~1.6M params)
+    "small": ModelConfig(vocab=256, d_model=192, n_layers=4, n_heads=6, seq_len=96),
+    # base: ~12.9M params — heavier demo runs
+    "base": ModelConfig(vocab=256, d_model=512, n_layers=8, n_heads=8, seq_len=128),
+    # gpt100m: ~106M params (d=768, L=12 — GPT-2-small scale).  Compiles;
+    # only run it if you have the patience for CPU XLA at this size.
+    "gpt100m": ModelConfig(vocab=50257, d_model=768, n_layers=12, n_heads=12, seq_len=256),
+}
+
+
+# --------------------------------------------------------------------------
+# Parameter schema
+# --------------------------------------------------------------------------
+
+def param_schema(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the contract shared with rust via the
+    manifest.  Output projection is tied to the embedding."""
+    d, f = cfg.d_model, cfg.d_ff
+    schema: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed", (cfg.vocab, d)),
+        ("pos", (cfg.seq_len, d)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        schema += [
+            (p + "ln1_scale", (d,)),
+            (p + "ln1_bias", (d,)),
+            (p + "wqkv", (d, 3 * d)),
+            (p + "bqkv", (3 * d,)),
+            (p + "wo", (d, d)),
+            (p + "bo", (d,)),
+            (p + "ln2_scale", (d,)),
+            (p + "ln2_bias", (d,)),
+            (p + "w1", (d, f)),
+            (p + "b1", (f,)),
+            (p + "w2", (f, d)),
+            (p + "b2", (d,)),
+        ]
+    schema += [("lnf_scale", (d,)), ("lnf_bias", (d,))]
+    return schema
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_schema(cfg))
+
+
+def init_params(cfg: ModelConfig, seed) -> List[jnp.ndarray]:
+    """Deterministic init from an i32 seed (traced — lowered into the HLO)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_schema(cfg):
+        key, sub = jax.random.split(key)
+        base = name.split(".")[-1]
+        if base.startswith(("ln", "b")) and base != "bqkv" or base in ("lnf_scale", "lnf_bias"):
+            # biases zero, LN scales one
+            init = jnp.ones(shape, jnp.float32) if "scale" in base else jnp.zeros(shape, jnp.float32)
+        elif base == "bqkv":
+            init = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = 0.02 if base in ("embed", "pos") else (2.0 / fan_in) ** 0.5 * 0.5
+            init = jax.random.normal(sub, shape, jnp.float32) * std
+        params.append(init)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward / loss
+# --------------------------------------------------------------------------
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def forward(cfg: ModelConfig, params: List[jnp.ndarray], tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens (b, s) int32 -> logits (b, s, vocab)."""
+    names = [n for n, _ in param_schema(cfg)]
+    p = dict(zip(names, params))
+    b, s = tokens.shape
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+
+    x = p["embed"][tokens] + p["pos"][None, :s, :]
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        hx = _layer_norm(x, p[pre + "ln1_scale"], p[pre + "ln1_bias"])
+        qkv = jnp.dot(hx, p[pre + "wqkv"]) + p[pre + "bqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        # (b, s, d) -> (b*h, s, dh) for the Pallas attention kernel
+        def heads(t):
+            return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+        attn = attention(heads(q), heads(k), heads(v))
+        attn = attn.reshape(b, h, s, dh).transpose(0, 2, 1, 3).reshape(b, s, d)
+        x = x + jnp.dot(attn, p[pre + "wo"]) + p[pre + "bo"]
+        hx = _layer_norm(x, p[pre + "ln2_scale"], p[pre + "ln2_bias"])
+        # Pallas fused matmul+bias+GELU over flattened (b*s, d)
+        ff = fused_linear(hx.reshape(b * s, d), p[pre + "w1"], p[pre + "b1"], "gelu")
+        ff = fused_linear(ff, p[pre + "w2"], p[pre + "b2"], "none")
+        x = x + ff.reshape(b, s, d)
+    x = _layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    return jnp.dot(x, p["embed"].T)  # tied output projection
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, weights) -> jnp.ndarray:
+    """Next-token cross-entropy, weighted mean over samples.
+
+    tokens: (b, seq_len+1) int32; weights: (b,) f32 (0 for padded rows).
+    """
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, params, inp)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]  # (b, s)
+    per_sample = jnp.mean(nll, axis=-1)  # (b,)
+    denom = jnp.maximum(jnp.sum(weights), 1e-6)
+    return jnp.sum(per_sample * weights) / denom
+
+
+def grad_step(cfg: ModelConfig, params, tokens, weights):
+    """-> (loss, |g|^2, *grads).  |g|^2 via the Pallas sqnorm kernel."""
+    loss, grads = jax.value_and_grad(
+        lambda ps: loss_fn(cfg, ps, tokens, weights)
+    )(list(params))
+    sq = sqnorm_tree(grads)
+    return (loss, sq, *grads)
+
+
+def apply_step(cfg: ModelConfig, params, momenta, grads, lr, momentum=0.9):
+    """SGD with momentum.  -> (params'..., momenta'...)."""
+    new_p, new_m = [], []
+    for p, m, g in zip(params, momenta, grads):
+        m2 = momentum * m + g
+        new_m.append(m2)
+        new_p.append(p - lr * m2)
+    return (*new_p, *new_m)
+
+
+def eval_step(cfg: ModelConfig, params, tokens, weights):
+    return loss_fn(cfg, params, tokens, weights)

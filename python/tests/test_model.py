@@ -1,0 +1,126 @@
+"""L2 model tests: shapes, loss semantics, padding equivalence, optimizer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.PRESETS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, 0)
+
+
+def toks(key, b):
+    return jax.random.randint(key, (b, CFG.seq_len + 1), 0, CFG.vocab)
+
+
+def test_param_schema_matches_init(params):
+    schema = M.param_schema(CFG)
+    assert len(schema) == len(params)
+    for (name, shape), p in zip(schema, params):
+        assert tuple(shape) == p.shape, name
+        assert p.dtype == jnp.float32
+
+
+def test_n_params_counts():
+    total = sum(int(np.prod(s)) for _, s in M.param_schema(CFG))
+    assert M.n_params(CFG) == total
+
+
+def test_init_deterministic():
+    a = M.init_params(CFG, 42)
+    b = M.init_params(CFG, 42)
+    c = M.init_params(CFG, 43)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+
+
+def test_forward_shape(params):
+    t = toks(jax.random.PRNGKey(0), 3)[:, :-1]
+    logits = M.forward(CFG, params, t)
+    assert logits.shape == (3, CFG.seq_len, CFG.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_initial_loss_near_uniform(params):
+    """Fresh init => CE close to log(vocab)."""
+    t = toks(jax.random.PRNGKey(1), 8)
+    loss = M.loss_fn(CFG, params, t, jnp.ones(8))
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+
+def test_grad_step_outputs(params):
+    t = toks(jax.random.PRNGKey(2), 4)
+    out = M.grad_step(CFG, params, t, jnp.ones(4))
+    loss, sq, grads = out[0], out[1], out[2:]
+    assert len(grads) == len(params)
+    manual = sum(float(jnp.sum(g.astype(jnp.float32) ** 2)) for g in grads)
+    np.testing.assert_allclose(float(sq), manual, rtol=1e-4)
+    assert float(loss) > 0
+
+
+def test_padding_row_equivalence(params):
+    """weight-0 padded rows must not change loss or grads (bucket contract)."""
+    t4 = toks(jax.random.PRNGKey(3), 4)
+    out4 = M.grad_step(CFG, params, t4, jnp.ones(4))
+    t8 = jnp.concatenate([t4, jnp.zeros_like(t4)])
+    w8 = jnp.concatenate([jnp.ones(4), jnp.zeros(4)])
+    out8 = M.grad_step(CFG, params, t8, w8)
+    np.testing.assert_allclose(out4[0], out8[0], rtol=1e-6)
+    for a, b in zip(out4[2:], out8[2:]):
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=1e-6)
+
+
+def test_weighted_loss_is_weighted_mean(params):
+    t = toks(jax.random.PRNGKey(4), 2)
+    l0 = M.loss_fn(CFG, params, t[:1], jnp.ones(1))
+    l1 = M.loss_fn(CFG, params, t[1:], jnp.ones(1))
+    lw = M.loss_fn(CFG, params, t, jnp.array([3.0, 1.0]))
+    np.testing.assert_allclose(float(lw), (3 * float(l0) + float(l1)) / 4, rtol=1e-5)
+
+
+def test_apply_step_sgd_momentum(params):
+    grads = [jnp.ones_like(p) for p in params]
+    momenta = [jnp.zeros_like(p) for p in params]
+    out = M.apply_step(CFG, params, momenta, grads, jnp.float32(0.1))
+    n = len(params)
+    new_p, new_m = out[:n], out[n:]
+    for p, p2, m2 in zip(params, new_p, new_m):
+        np.testing.assert_allclose(m2, jnp.ones_like(p), rtol=1e-6)
+        np.testing.assert_allclose(p2, p - 0.1, rtol=1e-5, atol=1e-6)
+    # second step accumulates momentum: m = 0.9*1 + 1 = 1.9
+    out2 = M.apply_step(CFG, list(new_p), list(new_m), grads, jnp.float32(0.1))
+    np.testing.assert_allclose(out2[n], 0.9 * 1 + 1, rtol=1e-6)
+
+
+def test_training_reduces_loss(params):
+    """A few SGD steps on a fixed batch must reduce the loss (sanity e2e)."""
+    t = toks(jax.random.PRNGKey(5), 4)
+    w = jnp.ones(4)
+    ps = list(params)
+    ms = [jnp.zeros_like(p) for p in ps]
+    first = None
+    for _ in range(5):
+        out = M.grad_step(CFG, ps, t, w)
+        loss, grads = float(out[0]), list(out[2:])
+        if first is None:
+            first = loss
+        upd = M.apply_step(CFG, ps, ms, grads, jnp.float32(0.05))
+        ps, ms = list(upd[: len(ps)]), list(upd[len(ps) :])
+    final = float(M.loss_fn(CFG, ps, t, w))
+    assert final < first - 0.1, (first, final)
+
+
+def test_eval_step_equals_loss(params):
+    t = toks(jax.random.PRNGKey(6), 4)
+    np.testing.assert_allclose(
+        M.eval_step(CFG, params, t, jnp.ones(4)),
+        M.loss_fn(CFG, params, t, jnp.ones(4)),
+        rtol=1e-6,
+    )

@@ -1,0 +1,32 @@
+//! Bench: bucketed ring all-reduce + Eq. 9 weighted aggregation over
+//! model-sized gradient buffers (the L3 hot path of the real trainer).
+
+use cannikin::benchkit::{report, Bencher};
+use cannikin::gradsync::{aggregate_weighted, ring_all_reduce, sq_norm};
+
+fn main() {
+    let bench = Bencher::new(2, 15);
+    for (workers, len) in [(3usize, 118_528usize), (8, 118_528), (8, 1_600_000)] {
+        let bufs: Vec<Vec<f32>> = (0..workers)
+            .map(|w| (0..len).map(|i| (w * i % 97) as f32).collect())
+            .collect();
+        let r = bench.run(
+            &format!("ring_all_reduce/{workers}w x {len}"),
+            || {
+                let mut b = bufs.clone();
+                ring_all_reduce(&mut b);
+                b
+            },
+        );
+        report(&r);
+        let ratios = vec![1.0 / workers as f64; workers];
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let mut out = vec![0.0f32; len];
+        let r = bench.run(&format!("aggregate_weighted/{workers}w x {len}"), || {
+            aggregate_weighted(&refs, &ratios, &mut out);
+        });
+        report(&r);
+        let r = bench.run(&format!("sq_norm/{len}"), || sq_norm(&bufs[0]));
+        report(&r);
+    }
+}

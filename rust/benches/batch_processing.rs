@@ -1,0 +1,26 @@
+//! Bench: Fig. 10 end-to-end — batch-time evaluation of the four systems
+//! across the batch-size sweep (the harness that regenerates the figure),
+//! plus per-step simulator throughput.
+
+use cannikin::benchkit::{report, Bencher};
+use cannikin::cluster;
+use cannikin::figures;
+use cannikin::optperf;
+use cannikin::simulator::{workload, ClusterSim};
+
+fn main() {
+    let b = Bencher::new(2, 10);
+    let c = cluster::cluster_b();
+    let w = workload::imagenet();
+    let model = w.cluster_model(&c);
+
+    let r = b.run("fig10/full-figure (5 workloads x 8 B x 4 systems)", || {
+        figures::fig10().unwrap()
+    });
+    report(&r);
+
+    let alloc = optperf::solve(&model, 1024.0).unwrap();
+    let mut sim = ClusterSim::new(&c, &w, 3);
+    let r = b.run("simulator/step/16-node", || sim.step(&alloc.batch_sizes));
+    report(&r);
+}

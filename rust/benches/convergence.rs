@@ -1,0 +1,29 @@
+//! Bench: Fig. 8 end-to-end — full convergence-time comparison for one
+//! workload (the figure harness row), plus the raw convergence simulator.
+
+use cannikin::baselines::System;
+use cannikin::benchkit::{report, Bencher};
+use cannikin::cluster;
+use cannikin::coordinator::{BatchPolicy, CannikinPlanner};
+use cannikin::figures;
+use cannikin::simulator::workload;
+
+fn main() {
+    let b = Bencher::new(1, 5);
+    let c = cluster::cluster_b();
+    let w = workload::cifar10();
+    let r = b.run("fig8/one-row (cifar10, 4 systems)", || {
+        for mut sys in [
+            Box::new(CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive))
+                as Box<dyn System>,
+        ] {
+            figures::run_system(&c, &w, sys.as_mut(), 2000, 3);
+        }
+    });
+    report(&r);
+    let mut sys = CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+    let r = b.run("run_system/cannikin/cifar10/2000-epochs", || {
+        figures::run_system(&c, &w, &mut sys, 2000, 3)
+    });
+    report(&r);
+}

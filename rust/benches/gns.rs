@@ -1,0 +1,24 @@
+//! Bench: heterogeneous GNS estimation (Theorem 4.1) — the per-step cost
+//! of the optimal-weight computation (matrix build + inversion) vs naive
+//! averaging, across cluster sizes.
+
+use cannikin::benchkit::{report, Bencher};
+use cannikin::gns;
+use cannikin::util::rng::Rng;
+
+fn main() {
+    let bench = Bencher::new(5, 50);
+    for n in [3usize, 16, 64, 128] {
+        let mut rng = Rng::new(7);
+        let b: Vec<f64> = (0..n).map(|_| 4.0 + rng.below(60) as f64).collect();
+        let gsq: Vec<f64> = (0..n).map(|_| 1.0 + rng.f64()).collect();
+        let r = bench.run(&format!("gns/thm4.1/n={n}"), || {
+            gns::estimate_round(&b, &gsq, 1.2).unwrap()
+        });
+        report(&r);
+        let r = bench.run(&format!("gns/naive/n={n}"), || {
+            gns::estimate_round_naive(&b, &gsq, 1.2).unwrap()
+        });
+        report(&r);
+    }
+}

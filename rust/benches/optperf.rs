@@ -1,0 +1,35 @@
+//! Bench: Algorithm 1 solve latency vs cluster size — the Table 5
+//! overhead claim's microscopic half.  A full candidate-table build
+//! (the §4.5 init epoch) is also measured.
+
+use cannikin::benchkit::{report, Bencher};
+use cannikin::cluster;
+use cannikin::goodput;
+use cannikin::optperf;
+use cannikin::simulator::workload;
+use cannikin::util::rng::Rng;
+
+fn main() {
+    let b = Bencher::new(5, 50);
+    let w = workload::imagenet();
+    println!("Algorithm 1 (OptPerf solve):");
+    for n in [3usize, 16, 64, 256] {
+        let mut rng = Rng::new(n as u64);
+        let c = cluster::random_cluster(&mut rng, n);
+        let model = w.cluster_model(&c);
+        let r = b.run(&format!("optperf/solve/n={n}/B=4096"), || {
+            optperf::solve(&model, 4096.0).unwrap()
+        });
+        report(&r);
+    }
+    println!("\ncandidate-table build (§4.5 init epoch, 16 nodes):");
+    let c = cluster::cluster_b();
+    let model = w.cluster_model(&c);
+    let cands = goodput::candidates(w.b0, w.b_max, 6);
+    let r = b.run(&format!("optperf/table/{} candidates", cands.len()), || {
+        for &bb in &cands {
+            optperf::solve(&model, bb as f64).unwrap();
+        }
+    });
+    report(&r);
+}

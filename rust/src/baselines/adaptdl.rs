@@ -1,0 +1,142 @@
+//! AdaptDL/Pollux-like baseline: goodput-adaptive **total** batch size,
+//! **even** local split.  The throughput model it maximizes over is the
+//! cluster as it actually behaves under even splits (we grant it a learned
+//! per-node model — generous to the baseline, which makes Cannikin's
+//! measured advantage conservative).  Designed-for-homogeneous: all of its
+//! gain over DDP is total-batch adaptivity; none comes from fixing the
+//! heterogeneity-induced straggling.
+
+use super::{even_split, Plan, System};
+use crate::goodput;
+use crate::optperf;
+use crate::perfmodel::{ClusterModel, CommLearner, ComputeLearner, ComputeObs, GammaEstimator};
+use crate::simulator::NodeBatchObs;
+
+pub struct AdaptDl {
+    n_nodes: usize,
+    b0: u64,
+    b_max: u64,
+    n_buckets: usize,
+    learners: Vec<ComputeLearner>,
+    gamma: GammaEstimator,
+    comm: CommLearner,
+    last_plan: Option<Plan>,
+    /// measured (B, t_batch) fallback throughput points before models fit
+    history: Vec<(u64, f64)>,
+}
+
+impl AdaptDl {
+    pub fn new(n_nodes: usize, b0: u64, b_max: u64, n_buckets: usize) -> Self {
+        AdaptDl {
+            n_nodes,
+            b0,
+            b_max,
+            n_buckets,
+            learners: (0..n_nodes).map(|_| ComputeLearner::new()).collect(),
+            gamma: GammaEstimator::new(n_nodes),
+            comm: CommLearner::new(),
+            last_plan: None,
+            history: Vec::new(),
+        }
+    }
+
+    fn cluster_model(&self) -> Option<ClusterModel> {
+        // same identifiability handling as Cannikin (generous baseline):
+        // unfit nodes borrow the mean of fitted nodes until they have data
+        let fits: Vec<Option<crate::perfmodel::ComputeModel>> =
+            self.learners.iter().map(|l| l.fit()).collect();
+        let fitted: Vec<_> = fits.iter().filter_map(|f| *f).collect();
+        if fitted.len() * 2 < self.n_nodes {
+            return None;
+        }
+        let mean = crate::perfmodel::ComputeModel {
+            q: fitted.iter().map(|m| m.q).sum::<f64>() / fitted.len() as f64,
+            s: fitted.iter().map(|m| m.s).sum::<f64>() / fitted.len() as f64,
+            k: fitted.iter().map(|m| m.k).sum::<f64>() / fitted.len() as f64,
+            m: fitted.iter().map(|m| m.m).sum::<f64>() / fitted.len() as f64,
+        };
+        let nodes: Vec<_> = fits.into_iter().map(|f| f.unwrap_or(mean)).collect();
+        Some(ClusterModel {
+            nodes,
+            gamma: self.gamma.fused()?,
+            t_comm: self.comm.t_comm()?,
+            n_buckets: self.n_buckets,
+        })
+    }
+}
+
+impl System for AdaptDl {
+    fn name(&self) -> &'static str {
+        "adaptdl"
+    }
+
+    fn plan_epoch(&mut self, epoch: usize, phi: f64) -> Plan {
+        // bootstrap: grow B geometrically so the learners see distinct
+        // batches on every node (same schedule as Cannikin's bootstrap)
+        let model_opt = if epoch >= 2 { self.cluster_model() } else { None };
+        let total = if epoch < 2 || model_opt.is_none() {
+            ((self.b0 as f64 * 4f64.powi(epoch.min(8) as i32)) as u64).min(self.b_max)
+        } else if let Some(model) = model_opt {
+            let cands = goodput::candidates(self.b0, self.b_max, 6);
+            let (best, _) = goodput::select(phi, self.b0, &cands, |b| {
+                let local = even_split(b, self.n_nodes);
+                let lf: Vec<f64> = local.iter().map(|&x| x as f64).collect();
+                optperf::predict_batch_time(&model, &lf)
+            });
+            best.batch
+        } else {
+            self.b0
+        };
+        let plan = Plan {
+            total,
+            local: even_split(total, self.n_nodes),
+            overhead: 0.0,
+        };
+        self.last_plan = Some(plan.clone());
+        plan
+    }
+
+    fn observe_epoch(&mut self, obs: &[NodeBatchObs], t_batch: f64) {
+        for (i, o) in obs.iter().enumerate() {
+            if o.b > 0.0 {
+                self.learners[i].observe(ComputeObs { b: o.b, a: o.a_time, p: o.p_time });
+                self.gamma.observe(i, o.gamma_obs);
+                self.comm.observe(o.t_comm_obs);
+            }
+        }
+        if let Some(p) = &self.last_plan {
+            self.history.push((p.total, t_batch));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster;
+    use crate::simulator::{workload, ClusterSim};
+
+    #[test]
+    fn adaptdl_grows_batch_as_phi_grows() {
+        let c = cluster::cluster_b();
+        let w = workload::cifar10();
+        let mut sys = AdaptDl::new(c.n(), w.b0, w.b_max, w.n_buckets);
+        let mut sim = ClusterSim::new(&c, &w, 1);
+        let mut chosen = Vec::new();
+        let mut phi = w.phi0;
+        for e in 0..8 {
+            let plan = sys.plan_epoch(e, phi);
+            let out = sim.step(&plan.local_f64());
+            sys.observe_epoch(&out.per_node, out.t_batch);
+            chosen.push(plan.total);
+            phi *= 2.0;
+        }
+        // batch grows with phi once models are fit
+        assert!(chosen.last().unwrap() > &chosen[0], "{chosen:?}");
+        // even split always
+        let plan = sys.plan_epoch(9, phi);
+        let max = plan.local.iter().max().unwrap();
+        let min = plan.local.iter().min().unwrap();
+        assert!(max - min <= 1);
+    }
+}

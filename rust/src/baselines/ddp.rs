@@ -1,0 +1,56 @@
+//! PyTorch-DistributedDataParallel-like baseline: fixed total batch size,
+//! even split across (assumed homogeneous) nodes.  Its cost in a
+//! heterogeneous cluster is pure straggling: every batch runs at the
+//! slowest node's pace (paper Fig. 8's worst performer).
+
+use super::{even_split, Plan, System};
+use crate::simulator::NodeBatchObs;
+
+pub struct Ddp {
+    n_nodes: usize,
+    total: u64,
+}
+
+impl Ddp {
+    /// Standard DDP usage: per-GPU batch `b0` replicated on every node.
+    pub fn new(n_nodes: usize, per_gpu_batch: u64) -> Self {
+        Ddp { n_nodes, total: per_gpu_batch * n_nodes as u64 }
+    }
+
+    /// Explicit fixed total batch.
+    pub fn with_total(n_nodes: usize, total: u64) -> Self {
+        Ddp { n_nodes, total }
+    }
+}
+
+impl System for Ddp {
+    fn name(&self) -> &'static str {
+        "pytorch-ddp"
+    }
+
+    fn plan_epoch(&mut self, _epoch: usize, _phi: f64) -> Plan {
+        Plan {
+            total: self.total,
+            local: even_split(self.total, self.n_nodes),
+            overhead: 0.0,
+        }
+    }
+
+    fn observe_epoch(&mut self, _obs: &[NodeBatchObs], _t_batch: f64) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ddp_is_static() {
+        let mut d = Ddp::new(4, 32);
+        let p1 = d.plan_epoch(0, 100.0);
+        let p2 = d.plan_epoch(5, 99999.0);
+        assert_eq!(p1.total, 128);
+        assert_eq!(p1.local, p2.local);
+        assert_eq!(p1.local, vec![32, 32, 32, 32]);
+        assert_eq!(p1.overhead, 0.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! LB-BSP baseline (Chen et al., SoCC'20): fixed total batch size; local
+//! batch sizes tuned *iteratively* from per-node throughput measurements
+//! with bounded step size Δ (the paper evaluates Δ = 5).  Converges toward
+//! equal per-node compute times but (a) needs many epochs to get there
+//! (paper Fig. 9: >10 vs Cannikin's 3) and (b) ignores the
+//! compute/communication overlap, so its fixed point is OptPerf-suboptimal
+//! whenever communication matters (paper Fig. 10).
+
+use super::{even_split, Plan, System};
+use crate::simulator::NodeBatchObs;
+use crate::util::round_preserving_sum;
+
+pub struct LbBsp {
+    n_nodes: usize,
+    total: u64,
+    /// max per-epoch change of any node's local batch (paper: Δ=5)
+    delta: u64,
+    current: Vec<u64>,
+    last_obs: Option<Vec<(f64, f64)>>, // (b, compute_time) per node
+}
+
+impl LbBsp {
+    pub fn new(n_nodes: usize, total: u64, delta: u64) -> Self {
+        LbBsp {
+            n_nodes,
+            total,
+            delta,
+            current: even_split(total, n_nodes),
+            last_obs: None,
+        }
+    }
+
+    /// Change the fixed total batch size (adaptive-batch-size scenario of
+    /// Fig. 10): LB-BSP rescales its current split proportionally, then
+    /// keeps iterating — it has no prediction for the new optimum.
+    pub fn set_total(&mut self, total: u64) {
+        let old: f64 = self.current.iter().sum::<u64>() as f64;
+        let scaled: Vec<f64> = self
+            .current
+            .iter()
+            .map(|&b| b as f64 / old * total as f64)
+            .collect();
+        self.current = round_preserving_sum(&scaled, total);
+        self.total = total;
+    }
+}
+
+impl System for LbBsp {
+    fn name(&self) -> &'static str {
+        "lb-bsp"
+    }
+
+    fn plan_epoch(&mut self, _epoch: usize, _phi: f64) -> Plan {
+        if let Some(obs) = &self.last_obs {
+            // desired allocation: proportional to measured throughput b/t
+            let thpt: Vec<f64> = obs
+                .iter()
+                .map(|&(b, t)| if t > 0.0 && b > 0.0 { b / t } else { 1.0 })
+                .collect();
+            let s: f64 = thpt.iter().sum();
+            let desired: Vec<f64> =
+                thpt.iter().map(|&x| x / s * self.total as f64).collect();
+            // bounded move: at most Δ per node per epoch
+            let mut next: Vec<f64> = self
+                .current
+                .iter()
+                .zip(&desired)
+                .map(|(&cur, &want)| {
+                    let cur = cur as f64;
+                    let step = (want - cur).clamp(-(self.delta as f64), self.delta as f64);
+                    (cur + step).max(0.0)
+                })
+                .collect();
+            // re-normalize to the fixed total
+            let ns: f64 = next.iter().sum();
+            if ns > 0.0 {
+                for x in &mut next {
+                    *x *= self.total as f64 / ns;
+                }
+            }
+            self.current = round_preserving_sum(&next, self.total);
+        }
+        Plan { total: self.total, local: self.current.clone(), overhead: 0.0 }
+    }
+
+    fn observe_epoch(&mut self, obs: &[NodeBatchObs], _t_batch: f64) {
+        self.last_obs =
+            Some(obs.iter().map(|o| (o.b, o.a_time + o.p_time)).collect());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster;
+    use crate::simulator::{workload, ClusterSim};
+
+    #[test]
+    fn lbbsp_converges_toward_balanced_compute() {
+        let c = cluster::cluster_a(); // speeds 1.55 / 0.95 / 0.35
+        let w = workload::imagenet();
+        let mut sys = LbBsp::new(c.n(), 128, 5);
+        let mut sim = ClusterSim::new(&c, &w, 3);
+        let mut times = Vec::new();
+        for e in 0..40 {
+            let plan = sys.plan_epoch(e, 0.0);
+            assert_eq!(plan.local.iter().sum::<u64>(), 128);
+            let out = sim.step(&plan.local_f64());
+            times.push(out.t_batch);
+            sys.observe_epoch(&out.per_node, out.t_batch);
+        }
+        // improves substantially over even split...
+        assert!(times.last().unwrap() < &(times[0] * 0.75), "{times:?}");
+        // ...but takes many epochs: after only 3 epochs it is still far
+        // from its final level (Fig. 9's contrast with Cannikin)
+        let final_t = *times.last().unwrap();
+        assert!(times[3] > final_t * 1.08, "t3={} final={final_t}", times[3]);
+        // fast node ends with the biggest share
+        let plan = sys.plan_epoch(99, 0.0);
+        assert!(plan.local[0] > plan.local[2]);
+    }
+
+    #[test]
+    fn set_total_rescales_preserving_ratios() {
+        let mut sys = LbBsp::new(4, 100, 5);
+        sys.current = vec![40, 30, 20, 10];
+        sys.set_total(200);
+        assert_eq!(sys.current.iter().sum::<u64>(), 200);
+        assert_eq!(sys.current, vec![80, 60, 40, 20]);
+    }
+}

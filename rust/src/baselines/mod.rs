@@ -1,0 +1,77 @@
+//! Baseline training systems (paper §5.1) + the trait Cannikin shares with
+//! them so the figure harness can drive all four identically.
+//!
+//! * [`ddp`] — PyTorch-DistributedDataParallel-like: fixed total batch,
+//!   even split across nodes.
+//! * [`adaptdl`] — AdaptDL/Pollux-like: goodput-adaptive total batch, even
+//!   split (designed for homogeneous clusters).
+//! * [`lbbsp`] — LB-BSP: fixed total batch, per-node local batches tuned
+//!   iteratively with step size Δ=5 (the paper's setting).
+
+pub mod adaptdl;
+pub mod ddp;
+pub mod lbbsp;
+
+pub use adaptdl::AdaptDl;
+pub use ddp::Ddp;
+pub use lbbsp::LbBsp;
+
+use crate::simulator::NodeBatchObs;
+
+/// One epoch's plan from a training system.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// total batch size chosen for the epoch
+    pub total: u64,
+    /// per-node local batch sizes (Σ = total)
+    pub local: Vec<u64>,
+    /// scheduler/optimizer wall-clock overhead charged this epoch, seconds
+    pub overhead: f64,
+}
+
+impl Plan {
+    pub fn local_f64(&self) -> Vec<f64> {
+        self.local.iter().map(|&b| b as f64).collect()
+    }
+}
+
+/// A data-parallel training system under evaluation: plans each epoch's
+/// batch configuration and learns from the resulting measurements.
+pub trait System {
+    fn name(&self) -> &'static str;
+
+    /// Decide the next epoch's configuration.  `phi` is the current
+    /// gradient noise scale (systems that don't adapt ignore it).
+    fn plan_epoch(&mut self, epoch: usize, phi: f64) -> Plan;
+
+    /// Feed back per-node measurements and the observed batch time.
+    fn observe_epoch(&mut self, obs: &[NodeBatchObs], t_batch: f64);
+}
+
+/// Split `total` across `n` nodes as evenly as possible (DDP semantics).
+pub fn even_split(total: u64, n: usize) -> Vec<u64> {
+    let base = total / n as u64;
+    let rem = (total % n as u64) as usize;
+    (0..n).map(|i| base + u64::from(i < rem)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_split_sums_and_balances() {
+        let s = even_split(130, 16);
+        assert_eq!(s.iter().sum::<u64>(), 130);
+        let max = *s.iter().max().unwrap();
+        let min = *s.iter().min().unwrap();
+        assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn even_split_small_total() {
+        let s = even_split(3, 5);
+        assert_eq!(s.iter().sum::<u64>(), 3);
+        assert_eq!(s.iter().filter(|&&x| x == 0).count(), 2);
+    }
+}

@@ -1,0 +1,179 @@
+//! Bench harness substrate (criterion is not in the offline vendor set).
+//!
+//! Criterion-style workflow: warmup, timed samples, mean/std/min reporting,
+//! and paper-table emitters used by `rust/benches/*.rs` (harness = false).
+//! Results append to `bench_results.jsonl` for the EXPERIMENTS.md tables.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean: Duration,
+    pub std: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+pub struct Bencher {
+    warmup: usize,
+    samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 3, samples: 20 }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, samples: usize) -> Self {
+        Bencher { warmup, samples }
+    }
+
+    /// Time `f` (which should perform one full unit of work per call).
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed());
+        }
+        summarize(name, &times)
+    }
+}
+
+fn summarize(name: &str, times: &[Duration]) -> BenchResult {
+    let secs: Vec<f64> = times.iter().map(|t| t.as_secs_f64()).collect();
+    let mean = secs.iter().sum::<f64>() / secs.len() as f64;
+    let var = secs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        / (secs.len().max(2) - 1) as f64;
+    BenchResult {
+        name: name.to_string(),
+        samples: times.len(),
+        mean: Duration::from_secs_f64(mean),
+        std: Duration::from_secs_f64(var.sqrt()),
+        min: *times.iter().min().unwrap(),
+        max: *times.iter().max().unwrap(),
+    }
+}
+
+/// Human-readable line, criterion-ish.
+pub fn report(r: &BenchResult) {
+    println!(
+        "{:<52} {:>12} ± {:>10}   (min {:>10}, n={})",
+        r.name,
+        fmt_dur(r.mean),
+        fmt_dur(r.std),
+        fmt_dur(r.min),
+        r.samples
+    );
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Markdown-style table emitter for paper-figure benches.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n## {title}");
+        let widths: Vec<usize> = self
+            .header
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                self.rows
+                    .iter()
+                    .map(|r| r[i].len())
+                    .chain(std::iter::once(h.len()))
+                    .max()
+                    .unwrap_or(0)
+            })
+            .collect();
+        let line = |cells: &[String]| {
+            let body: Vec<String> = cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect();
+            println!("| {} |", body.join(" | "));
+        };
+        line(&self.header);
+        println!(
+            "|{}|",
+            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+        );
+        for r in &self.rows {
+            line(r);
+        }
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.header.join(",") + "\n";
+        for r in &self.rows {
+            out += &(r.join(",") + "\n");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let b = Bencher::new(0, 3);
+        let r = b.run("sleep", || std::thread::sleep(Duration::from_millis(2)));
+        assert!(r.mean >= Duration::from_millis(2));
+        assert!(r.mean < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut t = Table::new(&["a", "bbb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "a,bbb\n1,2\n");
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(Duration::from_secs(2)).contains("s"));
+        assert!(fmt_dur(Duration::from_micros(5)).contains("µs"));
+    }
+}

@@ -1,0 +1,341 @@
+//! Device catalog + cluster specifications.
+//!
+//! Reproduces the paper's testbeds: **Cluster A** (RTX A5000 / RTX A4000 /
+//! Quadro P4000, Table 2), **Cluster B** (4×A100 + 4×V100 + 8×RTX6000 = 16
+//! GPUs, Table 3) and **Cluster C** (16 fractional RTX6000 — the §6
+//! GPU-sharing study).  Relative speeds are calibrated from the paper:
+//! "the fastest GPU A100 is about 3.42 times faster compared with RTX6000"
+//! (§6) and NVIDIA FP16 throughput ratios (Table 1) for the rest.
+
+use crate::util::rng::Rng;
+
+/// A GPU model in the catalog.  `speed` is relative throughput with
+/// RTX6000 ≡ 1.0; `gamma_noise` is the per-measurement std of the overlap
+/// ratio γ observation (Fig. 6 shows this varies strongly by GPU type);
+/// `time_noise` is the relative std of per-batch timing jitter.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceProfile {
+    pub name: String,
+    pub speed: f64,
+    pub mem_gb: f64,
+    pub gamma_noise: f64,
+    pub time_noise: f64,
+}
+
+impl DeviceProfile {
+    pub fn new(name: &str, speed: f64, mem_gb: f64, gamma_noise: f64, time_noise: f64) -> Self {
+        DeviceProfile { name: name.to_string(), speed, mem_gb, gamma_noise, time_noise }
+    }
+
+    /// Fractional share of a device (GPU-sharing heterogeneity, §6).
+    /// Sharing also makes measurements noisier.
+    pub fn fraction(&self, frac: f64) -> DeviceProfile {
+        assert!(frac > 0.0 && frac <= 1.0);
+        DeviceProfile {
+            name: format!("{}@{:.2}", self.name, frac),
+            speed: self.speed * frac,
+            mem_gb: self.mem_gb * frac,
+            gamma_noise: self.gamma_noise * (1.0 + (1.0 - frac)),
+            time_noise: self.time_noise * (1.0 + 2.0 * (1.0 - frac)),
+        }
+    }
+}
+
+/// Catalog constructors (speeds relative to RTX6000).
+pub mod devices {
+    use super::DeviceProfile;
+
+    pub fn a100() -> DeviceProfile {
+        DeviceProfile::new("A100", 3.42, 40.0, 0.020, 0.010)
+    }
+    pub fn v100() -> DeviceProfile {
+        DeviceProfile::new("V100", 1.38, 16.0, 0.050, 0.015)
+    }
+    pub fn rtx6000() -> DeviceProfile {
+        DeviceProfile::new("RTX6000", 1.0, 24.0, 0.060, 0.015)
+    }
+    pub fn a5000() -> DeviceProfile {
+        DeviceProfile::new("A5000", 1.55, 24.0, 0.035, 0.012)
+    }
+    pub fn a4000() -> DeviceProfile {
+        DeviceProfile::new("A4000", 0.95, 16.0, 0.060, 0.015)
+    }
+    pub fn p4000() -> DeviceProfile {
+        DeviceProfile::new("P4000", 0.35, 8.0, 0.130, 0.025)
+    }
+}
+
+/// One data-parallel worker (the paper treats each GPU as a node).
+#[derive(Clone, Debug)]
+pub struct NodeSpec {
+    pub id: usize,
+    pub device: DeviceProfile,
+}
+
+/// A heterogeneous cluster: nodes + interconnect.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub nodes: Vec<NodeSpec>,
+    /// effective per-link ring bandwidth, Gbit/s
+    pub net_gbps: f64,
+}
+
+impl ClusterSpec {
+    pub fn new(name: &str, devices: Vec<DeviceProfile>, net_gbps: f64) -> Self {
+        let nodes = devices
+            .into_iter()
+            .enumerate()
+            .map(|(id, device)| NodeSpec { id, device })
+            .collect();
+        ClusterSpec { name: name.to_string(), nodes, net_gbps }
+    }
+
+    pub fn n(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Ring all-reduce time (seconds) for `model_mb` megabytes of gradients
+    /// (Patarasuk-Yuan bandwidth-optimal ring: 2(n−1)/n · bytes / bw).
+    pub fn ring_allreduce_secs(&self, model_mb: f64) -> f64 {
+        let n = self.n() as f64;
+        if n <= 1.0 {
+            return 0.0;
+        }
+        let bytes = model_mb * 1e6;
+        let bw = self.net_gbps * 1e9 / 8.0; // bytes/s
+        2.0 * (n - 1.0) / n * bytes / bw
+    }
+
+    /// Heterogeneity factor: fastest / slowest node speed.
+    pub fn heterogeneity(&self) -> f64 {
+        let speeds: Vec<f64> = self.nodes.iter().map(|n| n.device.speed).collect();
+        let max = speeds.iter().cloned().fold(f64::MIN, f64::max);
+        let min = speeds.iter().cloned().fold(f64::MAX, f64::min);
+        max / min
+    }
+}
+
+/// Paper Table 2: 3-node cluster (one GPU each).
+pub fn cluster_a() -> ClusterSpec {
+    ClusterSpec::new(
+        "cluster-a",
+        vec![devices::a5000(), devices::a4000(), devices::p4000()],
+        10.0,
+    )
+}
+
+/// Paper Table 3: 16-GPU cluster (4×A100, 4×V100, 8×RTX6000).
+pub fn cluster_b() -> ClusterSpec {
+    let mut devs = Vec::new();
+    for _ in 0..4 {
+        devs.push(devices::a100());
+    }
+    for _ in 0..4 {
+        devs.push(devices::v100());
+    }
+    for _ in 0..8 {
+        devs.push(devices::rtx6000());
+    }
+    // Chameleon GPU nodes: 25 GbE effective ring bandwidth
+    ClusterSpec::new("cluster-b", devs, 25.0)
+}
+
+/// Paper §6: 16 RTX6000 nodes with sharing-induced heterogeneity — the
+/// fastest node owns the whole GPU, the slowest ~1/4, the rest evenly
+/// spread (mirrors the dummy-workload batch sizes 0,10,…,150).
+pub fn cluster_c() -> ClusterSpec {
+    let base = devices::rtx6000();
+    let n = 16;
+    let devs: Vec<DeviceProfile> = (0..n)
+        .map(|i| {
+            let frac = 1.0 - 0.75 * (i as f64) / (n as f64 - 1.0); // 1.0 -> 0.25
+            base.fraction(frac)
+        })
+        .collect();
+    ClusterSpec::new("cluster-c", devs, 10.0)
+}
+
+/// A randomized heterogeneous cluster for property tests / sweeps.
+pub fn random_cluster(rng: &mut Rng, n: usize) -> ClusterSpec {
+    let catalog = [
+        devices::a100(),
+        devices::v100(),
+        devices::rtx6000(),
+        devices::a5000(),
+        devices::a4000(),
+        devices::p4000(),
+    ];
+    let devs: Vec<DeviceProfile> = (0..n)
+        .map(|_| catalog[rng.below(catalog.len() as u64) as usize].clone())
+        .collect();
+    ClusterSpec::new("random", devs, 10.0)
+}
+
+pub fn by_name(name: &str) -> Option<ClusterSpec> {
+    match name {
+        "a" | "cluster-a" => Some(cluster_a()),
+        "b" | "cluster-b" => Some(cluster_b()),
+        "c" | "cluster-c" => Some(cluster_c()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_b_matches_paper_table3() {
+        let c = cluster_b();
+        assert_eq!(c.n(), 16);
+        assert_eq!(c.nodes.iter().filter(|n| n.device.name == "A100").count(), 4);
+        assert_eq!(c.nodes.iter().filter(|n| n.device.name == "V100").count(), 4);
+        assert_eq!(c.nodes.iter().filter(|n| n.device.name == "RTX6000").count(), 8);
+        // §6: A100 ≈ 3.42× RTX6000
+        assert!((c.heterogeneity() - 3.42).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cluster_a_matches_paper_table2() {
+        let c = cluster_a();
+        assert_eq!(c.n(), 3);
+        assert!(c.heterogeneity() > 4.0); // A5000 vs P4000
+    }
+
+    #[test]
+    fn cluster_c_fraction_spread() {
+        let c = cluster_c();
+        assert_eq!(c.n(), 16);
+        let speeds: Vec<f64> = c.nodes.iter().map(|n| n.device.speed).collect();
+        assert!((speeds[0] - 1.0).abs() < 1e-9);
+        assert!((speeds[15] - 0.25).abs() < 1e-9);
+        // monotone decreasing
+        assert!(speeds.windows(2).all(|w| w[0] > w[1]));
+    }
+
+    #[test]
+    fn ring_allreduce_formula() {
+        let c = cluster_b();
+        // 100 MB over 25 Gbps, 16 nodes: 2*(15/16)*1e8 / 3.125e9 = 0.06 s
+        let t = c.ring_allreduce_secs(100.0);
+        assert!((t - 0.06).abs() < 1e-6, "{t}");
+        // single node: no comm
+        let solo = ClusterSpec::new("solo", vec![devices::a100()], 10.0);
+        assert_eq!(solo.ring_allreduce_secs(100.0), 0.0);
+    }
+
+    #[test]
+    fn fraction_scales_speed_and_noise() {
+        let d = devices::rtx6000().fraction(0.5);
+        assert!((d.speed - 0.5).abs() < 1e-9);
+        assert!(d.time_noise > devices::rtx6000().time_noise);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON cluster configs (the launcher's config system)
+// ---------------------------------------------------------------------------
+
+use crate::util::json::Json;
+
+impl ClusterSpec {
+    /// Load a cluster from a JSON config:
+    /// ```json
+    /// { "name": "my-cluster", "net_gbps": 25.0,
+    ///   "nodes": [ {"device": "A100"}, {"device": "RTX6000", "fraction": 0.5},
+    ///              {"device": "custom", "speed": 2.0, "mem_gb": 32,
+    ///               "gamma_noise": 0.02, "time_noise": 0.01} ] }
+    /// ```
+    pub fn from_json(j: &Json) -> anyhow::Result<ClusterSpec> {
+        let name = j.req("name")?.as_str()?.to_string();
+        let net = j.req("net_gbps")?.as_f64()?;
+        let mut devs = Vec::new();
+        for node in j.req("nodes")?.as_arr()? {
+            let dev = node.req("device")?.as_str()?;
+            let mut d = match dev {
+                "A100" => devices::a100(),
+                "V100" => devices::v100(),
+                "RTX6000" => devices::rtx6000(),
+                "A5000" => devices::a5000(),
+                "A4000" => devices::a4000(),
+                "P4000" => devices::p4000(),
+                "custom" => DeviceProfile::new(
+                    node.get("label").and_then(|l| l.as_str().ok()).unwrap_or("custom"),
+                    node.req("speed")?.as_f64()?,
+                    node.req("mem_gb")?.as_f64()?,
+                    node.get("gamma_noise").map(|x| x.as_f64()).transpose()?.unwrap_or(0.02),
+                    node.get("time_noise").map(|x| x.as_f64()).transpose()?.unwrap_or(0.015),
+                ),
+                other => anyhow::bail!("unknown device {other:?}"),
+            };
+            if let Some(frac) = node.get("fraction") {
+                d = d.fraction(frac.as_f64()?);
+            }
+            devs.push(d);
+        }
+        anyhow::ensure!(!devs.is_empty(), "cluster config has no nodes");
+        Ok(ClusterSpec::new(&name, devs, net))
+    }
+
+    pub fn from_json_file(path: &std::path::Path) -> anyhow::Result<ClusterSpec> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+
+    /// Elasticity (paper §6 "Adapt to schedulers"): a new spec with nodes
+    /// removed (by id) or added.
+    pub fn without_nodes(&self, remove: &[usize]) -> ClusterSpec {
+        let devs: Vec<DeviceProfile> = self
+            .nodes
+            .iter()
+            .filter(|n| !remove.contains(&n.id))
+            .map(|n| n.device.clone())
+            .collect();
+        ClusterSpec::new(&self.name, devs, self.net_gbps)
+    }
+
+    pub fn with_nodes(&self, add: Vec<DeviceProfile>) -> ClusterSpec {
+        let mut devs: Vec<DeviceProfile> =
+            self.nodes.iter().map(|n| n.device.clone()).collect();
+        devs.extend(add);
+        ClusterSpec::new(&self.name, devs, self.net_gbps)
+    }
+}
+
+#[cfg(test)]
+mod json_tests {
+    use super::*;
+
+    #[test]
+    fn parses_cluster_config() {
+        let src = r#"{ "name": "mix", "net_gbps": 25.0, "nodes": [
+            {"device": "A100"},
+            {"device": "RTX6000", "fraction": 0.5},
+            {"device": "custom", "label": "H100ish", "speed": 6.0, "mem_gb": 80}
+        ]}"#;
+        let c = ClusterSpec::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(c.n(), 3);
+        assert_eq!(c.nodes[0].device.name, "A100");
+        assert!((c.nodes[1].device.speed - 0.5).abs() < 1e-9);
+        assert_eq!(c.nodes[2].device.name, "H100ish");
+        assert!((c.heterogeneity() - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(ClusterSpec::from_json(&Json::parse(r#"{"name":"x","net_gbps":10,"nodes":[]}"#).unwrap()).is_err());
+        assert!(ClusterSpec::from_json(&Json::parse(r#"{"name":"x","net_gbps":10,"nodes":[{"device":"GTX9999"}]}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn elastic_add_remove() {
+        let c = cluster_a();
+        let smaller = c.without_nodes(&[2]);
+        assert_eq!(smaller.n(), 2);
+        assert!(smaller.nodes.iter().all(|n| n.device.name != "P4000"));
+        let bigger = c.with_nodes(vec![devices::a100()]);
+        assert_eq!(bigger.n(), 4);
+        // ids are re-assigned contiguously
+        assert_eq!(bigger.nodes[3].id, 3);
+    }
+}

@@ -1,0 +1,116 @@
+//! HeteroDataLoader — the paper's §4.5 class: loads *uneven* local mini
+//! batches to each worker per the OptPerf ratios, padding each worker's
+//! batch up to its compiled bucket with weight-0 rows.
+
+use anyhow::Result;
+
+use crate::data::Sampler;
+use crate::runtime::Manifest;
+
+/// One worker's materialized micro-batch for a step.
+#[derive(Clone, Debug)]
+pub struct WorkerBatch {
+    /// real rows (the worker's local batch size bᵢ)
+    pub rows: usize,
+    /// compiled bucket the rows are padded into
+    pub bucket: usize,
+    /// bucket·(seq_len+1) tokens, padded rows zeroed
+    pub tokens: Vec<i32>,
+    /// bucket weights: 1.0 on real rows, 0.0 on padding
+    pub weights: Vec<f32>,
+}
+
+pub struct HeteroDataLoader {
+    sampler: Sampler,
+    buckets: Vec<usize>,
+}
+
+impl HeteroDataLoader {
+    pub fn new(sampler: Sampler, manifest: &Manifest) -> Self {
+        HeteroDataLoader { sampler, buckets: manifest.buckets.clone() }
+    }
+
+    fn bucket_for(&self, rows: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&k| k >= rows)
+    }
+
+    /// Load one step's batches for local sizes `local` (0-sized workers get
+    /// no batch).  Workers whose bᵢ exceeds the largest bucket split the
+    /// surplus into additional micro-batches (gradient accumulation).
+    pub fn load_step(&mut self, local: &[u64]) -> Result<Vec<Vec<WorkerBatch>>> {
+        let biggest = *self.buckets.last().expect("no buckets");
+        let mut out = Vec::with_capacity(local.len());
+        for &b in local {
+            let mut micro = Vec::new();
+            let mut left = b as usize;
+            while left > 0 {
+                let rows = left.min(biggest);
+                let bucket = self
+                    .bucket_for(rows)
+                    .expect("rows <= biggest bucket by construction");
+                let (tokens, weights) = self.sampler.batch(rows, bucket);
+                micro.push(WorkerBatch { rows, bucket, tokens, weights });
+                left -= rows;
+            }
+            out.push(micro);
+        }
+        Ok(out)
+    }
+
+    pub fn eval_batch(&self, rows: usize) -> (Vec<i32>, Vec<f32>) {
+        self.sampler.eval_batch(rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_corpus;
+    use std::collections::HashMap;
+
+    fn manifest_stub(buckets: Vec<usize>) -> Manifest {
+        Manifest {
+            preset: "stub".into(),
+            seq_len: 16,
+            vocab: 256,
+            n_params_total: 0,
+            params: vec![],
+            buckets,
+            momentum: 0.9,
+            init_file: String::new(),
+            apply_file: String::new(),
+            grad_files: HashMap::new(),
+            eval_files: HashMap::new(),
+        }
+    }
+
+    #[test]
+    fn loads_uneven_batches_with_padding() {
+        let corpus = synth_corpus(8192, 1);
+        let sampler = Sampler::new(&corpus, 16, 2);
+        let mut dl = HeteroDataLoader::new(sampler, &manifest_stub(vec![1, 2, 4, 8]));
+        let batches = dl.load_step(&[5, 3, 0]).unwrap();
+        assert_eq!(batches.len(), 3);
+        // worker 0: 5 rows -> bucket 8
+        assert_eq!(batches[0].len(), 1);
+        assert_eq!(batches[0][0].rows, 5);
+        assert_eq!(batches[0][0].bucket, 8);
+        assert_eq!(batches[0][0].weights.iter().filter(|&&w| w == 1.0).count(), 5);
+        // worker 2: empty
+        assert!(batches[2].is_empty());
+    }
+
+    #[test]
+    fn oversized_batches_split_into_micro_batches() {
+        let corpus = synth_corpus(8192, 1);
+        let sampler = Sampler::new(&corpus, 16, 2);
+        let mut dl = HeteroDataLoader::new(sampler, &manifest_stub(vec![1, 2, 4, 8]));
+        let batches = dl.load_step(&[21]).unwrap();
+        let micro = &batches[0];
+        assert_eq!(micro.len(), 3); // 8 + 8 + 5
+        let rows: usize = micro.iter().map(|m| m.rows).sum();
+        assert_eq!(rows, 21);
+        assert_eq!(micro[2].rows, 5);
+        assert_eq!(micro[2].bucket, 8);
+    }
+}

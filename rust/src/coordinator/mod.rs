@@ -1,0 +1,17 @@
+//! The L3 coordinator: the paper's system contribution, assembled.
+//!
+//! * [`planner`] — the Cannikin epoch planner (Fig. 4 workflow: learn →
+//!   predict OptPerf → configure), shared between the convergence
+//!   simulator and the real-numerics trainer.
+//! * [`dataloader`] — HeteroDataLoader (§4.5): uneven local batches,
+//!   bucket padding with weight-0 rows.
+//! * [`leader`] — the end-to-end real-numerics training loop over the AOT
+//!   artifacts (PJRT), with bucketed ring all-reduce and Theorem 4.1 GNS.
+
+pub mod dataloader;
+pub mod leader;
+pub mod planner;
+
+pub use dataloader::{HeteroDataLoader, WorkerBatch};
+pub use leader::{train, EpochReport, TrainConfig, TrainReport};
+pub use planner::{BatchPolicy, CannikinPlanner};

@@ -1,0 +1,636 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (§5, §6).  Each `fig*` function prints the rows/series the paper
+//! reports and writes a CSV under `results/`.  See DESIGN.md's
+//! per-experiment index and EXPERIMENTS.md for paper-vs-measured notes.
+
+use anyhow::Result;
+
+use crate::baselines::{AdaptDl, Ddp, LbBsp, System};
+use crate::benchkit::Table;
+use crate::cluster::{self, ClusterSpec};
+use crate::coordinator::planner::{BatchPolicy, CannikinPlanner};
+use crate::metrics::{results_dir, write_csv};
+use crate::optperf;
+use crate::simulator::{convergence, workload, ClusterSim, Workload};
+
+/// Target metric values per workload (Table 4's "Target" column).
+pub fn target_value(w: &Workload) -> f64 {
+    match w.name {
+        "imagenet" => 75.0,
+        "cifar10" => 94.0,
+        "librispeech" => 40.0,
+        "squad" => 88.0,
+        "movielens" => 69.0,
+        _ => 1.0,
+    }
+}
+
+/// Drive one system through a full convergence run on a simulated cluster.
+/// Each epoch: the system plans, the timing simulator measures `reps`
+/// batches with the plan, the system observes, and the convergence model
+/// integrates progress.
+pub fn run_system(
+    cluster: &ClusterSpec,
+    w: &Workload,
+    system: &mut dyn System,
+    max_epochs: usize,
+    seed: u64,
+) -> convergence::RunResult {
+    let mut sim = ClusterSim::new(cluster, w, seed);
+    let reps = 3;
+    convergence::run(w, target_value(w), max_epochs, |epoch, phi| {
+        let plan = system.plan_epoch(epoch, phi);
+        let mut t_mean = 0.0;
+        for _ in 0..reps {
+            let out = sim.step(&plan.local_f64());
+            t_mean += out.t_batch;
+            system.observe_epoch(&out.per_node, out.t_batch);
+        }
+        (plan.total, t_mean / reps as f64, plan.overhead)
+    })
+}
+
+fn make_systems(cluster: &ClusterSpec, w: &Workload) -> Vec<Box<dyn System>> {
+    let n = cluster.n();
+    vec![
+        Box::new(CannikinPlanner::new(n, w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive)),
+        Box::new(AdaptDl::new(n, w.b0, w.b_max, w.n_buckets)),
+        // paper §5.1: the fixed-batch baselines train at the user's
+        // original total batch size B0 (Table 4) — this is precisely what
+        // costs them in the convergence experiments ("up to 85%/82%")
+        Box::new(LbBsp::new(n, w.b0, 5)),
+        Box::new(Ddp::with_total(n, w.b0)),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 5 — batch size per epoch + accuracy curves, Cannikin vs AdaptDL
+// ---------------------------------------------------------------------------
+
+pub fn fig5() -> Result<()> {
+    let c = cluster::cluster_b();
+    let w = workload::cifar10();
+    let mut rows = Vec::new();
+    let mut tbl = Table::new(&["epoch", "cannikin B", "adaptdl B", "cannikin acc", "adaptdl acc"]);
+    let mut cank = CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+    let mut adap = AdaptDl::new(c.n(), w.b0, w.b_max, w.n_buckets);
+    let r1 = run_system(&c, &w, &mut cank, 9000, 1);
+    let r2 = run_system(&c, &w, &mut adap, 9000, 1);
+    let n = r1.epochs.len().min(r2.epochs.len());
+    for e in (0..n).step_by(usize::max(1, n / 40)) {
+        let (a, b) = (&r1.epochs[e], &r2.epochs[e]);
+        rows.push(vec![
+            e.to_string(),
+            a.total_batch.to_string(),
+            b.total_batch.to_string(),
+            format!("{:.2}", a.metric),
+            format!("{:.2}", b.metric),
+            format!("{:.1}", a.wall_secs),
+            format!("{:.1}", b.wall_secs),
+        ]);
+        tbl.row(vec![
+            e.to_string(),
+            a.total_batch.to_string(),
+            b.total_batch.to_string(),
+            format!("{:.2}", a.metric),
+            format!("{:.2}", b.metric),
+        ]);
+    }
+    tbl.print("Fig 5 — CIFAR-10 on cluster B: batch size & accuracy per epoch");
+    println!(
+        "time-to-target: cannikin {:.0}s  adaptdl {:.0}s",
+        r1.time_to_target.unwrap_or(f64::NAN),
+        r2.time_to_target.unwrap_or(f64::NAN)
+    );
+    write_csv(
+        results_dir().join("fig5.csv"),
+        &["epoch", "cannikin_B", "adaptdl_B", "cannikin_acc", "adaptdl_acc", "cannikin_wall", "adaptdl_wall"],
+        &rows,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 6 — γ measurement spread across GPU types and local batch sizes
+// ---------------------------------------------------------------------------
+
+pub fn fig6() -> Result<()> {
+    let w = workload::cifar10();
+    let devices = [
+        cluster::devices::a100(),
+        cluster::devices::v100(),
+        cluster::devices::rtx6000(),
+        cluster::devices::a5000(),
+        cluster::devices::a4000(),
+        cluster::devices::p4000(),
+    ];
+    let mut tbl = Table::new(&["device", "local b", "mean γ", "std γ"]);
+    let mut rows = Vec::new();
+    for d in &devices {
+        // a 2-node cluster of the same device, isolating its noise profile
+        let spec = ClusterSpec::new("probe", vec![d.clone(), d.clone()], 25.0);
+        let mut sim = ClusterSim::new(&spec, &w, 42);
+        for &b in &[16.0, 64.0, 256.0] {
+            let mut xs = Vec::new();
+            for _ in 0..200 {
+                let out = sim.step(&[b, b]);
+                xs.push(out.per_node[0].gamma_obs);
+            }
+            let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+            let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+                / (xs.len() - 1) as f64;
+            tbl.row(vec![
+                d.name.clone(),
+                format!("{b}"),
+                format!("{mean:.4}"),
+                format!("{:.4}", var.sqrt()),
+            ]);
+            rows.push(vec![
+                d.name.clone(),
+                format!("{b}"),
+                format!("{mean:.5}"),
+                format!("{:.5}", var.sqrt()),
+            ]);
+        }
+    }
+    tbl.print("Fig 6 — measured overlap ratio γ across GPU types");
+    write_csv(results_dir().join("fig6.csv"), &["device", "local_b", "gamma_mean", "gamma_std"], &rows)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 7 — convergence curves (CIFAR-10 + ImageNet, 4 systems, cluster B)
+// ---------------------------------------------------------------------------
+
+pub fn fig7() -> Result<()> {
+    let c = cluster::cluster_b();
+    for w in [workload::cifar10(), workload::imagenet()] {
+        let mut rows = Vec::new();
+        let mut summary = Table::new(&["system", "time-to-target (s)", "epochs"]);
+        for mut sys in make_systems(&c, &w) {
+            let r = run_system(&c, &w, sys.as_mut(), 3000, 7);
+            summary.row(vec![
+                sys.name().to_string(),
+                r.time_to_target.map(|t| format!("{t:.0}")).unwrap_or("∅".into()),
+                r.epochs.len().to_string(),
+            ]);
+            for e in r.epochs.iter().step_by(usize::max(1, r.epochs.len() / 60)) {
+                rows.push(vec![
+                    sys.name().to_string(),
+                    format!("{:.1}", e.wall_secs),
+                    format!("{:.3}", e.metric),
+                    e.total_batch.to_string(),
+                ]);
+            }
+        }
+        summary.print(&format!("Fig 7 — {} ({}) convergence on cluster B", w.model, w.dataset));
+        write_csv(
+            results_dir().join(format!("fig7_{}.csv", w.name)),
+            &["system", "wall_secs", "metric", "total_batch"],
+            &rows,
+        )?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 8 — normalized convergence time, all 5 workloads × 4 systems
+// ---------------------------------------------------------------------------
+
+pub fn fig8() -> Result<Vec<(String, Vec<(String, f64)>)>> {
+    let c = cluster::cluster_b();
+    let mut tbl = Table::new(&["workload", "cannikin", "adaptdl", "lb-bsp", "pytorch-ddp"]);
+    let mut rows = Vec::new();
+    let mut all = Vec::new();
+    for w in workload::all() {
+        let mut times = Vec::new();
+        for mut sys in make_systems(&c, &w) {
+            let r = run_system(&c, &w, sys.as_mut(), 4000, 13);
+            // systems that do not reach the target inside the epoch budget
+            // (e.g. fixed-small-batch DDP late in training) extrapolate
+            // from their progress rate
+            let t = r.time_to_target.unwrap_or_else(|| {
+                let last = r.epochs.last().unwrap();
+                last.wall_secs * w.s_target / last.progress.max(1e-9)
+            });
+            times.push((sys.name().to_string(), t));
+        }
+        // normalize to the slowest (paper normalizes per-task)
+        let worst = times.iter().map(|(_, t)| *t).fold(0.0_f64, f64::max);
+        let norm: Vec<(String, f64)> =
+            times.iter().map(|(n, t)| (n.clone(), t / worst)).collect();
+        tbl.row(vec![
+            w.name.to_string(),
+            format!("{:.3}", norm[0].1),
+            format!("{:.3}", norm[1].1),
+            format!("{:.3}", norm[2].1),
+            format!("{:.3}", norm[3].1),
+        ]);
+        rows.push(vec![
+            w.name.to_string(),
+            format!("{:.4}", norm[0].1),
+            format!("{:.4}", norm[1].1),
+            format!("{:.4}", norm[2].1),
+            format!("{:.4}", norm[3].1),
+        ]);
+        all.push((w.name.to_string(), norm));
+    }
+    tbl.print("Fig 8 — normalized convergence time (cluster B; 1.0 = slowest system)");
+    write_csv(
+        results_dir().join("fig8.csv"),
+        &["workload", "cannikin", "adaptdl", "lbbsp", "ddp"],
+        &rows,
+    )?;
+    Ok(all)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 9 — per-epoch batch time from even init (ImageNet, cluster A, B=128)
+// ---------------------------------------------------------------------------
+
+pub fn fig9() -> Result<Vec<(usize, f64, f64)>> {
+    let c = cluster::cluster_a();
+    let w = workload::imagenet();
+    let total = 128u64;
+    let epochs = 16;
+    let reps = 12;
+
+    let mut cank = CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Fixed(total));
+    let mut lbbsp = LbBsp::new(c.n(), total, 5);
+    let mut sim_c = ClusterSim::new(&c, &w, 21);
+    let mut sim_l = ClusterSim::new(&c, &w, 21);
+
+    let mut series = Vec::new();
+    for e in 0..epochs {
+        let mut t = [0.0f64; 2];
+        let plan_c = cank.plan_epoch(e, 0.0);
+        let plan_l = lbbsp.plan_epoch(e, 0.0);
+        for _ in 0..reps {
+            let oc = sim_c.step(&plan_c.local_f64());
+            cank.observe_epoch(&oc.per_node, oc.t_batch);
+            t[0] += oc.t_batch;
+            let ol = sim_l.step(&plan_l.local_f64());
+            lbbsp.observe_epoch(&ol.per_node, ol.t_batch);
+            t[1] += ol.t_batch;
+        }
+        series.push((e, t[0] / reps as f64, t[1] / reps as f64));
+    }
+    let truth = w.cluster_model(&c);
+    let opt = optperf::solve(&truth, total as f64)?;
+    let mut tbl = Table::new(&["epoch", "cannikin t_batch", "lb-bsp t_batch"]);
+    let mut rows = Vec::new();
+    for &(e, tc, tl) in &series {
+        tbl.row(vec![e.to_string(), format!("{tc:.4}"), format!("{tl:.4}")]);
+        rows.push(vec![e.to_string(), format!("{tc:.5}"), format!("{tl:.5}"), format!("{:.5}", opt.t_pred)]);
+    }
+    tbl.print(&format!(
+        "Fig 9 — ImageNet on cluster A, fixed B=128 (true OptPerf = {:.4}s)",
+        opt.t_pred
+    ));
+    write_csv(
+        results_dir().join("fig9.csv"),
+        &["epoch", "cannikin", "lbbsp", "optperf_true"],
+        &rows,
+    )?;
+    Ok(series)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 10 — normalized batch time vs total batch size, per workload
+// ---------------------------------------------------------------------------
+
+/// Systems compared at each total batch size B:
+/// * OptPerf (Cannikin's prediction with true models — "assume each method
+///   reached its best", as the paper states)
+/// * LB-BSP fixed-B fixed point (balanced compute times, overlap-blind)
+/// * LB-BSP right after an adaptive B change (+10% of range, its previous
+///   ratios rescaled)
+/// * DDP even split
+pub fn fig10() -> Result<()> {
+    let c = cluster::cluster_b();
+    for w in workload::all() {
+        let model = w.cluster_model(&c);
+        let n = c.n();
+        let bs: Vec<u64> = (0..8)
+            .map(|i| {
+                let f = i as f64 / 7.0;
+                (w.b0 as f64 * (w.b_max as f64 / w.b0 as f64).powf(f)).round() as u64
+            })
+            .collect();
+        let mut tbl = Table::new(&["B", "optperf", "lb-bsp fix", "lb-bsp adapt", "ddp"]);
+        let mut rows = Vec::new();
+        for &b in &bs {
+            let bf = b as f64;
+            let opt = optperf::solve(&model, bf)?;
+            // LB-BSP fixed point: equal compute times (ignores overlap)
+            let slopes: Vec<f64> = model.nodes.iter().map(|m| m.slope()).collect();
+            let fixed: Vec<f64> = model.nodes.iter().map(|m| m.fixed()).collect();
+            let mut inv = 0.0;
+            let mut ratio = 0.0;
+            for (&c_, &f_) in slopes.iter().zip(&fixed) {
+                inv += 1.0 / c_;
+                ratio += f_ / c_;
+            }
+            let mu = (bf + ratio) / inv;
+            let lb_fix: Vec<f64> =
+                slopes.iter().zip(&fixed).map(|(&c_, &f_)| ((mu - f_) / c_).max(0.0)).collect();
+            let t_lbfix = optperf::predict_batch_time(&model, &lb_fix);
+            // LB-BSP after adaptive change: ratios tuned for B' = B - 10%
+            // of the range, rescaled to B
+            let b_prev = (bf - 0.1 * (w.b_max - w.b0) as f64).max(w.b0 as f64);
+            let mu_p = (b_prev + ratio) / inv;
+            let prev: Vec<f64> = slopes
+                .iter()
+                .zip(&fixed)
+                .map(|(&c_, &f_)| ((mu_p - f_) / c_).max(0.0))
+                .collect();
+            let scale = bf / prev.iter().sum::<f64>();
+            let lb_adapt: Vec<f64> = prev.iter().map(|x| x * scale).collect();
+            let t_lbadapt = optperf::predict_batch_time(&model, &lb_adapt);
+            // DDP even
+            let even = vec![bf / n as f64; n];
+            let t_ddp = optperf::predict_batch_time(&model, &even);
+
+            let t0 = opt.t_pred;
+            tbl.row(vec![
+                b.to_string(),
+                "1.000".into(),
+                format!("{:.3}", t_lbfix / t0),
+                format!("{:.3}", t_lbadapt / t0),
+                format!("{:.3}", t_ddp / t0),
+            ]);
+            rows.push(vec![
+                b.to_string(),
+                format!("{t0:.5}"),
+                format!("{t_lbfix:.5}"),
+                format!("{t_lbadapt:.5}"),
+                format!("{t_ddp:.5}"),
+            ]);
+        }
+        tbl.print(&format!(
+            "Fig 10 — {} ({}): batch time normalized to OptPerf, cluster B",
+            w.model, w.dataset
+        ));
+        write_csv(
+            results_dir().join(format!("fig10_{}.csv", w.name)),
+            &["B", "optperf", "lbbsp_fixed", "lbbsp_adapt", "ddp"],
+            &rows,
+        )?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table 5 — Cannikin's per-epoch overhead
+// ---------------------------------------------------------------------------
+
+pub fn table5() -> Result<Vec<(String, f64, f64)>> {
+    let c = cluster::cluster_b();
+    let mut tbl = Table::new(&["dataset", "model", "max overhead", "overall overhead"]);
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for w in workload::all() {
+        let mut sys = CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+        let mut sim = ClusterSim::new(&c, &w, 31);
+        let mut max_ratio = 0.0f64;
+        let mut tot_overhead = 0.0;
+        let mut tot_epoch = 0.0;
+        let mut phi = w.phi0;
+        for e in 0..24 {
+            let plan = sys.plan_epoch(e, phi);
+            let out_ = sim.step(&plan.local_f64());
+            sys.observe_epoch(&out_.per_node, out_.t_batch);
+            let steps = (w.epoch_samples as f64 / plan.total as f64).ceil();
+            let epoch_secs = steps * out_.t_batch;
+            let ratio = plan.overhead / (epoch_secs + plan.overhead);
+            max_ratio = max_ratio.max(ratio);
+            tot_overhead += plan.overhead;
+            tot_epoch += epoch_secs;
+            phi = w.phi_at((e as f64 / 24.0) * w.s_target);
+        }
+        let overall = tot_overhead / (tot_epoch + tot_overhead);
+        let fmt = |x: f64| {
+            if x < 0.01 {
+                "≪ 1%".to_string()
+            } else {
+                format!("{:.1}%", x * 100.0)
+            }
+        };
+        tbl.row(vec![
+            w.dataset.to_string(),
+            w.model.to_string(),
+            fmt(max_ratio),
+            fmt(overall),
+        ]);
+        rows.push(vec![
+            w.name.to_string(),
+            format!("{:.6}", max_ratio),
+            format!("{:.6}", overall),
+        ]);
+        out.push((w.name.to_string(), max_ratio, overall));
+    }
+    tbl.print("Table 5 — Cannikin optimizer overhead (cluster B)");
+    write_csv(results_dir().join("table5.csv"), &["workload", "max_overhead", "overall_overhead"], &rows)?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// §5.3 — OptPerf prediction error, with vs without inverse-variance weighting
+// ---------------------------------------------------------------------------
+
+pub fn prediction_error() -> Result<Vec<(String, f64, f64)>> {
+    use crate::perfmodel::{
+        ClusterModel, CommLearner, ComputeLearner, ComputeObs, GammaEstimator,
+    };
+    let c = cluster::cluster_a();
+    let mut tbl = Table::new(&["workload", "max err (IVW)", "max err (plain avg)"]);
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for w in workload::all() {
+        // learn the per-node models across the batch-size range the
+        // adaptive engine visits during training (as the paper's online
+        // learner does), then predict OptPerf across the same range
+        let mut sim = ClusterSim::new(&c, &w, 99);
+        let mut learners: Vec<ComputeLearner> =
+            (0..c.n()).map(|_| ComputeLearner::new()).collect();
+        let mut gamma = GammaEstimator::new(c.n());
+        let mut comm = CommLearner::new();
+        let bs: Vec<u64> = (0..6)
+            .map(|i| {
+                let f = i as f64 / 5.0;
+                (w.b0 as f64
+                    * ((w.b_max / 4).max(w.b0 + 1) as f64 / w.b0 as f64).powf(f))
+                .round() as u64
+            })
+            .collect();
+        for &b in &bs {
+            let local: Vec<f64> =
+                crate::baselines::even_split(b, c.n()).iter().map(|&x| x as f64).collect();
+            for _ in 0..8 {
+                let o = sim.step(&local);
+                for (i, ob) in o.per_node.iter().enumerate() {
+                    if ob.b > 0.0 {
+                        learners[i].observe(ComputeObs { b: ob.b, a: ob.a_time, p: ob.p_time });
+                        gamma.observe(i, ob.gamma_obs);
+                        comm.observe(ob.t_comm_obs);
+                    }
+                }
+            }
+        }
+        let nodes: Vec<_> = learners.iter().map(|l| l.fit().unwrap()).collect();
+        let mut errs = [0.0f64; 2]; // [ivw, plain]
+        for (idx, use_ivw) in [(0usize, true), (1usize, false)] {
+            let model = ClusterModel {
+                nodes: nodes.clone(),
+                gamma: if use_ivw {
+                    gamma.fused().unwrap()
+                } else {
+                    gamma.fused_unweighted().unwrap()
+                },
+                t_comm: comm.t_comm().unwrap(),
+                n_buckets: w.n_buckets,
+            };
+            let mut max_err = 0.0f64;
+            for &b in &bs {
+                if let Ok(alloc) = optperf::solve(&model, b as f64) {
+                    let actual = sim.mean_batch_time(&alloc.batch_sizes, 30);
+                    let err = (alloc.t_pred - actual).abs() / actual;
+                    max_err = max_err.max(err);
+                }
+            }
+            errs[idx] = max_err;
+        }
+        tbl.row(vec![
+            w.name.to_string(),
+            format!("{:.1}%", errs[0] * 100.0),
+            format!("{:.1}%", errs[1] * 100.0),
+        ]);
+        rows.push(vec![
+            w.name.to_string(),
+            format!("{:.4}", errs[0]),
+            format!("{:.4}", errs[1]),
+        ]);
+        out.push((w.name.to_string(), errs[0], errs[1]));
+    }
+    tbl.print("§5.3 — OptPerf prediction error on cluster A");
+    write_csv(results_dir().join("pred_error.csv"), &["workload", "ivw_err", "plain_err"], &rows)?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Figs. 1–3 — overlap-pattern traces (illustrative)
+// ---------------------------------------------------------------------------
+
+pub fn overlap_trace() -> Result<()> {
+    let w = workload::imagenet();
+    let c = cluster::cluster_a();
+    let model = w.cluster_model(&c);
+    let mut tbl = Table::new(&["node", "b", "a (DL+FP+PU)", "P (BP)", "syncStart", "t_compute", "bottleneck"]);
+    let alloc = optperf::solve(&model, 128.0)?;
+    for (i, (m, &b)) in model.nodes.iter().zip(&alloc.batch_sizes).enumerate() {
+        let comp = (1.0 - model.gamma) * m.p(b) >= model.t_o();
+        tbl.row(vec![
+            format!("{} ({})", i, c.nodes[i].device.name),
+            format!("{b:.1}"),
+            format!("{:.4}", m.a(b)),
+            format!("{:.4}", m.p(b)),
+            format!("{:.4}", m.sync_start(b, model.gamma)),
+            format!("{:.4}", m.t_compute(b)),
+            if comp { "compute".into() } else { "comm".to_string() },
+        ]);
+    }
+    tbl.print(&format!(
+        "Figs 1–3 — overlap state at OptPerf (B=128, T_comm={:.4}, T_o={:.4}, T_u={:.4}, state={:?})",
+        model.t_comm,
+        model.t_o(),
+        model.t_u(),
+        alloc.state
+    ));
+    Ok(())
+}
+
+/// §6 cluster C — sharing-induced heterogeneity: same pipeline, fractional
+/// GPUs.  Returns normalized convergence times like fig8 for cluster C.
+pub fn cluster_c_study() -> Result<Vec<(String, f64)>> {
+    let c = cluster::cluster_c();
+    let w = workload::cifar10();
+    let mut tbl = Table::new(&["system", "time-to-target (s)", "normalized"]);
+    let mut times = Vec::new();
+    for mut sys in make_systems(&c, &w) {
+        let r = run_system(&c, &w, sys.as_mut(), 4000, 17);
+        let t = r.time_to_target.unwrap_or_else(|| {
+            let last = r.epochs.last().unwrap();
+            last.wall_secs * w.s_target / last.progress.max(1e-9)
+        });
+        times.push((sys.name().to_string(), t));
+    }
+    let worst = times.iter().map(|(_, t)| *t).fold(0.0_f64, f64::max);
+    let mut out = Vec::new();
+    for (n, t) in &times {
+        tbl.row(vec![n.clone(), format!("{t:.0}"), format!("{:.3}", t / worst)]);
+        out.push((n.clone(), t / worst));
+    }
+    tbl.print("§6 — sharing-induced heterogeneity (cluster C, CIFAR-10)");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fig. 8's headline shape: Cannikin fastest on every workload; DDP
+    /// slowest or near-slowest; orderings as the paper reports.
+    #[test]
+    fn fig8_shape_cannikin_wins() {
+        let out = fig8().unwrap();
+        assert_eq!(out.len(), 5);
+        for (wl, norm) in &out {
+            let get = |name: &str| norm.iter().find(|(n, _)| n == name).unwrap().1;
+            let cank = get("cannikin");
+            for (name, t) in norm {
+                assert!(cank <= t + 1e-9, "{wl}: cannikin {cank} vs {name} {t}");
+            }
+            // meaningful speedup vs ddp on heterogeneous cluster B
+            assert!(cank < get("pytorch-ddp") * 0.75, "{wl}: {norm:?}");
+        }
+    }
+
+    /// Fig. 9's shape: Cannikin near OptPerf by epoch 3; LB-BSP needs
+    /// far longer.
+    #[test]
+    fn fig9_shape_cannikin_fast_lbbsp_slow() {
+        let series = fig9().unwrap();
+        let final_lb = series.last().unwrap().2;
+        let cank_e3 = series[3].1;
+        let lb_e3 = series[3].2;
+        // Cannikin at epoch 3 already beats LB-BSP at epoch 3 ...
+        assert!(cank_e3 < lb_e3 * 0.95, "c={cank_e3} lb={lb_e3}");
+        // ... and is within 8% of LB-BSP's *final* level
+        assert!(cank_e3 < final_lb * 1.08, "c={cank_e3} lb_final={final_lb}");
+    }
+
+    /// Table 5's shape: large models have negligible overhead; overall
+    /// overhead stays under ~5%.
+    #[test]
+    fn table5_shape_overheads() {
+        let rows = table5().unwrap();
+        for (wl, max_o, overall) in &rows {
+            assert!(*overall < 0.05, "{wl}: overall {overall}");
+            assert!(*max_o < 0.25, "{wl}: max {max_o}");
+        }
+        let imagenet = rows.iter().find(|(w, _, _)| w == "imagenet").unwrap();
+        assert!(imagenet.2 < 0.001, "imagenet overhead should be ≪1%");
+    }
+
+    /// §5.3's shape: IVW prediction error clearly below the plain average.
+    #[test]
+    fn prediction_error_ivw_beats_plain() {
+        let rows = prediction_error().unwrap();
+        let mut wins = 0;
+        for (_, ivw, plain) in &rows {
+            assert!(*ivw < 0.15, "ivw error too large: {ivw}");
+            if ivw < plain {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 3, "IVW should beat plain averaging on most workloads");
+    }
+}

@@ -1,0 +1,306 @@
+//! Gradient-noise-scale estimation in heterogeneous clusters (paper §4.4).
+//!
+//! The GNS `B_noise = tr(Σ)/|G|²` (McCandlish et al.) drives adaptive
+//! batch-size selection.  With *unequal* local batch sizes, the paper's
+//! Eq. 10 local estimators are unbiased but have batch-size-dependent
+//! variances and are mutually correlated through |g|²; Theorem 4.1 gives
+//! the minimum-variance unbiased linear combination via the inverse of the
+//! covariance-structure matrices A_G / A_S.  This module implements the
+//! estimators, the optimal weights, the naive-average ablation, and the
+//! EMA-smoothed ratio used by the goodput engine.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::{invert, Mat};
+use crate::util::stats::Ema;
+
+/// Eq. 10 local estimates from one synchronization round.
+///
+/// * `b`     — local batch sizes (Σ b = B)
+/// * `gsq_local`  — |gᵢ|² per node
+/// * `gsq_global` — |g|² of the aggregated (Eq. 9 weighted) gradient
+///
+/// Returns `(G_i, S_i)`: per-node unbiased estimates of |G|² and tr(Σ).
+pub fn local_estimates(
+    b: &[f64],
+    gsq_local: &[f64],
+    gsq_global: f64,
+) -> Result<(Vec<f64>, Vec<f64>)> {
+    let total: f64 = b.iter().sum();
+    if b.len() < 2 {
+        bail!("GNS local estimates need >= 2 nodes");
+    }
+    let mut g_est = Vec::with_capacity(b.len());
+    let mut s_est = Vec::with_capacity(b.len());
+    for (&bi, &gi) in b.iter().zip(gsq_local) {
+        let denom = total - bi;
+        if denom <= 0.0 {
+            bail!("local batch {bi} must be < total {total}");
+        }
+        g_est.push((total * gsq_global - bi * gi) / denom);
+        s_est.push(bi * total / denom * (gi - gsq_global));
+    }
+    Ok((g_est, s_est))
+}
+
+/// Theorem 4.1: minimum-variance unbiased weights `w = 1ᵀA⁻¹ / 1ᵀA⁻¹1`
+/// for combining the Eq. 10 local estimates.  Returns `(w_G, w_S)`.
+pub fn optimal_weights(b: &[f64]) -> Result<(Vec<f64>, Vec<f64>)> {
+    let n = b.len();
+    let total: f64 = b.iter().sum();
+    if n < 2 {
+        bail!("optimal weights need >= 2 nodes");
+    }
+    let mut a_g = Mat::zeros(n, n);
+    let mut a_s = Mat::zeros(n, n);
+    for i in 0..n {
+        let bi = b[i];
+        a_g[(i, i)] = (total + 2.0 * bi) / (total * total - total * bi);
+        a_s[(i, i)] = total * bi / (total - bi);
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let bj = b[j];
+            a_g[(i, j)] = (total * total - bi * bi - bj * bj)
+                / (total * (total - bi) * (total - bj));
+            a_s[(i, j)] = bi * bj * (total - bi - bj) / ((total - bi) * (total - bj));
+        }
+    }
+    Ok((weights_from(&a_g)?, weights_from(&a_s)?))
+}
+
+fn weights_from(a: &Mat) -> Result<Vec<f64>> {
+    let inv = invert(a)?;
+    let n = a.rows;
+    // row vector 1ᵀ A⁻¹ (col sums of A⁻¹), normalized
+    let mut w = vec![0.0; n];
+    for j in 0..n {
+        for i in 0..n {
+            w[j] += inv[(i, j)];
+        }
+    }
+    let s: f64 = w.iter().sum();
+    if s.abs() < 1e-300 {
+        bail!("degenerate weight normalization");
+    }
+    for x in &mut w {
+        *x /= s;
+    }
+    Ok(w)
+}
+
+/// Naive equal-weight aggregation — correct in homogeneous clusters, the
+/// ablation baseline in heterogeneous ones.
+pub fn naive_weights(n: usize) -> Vec<f64> {
+    vec![1.0 / n as f64; n]
+}
+
+/// One aggregated GNS estimate from a synchronization round.
+#[derive(Clone, Copy, Debug)]
+pub struct GnsSample {
+    /// estimate of |G|²
+    pub g: f64,
+    /// estimate of tr(Σ)
+    pub s: f64,
+}
+
+/// Compute the optimally-weighted (Theorem 4.1) GNS sample for one round.
+pub fn estimate_round(b: &[f64], gsq_local: &[f64], gsq_global: f64) -> Result<GnsSample> {
+    let (g_i, s_i) = local_estimates(b, gsq_local, gsq_global)?;
+    let (w_g, w_s) = optimal_weights(b)?;
+    let g = g_i.iter().zip(&w_g).map(|(x, w)| x * w).sum();
+    let s = s_i.iter().zip(&w_s).map(|(x, w)| x * w).sum();
+    Ok(GnsSample { g, s })
+}
+
+/// Same but with naive averaging (ablation).
+pub fn estimate_round_naive(b: &[f64], gsq_local: &[f64], gsq_global: f64) -> Result<GnsSample> {
+    let (g_i, s_i) = local_estimates(b, gsq_local, gsq_global)?;
+    let n = b.len() as f64;
+    Ok(GnsSample { g: g_i.iter().sum::<f64>() / n, s: s_i.iter().sum::<f64>() / n })
+}
+
+/// EMA-smoothed running GNS: the ratio of smoothed tr(Σ) and |G|²
+/// (smoothing before the ratio tames the ratio-estimator bias the paper
+/// inherits from McCandlish et al.).
+#[derive(Clone, Debug)]
+pub struct GnsTracker {
+    ema_g: Ema,
+    ema_s: Ema,
+}
+
+impl GnsTracker {
+    pub fn new(beta: f64) -> Self {
+        GnsTracker { ema_g: Ema::new(beta), ema_s: Ema::new(beta) }
+    }
+
+    pub fn push(&mut self, sample: GnsSample) {
+        self.ema_g.push(sample.g);
+        self.ema_s.push(sample.s);
+    }
+
+    /// Current B_noise = tr(Σ)/|G|²; `None` until data arrives or while
+    /// the |G|² estimate is non-positive (early training noise).
+    pub fn b_noise(&self) -> Option<f64> {
+        if self.ema_g.count() == 0 {
+            return None;
+        }
+        let g = self.ema_g.get();
+        let s = self.ema_s.get();
+        if g <= 0.0 || s < 0.0 {
+            None
+        } else {
+            Some(s / g)
+        }
+    }
+
+    pub fn n_samples(&self) -> u64 {
+        self.ema_g.count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn weights_sum_to_one_and_reduce_to_uniform_when_homogeneous() {
+        let b = vec![8.0; 4];
+        let (w_g, w_s) = optimal_weights(&b).unwrap();
+        for w in [&w_g, &w_s] {
+            let s: f64 = w.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            for &x in w.iter() {
+                assert!((x - 0.25).abs() < 1e-9, "homogeneous weight {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn hetero_weights_sum_to_one() {
+        let b = vec![2.0, 8.0, 32.0, 64.0];
+        let (w_g, w_s) = optimal_weights(&b).unwrap();
+        assert!((w_g.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!((w_s.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    /// Monte-Carlo: simulate per-sample gradients with known |G|², tr(Σ);
+    /// the Eq. 10 estimators must be unbiased and the Theorem 4.1 combined
+    /// estimator must match the truth within Monte-Carlo error.
+    #[test]
+    fn monte_carlo_unbiasedness() {
+        let dim = 64;
+        let mut rng = Rng::new(2024);
+        // true gradient & per-component noise
+        let g_true: Vec<f64> = (0..dim).map(|_| rng.normal() * 0.5).collect();
+        let sigma = 0.8_f64; // per-component std => tr(Σ) = dim * σ²
+        let gsq_true: f64 = g_true.iter().map(|x| x * x).sum();
+        let tr_sigma = dim as f64 * sigma * sigma;
+
+        let b = vec![4.0, 12.0, 16.0]; // heterogeneous local batches
+        let total: f64 = b.iter().sum();
+        let rounds = 4000;
+        let (mut sum_g, mut sum_s, mut sum_gn, mut sum_sn) = (0.0, 0.0, 0.0, 0.0);
+        for _ in 0..rounds {
+            // local gradient gᵢ = mean over bᵢ samples: G + noise/√bᵢ
+            let mut locals = Vec::new();
+            let mut global = vec![0.0; dim];
+            for &bi in &b {
+                let gi: Vec<f64> = g_true
+                    .iter()
+                    .map(|&g| g + rng.normal() * sigma / bi.sqrt())
+                    .collect();
+                for (acc, &x) in global.iter_mut().zip(&gi) {
+                    *acc += x * bi / total; // Eq. 9 weighted aggregation
+                }
+                locals.push(gi);
+            }
+            let gsq_local: Vec<f64> =
+                locals.iter().map(|g| g.iter().map(|x| x * x).sum()).collect();
+            let gsq_global: f64 = global.iter().map(|x| x * x).sum();
+            let opt = estimate_round(&b, &gsq_local, gsq_global).unwrap();
+            let nai = estimate_round_naive(&b, &gsq_local, gsq_global).unwrap();
+            sum_g += opt.g;
+            sum_s += opt.s;
+            sum_gn += nai.g;
+            sum_sn += nai.s;
+        }
+        let (mean_g, mean_s) = (sum_g / rounds as f64, sum_s / rounds as f64);
+        let (mean_gn, mean_sn) = (sum_gn / rounds as f64, sum_sn / rounds as f64);
+        // unbiasedness of both (they differ in variance, not mean)
+        assert!((mean_g - gsq_true).abs() / gsq_true < 0.05, "{mean_g} vs {gsq_true}");
+        assert!((mean_s - tr_sigma).abs() / tr_sigma < 0.05, "{mean_s} vs {tr_sigma}");
+        assert!((mean_gn - gsq_true).abs() / gsq_true < 0.05);
+        assert!((mean_sn - tr_sigma).abs() / tr_sigma < 0.05);
+        // ratio lands on the true GNS
+        let b_noise = mean_s / mean_g;
+        let truth = tr_sigma / gsq_true;
+        assert!((b_noise - truth).abs() / truth < 0.1, "{b_noise} vs {truth}");
+    }
+
+    /// Theorem 4.1's point: the optimal combination has lower variance
+    /// than naive averaging under heterogeneous local batches.
+    #[test]
+    fn optimal_weights_reduce_variance() {
+        let dim = 32;
+        let mut rng = Rng::new(7);
+        let g_true: Vec<f64> = (0..dim).map(|_| rng.normal() * 0.4).collect();
+        let sigma = 1.0_f64;
+        let b = vec![1.0, 2.0, 29.0]; // strongly heterogeneous
+        let total: f64 = b.iter().sum();
+        let rounds = 3000;
+        let (mut opt_sq, mut nai_sq, mut opt_sum, mut nai_sum) = (0.0, 0.0, 0.0, 0.0);
+        for _ in 0..rounds {
+            let mut locals = Vec::new();
+            let mut global = vec![0.0; dim];
+            for &bi in &b {
+                let gi: Vec<f64> = g_true
+                    .iter()
+                    .map(|&g| g + rng.normal() * sigma / bi.sqrt())
+                    .collect();
+                for (acc, &x) in global.iter_mut().zip(&gi) {
+                    *acc += x * bi / total;
+                }
+                locals.push(gi);
+            }
+            let gsq_local: Vec<f64> =
+                locals.iter().map(|g| g.iter().map(|x| x * x).sum()).collect();
+            let gsq_global: f64 = global.iter().map(|x| x * x).sum();
+            let o = estimate_round(&b, &gsq_local, gsq_global).unwrap().s;
+            let na = estimate_round_naive(&b, &gsq_local, gsq_global).unwrap().s;
+            opt_sum += o;
+            nai_sum += na;
+            opt_sq += o * o;
+            nai_sq += na * na;
+        }
+        let var_opt = opt_sq / rounds as f64 - (opt_sum / rounds as f64).powi(2);
+        let var_nai = nai_sq / rounds as f64 - (nai_sum / rounds as f64).powi(2);
+        assert!(
+            var_opt < var_nai * 0.9,
+            "optimal var {var_opt} not clearly below naive {var_nai}"
+        );
+    }
+
+    #[test]
+    fn tracker_smooths_and_guards() {
+        let mut t = GnsTracker::new(0.9);
+        assert!(t.b_noise().is_none());
+        for _ in 0..50 {
+            t.push(GnsSample { g: 2.0, s: 6.0 });
+        }
+        let bn = t.b_noise().unwrap();
+        assert!((bn - 3.0).abs() < 1e-6);
+        // negative |G|² estimate -> None
+        let mut t2 = GnsTracker::new(0.5);
+        t2.push(GnsSample { g: -1.0, s: 1.0 });
+        assert!(t2.b_noise().is_none());
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        assert!(local_estimates(&[8.0], &[1.0], 1.0).is_err());
+        assert!(optimal_weights(&[8.0]).is_err());
+    }
+}

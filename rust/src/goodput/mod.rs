@@ -1,0 +1,130 @@
+//! Goodput-based adaptive batch-size engine (Pollux-style, paper §2.2/§4.1).
+//!
+//! `goodput(B) = throughput(B) · efficiency(B)` where
+//! `efficiency(B) = (φ + B₀)/(φ + B)` is the per-example statistical
+//! efficiency at gradient noise scale φ, and `throughput = B / T(B)` with
+//! `T(B)` coming from the OptPerf predictor (Cannikin) or an even-split
+//! model (AdaptDL baseline).  Before each epoch the engine enumerates
+//! candidate total batch sizes and picks the goodput argmax; Cannikin's
+//! §4.5 caching strategy (OptPerf_init + warm-started overlap search)
+//! makes the per-epoch overhead a single OptPerf evaluation in the common
+//! case.
+
+/// Statistical efficiency of batch size `b` relative to the base batch
+/// `b0` at gradient noise scale `phi` (Pollux Eq.; McCandlish model).
+pub fn efficiency(phi: f64, b0: f64, b: f64) -> f64 {
+    (phi + b0) / (phi + b)
+}
+
+/// Per-step training progress in "ideal steps" (McCandlish): a step with
+/// batch B advances optimization by `B/(B+φ)` of a noiseless step.
+pub fn step_progress(phi: f64, b: f64) -> f64 {
+    b / (b + phi)
+}
+
+/// Candidate total batch sizes: geometric grid over [b0, b_max], always
+/// including both endpoints (the paper enumerates candidates from the
+/// AdaptDL range).
+pub fn candidates(b0: u64, b_max: u64, per_decade: usize) -> Vec<u64> {
+    assert!(b0 >= 1 && b_max >= b0);
+    let mut out = vec![b0];
+    let ratio = 10f64.powf(1.0 / per_decade as f64);
+    let mut x = b0 as f64;
+    loop {
+        x *= ratio;
+        let xi = x.round() as u64;
+        if xi >= b_max {
+            break;
+        }
+        if xi > *out.last().unwrap() {
+            out.push(xi);
+        }
+    }
+    if *out.last().unwrap() != b_max {
+        out.push(b_max);
+    }
+    out
+}
+
+/// One scored candidate.
+#[derive(Clone, Copy, Debug)]
+pub struct Scored {
+    pub batch: u64,
+    pub t_batch: f64,
+    pub efficiency: f64,
+    pub goodput: f64,
+}
+
+/// Pick the goodput-optimal total batch size.  `time_of` returns the
+/// predicted batch-processing time for a candidate (OptPerf for Cannikin,
+/// an even-split Eq. 7 evaluation for AdaptDL-like baselines).
+pub fn select(
+    phi: f64,
+    b0: u64,
+    cands: &[u64],
+    mut time_of: impl FnMut(u64) -> f64,
+) -> (Scored, Vec<Scored>) {
+    assert!(!cands.is_empty());
+    let mut all = Vec::with_capacity(cands.len());
+    for &b in cands {
+        let t = time_of(b);
+        let e = efficiency(phi, b0 as f64, b as f64);
+        let g = if t > 0.0 { b as f64 / t * e } else { 0.0 };
+        all.push(Scored { batch: b, t_batch: t, efficiency: e, goodput: g });
+    }
+    let best = *all
+        .iter()
+        .max_by(|a, b| a.goodput.partial_cmp(&b.goodput).unwrap())
+        .unwrap();
+    (best, all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficiency_decreases_in_b() {
+        let phi = 500.0;
+        assert!((efficiency(phi, 64.0, 64.0) - 1.0).abs() < 1e-12);
+        assert!(efficiency(phi, 64.0, 128.0) < 1.0);
+        assert!(efficiency(phi, 64.0, 1024.0) < efficiency(phi, 64.0, 128.0));
+    }
+
+    #[test]
+    fn high_noise_tolerates_large_batches() {
+        // at huge φ, large batches barely lose efficiency
+        assert!(efficiency(1e6, 64.0, 4096.0) > 0.99);
+        // at tiny φ, they lose a lot
+        assert!(efficiency(10.0, 64.0, 4096.0) < 0.05);
+    }
+
+    #[test]
+    fn candidates_cover_range_monotonically() {
+        let c = candidates(64, 4096, 6);
+        assert_eq!(*c.first().unwrap(), 64);
+        assert_eq!(*c.last().unwrap(), 4096);
+        assert!(c.windows(2).all(|w| w[0] < w[1]));
+        assert!(c.len() >= 8);
+    }
+
+    #[test]
+    fn select_balances_throughput_and_efficiency() {
+        // batch time: fixed 0.1s + 0.001s per sample (throughput rises
+        // with B, saturating);  φ small => small batches win, φ large =>
+        // large batches win.
+        let t = |b: u64| 0.1 + 0.001 * b as f64;
+        let cands = candidates(32, 8192, 6);
+        let (low_phi, _) = select(50.0, 32, &cands, t);
+        let (high_phi, _) = select(5e7, 32, &cands, t);
+        assert!(low_phi.batch < high_phi.batch, "{low_phi:?} {high_phi:?}");
+        assert_eq!(high_phi.batch, 8192); // effectively throughput-bound
+        assert!(low_phi.batch <= 512); // efficiency-bound regime stays small
+    }
+
+    #[test]
+    fn step_progress_saturates() {
+        assert!(step_progress(100.0, 10.0) < 0.1);
+        assert!(step_progress(100.0, 10_000.0) > 0.99);
+    }
+}

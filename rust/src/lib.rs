@@ -1,0 +1,42 @@
+//! # Cannikin — near-optimal data-parallel DNN training over heterogeneous clusters
+//!
+//! Rust + JAX + Pallas reproduction of *"Training DNN Models over
+//! Heterogeneous Clusters with Optimal Performance"* (Nie, Maghakian, Liu,
+//! 2024).  See `DESIGN.md` for the system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! Layer map:
+//! * **L3 (this crate)** — the paper's contribution: per-node performance
+//!   modeling ([`perfmodel`]), the OptPerf optimizer / Algorithm 1
+//!   ([`optperf`]), heterogeneous gradient-noise-scale estimation /
+//!   Theorem 4.1 ([`gns`]), the goodput adaptive-batch-size engine
+//!   ([`goodput`]), weighted gradient aggregation + bucketed ring
+//!   all-reduce ([`gradsync`]), and the leader/worker coordinator
+//!   ([`coordinator`]).
+//! * **L2/L1 (python/, build-time only)** — the transformer LM and its
+//!   Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`, executed from
+//!   rust via [`runtime`] (PJRT CPU).
+//! * **Substrates** — everything the paper depends on that the offline
+//!   image does not provide: [`linalg`], [`util::json`], [`util::rng`],
+//!   [`util::stats`], [`benchkit`], the event-level cluster simulator
+//!   ([`simulator`]) and the baseline systems ([`baselines`]).
+
+pub mod baselines;
+pub mod benchkit;
+pub mod cluster;
+pub mod coordinator;
+pub mod data;
+pub mod figures;
+pub mod gns;
+pub mod goodput;
+pub mod gradsync;
+pub mod linalg;
+pub mod metrics;
+pub mod optperf;
+pub mod perfmodel;
+pub mod runtime;
+pub mod simulator;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,335 @@
+//! Dense linear-algebra substrate: solve, invert, least squares.
+//!
+//! Needed by the OptPerf solver (linear systems over node performance
+//! models), Theorem 4.1's optimal GNS weights (inverting the A_G / A_S
+//! covariance-structure matrices), and the compute-model least-squares
+//! fitter.  Sizes are small (n = cluster size ≤ a few hundred), so a plain
+//! partial-pivot Gauss-Jordan is the right tool.
+
+use anyhow::{bail, Result};
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows[0].len();
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut out = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = &self.data[i * self.cols..(i + 1) * self.cols];
+            out[i] = row.iter().zip(x).map(|(a, b)| a * b).sum();
+        }
+        out
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] += a * other[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Solve `A x = b` by Gauss elimination with partial pivoting.
+pub fn solve(a: &Mat, b: &[f64]) -> Result<Vec<f64>> {
+    if a.rows != a.cols {
+        bail!("solve: non-square {}x{}", a.rows, a.cols);
+    }
+    if b.len() != a.rows {
+        bail!("solve: rhs length {} != {}", b.len(), a.rows);
+    }
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut x = b.to_vec();
+    for col in 0..n {
+        // pivot
+        let piv = (col..n)
+            .max_by(|&i, &j| m[(i, col)].abs().partial_cmp(&m[(j, col)].abs()).unwrap())
+            .unwrap();
+        if m[(piv, col)].abs() < 1e-300 {
+            bail!("solve: singular matrix at column {col}");
+        }
+        if piv != col {
+            for j in 0..n {
+                let tmp = m[(piv, j)];
+                m[(piv, j)] = m[(col, j)];
+                m[(col, j)] = tmp;
+            }
+            x.swap(piv, col);
+        }
+        let d = m[(col, col)];
+        for i in (col + 1)..n {
+            let f = m[(i, col)] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..n {
+                let v = m[(col, j)];
+                m[(i, j)] -= f * v;
+            }
+            x[i] -= f * x[col];
+        }
+    }
+    // back substitution
+    for col in (0..n).rev() {
+        let mut acc = x[col];
+        for j in (col + 1)..n {
+            acc -= m[(col, j)] * x[j];
+        }
+        x[col] = acc / m[(col, col)];
+    }
+    Ok(x)
+}
+
+/// Matrix inverse via Gauss-Jordan with partial pivoting.
+pub fn invert(a: &Mat) -> Result<Mat> {
+    if a.rows != a.cols {
+        bail!("invert: non-square {}x{}", a.rows, a.cols);
+    }
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut inv = Mat::eye(n);
+    for col in 0..n {
+        let piv = (col..n)
+            .max_by(|&i, &j| m[(i, col)].abs().partial_cmp(&m[(j, col)].abs()).unwrap())
+            .unwrap();
+        if m[(piv, col)].abs() < 1e-300 {
+            bail!("invert: singular matrix at column {col}");
+        }
+        if piv != col {
+            for j in 0..n {
+                m.data.swap(piv * n + j, col * n + j);
+                inv.data.swap(piv * n + j, col * n + j);
+            }
+        }
+        let d = m[(col, col)];
+        for j in 0..n {
+            m[(col, j)] /= d;
+            inv[(col, j)] /= d;
+        }
+        for i in 0..n {
+            if i == col {
+                continue;
+            }
+            let f = m[(i, col)];
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                let mv = m[(col, j)];
+                let iv = inv[(col, j)];
+                m[(i, j)] -= f * mv;
+                inv[(i, j)] -= f * iv;
+            }
+        }
+    }
+    Ok(inv)
+}
+
+/// Least squares fit `argmin_x |A x - b|²` via normal equations with a tiny
+/// ridge for numerical safety.  A: (m, n) with m >= n.
+pub fn lstsq(a: &Mat, b: &[f64]) -> Result<Vec<f64>> {
+    if b.len() != a.rows {
+        bail!("lstsq: rhs length {} != rows {}", b.len(), a.rows);
+    }
+    let at = a.transpose();
+    let mut ata = at.matmul(a);
+    let ridge = 1e-12
+        * (0..ata.rows).map(|i| ata[(i, i)].abs()).fold(0.0_f64, f64::max).max(1.0);
+    for i in 0..ata.rows {
+        ata[(i, i)] += ridge;
+    }
+    let atb = at.matvec(b);
+    solve(&ata, &atb)
+}
+
+/// Fit `y = slope * x + intercept` by least squares over (x, y) pairs.
+pub fn fit_line(points: &[(f64, f64)]) -> Result<(f64, f64)> {
+    if points.len() < 2 {
+        bail!("fit_line: need >= 2 points, got {}", points.len());
+    }
+    let mut a = Mat::zeros(points.len(), 2);
+    let mut b = vec![0.0; points.len()];
+    for (i, &(x, y)) in points.iter().enumerate() {
+        a[(i, 0)] = x;
+        a[(i, 1)] = 1.0;
+        b[i] = y;
+    }
+    let sol = lstsq(&a, &b)?;
+    Ok((sol[0], sol[1]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, close, ensure};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solve_known_system() {
+        let a = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 3.0]]);
+        let x = solve(&a, &[5.0, 10.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_requires_pivoting() {
+        // zero on the diagonal forces a row swap
+        let a = Mat::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let x = solve(&a, &[2.0, 3.0]).unwrap();
+        assert_eq!(x, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn solve_rejects_singular() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(solve(&a, &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn invert_roundtrip_random() {
+        check(
+            "invert-roundtrip",
+            50,
+            |r| {
+                let n = 1 + r.below(8) as usize;
+                let mut m = Mat::zeros(n, n);
+                for i in 0..n {
+                    for j in 0..n {
+                        m[(i, j)] = r.normal();
+                    }
+                    m[(i, i)] += 3.0; // diagonally dominant => invertible
+                }
+                m
+            },
+            |m| {
+                let inv = invert(m).map_err(|e| e.to_string())?;
+                let prod = m.matmul(&inv);
+                for i in 0..m.rows {
+                    for j in 0..m.cols {
+                        let want = if i == j { 1.0 } else { 0.0 };
+                        close(prod[(i, j)], want, 1e-8, "A*A^-1")?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn solve_matches_invert_random() {
+        check(
+            "solve-vs-invert",
+            30,
+            |r| {
+                let n = 1 + r.below(6) as usize;
+                let mut m = Mat::zeros(n, n);
+                for i in 0..n {
+                    for j in 0..n {
+                        m[(i, j)] = r.normal();
+                    }
+                    m[(i, i)] += 4.0;
+                }
+                let b: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+                (m, b)
+            },
+            |(m, b)| {
+                let x1 = solve(m, b).map_err(|e| e.to_string())?;
+                let x2 = invert(m).map_err(|e| e.to_string())?.matvec(b);
+                for (a, c) in x1.iter().zip(&x2) {
+                    close(*a, *c, 1e-8, "solve vs invert")?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn lstsq_recovers_line() {
+        let mut rng = Rng::new(4);
+        let pts: Vec<(f64, f64)> = (0..100)
+            .map(|i| {
+                let x = i as f64;
+                (x, 3.5 * x + 2.0 + rng.normal() * 0.01)
+            })
+            .collect();
+        let (k, m) = fit_line(&pts).unwrap();
+        assert!((k - 3.5).abs() < 1e-2, "slope {k}");
+        assert!((m - 2.0).abs() < 1e-1, "intercept {m}");
+    }
+
+    #[test]
+    fn lstsq_exact_when_determined() {
+        let a = Mat::from_rows(&[&[1.0, 0.0], &[0.0, 1.0], &[1.0, 1.0]]);
+        let x = lstsq(&a, &[1.0, 2.0, 3.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-6);
+        assert!((x[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fit_line_needs_two_points() {
+        assert!(fit_line(&[(1.0, 1.0)]).is_err());
+    }
+}

@@ -1,0 +1,235 @@
+//! `cannikin` — leader entrypoint + CLI.
+//!
+//! Subcommands:
+//!   train     real-numerics end-to-end training over the AOT artifacts
+//!   sim       convergence simulation of one system on one workload
+//!   figures   regenerate the paper's tables & figures (results/*.csv)
+//!   predict   print the OptPerf allocation for a cluster + batch size
+//!   inspect   show an artifact directory's manifest
+//!
+//! (Hand-rolled arg parsing: clap is not in the offline vendor set.)
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use cannikin::baselines::{AdaptDl, Ddp, LbBsp, System};
+use cannikin::cluster;
+use cannikin::coordinator::{train, BatchPolicy, CannikinPlanner, TrainConfig};
+use cannikin::figures;
+use cannikin::optperf;
+use cannikin::runtime::Manifest;
+use cannikin::simulator::workload;
+
+const USAGE: &str = "\
+cannikin — heterogeneous-cluster adaptive-batch-size training (paper repro)
+
+USAGE:
+  cannikin train   [--artifacts DIR] [--cluster a|b|c | --cluster-file F.json] [--workload W]
+                   [--epochs N] [--steps N] [--lr F] [--fixed-batch B]
+                   [--corpus-kb N] [--seed N] [--log FILE]
+  cannikin sim     [--cluster a|b|c] [--workload W] [--system S] [--epochs N]
+  cannikin figures [--fig 5|6|7|8|9|10|t5|pred|overlap|c|all]
+  cannikin predict [--cluster a|b|c] [--workload W] --batch B
+  cannikin inspect [--artifacts DIR]
+
+workloads: imagenet cifar10 librispeech squad movielens
+systems:   cannikin adaptdl lbbsp ddp";
+
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                out.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            bail!("unexpected argument {a:?}");
+        }
+    }
+    Ok(out)
+}
+
+fn get<'a>(flags: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'a str {
+    flags.get(key).map(|s| s.as_str()).unwrap_or(default)
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    match cmd.as_str() {
+        "train" => cmd_train(&flags),
+        "sim" => cmd_sim(&flags),
+        "figures" => cmd_figures(&flags),
+        "predict" => cmd_predict(&flags),
+        "inspect" => cmd_inspect(&flags),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cluster_arg(flags: &HashMap<String, String>) -> Result<cluster::ClusterSpec> {
+    if let Some(path) = flags.get("cluster-file") {
+        return cluster::ClusterSpec::from_json_file(std::path::Path::new(path));
+    }
+    let name = get(flags, "cluster", "a");
+    cluster::by_name(name).ok_or_else(|| anyhow!("unknown cluster {name:?} (a|b|c)"))
+}
+
+fn workload_arg(flags: &HashMap<String, String>) -> Result<workload::Workload> {
+    let name = get(flags, "workload", "cifar10");
+    workload::by_name(name).ok_or_else(|| anyhow!("unknown workload {name:?}"))
+}
+
+fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
+    let mut cfg = TrainConfig::quick(
+        PathBuf::from(get(flags, "artifacts", "artifacts/tiny")),
+        cluster_arg(flags)?,
+        workload_arg(flags)?,
+    );
+    cfg.epochs = get(flags, "epochs", "6").parse()?;
+    cfg.steps_per_epoch = get(flags, "steps", "12").parse()?;
+    cfg.lr = get(flags, "lr", "0.05").parse()?;
+    cfg.seed = get(flags, "seed", "0").parse()?;
+    cfg.corpus_bytes = get(flags, "corpus-kb", "64").parse::<usize>()? * 1024;
+    cfg.verbose = true;
+    if let Some(b) = flags.get("fixed-batch") {
+        cfg.policy = BatchPolicy::Fixed(b.parse()?);
+    }
+    if let Some(log) = flags.get("log") {
+        cfg.log_path = Some(PathBuf::from(log));
+    }
+    let report = train(&cfg)?;
+    println!(
+        "\ntrained {} epochs in {:.1}s real; final eval loss {:.4}",
+        report.epochs.len(),
+        report.real_secs,
+        report.epochs.last().map(|e| e.eval_loss).unwrap_or(f32::NAN),
+    );
+    Ok(())
+}
+
+fn cmd_sim(flags: &HashMap<String, String>) -> Result<()> {
+    let c = cluster_arg(flags)?;
+    let w = workload_arg(flags)?;
+    let epochs: usize = get(flags, "epochs", "4000").parse()?;
+    let name = get(flags, "system", "cannikin").to_string();
+    let mut system: Box<dyn System> = match name.as_str() {
+        "cannikin" => Box::new(CannikinPlanner::new(
+            c.n(),
+            w.b0,
+            w.b_max,
+            w.n_buckets,
+            BatchPolicy::Adaptive,
+        )),
+        "adaptdl" => Box::new(AdaptDl::new(c.n(), w.b0, w.b_max, w.n_buckets)),
+        "lbbsp" => Box::new(LbBsp::new(c.n(), w.b0, 5)),
+        "ddp" => Box::new(Ddp::with_total(c.n(), w.b0)),
+        other => bail!("unknown system {other:?}"),
+    };
+    let r = figures::run_system(&c, &w, system.as_mut(), epochs, 7);
+    for e in r.epochs.iter().step_by(usize::max(1, r.epochs.len() / 25)) {
+        println!(
+            "epoch {:>5}  B={:<6} t_batch={:.4}s  wall={:>9.1}s  {}={:.2}",
+            e.epoch, e.total_batch, e.t_batch, e.wall_secs, w.target, e.metric
+        );
+    }
+    match r.time_to_target {
+        Some(t) => println!("\n{name} reached {} in {t:.0} simulated seconds", w.target),
+        None => println!("\n{name} did not reach {} within {epochs} epochs", w.target),
+    }
+    Ok(())
+}
+
+fn cmd_figures(flags: &HashMap<String, String>) -> Result<()> {
+    let which = get(flags, "fig", "all");
+    let run = |w: &str| -> Result<()> {
+        match w {
+            "5" => figures::fig5(),
+            "6" => figures::fig6(),
+            "7" => figures::fig7(),
+            "8" => figures::fig8().map(|_| ()),
+            "9" => figures::fig9().map(|_| ()),
+            "10" => figures::fig10(),
+            "t5" => figures::table5().map(|_| ()),
+            "pred" => figures::prediction_error().map(|_| ()),
+            "overlap" => figures::overlap_trace(),
+            "c" => figures::cluster_c_study().map(|_| ()),
+            other => bail!("unknown figure {other:?}"),
+        }
+    };
+    if which == "all" {
+        for w in ["overlap", "6", "9", "10", "t5", "pred", "c", "5", "7", "8"] {
+            run(w)?;
+        }
+    } else {
+        run(which)?;
+    }
+    println!("\nCSV data written under results/");
+    Ok(())
+}
+
+fn cmd_predict(flags: &HashMap<String, String>) -> Result<()> {
+    let c = cluster_arg(flags)?;
+    let w = workload_arg(flags)?;
+    let b: u64 = flags
+        .get("batch")
+        .ok_or_else(|| anyhow!("--batch required"))?
+        .parse()?;
+    let model = w.cluster_model(&c);
+    let alloc = optperf::solve(&model, b as f64)?;
+    println!(
+        "OptPerf for {} on {} at B={b}: T = {:.4}s  (state {:?}, {} solves)",
+        w.name, c.name, alloc.t_pred, alloc.state, alloc.solves
+    );
+    for (node, (bi, r)) in c
+        .nodes
+        .iter()
+        .zip(alloc.batch_sizes.iter().zip(alloc.ratios()))
+    {
+        println!("  node {:>2} {:<12} b = {:>8.2}  (r = {:.3})", node.id, node.device.name, bi, r);
+    }
+    Ok(())
+}
+
+fn cmd_inspect(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = PathBuf::from(get(flags, "artifacts", "artifacts/tiny"));
+    let m = Manifest::load(&dir)?;
+    println!(
+        "preset {:?}: {} params ({} tensors), vocab {}, seq {}, buckets {:?}",
+        m.preset,
+        m.n_params_total,
+        m.params.len(),
+        m.vocab,
+        m.seq_len,
+        m.buckets
+    );
+    for p in m.params.iter().take(8) {
+        println!("  {:<18} {:?}", p.name, p.shape);
+    }
+    if m.params.len() > 8 {
+        println!("  … {} more", m.params.len() - 8);
+    }
+    Ok(())
+}

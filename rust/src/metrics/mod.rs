@@ -1,0 +1,91 @@
+//! Metrics emitters: CSV tables and JSONL event logs under `results/`.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Append-only JSONL event log.
+pub struct JsonlLog {
+    path: PathBuf,
+}
+
+impl JsonlLog {
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(&path, "")?;
+        Ok(JsonlLog { path })
+    }
+
+    pub fn log(&self, event: &Json) -> Result<()> {
+        let mut f = fs::OpenOptions::new()
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("opening {}", self.path.display()))?;
+        writeln!(f, "{}", event.to_string_compact())?;
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Write a CSV file (header + rows) under `results/`.
+pub fn write_csv(path: impl AsRef<Path>, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let mut out = header.join(",") + "\n";
+    for r in rows {
+        out += &(r.join(",") + "\n");
+    }
+    fs::write(path, out).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// results/ directory helper (created on demand).
+pub fn results_dir() -> PathBuf {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
+    let _ = fs::create_dir_all(&d);
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("cannikin-test-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn jsonl_appends_parseable_lines() {
+        let p = tmp("log.jsonl");
+        let log = JsonlLog::create(&p).unwrap();
+        log.log(&Json::obj(vec![("epoch", Json::Num(1.0))])).unwrap();
+        log.log(&Json::obj(vec![("epoch", Json::Num(2.0))])).unwrap();
+        let text = fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in lines {
+            Json::parse(l).unwrap();
+        }
+        fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn csv_writes_header_and_rows() {
+        let p = tmp("t.csv");
+        write_csv(&p, &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        assert_eq!(fs::read_to_string(&p).unwrap(), "a,b\n1,2\n");
+        fs::remove_file(p).unwrap();
+    }
+}

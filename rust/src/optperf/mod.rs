@@ -1,0 +1,621 @@
+//! **OptPerf** — the paper's core contribution (§3.3, §4.2, Algorithm 1).
+//!
+//! Given per-node compute models, the communication model (γ, T_comm, K
+//! buckets) and a total batch size B, find the local-batch-size vector
+//! `b` minimizing the cluster batch-processing time
+//!
+//! ```text
+//! T(b) = max( maxᵢ t_computeᵢ(bᵢ) + T_u ,  maxᵢ syncStartᵢ(bᵢ) + T_comm )   (Eq. 7)
+//! ```
+//!
+//! Appendix A's KKT analysis gives the optimality conditions per overlap
+//! state; each state reduces to one linear equation in the common finish
+//! time μ, so Algorithm 1 is: Check 1 (all compute-bottleneck), Check 2
+//! (all comm-bottleneck), else a binary search over the bottleneck
+//! boundary after ranking nodes by their state-crossover point.
+//!
+//! [`solve_bisection`] is an independent water-filling solver for the same
+//! optimum (monotone in μ); the test suite asserts the two agree, which is
+//! a strong cross-check on both derivations.
+
+use anyhow::{bail, Result};
+
+use crate::perfmodel::{ClusterModel, ComputeModel};
+use crate::util::round_preserving_sum;
+
+/// Which overlap state the optimum landed in (paper Fig. 1–3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverlapState {
+    /// every node's bottleneck is gradient computation (Eq. 5)
+    AllCompute,
+    /// every node's bottleneck is gradient synchronization (Eq. 6)
+    AllComm,
+    /// `n_compute` compute-bottleneck nodes, the rest comm-bottleneck
+    Mixed { n_compute: usize },
+}
+
+/// Result of the OptPerf optimization.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    /// optimal real-valued local batch sizes (Σ = B)
+    pub batch_sizes: Vec<f64>,
+    /// predicted batch-processing time (OptPerf)
+    pub t_pred: f64,
+    pub state: OverlapState,
+    /// linear-system solves performed (overhead accounting, Table 5)
+    pub solves: usize,
+}
+
+impl Allocation {
+    /// Local mini-batch ratios r = b / B (paper §3.1).
+    pub fn ratios(&self) -> Vec<f64> {
+        let total: f64 = self.batch_sizes.iter().sum();
+        self.batch_sizes.iter().map(|b| b / total).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Closed-form per-state solvers
+// ---------------------------------------------------------------------------
+
+/// Solve `lineᵢ(bᵢ) = μ ∀ i, Σ bᵢ = B` where lineᵢ has `slope[i]`,
+/// `fixed[i]`: μ = (B + Σ f/c) / Σ 1/c.  One "linear-system solve" in the
+/// paper's accounting.
+fn solve_common_level(slopes: &[f64], fixed: &[f64], total_b: f64) -> (f64, Vec<f64>) {
+    let mut inv_sum = 0.0;
+    let mut ratio_sum = 0.0;
+    for (&c, &f) in slopes.iter().zip(fixed) {
+        inv_sum += 1.0 / c;
+        ratio_sum += f / c;
+    }
+    let mu = (total_b + ratio_sum) / inv_sum;
+    let b: Vec<f64> = slopes.iter().zip(fixed).map(|(&c, &f)| (mu - f) / c).collect();
+    (mu, b)
+}
+
+/// Eq. 5/6 validity test: is node i compute-bottleneck at batch b?
+/// `(1-γ)·Pᵢ(bᵢ) >= T_o`
+fn is_compute_bottleneck(m: &ComputeModel, b: f64, gamma: f64, t_o: f64) -> bool {
+    (1.0 - gamma) * m.p(b) >= t_o
+}
+
+/// The batch size at which node i crosses from comm- to compute-bottleneck
+/// as μ grows: solve t_compute(b) = syncStart(b) + T_o for the common μ.
+/// Nodes with a smaller crossover μ become compute-bottleneck first.
+fn crossover_mu(m: &ComputeModel, gamma: f64, t_o: f64) -> f64 {
+    // t_compute line: c·b + f;  comm line + T_o: u·b + v + T_o
+    // they’re equal (same b) when (1-γ)·P(b) = T_o  =>  b* = (T_o/(1-γ) - m)/k
+    // μ at that point is t_compute(b*).
+    let k = m.k.max(1e-30);
+    let b_star = (t_o / (1.0 - gamma).max(1e-12) - m.m) / k;
+    m.t_compute(b_star)
+}
+
+// ---------------------------------------------------------------------------
+// Algorithm 1
+// ---------------------------------------------------------------------------
+
+/// Algorithm 1: determine the overlap state and OptPerf configuration.
+///
+/// Wraps the interior solver with b ≥ 0 boundary handling: a node whose
+/// fixed cost alone exceeds the common level (e.g. a very slow node at a
+/// small total batch) gets pinned to b = 0 and the system re-solves over
+/// the remaining nodes; the pinned node's fixed time then floors the
+/// predicted batch time.
+pub fn solve(model: &ClusterModel, total_b: f64) -> Result<Allocation> {
+    let n = model.n();
+    if n == 0 {
+        bail!("empty cluster");
+    }
+    let mut active: Vec<usize> = (0..n).collect();
+    let mut total_solves = 0;
+    loop {
+        let sub = ClusterModel {
+            nodes: active.iter().map(|&i| model.nodes[i]).collect(),
+            gamma: model.gamma,
+            t_comm: model.t_comm,
+            n_buckets: model.n_buckets,
+        };
+        let mut alloc = solve_interior(&sub, total_b)?;
+        total_solves += alloc.solves;
+        let negative: Vec<usize> = alloc
+            .batch_sizes
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b < -1e-9)
+            .map(|(pos, _)| pos)
+            .collect();
+        if negative.is_empty() {
+            // scatter back to full-cluster indexing, pinned nodes at 0
+            let mut b = vec![0.0; n];
+            for (pos, &i) in active.iter().enumerate() {
+                b[i] = alloc.batch_sizes[pos].max(0.0);
+            }
+            // pinned nodes' fixed times floor the batch time (Eq. 7)
+            let t_pred = alloc.t_pred.max(predict_batch_time(model, &b));
+            alloc.batch_sizes = b;
+            alloc.t_pred = t_pred;
+            alloc.solves = total_solves;
+            return Ok(alloc);
+        }
+        if negative.len() == active.len() {
+            bail!("no feasible allocation: all nodes pinned at zero");
+        }
+        // pin the offending nodes (remove from the active set) and retry
+        let mut keep = Vec::with_capacity(active.len() - negative.len());
+        for (pos, &i) in active.iter().enumerate() {
+            if !negative.contains(&pos) {
+                keep.push(i);
+            }
+        }
+        active = keep;
+    }
+}
+
+/// Interior Algorithm 1 (assumes the optimum has every node's b > 0).
+fn solve_interior(model: &ClusterModel, total_b: f64) -> Result<Allocation> {
+    let n = model.n();
+    if n == 0 {
+        bail!("empty cluster");
+    }
+    if total_b <= 0.0 {
+        bail!("total batch size must be positive, got {total_b}");
+    }
+    let gamma = model.gamma;
+    let t_o = model.t_o();
+    let t_u = model.t_u();
+    let mut solves = 0;
+
+    let comp_slopes: Vec<f64> = model.nodes.iter().map(|m| m.slope()).collect();
+    let comp_fixed: Vec<f64> = model.nodes.iter().map(|m| m.fixed()).collect();
+    let sync_slopes: Vec<f64> = model.nodes.iter().map(|m| m.sync_slope(gamma)).collect();
+    let sync_fixed: Vec<f64> = model.nodes.iter().map(|m| m.sync_fixed(gamma)).collect();
+
+    // -------- Check 1: all nodes compute-bottleneck (Eq. 5, App. A.1)
+    let (mu1, b1) = solve_common_level(&comp_slopes, &comp_fixed, total_b);
+    solves += 1;
+    let all_compute = b1
+        .iter()
+        .zip(&model.nodes)
+        .all(|(&b, m)| b >= 0.0 && is_compute_bottleneck(m, b, gamma, t_o));
+    if all_compute {
+        return Ok(Allocation {
+            batch_sizes: b1,
+            t_pred: mu1 + t_u,
+            state: OverlapState::AllCompute,
+            solves,
+        });
+    }
+
+    // -------- Check 2: all nodes comm-bottleneck (Eq. 6, App. A.2)
+    let (mu2, b2) = solve_common_level(&sync_slopes, &sync_fixed, total_b);
+    solves += 1;
+    let all_comm = b2
+        .iter()
+        .zip(&model.nodes)
+        .all(|(&b, m)| b >= 0.0 && !is_compute_bottleneck(m, b, gamma, t_o));
+    if all_comm {
+        return Ok(Allocation {
+            batch_sizes: b2,
+            t_pred: mu2 + model.t_comm,
+            state: OverlapState::AllComm,
+            solves,
+        });
+    }
+
+    // -------- Mixed: rank by crossover μ*, binary-search the boundary C.
+    // Nodes are sorted so that compute-bottleneck nodes form a prefix
+    // (smaller crossover μ* ⇒ they become compute-bound at smaller B).
+    let mut order: Vec<usize> = (0..n).collect();
+    let mu_star: Vec<f64> = model.nodes.iter().map(|m| crossover_mu(m, gamma, t_o)).collect();
+    order.sort_by(|&a, &b| mu_star[a].partial_cmp(&mu_star[b]).unwrap());
+
+    // solve with the first `c` (in crossover order) compute-bottleneck:
+    //   compute node: comp_slope·b + comp_fixed = μ
+    //   comm node:    sync_slope·b + sync_fixed + T_o = μ     (App. A.3)
+    let solve_boundary = |c: usize| -> (f64, Vec<f64>) {
+        let mut slopes = Vec::with_capacity(n);
+        let mut fixed = Vec::with_capacity(n);
+        for (pos, &i) in order.iter().enumerate() {
+            if pos < c {
+                slopes.push(comp_slopes[i]);
+                fixed.push(comp_fixed[i]);
+            } else {
+                slopes.push(sync_slopes[i]);
+                fixed.push(sync_fixed[i] + t_o);
+            }
+        }
+        solve_common_level(&slopes, &fixed, total_b)
+    };
+
+    // validity: every node's *other* constraint must hold at μ
+    let valid = |c: usize, mu: f64, b_sorted: &[f64]| -> (bool, bool) {
+        // returns (need_more_compute, need_fewer_compute)
+        let mut need_more = false;
+        let mut need_fewer = false;
+        for (pos, &i) in order.iter().enumerate() {
+            let b = b_sorted[pos];
+            let m = &model.nodes[i];
+            if b < 0.0 {
+                // a negative batch on a comm node means it should not be
+                // comm-classified at this μ (or vice versa); steer by side
+                if pos < c {
+                    need_fewer = true;
+                } else {
+                    need_more = true;
+                }
+                continue;
+            }
+            if pos < c {
+                // compute-classified: its sync line must not exceed μ
+                if m.sync_start(b, gamma) + t_o > mu + 1e-9 {
+                    need_fewer = true;
+                }
+            } else {
+                // comm-classified: its compute line must not exceed μ
+                if m.t_compute(b) > mu + 1e-9 {
+                    need_more = true;
+                }
+            }
+        }
+        (need_more, need_fewer)
+    };
+
+    let (mut lo, mut hi) = (0usize, n);
+    let mut best: Option<(usize, f64, Vec<f64>)> = None;
+    while lo <= hi {
+        let c = (lo + hi) / 2;
+        let (mu, b_sorted) = solve_boundary(c);
+        solves += 1;
+        let (need_more, need_fewer) = valid(c, mu, &b_sorted);
+        match (need_more, need_fewer) {
+            (false, false) => {
+                best = Some((c, mu, b_sorted));
+                break;
+            }
+            (true, false) => {
+                lo = c + 1;
+            }
+            (false, true) => {
+                if c == 0 {
+                    break;
+                }
+                hi = c - 1;
+            }
+            (true, true) => {
+                // inconsistent classification at this boundary — fall back
+                // to a linear scan (robustness; measured, still O(n) solves)
+                break;
+            }
+        }
+        if lo > n {
+            break;
+        }
+    }
+    if best.is_none() {
+        for c in 0..=n {
+            let (mu, b_sorted) = solve_boundary(c);
+            solves += 1;
+            let (need_more, need_fewer) = valid(c, mu, &b_sorted);
+            if !need_more && !need_fewer {
+                best = Some((c, mu, b_sorted));
+                break;
+            }
+        }
+    }
+    let Some((c, mu, b_sorted)) = best else {
+        // No interior-consistent boundary exists — the optimum sits on the
+        // b >= 0 boundary (some node's fixed cost exceeds the common
+        // level).  The water-filling solver handles the clamped case
+        // exactly; keep its allocation and let the caller's pinning loop
+        // finish the accounting.
+        let mut a = solve_bisection(model, total_b);
+        a.solves = solves;
+        return Ok(a);
+    };
+
+    // un-permute
+    let mut b = vec![0.0; n];
+    for (pos, &i) in order.iter().enumerate() {
+        b[i] = b_sorted[pos];
+    }
+    Ok(Allocation {
+        batch_sizes: b,
+        t_pred: mu + t_u,
+        state: OverlapState::Mixed { n_compute: c },
+        solves,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Independent water-filling solver (cross-check)
+// ---------------------------------------------------------------------------
+
+/// Independent solver for the same optimum: for a common finish level μ,
+/// node i can absorb `bᵢ(μ) = min((μ−f)/c, (μ−T_o−v)/u)` (whichever
+/// constraint binds first); Σbᵢ(μ) is monotone increasing, so bisect μ
+/// until Σ = B.  Used to validate Algorithm 1.
+pub fn solve_bisection(model: &ClusterModel, total_b: f64) -> Allocation {
+    let gamma = model.gamma;
+    let t_o = model.t_o();
+    let t_u = model.t_u();
+    let _ = t_u;
+
+    let b_of_mu = |mu: f64| -> Vec<f64> {
+        model
+            .nodes
+            .iter()
+            .map(|m| {
+                let b_comp = (mu - m.fixed()) / m.slope();
+                let b_comm = (mu - t_o - m.sync_fixed(gamma)) / m.sync_slope(gamma);
+                b_comp.min(b_comm).max(0.0)
+            })
+            .collect()
+    };
+    let sum_at = |mu: f64| -> f64 { b_of_mu(mu).iter().sum() };
+
+    let mut lo = model
+        .nodes
+        .iter()
+        .map(|m| m.fixed().min(m.sync_fixed(gamma) + t_o))
+        .fold(f64::MAX, f64::min);
+    let mut hi = lo.max(1e-9) * 2.0 + 1.0;
+    while sum_at(hi) < total_b {
+        hi *= 2.0;
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if sum_at(mid) < total_b {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let mu = 0.5 * (lo + hi);
+    let mut b = b_of_mu(mu);
+    // fix residual rounding so Σ = B exactly
+    let s: f64 = b.iter().sum();
+    if s > 0.0 {
+        for x in &mut b {
+            *x *= total_b / s;
+        }
+    }
+    let n_compute = b
+        .iter()
+        .zip(&model.nodes)
+        .filter(|(&bb, m)| is_compute_bottleneck(m, bb, gamma, t_o))
+        .count();
+    let state = if n_compute == model.n() {
+        OverlapState::AllCompute
+    } else if n_compute == 0 {
+        OverlapState::AllComm
+    } else {
+        OverlapState::Mixed { n_compute }
+    };
+    Allocation { batch_sizes: b.clone(), t_pred: predict_batch_time(model, &b), state, solves: 0 }
+}
+
+// ---------------------------------------------------------------------------
+// Shared helpers
+// ---------------------------------------------------------------------------
+
+/// Eq. 7: predicted batch-processing time for an arbitrary allocation.
+pub fn predict_batch_time(model: &ClusterModel, b: &[f64]) -> f64 {
+    let t_u = model.t_u();
+    let mut worst = 0.0_f64;
+    for (m, &bi) in model.nodes.iter().zip(b) {
+        let t1 = m.t_compute(bi) + t_u;
+        let t2 = m.sync_start(bi, model.gamma) + model.t_comm;
+        worst = worst.max(t1.max(t2));
+    }
+    worst
+}
+
+/// Eq. 8 bootstrap: inverse per-sample-time proportional allocation used
+/// for the first epochs, before the linear models are identifiable.
+pub fn bootstrap_alloc(t_sample: &[f64], total_b: f64) -> Vec<f64> {
+    let inv: Vec<f64> = t_sample.iter().map(|&t| 1.0 / t.max(1e-12)).collect();
+    let s: f64 = inv.iter().sum();
+    inv.iter().map(|&x| x / s * total_b).collect()
+}
+
+/// Round real-valued batches to integers (Σ preserved) and clamp to the
+/// per-node memory caps, redistributing overflow to uncapped nodes
+/// proportionally (paper §4.5 "Integer batch sizes" + §6 memory limits).
+pub fn integer_alloc(batches: &[f64], total_b: u64, caps: &[u64]) -> Vec<u64> {
+    assert_eq!(batches.len(), caps.len());
+    let mut want: Vec<f64> = batches.iter().map(|&b| b.max(0.0)).collect();
+    // iterative cap-and-redistribute (at most n rounds)
+    loop {
+        let mut over = 0.0;
+        let mut free_weight = 0.0;
+        for (w, &cap) in want.iter_mut().zip(caps) {
+            if *w > cap as f64 {
+                over += *w - cap as f64;
+                *w = cap as f64;
+            }
+        }
+        for (w, &cap) in want.iter().zip(caps) {
+            if *w < cap as f64 {
+                free_weight += *w;
+            }
+        }
+        if over <= 1e-9 {
+            break;
+        }
+        if free_weight <= 1e-12 {
+            break; // cluster can't hold B; caller validates capacity
+        }
+        let scale = over / free_weight;
+        for (w, &cap) in want.iter_mut().zip(caps) {
+            if *w < cap as f64 {
+                *w += *w * scale;
+            }
+        }
+    }
+    let mut out = round_preserving_sum(&want, total_b);
+    // final clamp (rounding may push one unit over a cap)
+    for i in 0..out.len() {
+        if out[i] > caps[i] {
+            let spill = out[i] - caps[i];
+            out[i] = caps[i];
+            // hand spill to the node with most headroom
+            if let Some(j) = (0..out.len())
+                .filter(|&j| j != i)
+                .max_by_key(|&j| caps[j].saturating_sub(out[j]))
+            {
+                out[j] += spill;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::ClusterModel;
+
+    fn hetero_model(t_comm: f64) -> ClusterModel {
+        // three nodes: fast / medium / slow.  Distinct fixed times AND
+        // distinct q/k ratios keep the bottleneck crossovers well separated
+        // (a pure speed-scaling of one model degenerately crosses over at
+        // the same μ for every node, so the mixed state would be empty).
+        ClusterModel {
+            nodes: vec![
+                ComputeModel::new(0.2e-3, 1e-3, 1.2e-3, 2e-3),
+                ComputeModel::new(1.2e-3, 4.5e-3, 1.4e-3, 9e-3),
+                ComputeModel::new(1.4e-3, 12.5e-3, 4.2e-3, 25e-3),
+            ],
+            gamma: 0.25,
+            t_comm,
+            n_buckets: 8,
+        }
+    }
+
+    #[test]
+    fn all_compute_when_comm_negligible() {
+        let model = hetero_model(1e-6);
+        let a = solve(&model, 300.0).unwrap();
+        assert_eq!(a.state, OverlapState::AllCompute);
+        // optimality condition: equal compute times (App. A.1)
+        let t0 = model.nodes[0].t_compute(a.batch_sizes[0]);
+        for (m, &b) in model.nodes.iter().zip(&a.batch_sizes) {
+            assert!((m.t_compute(b) - t0).abs() < 1e-9);
+        }
+        let total: f64 = a.batch_sizes.iter().sum();
+        assert!((total - 300.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn all_comm_when_comm_dominates() {
+        let model = hetero_model(5.0); // huge T_comm
+        let a = solve(&model, 200.0).unwrap();
+        assert_eq!(a.state, OverlapState::AllComm);
+        // optimality: equal syncStart (App. A.2)
+        let s0 = model.nodes[0].sync_start(a.batch_sizes[0], model.gamma);
+        for (m, &b) in model.nodes.iter().zip(&a.batch_sizes) {
+            assert!((m.sync_start(b, model.gamma) - s0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn mixed_state_exists_between_regimes() {
+        let model = hetero_model(0.12);
+        // find a B where the state is mixed
+        let mut found = false;
+        for b in [40.0, 80.0, 150.0, 220.0, 300.0, 500.0] {
+            let a = solve(&model, b).unwrap();
+            if let OverlapState::Mixed { n_compute } = a.state {
+                assert!(n_compute > 0 && n_compute < 3);
+                found = true;
+                // App. A.3: compute nodes share t_compute; comm nodes share
+                // syncStart; and they align at μ
+                let mu = a.t_pred - model.t_u();
+                for (m, &bi) in model.nodes.iter().zip(&a.batch_sizes) {
+                    let tc = m.t_compute(bi);
+                    let ss = m.sync_start(bi, model.gamma) + model.t_o();
+                    assert!(tc <= mu + 1e-6, "tc {tc} mu {mu}");
+                    assert!(ss <= mu + 1e-6, "ss {ss} mu {mu}");
+                    assert!((tc - mu).abs() < 1e-6 || (ss - mu).abs() < 1e-6);
+                }
+            }
+        }
+        assert!(found, "no mixed state found in sweep");
+    }
+
+    #[test]
+    fn algorithm1_matches_bisection() {
+        for t_comm in [1e-5, 0.03, 0.12, 0.5, 2.0] {
+            let model = hetero_model(t_comm);
+            for b in [12.0, 48.0, 96.0, 300.0, 1000.0] {
+                let a1 = solve(&model, b).unwrap();
+                let a2 = solve_bisection(&model, b);
+                assert!(
+                    (a1.t_pred - a2.t_pred).abs() / a2.t_pred < 1e-6,
+                    "t_comm={t_comm} B={b}: alg1={} bisect={}",
+                    a1.t_pred,
+                    a2.t_pred
+                );
+                for (x, y) in a1.batch_sizes.iter().zip(&a2.batch_sizes) {
+                    assert!((x - y).abs() < 1e-3 * b, "b mismatch {x} vs {y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn optperf_beats_even_split() {
+        let model = hetero_model(0.1);
+        for b in [60.0, 150.0, 600.0] {
+            let a = solve(&model, b).unwrap();
+            let even = vec![b / 3.0; 3];
+            let t_even = predict_batch_time(&model, &even);
+            assert!(a.t_pred <= t_even + 1e-9);
+            assert!(a.t_pred < t_even * 0.95, "B={b}: {} vs even {}", a.t_pred, t_even);
+        }
+    }
+
+    #[test]
+    fn faster_nodes_get_larger_batches() {
+        let model = hetero_model(0.05);
+        let a = solve(&model, 210.0).unwrap();
+        assert!(a.batch_sizes[0] > a.batch_sizes[1]);
+        assert!(a.batch_sizes[1] > a.batch_sizes[2]);
+    }
+
+    #[test]
+    fn bootstrap_is_inverse_proportional() {
+        let b = bootstrap_alloc(&[1.0, 2.0, 4.0], 70.0);
+        assert!((b[0] - 40.0).abs() < 1e-9);
+        assert!((b[1] - 20.0).abs() < 1e-9);
+        assert!((b[2] - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn integer_alloc_respects_caps_and_total() {
+        let b = integer_alloc(&[50.4, 30.3, 19.3], 100, &[40, 64, 64]);
+        assert_eq!(b.iter().sum::<u64>(), 100);
+        assert!(b[0] <= 40);
+    }
+
+    #[test]
+    fn larger_batch_more_compute_bottleneck_nodes() {
+        // paper §4.5: "When the total batch size increases, more cluster
+        // nodes will be computing-bottleneck"
+        let model = hetero_model(0.12);
+        let count = |state: OverlapState| match state {
+            OverlapState::AllComm => 0,
+            OverlapState::AllCompute => 3,
+            OverlapState::Mixed { n_compute } => n_compute,
+        };
+        let mut prev = 0;
+        for b in [10.0, 50.0, 150.0, 400.0, 1500.0] {
+            let a = solve(&model, b).unwrap();
+            let c = count(a.state);
+            assert!(c >= prev, "monotonicity violated at B={b}: {c} < {prev}");
+            prev = c;
+        }
+        assert_eq!(prev, 3);
+    }
+}

@@ -1,0 +1,211 @@
+//! The per-node compute-time model (paper Eq. 3) and its online learner.
+//!
+//! For node *i*, with local batch size *b*:
+//! ```text
+//! t_compute = a + P,   a = q·b + s   (data load + fwd + param update)
+//!                      P = k·b + m   (backprop)
+//! ```
+//! `q, s, k, m` differ per GPU type and job.  The learner accumulates
+//! `(b, a, P)` observations during training and refits both lines by least
+//! squares whenever asked; at least two *distinct* local batch sizes are
+//! required (paper §4.2 — hence the Eq. 8 bootstrap for the first epochs).
+
+use crate::linalg::fit_line;
+
+/// Fitted linear compute model for one node.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ComputeModel {
+    pub q: f64,
+    pub s: f64,
+    pub k: f64,
+    pub m: f64,
+}
+
+impl ComputeModel {
+    pub fn new(q: f64, s: f64, k: f64, m: f64) -> Self {
+        ComputeModel { q, s, k, m }
+    }
+
+    /// a(b): data loading + forward + parameter update.
+    pub fn a(&self, b: f64) -> f64 {
+        self.q * b + self.s
+    }
+
+    /// P(b): backpropagation time.
+    pub fn p(&self, b: f64) -> f64 {
+        self.k * b + self.m
+    }
+
+    /// Total standalone compute time t_compute(b) (Eq. 3).
+    pub fn t_compute(&self, b: f64) -> f64 {
+        self.a(b) + self.p(b)
+    }
+
+    /// First-bucket-ready point syncStart(b) = a + γ·P (Eq. 4).
+    pub fn sync_start(&self, b: f64, gamma: f64) -> f64 {
+        self.a(b) + gamma * self.p(b)
+    }
+
+    /// Slope / intercept of t_compute as a line in b.
+    pub fn slope(&self) -> f64 {
+        self.q + self.k
+    }
+    pub fn fixed(&self) -> f64 {
+        self.s + self.m
+    }
+
+    /// Slope / intercept of syncStart as a line in b.
+    pub fn sync_slope(&self, gamma: f64) -> f64 {
+        self.q + gamma * self.k
+    }
+    pub fn sync_fixed(&self, gamma: f64) -> f64 {
+        self.s + gamma * self.m
+    }
+
+    /// Per-sample time at batch b (used by the Eq. 8 bootstrap).
+    pub fn t_sample(&self, b: f64) -> f64 {
+        self.t_compute(b) / b
+    }
+}
+
+/// One per-batch measurement from a node.
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeObs {
+    pub b: f64,
+    /// measured a-phase time (load + fwd + update)
+    pub a: f64,
+    /// measured backprop time
+    pub p: f64,
+}
+
+/// Online least-squares learner for one node's [`ComputeModel`].
+#[derive(Clone, Debug, Default)]
+pub struct ComputeLearner {
+    obs: Vec<ComputeObs>,
+}
+
+impl ComputeLearner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bounded observation window: keeps the fit O(1)-ish per epoch over
+    /// long runs and lets the model track drift (e.g. thermal throttling).
+    const MAX_OBS: usize = 512;
+
+    pub fn observe(&mut self, obs: ComputeObs) {
+        if self.obs.len() >= Self::MAX_OBS {
+            self.obs.remove(0);
+        }
+        self.obs.push(obs);
+    }
+
+    pub fn n_obs(&self) -> usize {
+        self.obs.len()
+    }
+
+    /// Number of *distinct* batch sizes observed — the model is only
+    /// identifiable with >= 2 (paper §4.2).
+    pub fn distinct_batches(&self) -> usize {
+        let mut bs: Vec<i64> = self.obs.iter().map(|o| o.b.round() as i64).collect();
+        bs.sort_unstable();
+        bs.dedup();
+        bs.len()
+    }
+
+    /// Fit (q, s) over a-observations and (k, m) over P-observations.
+    /// Returns `None` until two distinct batch sizes have been seen.
+    pub fn fit(&self) -> Option<ComputeModel> {
+        if self.distinct_batches() < 2 {
+            return None;
+        }
+        let a_pts: Vec<(f64, f64)> = self.obs.iter().map(|o| (o.b, o.a)).collect();
+        let p_pts: Vec<(f64, f64)> = self.obs.iter().map(|o| (o.b, o.p)).collect();
+        let (q, s) = fit_line(&a_pts).ok()?;
+        let (k, m) = fit_line(&p_pts).ok()?;
+        // physical sanity: slopes can't be negative; clamp tiny negatives
+        // arising from noise
+        Some(ComputeModel { q: q.max(0.0), s: s.max(0.0), k: k.max(0.0), m: m.max(0.0) })
+    }
+
+    /// Mean per-sample compute time over the most recent observations —
+    /// the quantity the Eq. 8 bootstrap allocates with.
+    pub fn recent_t_sample(&self) -> Option<f64> {
+        let o = self.obs.last()?;
+        Some((o.a + o.p) / o.b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn true_model() -> ComputeModel {
+        ComputeModel::new(0.8e-3, 5e-3, 1.7e-3, 8e-3)
+    }
+
+    #[test]
+    fn model_evaluates_lines() {
+        let m = true_model();
+        assert!((m.t_compute(10.0) - (0.8e-3 * 10.0 + 5e-3 + 1.7e-3 * 10.0 + 8e-3)).abs() < 1e-12);
+        assert!((m.sync_start(10.0, 0.2) - (m.a(10.0) + 0.2 * m.p(10.0))).abs() < 1e-12);
+        // sync line decomposition
+        let b = 7.0;
+        let g = 0.3;
+        assert!((m.sync_slope(g) * b + m.sync_fixed(g) - m.sync_start(b, g)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn learner_needs_two_distinct_batches() {
+        let mut l = ComputeLearner::new();
+        let t = true_model();
+        l.observe(ComputeObs { b: 8.0, a: t.a(8.0), p: t.p(8.0) });
+        l.observe(ComputeObs { b: 8.0, a: t.a(8.0), p: t.p(8.0) });
+        assert!(l.fit().is_none());
+        l.observe(ComputeObs { b: 16.0, a: t.a(16.0), p: t.p(16.0) });
+        assert!(l.fit().is_some());
+    }
+
+    #[test]
+    fn learner_recovers_exact_model() {
+        let mut l = ComputeLearner::new();
+        let t = true_model();
+        for b in [4.0, 8.0, 16.0, 32.0] {
+            l.observe(ComputeObs { b, a: t.a(b), p: t.p(b) });
+        }
+        let f = l.fit().unwrap();
+        assert!((f.q - t.q).abs() < 1e-9);
+        assert!((f.s - t.s).abs() < 1e-9);
+        assert!((f.k - t.k).abs() < 1e-9);
+        assert!((f.m - t.m).abs() < 1e-9);
+    }
+
+    #[test]
+    fn learner_is_robust_to_noise() {
+        let mut l = ComputeLearner::new();
+        let t = true_model();
+        let mut rng = Rng::new(2);
+        for i in 0..200 {
+            let b = 4.0 + (i % 8) as f64 * 4.0;
+            l.observe(ComputeObs {
+                b,
+                a: t.a(b) * rng.noise(0.02),
+                p: t.p(b) * rng.noise(0.02),
+            });
+        }
+        let f = l.fit().unwrap();
+        assert!((f.slope() - t.slope()).abs() / t.slope() < 0.05);
+        assert!((f.fixed() - t.fixed()).abs() / t.fixed() < 0.25);
+    }
+
+    #[test]
+    fn clamps_nonphysical_negative_coeffs() {
+        let mut l = ComputeLearner::new();
+        // observations consistent with a negative slope
+        l.observe(ComputeObs { b: 1.0, a: 1.0, p: 2.0 });
+        l.observe(ComputeObs { b: 2.0, a: 0.5, p: 1.0 });
+        let f = l.fit().unwrap();
+        assert!(f.q >= 0.0 && f.k >= 0.0);
+    }
+}

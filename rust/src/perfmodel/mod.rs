@@ -1,0 +1,42 @@
+//! Per-node performance models and their online learners (paper §3.2, §4.5).
+//!
+//! * [`compute`] — the linear compute-time model of Eq. (3) and its
+//!   least-squares learner over per-epoch observations.
+//! * [`comm`] — the communication model: overlap ratio γ fused across
+//!   nodes by inverse-variance weighting (Eq. 12), and T_comm = minᵢ Tᵢ.
+
+pub mod comm;
+pub mod compute;
+
+pub use comm::{CommLearner, GammaEstimator};
+pub use compute::{ComputeLearner, ComputeModel, ComputeObs};
+
+/// Everything the OptPerf optimizer needs about a cluster: one compute
+/// model per node plus the (shared) communication model.
+#[derive(Clone, Debug)]
+pub struct ClusterModel {
+    pub nodes: Vec<ComputeModel>,
+    /// overlap ratio γ: first-bucket fraction of backprop that cannot
+    /// overlap with gradient synchronization (Eq. 4)
+    pub gamma: f64,
+    /// total gradient-synchronization time T_comm = T_o + T_u (§3.2.3)
+    pub t_comm: f64,
+    /// number of gradient buckets K (DDP-style); T_u = T_comm / K
+    pub n_buckets: usize,
+}
+
+impl ClusterModel {
+    pub fn n(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Synchronization time of the final, non-overlappable bucket.
+    pub fn t_u(&self) -> f64 {
+        self.t_comm / self.n_buckets as f64
+    }
+
+    /// Synchronization time of all overlappable buckets.
+    pub fn t_o(&self) -> f64 {
+        self.t_comm - self.t_u()
+    }
+}

@@ -1,0 +1,442 @@
+//! PJRT runtime: load the AOT artifacts (HLO text + manifest) produced by
+//! `python/compile/aot.py` and execute them on the CPU PJRT client.
+//!
+//! This is the only place rust touches XLA.  One compiled executable per
+//! (entry point, batch bucket), cached after first use.  HLO **text** is
+//! the interchange format (see aot.py / DESIGN.md).  Python never runs at
+//! training time — the artifacts are self-contained.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One model parameter's schema entry (order matters — it is the call ABI).
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub n_params_total: usize,
+    pub params: Vec<ParamSpec>,
+    /// available grad/eval batch buckets, ascending
+    pub buckets: Vec<usize>,
+    pub momentum: f64,
+    pub init_file: String,
+    pub apply_file: String,
+    pub grad_files: HashMap<usize, String>,
+    pub eval_files: HashMap<usize, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        let cfg = j.req("config")?;
+        let params = j
+            .req("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.req("name")?.as_str()?.to_string(),
+                    shape: p
+                        .req("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let arts = j.req("artifacts")?;
+        let mut grad_files = HashMap::new();
+        for (k, v) in arts.req("grad")?.as_obj()? {
+            grad_files.insert(k.parse::<usize>()?, v.as_str()?.to_string());
+        }
+        let mut eval_files = HashMap::new();
+        for (k, v) in arts.req("eval")?.as_obj()? {
+            eval_files.insert(k.parse::<usize>()?, v.as_str()?.to_string());
+        }
+        let mut buckets: Vec<usize> = j
+            .req("buckets")?
+            .as_arr()?
+            .iter()
+            .map(|b| b.as_usize())
+            .collect::<Result<_>>()?;
+        buckets.sort_unstable();
+        Ok(Manifest {
+            preset: j.req("preset")?.as_str()?.to_string(),
+            seq_len: cfg.req("seq_len")?.as_usize()?,
+            vocab: cfg.req("vocab")?.as_usize()?,
+            n_params_total: j.req("n_params")?.as_usize()?,
+            params,
+            buckets,
+            momentum: j.req("optimizer")?.req("momentum")?.as_f64()?,
+            init_file: arts.req("init")?.as_str()?.to_string(),
+            apply_file: arts.req("apply")?.as_str()?.to_string(),
+            grad_files,
+            eval_files,
+        })
+    }
+
+    /// Smallest compiled bucket that fits a local batch of `b` samples.
+    pub fn bucket_for(&self, b: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&k| k >= b)
+            .ok_or_else(|| anyhow!("local batch {b} exceeds largest bucket {:?}", self.buckets.last()))
+    }
+}
+
+/// Output of one grad_step execution.
+#[derive(Debug)]
+pub struct GradOut {
+    pub loss: f32,
+    /// |g|² of the local gradient (computed in-graph by the Pallas kernel)
+    pub sqnorm: f32,
+    /// per-parameter gradients, flattened f32
+    pub grads: Vec<Vec<f32>>,
+}
+
+/// The PJRT runtime: client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    /// Compile (or fetch cached) an artifact by file name.
+    fn exe(&mut self, file: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(file) {
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+            self.cache.insert(file.to_string(), exe);
+        }
+        Ok(&self.cache[file])
+    }
+
+    /// Warm the executable cache (init + apply + all grad buckets).
+    pub fn warmup(&mut self) -> Result<()> {
+        let files: Vec<String> = std::iter::once(self.manifest.init_file.clone())
+            .chain(std::iter::once(self.manifest.apply_file.clone()))
+            .chain(self.manifest.grad_files.values().cloned())
+            .collect();
+        for f in files {
+            self.exe(&f)?;
+        }
+        Ok(())
+    }
+
+    fn run(&mut self, file: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.exe(file)?;
+        let bufs = exe
+            .execute::<&xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {file}: {e:?}"))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {file}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {file}: {e:?}"))
+    }
+
+    /// Initialize parameters from a seed; returns one literal per param.
+    pub fn init_params(&mut self, seed: i32) -> Result<Vec<xla::Literal>> {
+        let file = self.manifest.init_file.clone();
+        let seed_lit = xla::Literal::scalar(seed);
+        let out = self.run(&file, &[&seed_lit])?;
+        if out.len() != self.manifest.params.len() {
+            bail!("init returned {} tensors, expected {}", out.len(), self.manifest.params.len());
+        }
+        Ok(out)
+    }
+
+    /// Zero-initialized momentum buffers.
+    pub fn zero_like_params(&self) -> Result<Vec<xla::Literal>> {
+        self.manifest
+            .params
+            .iter()
+            .map(|p| {
+                let zeros = vec![0f32; p.numel()];
+                lit_from_f32(&zeros, &p.shape)
+            })
+            .collect()
+    }
+
+    /// Run grad_step on bucket `bucket`: tokens is `bucket·(seq_len+1)`
+    /// i32s row-major; `weights[bucket]` carries 0.0 on padded rows.
+    pub fn grad_step(
+        &mut self,
+        bucket: usize,
+        params: &[xla::Literal],
+        tokens: &[i32],
+        weights: &[f32],
+    ) -> Result<GradOut> {
+        let m = &self.manifest;
+        let seq = m.seq_len + 1;
+        if tokens.len() != bucket * seq {
+            bail!("tokens len {} != bucket {bucket} × {seq}", tokens.len());
+        }
+        if weights.len() != bucket {
+            bail!("weights len {} != bucket {bucket}", weights.len());
+        }
+        let file = m
+            .grad_files
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("no grad artifact for bucket {bucket}"))?
+            .clone();
+        let tok = xla::Literal::vec1(tokens)
+            .reshape(&[bucket as i64, seq as i64])
+            .map_err(|e| anyhow!("reshape tokens: {e:?}"))?;
+        let wts = xla::Literal::vec1(weights);
+        // borrow the parameters — no host-side copy on the hot path
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(params.len() + 2);
+        inputs.extend(params.iter());
+        inputs.push(&tok);
+        inputs.push(&wts);
+        let mut out = self.run(&file, &inputs)?;
+        if out.len() != 2 + self.manifest.params.len() {
+            bail!("grad_step returned {} tensors", out.len());
+        }
+        let grads: Vec<Vec<f32>> = out
+            .split_off(2)
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("grad to_vec: {e:?}")))
+            .collect::<Result<_>>()?;
+        let loss = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0];
+        let sqnorm = out[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0];
+        Ok(GradOut { loss, sqnorm, grads })
+    }
+
+    /// Apply the (already aggregated) gradient: SGD + momentum.
+    /// Returns (params', momenta').
+    pub fn apply_step(
+        &mut self,
+        params: &[xla::Literal],
+        momenta: &[xla::Literal],
+        grads: &[Vec<f32>],
+        lr: f32,
+    ) -> Result<(Vec<xla::Literal>, Vec<xla::Literal>)> {
+        let n = self.manifest.params.len();
+        if params.len() != n || momenta.len() != n || grads.len() != n {
+            bail!("apply_step arity mismatch");
+        }
+        let file = self.manifest.apply_file.clone();
+        let grad_lits: Vec<xla::Literal> = grads
+            .iter()
+            .zip(&self.manifest.params)
+            .map(|(g, spec)| lit_from_f32(g, &spec.shape))
+            .collect::<Result<_>>()?;
+        let lr_lit = xla::Literal::scalar(lr);
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 1);
+        inputs.extend(params.iter());
+        inputs.extend(momenta.iter());
+        inputs.extend(grad_lits.iter());
+        inputs.push(&lr_lit);
+        let mut out = self.run(&file, &inputs)?;
+        if out.len() != 2 * n {
+            bail!("apply_step returned {} tensors, expected {}", out.len(), 2 * n);
+        }
+        let momenta_new = out.split_off(n);
+        Ok((out, momenta_new))
+    }
+
+    /// Evaluation loss on one bucket-sized batch.
+    pub fn eval_step(
+        &mut self,
+        bucket: usize,
+        params: &[xla::Literal],
+        tokens: &[i32],
+        weights: &[f32],
+    ) -> Result<f32> {
+        let m = &self.manifest;
+        let seq = m.seq_len + 1;
+        let file = m
+            .eval_files
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("no eval artifact for bucket {bucket}"))?
+            .clone();
+        let tok = xla::Literal::vec1(tokens)
+            .reshape(&[bucket as i64, seq as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let wts = xla::Literal::vec1(weights);
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(params.len() + 2);
+        inputs.extend(params.iter());
+        inputs.push(&tok);
+        inputs.push(&wts);
+        let out = self.run(&file, &inputs)?;
+        Ok(out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0])
+    }
+
+    pub fn n_compiled(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Literal -> flat f32 vector.
+pub fn lit_to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow!("literal to f32: {e:?}"))
+}
+
+/// Flat f32 vector -> shaped f32 literal.
+pub fn lit_from_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product();
+    if numel != data.len() {
+        bail!("shape {:?} wants {numel} elements, got {}", shape, data.len());
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    if dims.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+/// The xla crate's `Literal` is not `Clone`; round-trip through host data.
+pub fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+    let shape = l.array_shape().map_err(|e| anyhow!("{e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit_to_f32(l)?;
+    lit_from_f32(&data, &dims)
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests require `make artifacts` (tiny preset).  They are the
+    //! rust side of the AOT round-trip: manifest parse, HLO compile,
+    //! numerics vs the python-tested reference behaviour.
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+    }
+
+    fn have_artifacts() -> bool {
+        art_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts/tiny missing (run `make artifacts`)");
+            return;
+        }
+        let m = Manifest::load(&art_dir()).unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert!(m.params.len() > 10);
+        assert_eq!(m.params[0].name, "embed");
+        assert_eq!(m.buckets, vec![1, 2, 4, 8]);
+        assert_eq!(m.bucket_for(3).unwrap(), 4);
+        assert_eq!(m.bucket_for(8).unwrap(), 8);
+        assert!(m.bucket_for(9).is_err());
+        let total: usize = m.params.iter().map(|p| p.numel()).sum();
+        assert_eq!(total, m.n_params_total);
+    }
+
+    #[test]
+    fn literal_f32_roundtrip() {
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let lit = lit_from_f32(&data, &[3, 4]).unwrap();
+        assert_eq!(lit_to_f32(&lit).unwrap(), data);
+        let c = clone_literal(&lit).unwrap();
+        assert_eq!(lit_to_f32(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn end_to_end_train_steps_reduce_loss() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts/tiny missing");
+            return;
+        }
+        let mut rt = Runtime::load(art_dir()).unwrap();
+        let params = rt.init_params(0).unwrap();
+        let momenta = rt.zero_like_params().unwrap();
+        let seq = rt.manifest.seq_len + 1;
+        let bucket = 4usize;
+        // deterministic pseudo-text batch
+        let tokens: Vec<i32> = (0..bucket * seq).map(|i| ((i * 7 + 3) % 50) as i32).collect();
+        let weights = vec![1.0f32; bucket];
+
+        let mut params = params;
+        let mut momenta = momenta;
+        let mut first_loss = None;
+        let mut last_loss = 0.0;
+        for _ in 0..4 {
+            let out = rt.grad_step(bucket, &params, &tokens, &weights).unwrap();
+            assert!(out.loss.is_finite());
+            assert!(out.sqnorm > 0.0);
+            if first_loss.is_none() {
+                first_loss = Some(out.loss);
+            }
+            last_loss = out.loss;
+            let (p2, m2) = rt.apply_step(&params, &momenta, &out.grads, 0.05).unwrap();
+            params = p2;
+            momenta = m2;
+        }
+        assert!(
+            last_loss < first_loss.unwrap(),
+            "loss did not drop: {first_loss:?} -> {last_loss}"
+        );
+        // eval path works too
+        let ev = rt.eval_step(bucket, &params, &tokens, &weights).unwrap();
+        assert!(ev.is_finite());
+    }
+
+    #[test]
+    fn padding_rows_do_not_change_gradients() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts/tiny missing");
+            return;
+        }
+        let mut rt = Runtime::load(art_dir()).unwrap();
+        let params = rt.init_params(1).unwrap();
+        let seq = rt.manifest.seq_len + 1;
+        let tokens2: Vec<i32> = (0..2 * seq).map(|i| ((i * 5 + 1) % 40) as i32).collect();
+        let out2 = rt.grad_step(2, &params, &tokens2, &[1.0, 1.0]).unwrap();
+        // same two rows padded into bucket 4 with zero-weight rows
+        let mut tokens4 = tokens2.clone();
+        tokens4.extend(std::iter::repeat(0).take(2 * seq));
+        let out4 = rt
+            .grad_step(4, &params, &tokens4, &[1.0, 1.0, 0.0, 0.0])
+            .unwrap();
+        assert!((out2.loss - out4.loss).abs() < 1e-5);
+        for (g2, g4) in out2.grads.iter().zip(&out4.grads) {
+            for (a, b) in g2.iter().zip(g4) {
+                assert!((a - b).abs() < 1e-5, "grad mismatch {a} vs {b}");
+            }
+        }
+    }
+}

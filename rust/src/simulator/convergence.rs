@@ -1,0 +1,158 @@
+//! Convergence simulator: statistical-efficiency-driven training progress.
+//!
+//! Models a training run as accumulation of "ideal steps" (McCandlish):
+//! a step with total batch B at gradient noise scale φ advances progress
+//! by `B/(B+φ)`; the run completes when progress reaches the workload's
+//! `s_target`.  φ grows geometrically with progress (the workload profile).
+//! Combined with a per-epoch batch-time model (from the timing simulator
+//! or the closed form), this reproduces the *convergence-time* experiments
+//! (Fig. 5, 7, 8) without the actual datasets — the quantity under test is
+//! the systems' throughput × efficiency trade-off, which this preserves.
+
+use crate::goodput::step_progress;
+use crate::simulator::workload::Workload;
+
+/// One simulated epoch record.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochStat {
+    pub epoch: usize,
+    pub total_batch: u64,
+    pub t_batch: f64,
+    /// wall-clock seconds spent this epoch (incl. scheduler overhead)
+    pub epoch_secs: f64,
+    /// cumulative wall-clock
+    pub wall_secs: f64,
+    /// cumulative ideal-step progress
+    pub progress: f64,
+    /// headline metric value at end of epoch
+    pub metric: f64,
+    /// GNS at end of epoch
+    pub phi: f64,
+}
+
+/// Full simulated run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub epochs: Vec<EpochStat>,
+    /// wall-clock seconds to reach the target metric (None if not reached)
+    pub time_to_target: Option<f64>,
+}
+
+/// Drive a convergence run.  The *system under test* supplies, per epoch,
+/// its chosen total batch size and the resulting mean batch time plus any
+/// per-epoch overhead, via `policy(epoch, phi) -> (B, t_batch, overhead)`.
+pub fn run(
+    workload: &Workload,
+    target_value: f64,
+    max_epochs: usize,
+    mut policy: impl FnMut(usize, f64) -> (u64, f64, f64),
+) -> RunResult {
+    let mut progress = 0.0;
+    let mut wall = 0.0;
+    let mut epochs = Vec::new();
+    let mut time_to_target = None;
+
+    for epoch in 0..max_epochs {
+        let phi = workload.phi_at(progress);
+        let (batch, t_batch, overhead) = policy(epoch, phi);
+        let batch = batch.max(1);
+        let steps_per_epoch =
+            (workload.epoch_samples as f64 / batch as f64).ceil().max(1.0);
+        // progress integrates φ along the epoch (φ moves slowly; midpoint
+        // evaluation is plenty)
+        let phi_mid = workload.phi_at(progress + 0.5 * steps_per_epoch * step_progress(phi, batch as f64));
+        let dp = steps_per_epoch * step_progress(phi_mid, batch as f64);
+        let epoch_secs = steps_per_epoch * t_batch + overhead;
+
+        // did we cross the target inside this epoch?  linear interpolation
+        if time_to_target.is_none() && progress + dp >= workload.s_target {
+            let frac = (workload.s_target - progress) / dp;
+            time_to_target = Some(wall + frac * epoch_secs);
+        }
+        progress += dp;
+        wall += epoch_secs;
+        epochs.push(EpochStat {
+            epoch,
+            total_batch: batch,
+            t_batch,
+            epoch_secs,
+            wall_secs: wall,
+            progress,
+            metric: workload.metric_at(progress, target_value),
+            phi: workload.phi_at(progress),
+        });
+        if time_to_target.is_some() && progress > workload.s_target * 1.02 {
+            break;
+        }
+    }
+    RunResult { epochs, time_to_target }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::workload;
+
+    #[test]
+    fn fixed_policy_reaches_target() {
+        let w = workload::cifar10();
+        let r = run(&w, 94.0, 10_000, |_, _| (256, 0.05, 0.0));
+        assert!(r.time_to_target.is_some());
+        let last = r.epochs.last().unwrap();
+        assert!(last.progress >= w.s_target);
+        assert!(last.metric > 93.0);
+    }
+
+    #[test]
+    fn larger_batches_cost_more_examples_same_steps() {
+        // with equal per-batch time, a larger batch converges in FEWER
+        // steps but not proportionally (efficiency loss) — classic GNS
+        let w = workload::cifar10();
+        let small = run(&w, 94.0, 20_000, |_, _| (64, 0.05, 0.0));
+        let big = run(&w, 94.0, 20_000, |_, _| (2048, 0.05, 0.0));
+        let t_small = small.time_to_target.unwrap();
+        let t_big = big.time_to_target.unwrap();
+        // big batch: fewer steps/epoch * same batch time => faster walls,
+        // but efficiency means less than 2048/64 = 32x speedup
+        assert!(t_big < t_small);
+        assert!(t_big > t_small / 32.0 * 1.5, "efficiency loss must show");
+    }
+
+    #[test]
+    fn progress_is_monotone_and_wall_accumulates() {
+        let w = workload::movielens();
+        let r = run(&w, 69.0, 500, |_, _| (1024, 0.02, 0.1));
+        for win in r.epochs.windows(2) {
+            assert!(win[1].progress > win[0].progress);
+            assert!(win[1].wall_secs > win[0].wall_secs);
+        }
+    }
+
+    #[test]
+    fn overhead_slows_convergence() {
+        let w = workload::cifar10();
+        let clean = run(&w, 94.0, 10_000, |_, _| (512, 0.05, 0.0));
+        let heavy = run(&w, 94.0, 10_000, |_, _| (512, 0.05, 30.0));
+        assert!(heavy.time_to_target.unwrap() > clean.time_to_target.unwrap());
+    }
+
+    #[test]
+    fn adaptive_policy_beats_fixed_small_batch() {
+        // goodput-style adaptive batch (grow with φ) must beat fixed B0
+        let w = workload::cifar10();
+        let t_batch = |b: u64| 0.02 + 1.2e-5 * b as f64; // throughput model
+        let fixed = run(&w, 94.0, 30_000, |_, _| (w.b0, t_batch(w.b0), 0.0));
+        let adaptive = run(&w, 94.0, 30_000, |_, phi| {
+            let cands = crate::goodput::candidates(w.b0, w.b_max, 6);
+            let (best, _) =
+                crate::goodput::select(phi, w.b0, &cands, |b| t_batch(b));
+            (best.batch, t_batch(best.batch), 0.0)
+        });
+        assert!(
+            adaptive.time_to_target.unwrap() < fixed.time_to_target.unwrap() * 0.8,
+            "adaptive {:?} vs fixed {:?}",
+            adaptive.time_to_target,
+            fixed.time_to_target
+        );
+    }
+}

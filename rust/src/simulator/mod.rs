@@ -1,0 +1,16 @@
+//! Cluster + training simulators (the paper's testbed substitute).
+//!
+//! * [`workload`] — Table 4 job profiles (model size, batch ranges,
+//!   per-sample cost, GNS growth).
+//! * [`timing`] — event-level per-bucket batch-time simulator with
+//!   measurement noise (ground truth for §5.3 prediction-error studies).
+//! * [`convergence`] — statistical-efficiency-driven convergence runs
+//!   (Fig. 5/7/8 substrate).
+
+pub mod convergence;
+pub mod timing;
+pub mod workload;
+
+pub use convergence::{run as run_convergence, EpochStat, RunResult};
+pub use timing::{BatchSim, ClusterSim, NodeBatchObs};
+pub use workload::Workload;

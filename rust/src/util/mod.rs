@@ -1,0 +1,82 @@
+//! Shared substrates: JSON, deterministic RNG, statistics, property-test
+//! harness, small helpers.  These exist because the image's offline crate
+//! set only contains the `xla` dependency closure (no serde / rand /
+//! proptest) — see DESIGN.md §Offline substitutions.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Round a vector of non-negative reals to integers preserving the exact
+/// total (largest-remainder / Hamilton method).  Used by the
+/// HeteroDataLoader to turn optimal real-valued local batch sizes into
+/// integer ones (paper §4.5 "Integer batch sizes").
+pub fn round_preserving_sum(xs: &[f64], total: u64) -> Vec<u64> {
+    assert!(!xs.is_empty());
+    let floors: Vec<u64> = xs.iter().map(|&x| x.max(0.0).floor() as u64).collect();
+    let mut used: u64 = floors.iter().sum();
+    let mut out = floors;
+    if used > total {
+        // degenerate (shouldn't happen when sum(xs)==total) — shave largest
+        let mut idx: Vec<usize> = (0..out.len()).collect();
+        idx.sort_by(|&a, &b| out[b].cmp(&out[a]));
+        let mut k = 0;
+        while used > total {
+            let i = idx[k % idx.len()];
+            if out[i] > 0 {
+                out[i] -= 1;
+                used -= 1;
+            }
+            k += 1;
+        }
+        return out;
+    }
+    // distribute the remaining units to the largest fractional remainders
+    let mut rem: Vec<(usize, f64)> = xs
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| (i, x.max(0.0) - x.max(0.0).floor()))
+        .collect();
+    rem.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut left = total - used;
+    let mut k = 0;
+    while left > 0 {
+        out[rem[k % rem.len()].0] += 1;
+        left -= 1;
+        k += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_preserves_total() {
+        let xs = [3.7, 2.2, 4.1];
+        let out = round_preserving_sum(&xs, 10);
+        assert_eq!(out.iter().sum::<u64>(), 10);
+        assert_eq!(out, vec![4, 2, 4]);
+    }
+
+    #[test]
+    fn round_handles_exact_integers() {
+        let out = round_preserving_sum(&[2.0, 3.0, 5.0], 10);
+        assert_eq!(out, vec![2, 3, 5]);
+    }
+
+    #[test]
+    fn round_handles_negative_noise() {
+        let out = round_preserving_sum(&[-0.1, 5.05, 5.05], 10);
+        assert_eq!(out.iter().sum::<u64>(), 10);
+        assert_eq!(out[0], 0);
+    }
+
+    #[test]
+    fn round_shaves_when_over() {
+        let out = round_preserving_sum(&[6.0, 6.0], 10);
+        assert_eq!(out.iter().sum::<u64>(), 10);
+    }
+}

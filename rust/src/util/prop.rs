@@ -1,0 +1,69 @@
+//! Tiny property-test harness (no proptest in the offline vendor set).
+//!
+//! `check(cases, gen, prop)` runs `prop` over `cases` randomized inputs from
+//! `gen`; on failure it reports the seed + case index so the exact input
+//! reproduces.  Used by the invariant suites in `rust/tests/prop_*.rs`
+//! (routing, batching, GNS weights, all-reduce).
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` generated inputs; panic with the reproducing
+/// seed/case on the first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let seed = 0xC0FFEE_u64; // fixed: every run exercises the same corpus
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = rng.fork(case as u64);
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed (seed={seed:#x}, case={case}):\n  {msg}\n  input: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Convenience assertion helpers for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    let scale = 1.0_f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} != {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("abs-nonneg", 100, |r| r.normal(), |x| ensure(x.abs() >= 0.0, "abs"));
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn check_reports_failure() {
+        check("always-false", 10, |r| r.f64(), |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn close_uses_relative_tolerance() {
+        assert!(close(1e9, 1e9 + 10.0, 1e-6, "big").is_ok());
+        assert!(close(1.0, 1.1, 1e-6, "small").is_err());
+    }
+}

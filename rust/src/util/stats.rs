@@ -1,0 +1,169 @@
+//! Statistics kit: running moments, inverse-variance weighting (paper
+//! Eq. 12), EMA — the measurement-fusion primitives Cannikin's parameter
+//! learner uses.
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Moments {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Moments {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator); 0 when fewer than 2 samples.
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Inverse-variance weighted mean of per-source estimates (paper Eq. 12):
+/// `x = Σ xᵢ/σᵢ² / Σ 1/σᵢ²`.  Sources with zero/unknown variance get a
+/// variance floor so a single noiseless-looking source cannot dominate
+/// purely through undersampling.
+pub fn inverse_variance_weight(estimates: &[(f64, f64)]) -> f64 {
+    assert!(!estimates.is_empty());
+    let floor = 1e-12;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for &(x, var) in estimates {
+        let w = 1.0 / var.max(floor);
+        num += x * w;
+        den += w;
+    }
+    num / den
+}
+
+/// Plain mean — the *unweighted* aggregation the paper shows is up to 21%
+/// worse for OptPerf prediction (§5.3 ablation baseline).
+pub fn unweighted_mean(estimates: &[(f64, f64)]) -> f64 {
+    estimates.iter().map(|&(x, _)| x).sum::<f64>() / estimates.len() as f64
+}
+
+/// Exponential moving average with bias correction (Adam-style), used to
+/// smooth the GNS numerator/denominator across iterations.
+#[derive(Clone, Debug)]
+pub struct Ema {
+    beta: f64,
+    value: f64,
+    steps: u64,
+}
+
+impl Ema {
+    pub fn new(beta: f64) -> Self {
+        assert!((0.0..1.0).contains(&beta));
+        Ema { beta, value: 0.0, steps: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.value = self.beta * self.value + (1.0 - self.beta) * x;
+        self.steps += 1;
+    }
+
+    /// Bias-corrected current value; 0 before any sample.
+    pub fn get(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.value / (1.0 - self.beta.powi(self.steps as i32))
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.steps
+    }
+}
+
+/// Median (copy + sort) — robust location for small samples.
+pub fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut m = Moments::new();
+        for &x in &xs {
+            m.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / 5.0;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / 4.0;
+        assert!((m.mean() - mean).abs() < 1e-12);
+        assert!((m.var() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ivw_prefers_low_variance() {
+        // source A: 1.0 +/- tiny; source B: 5.0 +/- huge
+        let x = inverse_variance_weight(&[(1.0, 1e-6), (5.0, 10.0)]);
+        assert!((x - 1.0).abs() < 0.01, "{x}");
+        // equal variances -> plain mean
+        let y = inverse_variance_weight(&[(1.0, 1.0), (5.0, 1.0)]);
+        assert!((y - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ivw_is_minimum_variance_combination() {
+        // analytic optimum for two sources: w1 = s2^2/(s1^2+s2^2)
+        let (v1, v2) = (0.5, 2.0);
+        let x = inverse_variance_weight(&[(10.0, v1), (20.0, v2)]);
+        let w1 = (1.0 / v1) / (1.0 / v1 + 1.0 / v2);
+        assert!((x - (w1 * 10.0 + (1.0 - w1) * 20.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ema_bias_corrected() {
+        let mut e = Ema::new(0.9);
+        e.push(5.0);
+        assert!((e.get() - 5.0).abs() < 1e-12); // first sample, corrected
+        for _ in 0..200 {
+            e.push(5.0);
+        }
+        assert!((e.get() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+}

@@ -1,0 +1,237 @@
+//! Cross-module property tests (randomized invariant checks over the
+//! coordinator's routing / batching / state management — the offline
+//! substitute for proptest, see util::prop).
+
+use cannikin::baselines::{even_split, System};
+use cannikin::cluster::random_cluster;
+use cannikin::coordinator::{BatchPolicy, CannikinPlanner};
+use cannikin::gns;
+use cannikin::optperf;
+use cannikin::perfmodel::ClusterModel;
+use cannikin::simulator::{workload, ClusterSim};
+use cannikin::util::prop::{check, close, ensure};
+use cannikin::util::rng::Rng;
+
+fn random_model(rng: &mut Rng) -> ClusterModel {
+    let n = 2 + rng.below(15) as usize;
+    let cluster = random_cluster(rng, n);
+    let ws = workload::all();
+    let w = &ws[rng.below(ws.len() as u64) as usize];
+    w.cluster_model(&cluster)
+}
+
+#[test]
+fn prop_optperf_allocation_sums_to_total_and_is_nonnegative() {
+    check(
+        "optperf-sum",
+        150,
+        |rng| {
+            let model = random_model(rng);
+            let b = 8.0 + rng.f64() * 4000.0;
+            (model, b)
+        },
+        |(model, b)| {
+            let a = optperf::solve(model, *b).map_err(|e| e.to_string())?;
+            let sum: f64 = a.batch_sizes.iter().sum();
+            close(sum, *b, 1e-6, "sum(b) == B")?;
+            ensure(a.batch_sizes.iter().all(|&x| x >= 0.0), "b >= 0")?;
+            ensure(a.t_pred.is_finite() && a.t_pred > 0.0, "finite positive T")
+        },
+    );
+}
+
+#[test]
+fn prop_optperf_never_worse_than_even_split() {
+    check(
+        "optperf-beats-even",
+        100,
+        |rng| {
+            let model = random_model(rng);
+            let b = 16.0 + rng.f64() * 2000.0;
+            (model, b)
+        },
+        |(model, b)| {
+            let a = optperf::solve(model, *b).map_err(|e| e.to_string())?;
+            let even = vec![b / model.n() as f64; model.n()];
+            let t_even = optperf::predict_batch_time(model, &even);
+            ensure(
+                a.t_pred <= t_even + 1e-9,
+                format!("OptPerf {} > even {}", a.t_pred, t_even),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_algorithm1_agrees_with_water_filling() {
+    check(
+        "alg1-vs-bisection",
+        100,
+        |rng| {
+            let model = random_model(rng);
+            let b = 16.0 + rng.f64() * 3000.0;
+            (model, b)
+        },
+        |(model, b)| {
+            let a1 = optperf::solve(model, *b).map_err(|e| e.to_string())?;
+            let a2 = optperf::solve_bisection(model, *b);
+            close(a1.t_pred, a2.t_pred, 1e-4, "t_pred alg1 vs bisection")
+        },
+    );
+}
+
+#[test]
+fn prop_predicted_time_is_monotone_in_total_batch() {
+    check(
+        "optperf-monotone-in-B",
+        60,
+        |rng| random_model(rng),
+        |model| {
+            let mut prev = 0.0;
+            for b in [32.0, 64.0, 128.0, 256.0, 512.0, 1024.0] {
+                let a = optperf::solve(model, b).map_err(|e| e.to_string())?;
+                ensure(
+                    a.t_pred >= prev - 1e-9,
+                    format!("T({b}) = {} < T(prev) = {prev}", a.t_pred),
+                )?;
+                prev = a.t_pred;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_integer_alloc_preserves_total_and_caps() {
+    check(
+        "integer-alloc",
+        200,
+        |rng| {
+            let n = 1 + rng.below(20) as usize;
+            let total = 1 + rng.below(5000);
+            let raw: Vec<f64> = (0..n).map(|_| rng.f64() * 500.0).collect();
+            let scale = total as f64 / raw.iter().sum::<f64>().max(1e-9);
+            let want: Vec<f64> = raw.iter().map(|x| x * scale).collect();
+            // caps generous enough to hold the total
+            let caps: Vec<u64> = (0..n).map(|_| total).collect();
+            (want, total, caps)
+        },
+        |(want, total, caps)| {
+            let out = optperf::integer_alloc(want, *total, caps);
+            ensure(out.iter().sum::<u64>() == *total, "sum == total")?;
+            ensure(
+                out.iter().zip(caps).all(|(b, c)| b <= c),
+                "caps respected",
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_gns_weights_sum_to_one_any_heterogeneity() {
+    check(
+        "gns-weights",
+        150,
+        |rng| {
+            let n = 2 + rng.below(20) as usize;
+            let b: Vec<f64> = (0..n).map(|_| 1.0 + rng.below(128) as f64).collect();
+            b
+        },
+        |b| {
+            let (wg, ws) = gns::optimal_weights(b).map_err(|e| e.to_string())?;
+            close(wg.iter().sum::<f64>(), 1.0, 1e-8, "Σw_G")?;
+            close(ws.iter().sum::<f64>(), 1.0, 1e-8, "Σw_S")?;
+            ensure(wg.iter().all(|x| x.is_finite()), "finite w_G")?;
+            ensure(ws.iter().all(|x| x.is_finite()), "finite w_S")
+        },
+    );
+}
+
+#[test]
+fn prop_planner_plans_are_always_valid() {
+    // routing/batching/state invariant: whatever the planner does across
+    // epochs, the plan sums to its declared total and respects caps
+    check(
+        "planner-valid-plans",
+        25,
+        |rng| {
+            let n = 2 + rng.below(10) as usize;
+            let cluster = random_cluster(rng, n);
+            let seed = rng.next_u64();
+            (cluster, seed)
+        },
+        |(cluster, seed)| {
+            let w = workload::cifar10();
+            let caps: Vec<u64> =
+                cluster.nodes.iter().map(|nd| w.max_local_batch(nd)).collect();
+            let mut planner = CannikinPlanner::new(
+                cluster.n(),
+                w.b0,
+                w.b_max.min(caps.iter().sum::<u64>()),
+                w.n_buckets,
+                BatchPolicy::Adaptive,
+            )
+            .with_caps(caps.clone());
+            let mut sim = ClusterSim::new(cluster, &w, *seed);
+            let mut phi = w.phi0;
+            for e in 0..10 {
+                let plan = planner.plan_epoch(e, phi);
+                ensure(
+                    plan.local.iter().sum::<u64>() == plan.total,
+                    format!("epoch {e}: sum {:?} != {}", plan.local, plan.total),
+                )?;
+                ensure(
+                    plan.local.iter().zip(&caps).all(|(b, c)| b <= c),
+                    format!("epoch {e}: cap violated {:?} vs {caps:?}", plan.local),
+                )?;
+                let out = sim.step(&plan.local_f64());
+                planner.observe_epoch(&out.per_node, out.t_batch);
+                phi *= 1.5;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_even_split_is_fair_and_exact() {
+    check(
+        "even-split",
+        200,
+        |rng| (1 + rng.below(10_000), 1 + rng.below(64) as usize),
+        |(total, n)| {
+            let s = even_split(*total, *n);
+            ensure(s.iter().sum::<u64>() == *total, "sum")?;
+            let max = *s.iter().max().unwrap();
+            let min = *s.iter().min().unwrap();
+            ensure(max - min <= 1, "balance")
+        },
+    );
+}
+
+#[test]
+fn prop_simulator_time_increases_with_any_nodes_batch() {
+    check(
+        "sim-monotone",
+        40,
+        |rng| {
+            let model = random_model(rng);
+            let b: Vec<f64> = (0..model.n()).map(|_| 4.0 + rng.f64() * 64.0).collect();
+            let node = rng.below(model.n() as u64) as usize;
+            (model, b, node)
+        },
+        |(model, b, node)| {
+            let mut sim = cannikin::simulator::ClusterSim::noiseless(
+                model.nodes.clone(),
+                model.gamma,
+                model.t_comm,
+                model.n_buckets,
+            );
+            let t1 = sim.step(b).t_batch;
+            let mut b2 = b.clone();
+            b2[*node] += 200.0;
+            let t2 = sim.step(&b2).t_batch;
+            ensure(t2 >= t1 - 1e-9, format!("t2 {t2} < t1 {t1}"))
+        },
+    );
+}
