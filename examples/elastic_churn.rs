@@ -1,0 +1,62 @@
+//! Elastic churn demo: train through spot-instance preemptions, re-joins
+//! and silent throttling, and compare Cannikin's warm-started re-planning
+//! against the naive elastic baselines.
+//!
+//!     cargo run --release --example elastic_churn
+
+use cannikin::baselines::{AdaptDl, Ddp};
+use cannikin::benchkit::Table;
+use cannikin::cluster;
+use cannikin::coordinator::{BatchPolicy, CannikinPlanner};
+use cannikin::elastic::{self, ElasticSystem, ScenarioConfig};
+use cannikin::simulator::workload;
+
+fn main() {
+    // paper Table 2's 3-GPU heterogeneous cluster + the CIFAR-10 profile
+    let c = cluster::cluster_a();
+    let w = workload::cifar10();
+    let cfg = ScenarioConfig { max_epochs: 20_000, seed: 7, reps: 3 };
+
+    // a seeded spot-instance churn trace: throttle → preempt → capacity back
+    let trace = elastic::spot_instance(&c, cfg.max_epochs, cfg.seed);
+    println!("churn trace {:?} ({} events):", trace.name, trace.len());
+    for te in &trace.events {
+        println!("  epoch {:>4}  {}", te.epoch, te.event.kind());
+    }
+
+    // run the same scenario under each system
+    let mut tbl = Table::new(&["system", "reached", "time-to-target (sim s)", "bootstrap epochs"]);
+    let mut run = |label: &str, sys: &mut dyn ElasticSystem| {
+        let r = elastic::run_scenario(&c, &w, &trace, sys, &cfg);
+        tbl.row(vec![
+            label.to_string(),
+            if r.reached() { "yes".to_string() } else { "no".to_string() },
+            r.time_to_target.map(|t| format!("{t:.0}")).unwrap_or_else(|| "-".to_string()),
+            r.bootstrap_epochs.to_string(),
+        ]);
+        r
+    };
+
+    let mut warm =
+        CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+    let r_warm = run("cannikin-elastic", &mut warm);
+    let mut cold = elastic::ColdRestartCannikin::new(
+        c.n(),
+        w.b0,
+        w.b_max,
+        w.n_buckets,
+        BatchPolicy::Adaptive,
+    );
+    let r_cold = run("cannikin-cold-restart", &mut cold);
+    let mut even = AdaptDl::new(c.n(), w.b0, w.b_max, w.n_buckets);
+    let _ = run("naive-even-resplit", &mut even);
+    let mut ddp = Ddp::with_total(c.n(), w.b0);
+    let _ = run("static-ddp", &mut ddp);
+
+    tbl.print(&format!("spot churn on {} / {}", c.name, w.name));
+    println!(
+        "\nwarm replan re-used the survivors' learned models: {} bootstrap epochs \
+         vs {} for a cold restart after every event",
+        r_warm.bootstrap_epochs, r_cold.bootstrap_epochs
+    );
+}

@@ -1,0 +1,90 @@
+//! Bench: elastic time-to-target under the spot-instance churn preset —
+//! cannikin-elastic (warm replan) vs a cold-restart ablation vs the naive
+//! even-re-split baseline vs static DDP, plus the runner's own wall time.
+//! Registered in benchkit (harness = false); rows append to the table the
+//! EXPERIMENTS notes quote.
+
+use cannikin::baselines::{AdaptDl, Ddp};
+use cannikin::benchkit::{report, Bencher, Table};
+use cannikin::cluster;
+use cannikin::coordinator::{BatchPolicy, CannikinPlanner};
+use cannikin::elastic::{self, ElasticSystem, ScenarioConfig, ScenarioReport};
+use cannikin::simulator::workload;
+
+fn main() {
+    let c = cluster::cluster_a();
+    let w = workload::cifar10();
+    let cfg = ScenarioConfig { max_epochs: 20_000, seed: 7, reps: 3 };
+    let trace = elastic::spot_instance(&c, cfg.max_epochs, cfg.seed);
+    let counts = trace.counts();
+    println!(
+        "spot trace: {} events ({} departures, {} joins, {} slowdowns)",
+        trace.len(),
+        counts.departures(),
+        counts.joins,
+        counts.slowdowns
+    );
+
+    let mut tbl = Table::new(&["system", "time-to-target (sim s)", "bootstrap epochs", "events"]);
+    let mut run = |label: &str, sys: &mut dyn ElasticSystem| -> ScenarioReport {
+        let r = elastic::run_scenario(&c, &w, &trace, sys, &cfg);
+        tbl.row(vec![
+            label.to_string(),
+            r.time_to_target.map(|t| format!("{t:.0}")).unwrap_or_else(|| "-".to_string()),
+            r.bootstrap_epochs.to_string(),
+            r.events_applied.to_string(),
+        ]);
+        r
+    };
+
+    let mut warm =
+        CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+    let r_warm = run("cannikin-elastic (warm replan)", &mut warm);
+    let warm_solves = warm.total_solves;
+
+    let mut cold = elastic::ColdRestartCannikin::new(
+        c.n(),
+        w.b0,
+        w.b_max,
+        w.n_buckets,
+        BatchPolicy::Adaptive,
+    );
+    let r_cold = run("cannikin (cold restart ablation)", &mut cold);
+
+    let mut even = AdaptDl::new(c.n(), w.b0, w.b_max, w.n_buckets);
+    let r_even = run("naive even-re-split", &mut even);
+
+    let mut ddp = Ddp::with_total(c.n(), w.b0);
+    let r_ddp = run("static DDP", &mut ddp);
+
+    tbl.print("Elastic spot-churn, cifar10 on cluster A (lower is better)");
+
+    println!(
+        "\nwarm vs cold: bootstrap epochs {} vs {} (strictly fewer: {}), planner solves {}",
+        r_warm.bootstrap_epochs,
+        r_cold.bootstrap_epochs,
+        r_warm.bootstrap_epochs < r_cold.bootstrap_epochs,
+        warm_solves,
+    );
+    if let (Some(tw), Some(te)) = (r_warm.time_to_target, r_even.time_to_target) {
+        println!(
+            "cannikin-elastic vs naive even-re-split: {:.0}s vs {:.0}s ({:.1}% faster)",
+            tw,
+            te,
+            (1.0 - tw / te) * 100.0
+        );
+    }
+    if let (Some(tw), Some(td)) = (r_warm.time_to_target, r_ddp.time_to_target) {
+        println!("cannikin-elastic vs static DDP: {tw:.0}s vs {td:.0}s");
+    }
+
+    // wall time of the scenario runner itself (the churn overhead is the
+    // quantity a production scheduler would pay per event)
+    let b = Bencher::new(1, 5);
+    let r = b.run("elastic/run_scenario/cannikin/spot/20k-epochs", || {
+        let mut sys =
+            CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+        elastic::run_scenario(&c, &w, &trace, &mut sys, &cfg)
+    });
+    report(&r);
+}

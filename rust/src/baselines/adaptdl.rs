@@ -23,6 +23,10 @@ pub struct AdaptDl {
     last_plan: Option<Plan>,
     /// measured (B, t_batch) fallback throughput points before models fit
     history: Vec<(u64, f64)>,
+    /// epochs this instance has planned — the bootstrap schedule keys on
+    /// this (not the caller's absolute epoch) so an elastic membership
+    /// reset restarts the schedule and the models become identifiable again
+    epochs_planned: usize,
 }
 
 impl AdaptDl {
@@ -37,7 +41,22 @@ impl AdaptDl {
             comm: CommLearner::new(),
             last_plan: None,
             history: Vec::new(),
+            epochs_planned: 0,
         }
+    }
+
+    /// Naive elastic mode (the even-re-split baseline for the elastic
+    /// experiments): the node set changed, so throw away all learned state
+    /// and start learning the new cluster from scratch.  AdaptDL has no
+    /// per-node allocation to preserve — it always splits evenly.
+    pub fn reset_membership(&mut self, n_nodes: usize) {
+        self.n_nodes = n_nodes;
+        self.learners = (0..n_nodes).map(|_| ComputeLearner::new()).collect();
+        self.gamma = GammaEstimator::new(n_nodes);
+        self.comm = CommLearner::new();
+        self.last_plan = None;
+        self.history.clear();
+        self.epochs_planned = 0;
     }
 
     fn cluster_model(&self) -> Option<ClusterModel> {
@@ -70,7 +89,9 @@ impl System for AdaptDl {
         "adaptdl"
     }
 
-    fn plan_epoch(&mut self, epoch: usize, phi: f64) -> Plan {
+    fn plan_epoch(&mut self, _epoch: usize, phi: f64) -> Plan {
+        let epoch = self.epochs_planned;
+        self.epochs_planned += 1;
         // bootstrap: grow B geometrically so the learners see distinct
         // batches on every node (same schedule as Cannikin's bootstrap)
         let model_opt = if epoch >= 2 { self.cluster_model() } else { None };

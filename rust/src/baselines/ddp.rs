@@ -21,6 +21,12 @@ impl Ddp {
     pub fn with_total(n_nodes: usize, total: u64) -> Self {
         Ddp { n_nodes, total }
     }
+
+    /// Elastic membership change: DDP keeps its fixed total batch and
+    /// simply re-splits it evenly over whatever nodes remain.
+    pub fn set_n_nodes(&mut self, n_nodes: usize) {
+        self.n_nodes = n_nodes;
+    }
 }
 
 impl System for Ddp {

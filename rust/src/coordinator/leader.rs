@@ -22,6 +22,7 @@ use crate::cluster::ClusterSpec;
 use crate::coordinator::dataloader::HeteroDataLoader;
 use crate::coordinator::planner::{BatchPolicy, CannikinPlanner};
 use crate::data::{synth_corpus, Sampler};
+use crate::elastic::{apply_due_events, ChurnTrace, ElasticCluster};
 use crate::gns::{estimate_round, GnsTracker};
 use crate::gradsync::{ring_all_reduce, sq_norm, Buckets};
 use crate::metrics::JsonlLog;
@@ -41,6 +42,10 @@ pub struct TrainConfig {
     pub seed: u64,
     pub corpus_bytes: usize,
     pub policy: BatchPolicy,
+    /// churn trace applied at epoch boundaries (elastic training); the
+    /// leader re-splits data, re-weights the Eq. 9 ratios, and warm-replans
+    /// after every applied event
+    pub trace: Option<ChurnTrace>,
     /// JSONL step/epoch log (optional)
     pub log_path: Option<PathBuf>,
     /// print per-epoch lines
@@ -59,6 +64,7 @@ impl TrainConfig {
             seed: 0,
             corpus_bytes: 64 * 1024,
             policy: BatchPolicy::Adaptive,
+            trace: None,
             log_path: None,
             verbose: false,
         }
@@ -68,6 +74,8 @@ impl TrainConfig {
 #[derive(Clone, Debug)]
 pub struct EpochReport {
     pub epoch: usize,
+    /// workers participating this epoch (changes under a churn trace)
+    pub n_nodes: usize,
     pub total_batch: u64,
     pub local: Vec<u64>,
     pub train_loss: f32,
@@ -129,6 +137,9 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     )
     .with_caps(caps);
     let mut sim = ClusterSim::new(&cfg.cluster, &cfg.workload, cfg.seed);
+    let mut elastic = ElasticCluster::new(&cfg.cluster);
+    let mut ev_idx = 0usize;
+    let mut sim_reseeds = 0u64;
     let mut gns = GnsTracker::new(0.9);
     let log = match &cfg.log_path {
         Some(p) => Some(JsonlLog::create(p)?),
@@ -140,6 +151,36 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let mut sim_wall = 0.0;
 
     for epoch in 0..cfg.epochs {
+        // ---- elastic: the leader rescales at the epoch boundary — apply
+        // due churn events via the shared helper (same semantics and
+        // counting as the scenario runner), warm-replan, and rebuild the
+        // simulated clock for the new node set (data re-splits and Eq. 9
+        // ratios re-weight below simply because the plan's worker count
+        // changed)
+        if let Some(trace) = &cfg.trace {
+            let out = apply_due_events(
+                trace,
+                &mut ev_idx,
+                epoch,
+                &mut elastic,
+                &mut planner,
+                &cfg.workload,
+                cfg.seed,
+                &mut sim_reseeds,
+            );
+            if let Some(s) = out.new_sim {
+                sim = s;
+            }
+            if cfg.verbose {
+                for (kind, n_after) in &out.changed {
+                    println!("elastic: {kind} at epoch {epoch} -> {n_after} workers");
+                }
+                if out.skipped > 0 {
+                    println!("elastic: skipped {} invalid event(s) at epoch {epoch}", out.skipped);
+                }
+            }
+        }
+        let n = planner.n_nodes();
         let phi = gns.b_noise().unwrap_or(cfg.workload.phi0);
         let plan = planner.plan_epoch(epoch, phi);
         let total: u64 = plan.local.iter().sum();
@@ -258,6 +299,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         sim_wall += epoch_sim_t;
         let report = EpochReport {
             epoch,
+            n_nodes: n,
             total_batch: total,
             local: plan.local.clone(),
             train_loss: (epoch_loss / cfg.steps_per_epoch as f64) as f32,
@@ -269,8 +311,9 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         };
         if cfg.verbose {
             println!(
-                "epoch {:>3}  B={:<5} local={:?}  train={:.4} eval={:.4}  t_batch={:.4}s  phi={:?}",
+                "epoch {:>3}  n={} B={:<5} local={:?}  train={:.4} eval={:.4}  t_batch={:.4}s  phi={:?}",
                 report.epoch,
+                report.n_nodes,
                 report.total_batch,
                 report.local,
                 report.train_loss,

@@ -18,6 +18,7 @@
 use std::time::Instant;
 
 use crate::baselines::{even_split, Plan, System};
+use crate::elastic::MembershipDelta;
 use crate::goodput;
 use crate::optperf::{self, Allocation, OverlapState};
 use crate::perfmodel::{ClusterModel, CommLearner, ComputeLearner, ComputeModel, ComputeObs, GammaEstimator};
@@ -55,6 +56,13 @@ pub struct CannikinPlanner {
     /// cumulative optimizer wall-time + solve count (Table 5 accounting)
     pub total_overhead_secs: f64,
     pub total_solves: usize,
+    /// §4.5 warm-start hints carried across an elastic membership change:
+    /// the stale table's (candidate B → overlap state), used to seed the
+    /// next OptPerf_init rebuild with one-solve warm attempts
+    warm_hints: Vec<(u64, OverlapState)>,
+    /// epochs planned via the Eq. 8 bootstrap path (no identifiable model)
+    /// — the §6 warm-vs-cold-restart accounting
+    pub bootstrap_epochs: usize,
 }
 
 impl CannikinPlanner {
@@ -81,6 +89,8 @@ impl CannikinPlanner {
             table_fingerprint: 0.0,
             total_overhead_secs: 0.0,
             total_solves: 0,
+            warm_hints: Vec::new(),
+            bootstrap_epochs: 0,
         }
     }
 
@@ -172,6 +182,62 @@ impl CannikinPlanner {
         self.optperf_init = None;
     }
 
+    /// A node silently changed behaviour (degraded / recovered): drop only
+    /// *its* learned compute model and γ observations; every other node's
+    /// state — and the §4.5 cache-seeding overlap hints — survive.
+    pub fn reset_node(&mut self, node: usize) {
+        assert!(node < self.n_nodes);
+        self.learners[node] = ComputeLearner::new();
+        self.gamma.reset_node(node);
+        self.optperf_init = None; // per-node model changed: re-derive table
+    }
+
+    /// Warm-started re-planning after an elastic membership change
+    /// (tentpole of the elastic subsystem; see [`crate::elastic`]).
+    ///
+    /// Unlike a cold restart, this (1) keeps every surviving node's learned
+    /// `ComputeLearner` / `GammaEstimator` state, so no Eq. 8 bootstrap
+    /// epochs are re-issued for them, and (2) carries the §4.5 OptPerf
+    /// table's overlap states over as warm-start hints for the rebuild, so
+    /// most candidates re-solve in one linear-system solve.  `new_caps` are
+    /// the per-node memory caps for the *post-event* cluster view (same
+    /// node order as the membership manager's spec).
+    pub fn replan(&mut self, delta: &MembershipDelta, new_caps: &[u64]) {
+        let n_old = self.n_nodes;
+        // stash the stale table as warm hints before surgery clears it
+        if let Some(table) = self.optperf_init.take() {
+            self.warm_hints = table.into_iter().map(|(b, _, s)| (b, s)).collect();
+        }
+        // remove in descending index order so earlier indices stay valid
+        let mut removed = delta.removed.clone();
+        removed.sort_unstable_by(|a, b| b.cmp(a));
+        for i in removed {
+            self.remove_node(i);
+        }
+        if delta.added > 0 {
+            self.add_nodes(delta.added, None);
+        }
+        for &i in &delta.degraded {
+            self.reset_node(i);
+        }
+        if delta.membership_changed() {
+            // the ring changed size: carry T_comm across analytically
+            // (ring all-reduce scales as 2(n−1)/n) instead of re-learning —
+            // this is what keeps the model identifiable on the very next
+            // epoch, i.e. zero extra bootstrap epochs for survivors
+            let n_new = self.n_nodes;
+            if n_old > 1 && n_new > 1 {
+                let factor = ((n_new - 1) as f64 / n_new as f64)
+                    / ((n_old - 1) as f64 / n_old as f64);
+                self.comm.rescale(factor);
+            } else {
+                self.comm = CommLearner::new();
+            }
+        }
+        assert_eq!(new_caps.len(), self.n_nodes, "caps must match the new view");
+        self.caps = new_caps.to_vec();
+    }
+
     pub fn n_nodes(&self) -> usize {
         self.n_nodes
     }
@@ -206,6 +272,7 @@ impl CannikinPlanner {
     fn plan_inner(&mut self, epoch: usize, phi: f64) -> Plan {
         // ---- bootstrap epochs (no identifiable model yet)
         if epoch == 0 {
+            self.bootstrap_epochs += 1;
             let total = self.fixed_or_default();
             let even: Vec<f64> =
                 even_split(total, self.n_nodes).iter().map(|&b| b as f64).collect();
@@ -214,6 +281,7 @@ impl CannikinPlanner {
         }
         let model = self.cluster_model();
         if epoch == 1 || model.is_none() {
+            self.bootstrap_epochs += 1;
             // Eq. 8: inverse per-sample-time proportional allocation; vary
             // the total (adaptive mode: grow geometrically) and skew the
             // split slightly each epoch so every node sees distinct batch
@@ -260,18 +328,24 @@ impl CannikinPlanner {
                 }
                 if self.optperf_init.is_none() {
                     self.table_fingerprint = fp;
-                    // init epoch: solve OptPerf for every candidate (§4.5),
-                    // warm-starting each solve from the previous pattern
-                    // (the solve API is stateless; warm start shows up as
-                    // the shared sort order / monotone boundary).
+                    // init epoch: solve OptPerf for every candidate (§4.5).
+                    // After an elastic replan the previous table's overlap
+                    // states seed each solve: when a hint still validates
+                    // the candidate costs one linear-system solve.
                     let mut table = Vec::with_capacity(cands.len());
                     for &b in &cands {
-                        if let Ok(a) = optperf::solve(&model, b as f64) {
+                        let hint = self
+                            .warm_hints
+                            .iter()
+                            .find(|(bb, _)| *bb == b)
+                            .map(|&(_, s)| s);
+                        if let Ok(a) = optperf::solve_with_hint(&model, b as f64, hint) {
                             self.total_solves += a.solves;
                             table.push((b, a.t_pred, a.state));
                         }
                     }
                     self.optperf_init = Some(table);
+                    self.warm_hints.clear();
                 }
                 let table = self.optperf_init.as_ref().unwrap();
                 // score candidates off the cached OptPerf_init times
@@ -286,8 +360,14 @@ impl CannikinPlanner {
             }
         };
 
-        // re-solve the chosen candidate with the freshest models
-        match optperf::solve(&model, total as f64) {
+        // re-solve the chosen candidate with the freshest models, warm-
+        // starting from the table's cached overlap state (§4.5: the common
+        // case is one solve per epoch once the table is built)
+        let hint = self
+            .optperf_init
+            .as_ref()
+            .and_then(|t| t.iter().find(|(b, _, _)| *b == total).map(|&(_, _, s)| s));
+        match optperf::solve_with_hint(&model, total as f64, hint) {
             Ok(alloc) => {
                 self.total_solves += alloc.solves;
                 // §4.5: if the overlap state changed vs the cached table,
@@ -425,6 +505,90 @@ mod elastic_tests {
     use super::*;
     use crate::cluster;
     use crate::simulator::{workload, ClusterSim};
+
+    /// Train a fresh adaptive planner for `epochs` on cluster A / imagenet.
+    fn warmed_planner(epochs: usize, seed: u64) -> (CannikinPlanner, ClusterSim, f64) {
+        let c = cluster::cluster_a();
+        let w = workload::imagenet();
+        let mut sys =
+            CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+        let mut sim = ClusterSim::new(&c, &w, seed);
+        let mut phi = w.phi0;
+        for e in 0..epochs {
+            let plan = sys.plan_epoch(e, phi);
+            let out = sim.step(&plan.local_f64());
+            sys.observe_epoch(&out.per_node, out.t_batch);
+            phi *= 1.5;
+        }
+        (sys, sim, phi)
+    }
+
+    /// The §6 warm-start claim at the planner level: after a membership
+    /// change, survivors keep their models, so no new Eq. 8 bootstrap
+    /// epochs are issued — a cold restart pays ≥ 2 more.
+    #[test]
+    fn replan_keeps_survivor_models_no_new_bootstraps() {
+        let (mut sys, _, phi) = warmed_planner(6, 21);
+        let boots_before = sys.bootstrap_epochs;
+        assert!(boots_before >= 2 && boots_before <= 3, "{boots_before}");
+
+        let w = workload::imagenet();
+        let c2 = cluster::cluster_a().without_nodes(&[2]);
+        let caps: Vec<u64> = c2.nodes.iter().map(|n| w.max_local_batch(n)).collect();
+        let delta = MembershipDelta { removed: vec![2], added: 0, degraded: vec![] };
+        sys.replan(&delta, &caps);
+        assert_eq!(sys.n_nodes(), 2);
+
+        let mut sim2 = ClusterSim::new(&c2, &w, 22);
+        for e in 6..10 {
+            let plan = sys.plan_epoch(e, phi);
+            assert_eq!(plan.local.len(), 2);
+            let out = sim2.step(&plan.local_f64());
+            sys.observe_epoch(&out.per_node, out.t_batch);
+        }
+        assert_eq!(
+            sys.bootstrap_epochs, boots_before,
+            "warm replan must not re-issue bootstrap epochs"
+        );
+    }
+
+    #[test]
+    fn replan_resets_only_the_degraded_node() {
+        let (mut sys, _, _) = warmed_planner(6, 31);
+        let obs0 = sys.learners[0].n_obs();
+        assert!(obs0 > 0);
+        let w = workload::imagenet();
+        let c = cluster::cluster_a();
+        let caps: Vec<u64> = c.nodes.iter().map(|n| w.max_local_batch(n)).collect();
+        let delta = MembershipDelta { removed: vec![], added: 0, degraded: vec![1] };
+        sys.replan(&delta, &caps);
+        // the degraded node's learned state is gone, the others' survives
+        assert_eq!(sys.learners[1].n_obs(), 0);
+        assert_eq!(sys.gamma.n_obs(1), 0);
+        assert_eq!(sys.learners[0].n_obs(), obs0);
+        assert!(sys.gamma.n_obs(0) > 0);
+        // and the stale table became warm hints for the next rebuild
+        assert!(sys.optperf_init.is_none());
+        assert!(!sys.warm_hints.is_empty());
+    }
+
+    #[test]
+    fn replan_carries_t_comm_across_the_ring_resize() {
+        let (mut sys, _, phi) = warmed_planner(6, 41);
+        let t_before = sys.comm.t_comm().unwrap();
+        let w = workload::imagenet();
+        let c2 = cluster::cluster_a().without_nodes(&[2]);
+        let caps: Vec<u64> = c2.nodes.iter().map(|n| w.max_local_batch(n)).collect();
+        let delta = MembershipDelta { removed: vec![2], added: 0, degraded: vec![] };
+        sys.replan(&delta, &caps);
+        // 3 -> 2 nodes: ring factor (1/2)/(2/3) = 3/4
+        let t_after = sys.comm.t_comm().unwrap();
+        assert!((t_after - t_before * 0.75).abs() < 1e-12, "{t_before} -> {t_after}");
+        // the model is identifiable on the very next epoch (no bootstrap)
+        let boots = sys.bootstrap_epochs;
+        let _ = sys.plan_epoch(6, phi);
+        assert_eq!(sys.bootstrap_epochs, boots);
+    }
 
     /// §6: removing a node keeps the remaining models; adding one recovers
     /// within ~2 epochs (bootstrap-free for survivors).

@@ -1,0 +1,388 @@
+//! Churn traces: a timeline of cluster-membership / health events with
+//! deterministic seeded generators and JSON load/save.
+//!
+//! Event **node indices always refer to the cluster view at the moment the
+//! event applies** (events are applied one at a time, in timeline order, by
+//! [`super::ElasticCluster`]); generators maintain a mirror of the
+//! membership so every emitted index is valid.  Three presets reproduce the
+//! production failure modes the ROADMAP calls for:
+//!
+//! * `spot` — spot-instance churn: a throttle warning (`SlowDown`), then a
+//!   `Preempt`, then the capacity returns (`NodeJoin` of the same device);
+//! * `maintenance` — a maintenance window: a block of nodes leaves at the
+//!   window start and rejoins at the end, with one surviving node throttled
+//!   for the duration;
+//! * `straggler` — OmniLearn-style silent straggler drift: step-wise
+//!   deepening `SlowDown`s on a victim node, later `Recover`ed.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cluster::{ClusterSpec, DeviceProfile};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One cluster-runtime event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClusterEvent {
+    /// a new worker joins (scheduler grant / spot capacity back)
+    NodeJoin { device: DeviceProfile },
+    /// graceful leave (scheduler reclaim announced at an epoch boundary)
+    NodeLeave { node: usize },
+    /// abrupt spot preemption — same membership effect as `NodeLeave`,
+    /// kept distinct for reporting and for mid-epoch semantics later
+    Preempt { node: usize },
+    /// silent degradation: the node's effective speed becomes
+    /// `factor × nominal` (factor is absolute w.r.t. nominal, not
+    /// compounding across successive SlowDowns)
+    SlowDown { node: usize, factor: f64 },
+    /// degradation clears: the node returns to its nominal profile
+    Recover { node: usize },
+}
+
+impl ClusterEvent {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ClusterEvent::NodeJoin { .. } => "join",
+            ClusterEvent::NodeLeave { .. } => "leave",
+            ClusterEvent::Preempt { .. } => "preempt",
+            ClusterEvent::SlowDown { .. } => "slowdown",
+            ClusterEvent::Recover { .. } => "recover",
+        }
+    }
+}
+
+/// An event pinned to the epoch boundary at which it applies.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimedEvent {
+    pub epoch: usize,
+    pub event: ClusterEvent,
+}
+
+/// Per-kind totals of a trace (reporting + acceptance checks).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EventCounts {
+    pub joins: usize,
+    pub leaves: usize,
+    pub preempts: usize,
+    pub slowdowns: usize,
+    pub recovers: usize,
+}
+
+impl EventCounts {
+    /// Leaves of either flavour.
+    pub fn departures(&self) -> usize {
+        self.leaves + self.preempts
+    }
+}
+
+/// A named, epoch-sorted event timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChurnTrace {
+    pub name: String,
+    pub events: Vec<TimedEvent>,
+}
+
+impl ChurnTrace {
+    pub fn new(name: &str) -> Self {
+        ChurnTrace { name: name.to_string(), events: Vec::new() }
+    }
+
+    /// Append an event; the builder keeps the timeline sorted (stable, so
+    /// same-epoch events apply in push order).
+    pub fn push(&mut self, epoch: usize, event: ClusterEvent) {
+        self.events.push(TimedEvent { epoch, event });
+        self.events.sort_by_key(|e| e.epoch);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn counts(&self) -> EventCounts {
+        let mut c = EventCounts::default();
+        for e in &self.events {
+            match e.event {
+                ClusterEvent::NodeJoin { .. } => c.joins += 1,
+                ClusterEvent::NodeLeave { .. } => c.leaves += 1,
+                ClusterEvent::Preempt { .. } => c.preempts += 1,
+                ClusterEvent::SlowDown { .. } => c.slowdowns += 1,
+                ClusterEvent::Recover { .. } => c.recovers += 1,
+            }
+        }
+        c
+    }
+
+    // ------------------------------------------------------------- JSON
+
+    pub fn to_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|te| {
+                let mut pairs = vec![
+                    ("epoch", Json::Num(te.epoch as f64)),
+                    ("kind", Json::Str(te.event.kind().to_string())),
+                ];
+                match &te.event {
+                    ClusterEvent::NodeJoin { device } => {
+                        pairs.push(("device", device_to_json(device)));
+                    }
+                    ClusterEvent::NodeLeave { node } | ClusterEvent::Preempt { node } => {
+                        pairs.push(("node", Json::Num(*node as f64)));
+                    }
+                    ClusterEvent::SlowDown { node, factor } => {
+                        pairs.push(("node", Json::Num(*node as f64)));
+                        pairs.push(("factor", Json::Num(*factor)));
+                    }
+                    ClusterEvent::Recover { node } => {
+                        pairs.push(("node", Json::Num(*node as f64)));
+                    }
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("events", Json::Arr(events)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ChurnTrace> {
+        let name = j.req("name")?.as_str()?.to_string();
+        let mut events = Vec::new();
+        for e in j.req("events")?.as_arr()? {
+            let epoch = e.req("epoch")?.as_usize()?;
+            let kind = e.req("kind")?.as_str()?;
+            let node = || -> Result<usize> { e.req("node")?.as_usize() };
+            let event = match kind {
+                "join" => ClusterEvent::NodeJoin { device: device_from_json(e.req("device")?)? },
+                "leave" => ClusterEvent::NodeLeave { node: node()? },
+                "preempt" => ClusterEvent::Preempt { node: node()? },
+                "slowdown" => {
+                    ClusterEvent::SlowDown { node: node()?, factor: e.req("factor")?.as_f64()? }
+                }
+                "recover" => ClusterEvent::Recover { node: node()? },
+                other => bail!("unknown event kind {other:?}"),
+            };
+            events.push(TimedEvent { epoch, event });
+        }
+        events.sort_by_key(|e| e.epoch);
+        Ok(ChurnTrace { name, events })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .map_err(|e| anyhow!("writing trace {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ChurnTrace> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+}
+
+fn device_to_json(d: &DeviceProfile) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(d.name.clone())),
+        ("speed", Json::Num(d.speed)),
+        ("mem_gb", Json::Num(d.mem_gb)),
+        ("gamma_noise", Json::Num(d.gamma_noise)),
+        ("time_noise", Json::Num(d.time_noise)),
+    ])
+}
+
+fn device_from_json(j: &Json) -> Result<DeviceProfile> {
+    Ok(DeviceProfile {
+        name: j.req("name")?.as_str()?.to_string(),
+        speed: j.req("speed")?.as_f64()?,
+        mem_gb: j.req("mem_gb")?.as_f64()?,
+        gamma_noise: j.req("gamma_noise")?.as_f64()?,
+        time_noise: j.req("time_noise")?.as_f64()?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Seeded preset generators
+// ---------------------------------------------------------------------------
+
+/// Look up a preset generator by name (`spot` / `maintenance` /
+/// `straggler`).  `horizon` is the run's max epoch count; events are placed
+/// early enough that convergence-scale runs see the whole scenario.
+pub fn preset(
+    name: &str,
+    cluster: &ClusterSpec,
+    horizon: usize,
+    seed: u64,
+) -> Option<ChurnTrace> {
+    match name {
+        "spot" => Some(spot_instance(cluster, horizon, seed)),
+        "maintenance" => Some(maintenance_window(cluster, horizon, seed)),
+        "straggler" => Some(straggler_drift(cluster, horizon, seed)),
+        _ => None,
+    }
+}
+
+/// Spot-instance churn: repeated (throttle → preempt → capacity returns)
+/// incidents.  Every incident contributes one `SlowDown`, one `Preempt`
+/// and one `NodeJoin`, so with `horizon >= 30` the trace always contains
+/// at least one of each kind.
+pub fn spot_instance(cluster: &ClusterSpec, horizon: usize, seed: u64) -> ChurnTrace {
+    let mut rng = Rng::new(seed ^ 0x5707_aace);
+    let mut devs: Vec<DeviceProfile> =
+        cluster.nodes.iter().map(|n| n.device.clone()).collect();
+    let mut trace = ChurnTrace::new("spot");
+    // all incidents land in the first few hundred epochs so even fast runs
+    // experience the full scenario before reaching the target
+    let window = horizon.saturating_sub(24).min(600);
+    let incidents = (window / 60).clamp(1, 8);
+    let mut t = 6 + rng.below(4) as usize;
+    for _ in 0..incidents {
+        if t + 12 >= horizon || devs.len() <= 1 {
+            break;
+        }
+        let victim = rng.below(devs.len() as u64) as usize;
+        // throttle warning precedes the preemption
+        let factor = 0.5 + 0.1 * rng.below(3) as f64;
+        trace.push(t, ClusterEvent::SlowDown { node: victim, factor });
+        trace.push(t + 2, ClusterEvent::Preempt { node: victim });
+        let dev = devs.remove(victim);
+        let gap = 3 + rng.below(6) as usize;
+        trace.push(t + 2 + gap, ClusterEvent::NodeJoin { device: dev.clone() });
+        devs.push(dev);
+        t += 20 + rng.below(30) as usize;
+    }
+    trace
+}
+
+/// A scheduled maintenance window: the `k` highest-indexed nodes leave at
+/// the window start (highest first, so the listed order applies cleanly to
+/// the shrinking view) and rejoin at the end; one surviving node runs
+/// throttled for the duration (rolling upgrades).
+pub fn maintenance_window(cluster: &ClusterSpec, horizon: usize, seed: u64) -> ChurnTrace {
+    let mut rng = Rng::new(seed ^ 0x3a19_7e57);
+    let n = cluster.n();
+    let mut trace = ChurnTrace::new("maintenance");
+    if n < 2 {
+        return trace;
+    }
+    let k = (n / 4).max(1).min(n - 1);
+    let start = (horizon / 4).clamp(6, 200);
+    let dur = (horizon / 10).clamp(6, 80);
+    let profs: Vec<DeviceProfile> =
+        cluster.nodes[n - k..].iter().map(|x| x.device.clone()).collect();
+    for i in 0..k {
+        trace.push(start, ClusterEvent::NodeLeave { node: n - 1 - i });
+    }
+    let survivor = rng.below((n - k) as u64) as usize;
+    trace.push(start + 1, ClusterEvent::SlowDown { node: survivor, factor: 0.75 });
+    for p in profs {
+        trace.push(start + dur, ClusterEvent::NodeJoin { device: p });
+    }
+    trace.push(start + dur, ClusterEvent::Recover { node: survivor });
+    trace
+}
+
+/// Silent straggler drift: a victim node's effective speed degrades in
+/// steps (thermal throttling / co-tenant interference) and later recovers.
+pub fn straggler_drift(cluster: &ClusterSpec, horizon: usize, seed: u64) -> ChurnTrace {
+    let mut rng = Rng::new(seed ^ 0xd81f_7d21);
+    let n = cluster.n();
+    let mut trace = ChurnTrace::new("straggler");
+    if n == 0 {
+        return trace;
+    }
+    let victims = if n > 4 { 2 } else { 1 };
+    let mut t = 8;
+    for _ in 0..victims {
+        if t + 45 >= horizon {
+            break;
+        }
+        let v = rng.below(n as u64) as usize;
+        for (i, f) in [0.85, 0.7, 0.55].iter().enumerate() {
+            trace.push(t + i * 10, ClusterEvent::SlowDown { node: v, factor: *f });
+        }
+        trace.push(t + 45, ClusterEvent::Recover { node: v });
+        t += 60 + rng.below(20) as usize;
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster;
+
+    #[test]
+    fn spot_preset_is_deterministic_and_complete() {
+        let c = cluster::cluster_a();
+        let a = spot_instance(&c, 400, 11);
+        let b = spot_instance(&c, 400, 11);
+        assert_eq!(a, b);
+        let other = spot_instance(&c, 400, 12);
+        assert_ne!(a, other, "different seeds should differ");
+        // the acceptance shape: ≥1 departure, ≥1 join, ≥1 slowdown
+        let counts = a.counts();
+        assert!(counts.departures() >= 1, "{counts:?}");
+        assert!(counts.joins >= 1, "{counts:?}");
+        assert!(counts.slowdowns >= 1, "{counts:?}");
+        // sorted timeline
+        assert!(a.events.windows(2).all(|w| w[0].epoch <= w[1].epoch));
+    }
+
+    #[test]
+    fn maintenance_and_straggler_presets_generate() {
+        let c = cluster::cluster_b();
+        let m = maintenance_window(&c, 1000, 3);
+        let counts = m.counts();
+        assert_eq!(counts.leaves, 4); // 16/4 nodes
+        assert_eq!(counts.joins, 4);
+        assert_eq!(counts.slowdowns, 1);
+        assert_eq!(counts.recovers, 1);
+
+        let s = straggler_drift(&c, 1000, 3);
+        assert!(s.counts().slowdowns >= 3);
+        assert!(s.counts().recovers >= 1);
+        assert_eq!(s.counts().departures(), 0);
+    }
+
+    #[test]
+    fn preset_lookup() {
+        let c = cluster::cluster_a();
+        assert!(preset("spot", &c, 200, 1).is_some());
+        assert!(preset("maintenance", &c, 200, 1).is_some());
+        assert!(preset("straggler", &c, 200, 1).is_some());
+        assert!(preset("blackout", &c, 200, 1).is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_trace() {
+        let c = cluster::cluster_a();
+        for name in ["spot", "maintenance", "straggler"] {
+            let t = preset(name, &c, 300, 42).unwrap();
+            let j = t.to_json();
+            let back = ChurnTrace::from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+            assert_eq!(t, back, "{name} roundtrip");
+        }
+    }
+
+    #[test]
+    fn json_rejects_bad_kinds() {
+        let j = Json::parse(r#"{"name":"x","events":[{"epoch":1,"kind":"explode"}]}"#).unwrap();
+        assert!(ChurnTrace::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let c = cluster::cluster_a();
+        let t = spot_instance(&c, 200, 5);
+        let path = std::env::temp_dir()
+            .join(format!("cannikin-trace-{}.json", std::process::id()));
+        t.save(&path).unwrap();
+        let back = ChurnTrace::load(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(t, back);
+    }
+}

@@ -1,0 +1,221 @@
+//! Elastic membership manager: applies [`ClusterEvent`]s to a mutable view
+//! of the cluster and reports exactly what changed, so consumers (planner,
+//! simulator, leader) can invalidate *only* the affected per-node state.
+//!
+//! Invariants:
+//! * node order is stable: removals close the gap, joins append — the view
+//!   index i always lines up with the planner's learner i and the
+//!   simulator's node i;
+//! * a `SlowDown` factor is absolute w.r.t. the node's **nominal** profile
+//!   (two successive SlowDowns don't compound); `Recover` restores nominal;
+//! * the last node can never be removed (the event errors instead).
+
+use anyhow::{bail, Result};
+
+use crate::cluster::{ClusterSpec, DeviceProfile};
+use crate::elastic::events::ClusterEvent;
+
+/// What one applied event changed, in terms consumers can act on.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MembershipDelta {
+    /// indices (in the *pre-event* view) of removed nodes
+    pub removed: Vec<usize>,
+    /// number of nodes appended to the end of the view
+    pub added: usize,
+    /// indices (in the *post-event* view) whose effective speed changed —
+    /// their learned models are stale and must be re-learned
+    pub degraded: Vec<usize>,
+}
+
+impl MembershipDelta {
+    pub fn is_empty(&self) -> bool {
+        self.removed.is_empty() && self.added == 0 && self.degraded.is_empty()
+    }
+
+    /// Did the node *set* change (as opposed to in-place degradation)?
+    pub fn membership_changed(&self) -> bool {
+        !self.removed.is_empty() || self.added > 0
+    }
+}
+
+/// The mutable cluster view.
+pub struct ElasticCluster {
+    name: String,
+    net_gbps: f64,
+    /// nominal (as-provisioned) profile per current node
+    nominal: Vec<DeviceProfile>,
+    /// current slowdown factor per node (1.0 = nominal)
+    slow: Vec<f64>,
+}
+
+impl ElasticCluster {
+    pub fn new(spec: &ClusterSpec) -> Self {
+        ElasticCluster {
+            name: spec.name.clone(),
+            net_gbps: spec.net_gbps,
+            nominal: spec.nodes.iter().map(|n| n.device.clone()).collect(),
+            slow: vec![1.0; spec.n()],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.nominal.len()
+    }
+
+    /// Current slowdown factor of node `i` (1.0 = nominal).
+    pub fn slow_factor(&self, i: usize) -> f64 {
+        self.slow[i]
+    }
+
+    /// Materialize the current view as a [`ClusterSpec`]: nominal profiles
+    /// with effective speeds, contiguous ids.
+    pub fn spec(&self) -> ClusterSpec {
+        let devs: Vec<DeviceProfile> = self
+            .nominal
+            .iter()
+            .zip(&self.slow)
+            .map(|(d, &s)| {
+                if (s - 1.0).abs() < 1e-12 {
+                    d.clone()
+                } else {
+                    DeviceProfile { speed: d.speed * s, ..d.clone() }
+                }
+            })
+            .collect();
+        ClusterSpec::new(&self.name, devs, self.net_gbps)
+    }
+
+    /// Apply one event; returns the delta consumers must react to.
+    /// Errors (cluster unchanged) on out-of-range indices, removing the
+    /// last node, or non-positive slowdown factors.
+    pub fn apply(&mut self, ev: &ClusterEvent) -> Result<MembershipDelta> {
+        let n = self.n();
+        let mut delta = MembershipDelta::default();
+        match ev {
+            ClusterEvent::NodeJoin { device } => {
+                self.nominal.push(device.clone());
+                self.slow.push(1.0);
+                delta.added = 1;
+            }
+            ClusterEvent::NodeLeave { node } | ClusterEvent::Preempt { node } => {
+                let node = *node;
+                if node >= n {
+                    bail!("{} of node {node} but the view has {n} nodes", ev.kind());
+                }
+                if n <= 1 {
+                    bail!("cannot remove the last node");
+                }
+                self.nominal.remove(node);
+                self.slow.remove(node);
+                delta.removed.push(node);
+            }
+            ClusterEvent::SlowDown { node, factor } => {
+                let node = *node;
+                if node >= n {
+                    bail!("slowdown of node {node} but the view has {n} nodes");
+                }
+                if !(*factor > 0.0) || *factor > 4.0 {
+                    bail!("slowdown factor {factor} out of range");
+                }
+                if (self.slow[node] - factor).abs() > 1e-12 {
+                    self.slow[node] = *factor;
+                    delta.degraded.push(node);
+                }
+            }
+            ClusterEvent::Recover { node } => {
+                let node = *node;
+                if node >= n {
+                    bail!("recover of node {node} but the view has {n} nodes");
+                }
+                if (self.slow[node] - 1.0).abs() > 1e-12 {
+                    self.slow[node] = 1.0;
+                    delta.degraded.push(node);
+                }
+            }
+        }
+        Ok(delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster;
+
+    #[test]
+    fn leave_closes_gap_and_join_appends() {
+        let base = cluster::cluster_a(); // A5000, A4000, P4000
+        let mut ec = ElasticCluster::new(&base);
+        let d = ec.apply(&ClusterEvent::NodeLeave { node: 1 }).unwrap();
+        assert_eq!(d.removed, vec![1]);
+        assert!(d.membership_changed());
+        let spec = ec.spec();
+        assert_eq!(spec.n(), 2);
+        assert_eq!(spec.nodes[0].device.name, "A5000");
+        assert_eq!(spec.nodes[1].device.name, "P4000");
+        assert_eq!(spec.nodes[1].id, 1); // ids re-assigned contiguously
+
+        let d = ec
+            .apply(&ClusterEvent::NodeJoin { device: cluster::devices::a100() })
+            .unwrap();
+        assert_eq!(d.added, 1);
+        assert_eq!(ec.spec().nodes[2].device.name, "A100");
+    }
+
+    #[test]
+    fn slowdown_is_absolute_and_recover_restores_nominal() {
+        let base = cluster::cluster_a();
+        let nominal = base.nodes[0].device.speed;
+        let mut ec = ElasticCluster::new(&base);
+        let d = ec.apply(&ClusterEvent::SlowDown { node: 0, factor: 0.5 }).unwrap();
+        assert_eq!(d.degraded, vec![0]);
+        assert!(!d.membership_changed());
+        assert!((ec.spec().nodes[0].device.speed - 0.5 * nominal).abs() < 1e-12);
+        // second slowdown replaces (not compounds)
+        ec.apply(&ClusterEvent::SlowDown { node: 0, factor: 0.8 }).unwrap();
+        assert!((ec.spec().nodes[0].device.speed - 0.8 * nominal).abs() < 1e-12);
+        // recover restores nominal exactly
+        let d = ec.apply(&ClusterEvent::Recover { node: 0 }).unwrap();
+        assert_eq!(d.degraded, vec![0]);
+        assert!((ec.spec().nodes[0].device.speed - nominal).abs() < 1e-12);
+        // recovering a healthy node is a no-op delta
+        let d = ec.apply(&ClusterEvent::Recover { node: 0 }).unwrap();
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn slowdown_survives_membership_change_of_other_nodes() {
+        let base = cluster::cluster_a();
+        let mut ec = ElasticCluster::new(&base);
+        ec.apply(&ClusterEvent::SlowDown { node: 2, factor: 0.5 }).unwrap();
+        ec.apply(&ClusterEvent::NodeLeave { node: 0 }).unwrap();
+        // the slowed node shifted from index 2 to 1 and kept its factor
+        assert!((ec.slow_factor(1) - 0.5).abs() < 1e-12);
+        let spec = ec.spec();
+        assert_eq!(spec.nodes[1].device.name, "P4000");
+        assert!(spec.nodes[1].device.speed < cluster::devices::p4000().speed);
+    }
+
+    #[test]
+    fn invalid_events_error_and_leave_cluster_unchanged() {
+        let base = cluster::cluster_a();
+        let mut ec = ElasticCluster::new(&base);
+        assert!(ec.apply(&ClusterEvent::NodeLeave { node: 9 }).is_err());
+        assert!(ec.apply(&ClusterEvent::SlowDown { node: 0, factor: 0.0 }).is_err());
+        assert_eq!(ec.n(), 3);
+        // can never empty the cluster
+        ec.apply(&ClusterEvent::NodeLeave { node: 0 }).unwrap();
+        ec.apply(&ClusterEvent::NodeLeave { node: 0 }).unwrap();
+        assert!(ec.apply(&ClusterEvent::NodeLeave { node: 0 }).is_err());
+        assert_eq!(ec.n(), 1);
+    }
+
+    #[test]
+    fn preempt_has_leave_semantics() {
+        let base = cluster::cluster_b();
+        let mut ec = ElasticCluster::new(&base);
+        let d = ec.apply(&ClusterEvent::Preempt { node: 15 }).unwrap();
+        assert_eq!(d.removed, vec![15]);
+        assert_eq!(ec.n(), 15);
+    }
+}

@@ -1,0 +1,37 @@
+//! Elastic cluster runtime: churn traces, straggler injection, and
+//! warm-started re-planning (the §6 "Adapt to schedulers" sketch grown
+//! into a subsystem; Poplar-style membership change + OmniLearn-style
+//! straggler drift).
+//!
+//! * [`events`] — the [`ClusterEvent`] timeline ([`ChurnTrace`]):
+//!   NodeJoin / NodeLeave / Preempt / SlowDown / Recover, deterministic
+//!   seeded preset generators (`spot` / `maintenance` / `straggler`) and
+//!   JSON load/save via `util::json`.
+//! * [`membership`] — [`ElasticCluster`], the mutable cluster view:
+//!   applies events one at a time and reports a [`MembershipDelta`] naming
+//!   exactly which per-node learned state is now stale.
+//! * [`scenario`] — the [`ElasticSystem`] trait (how a training system
+//!   reacts to a delta), [`run_scenario`] (a convergence run with the
+//!   trace applied at epoch boundaries, bit-identical under a fixed seed),
+//!   and the [`ColdRestartCannikin`] ablation.
+//!
+//! The warm-replan path itself lives on
+//! [`CannikinPlanner::replan`](crate::coordinator::CannikinPlanner::replan):
+//! survivors keep their learned compute models and γ observations, T_comm
+//! rescales analytically with the ring size, and the §4.5 OptPerf table
+//! re-seeds from the cached overlap states via
+//! [`optperf::solve_with_hint`](crate::optperf::solve_with_hint).
+
+pub mod events;
+pub mod membership;
+pub mod scenario;
+
+pub use events::{
+    maintenance_window, preset, spot_instance, straggler_drift, ChurnTrace, ClusterEvent,
+    EventCounts, TimedEvent,
+};
+pub use membership::{ElasticCluster, MembershipDelta};
+pub use scenario::{
+    apply_due_events, run_scenario, BoundaryOutcome, ColdRestartCannikin, ElasticSystem,
+    EpochRow, ScenarioConfig, ScenarioReport,
+};

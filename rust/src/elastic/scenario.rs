@@ -1,0 +1,426 @@
+//! Elastic scenario runner: drives a training system through a convergence
+//! run while a [`ChurnTrace`] mutates the cluster underneath it.
+//!
+//! Per epoch boundary: due events apply to the [`ElasticCluster`], the
+//! system is notified (so it can warm-replan or cold-restart), the timing
+//! simulator is rebuilt for the new node set, then the epoch proceeds as in
+//! [`crate::figures::run_system`] — plan, measure, observe, integrate
+//! convergence progress.  Everything is seeded: with the same seed the full
+//! run (epochs, batches, events, simulated times) is bit-identical.
+
+use crate::baselines::{AdaptDl, Ddp, Plan, System};
+use crate::cluster::ClusterSpec;
+use crate::coordinator::planner::{BatchPolicy, CannikinPlanner};
+use crate::elastic::events::ChurnTrace;
+use crate::elastic::membership::{ElasticCluster, MembershipDelta};
+use crate::figures::target_value;
+use crate::simulator::{convergence, ClusterSim, NodeBatchObs, Workload};
+
+/// A training system that can survive cluster membership changes.
+pub trait ElasticSystem: System {
+    /// Called at the epoch boundary right after `delta` was applied.
+    /// `spec` is the post-event cluster view and `caps` the per-node
+    /// memory caps (same node order).
+    fn on_cluster_change(&mut self, delta: &MembershipDelta, spec: &ClusterSpec, caps: &[u64]);
+
+    /// Eq. 8 bootstrap epochs issued so far (warm-vs-cold accounting);
+    /// systems without a bootstrap phase report 0.
+    fn bootstrap_epochs(&self) -> usize {
+        0
+    }
+}
+
+/// Cannikin with warm-started re-planning: survivors keep their learned
+/// models, the §4.5 table re-seeds from cached overlap states.
+impl ElasticSystem for CannikinPlanner {
+    fn on_cluster_change(&mut self, delta: &MembershipDelta, _spec: &ClusterSpec, caps: &[u64]) {
+        self.replan(delta, caps);
+    }
+
+    fn bootstrap_epochs(&self) -> usize {
+        self.bootstrap_epochs
+    }
+}
+
+/// Naive even-re-split elastic mode: on any change, throw the learned
+/// state away and re-learn from scratch over the new (even-split) view.
+impl ElasticSystem for AdaptDl {
+    fn on_cluster_change(&mut self, _delta: &MembershipDelta, spec: &ClusterSpec, _caps: &[u64]) {
+        self.reset_membership(spec.n());
+    }
+}
+
+/// Static DDP: fixed total batch, even re-split over whatever nodes remain.
+impl ElasticSystem for Ddp {
+    fn on_cluster_change(&mut self, _delta: &MembershipDelta, spec: &ClusterSpec, _caps: &[u64]) {
+        self.set_n_nodes(spec.n());
+    }
+}
+
+/// Ablation baseline for the warm-start claim: a Cannikin planner that
+/// **cold-restarts** (fresh learners, fresh table, Eq. 8 bootstrap from
+/// epoch 0) after every membership change or degradation.
+pub struct ColdRestartCannikin {
+    inner: CannikinPlanner,
+    b0: u64,
+    b_max: u64,
+    n_buckets: usize,
+    policy: BatchPolicy,
+    /// epochs since the last restart — what the inner planner is fed
+    rel_epoch: usize,
+    /// bootstrap epochs accumulated by earlier (discarded) inner planners
+    bootstrap_carry: usize,
+    /// solves accumulated by earlier (discarded) inner planners
+    solves_carry: usize,
+    pub restarts: usize,
+}
+
+impl ColdRestartCannikin {
+    pub fn new(n: usize, b0: u64, b_max: u64, n_buckets: usize, policy: BatchPolicy) -> Self {
+        ColdRestartCannikin {
+            inner: CannikinPlanner::new(n, b0, b_max, n_buckets, policy),
+            b0,
+            b_max,
+            n_buckets,
+            policy,
+            rel_epoch: 0,
+            bootstrap_carry: 0,
+            solves_carry: 0,
+            restarts: 0,
+        }
+    }
+
+    /// Initial per-node memory caps (restarts re-derive caps from the
+    /// post-event spec, exactly like the warm path).
+    pub fn with_caps(mut self, caps: Vec<u64>) -> Self {
+        self.inner = self.inner.with_caps(caps);
+        self
+    }
+
+    /// Cumulative across restarts (like `bootstrap_epochs`), so the
+    /// warm-vs-cold Table-5 comparison counts every discarded planner too.
+    pub fn total_solves(&self) -> usize {
+        self.solves_carry + self.inner.total_solves
+    }
+}
+
+impl System for ColdRestartCannikin {
+    fn name(&self) -> &'static str {
+        "cannikin-cold"
+    }
+
+    fn plan_epoch(&mut self, _epoch: usize, phi: f64) -> Plan {
+        let plan = self.inner.plan_epoch(self.rel_epoch, phi);
+        self.rel_epoch += 1;
+        plan
+    }
+
+    fn observe_epoch(&mut self, obs: &[NodeBatchObs], t_batch: f64) {
+        self.inner.observe_epoch(obs, t_batch);
+    }
+}
+
+impl ElasticSystem for ColdRestartCannikin {
+    fn on_cluster_change(&mut self, _delta: &MembershipDelta, spec: &ClusterSpec, caps: &[u64]) {
+        self.bootstrap_carry += self.inner.bootstrap_epochs;
+        self.solves_carry += self.inner.total_solves;
+        self.inner = CannikinPlanner::new(spec.n(), self.b0, self.b_max, self.n_buckets, self.policy)
+            .with_caps(caps.to_vec());
+        self.rel_epoch = 0;
+        self.restarts += 1;
+    }
+
+    fn bootstrap_epochs(&self) -> usize {
+        self.bootstrap_carry + self.inner.bootstrap_epochs
+    }
+}
+
+/// Outcome of applying one epoch boundary's due churn events (shared by
+/// [`run_scenario`] and the real-numerics leader, so event semantics and
+/// counting can never drift between the two paths).
+pub struct BoundaryOutcome {
+    /// events whose delta actually changed the cluster: (kind, node count
+    /// after the event)
+    pub changed: Vec<(&'static str, usize)>,
+    /// events accepted by the membership manager with no effect (e.g.
+    /// `Recover` on a healthy node)
+    pub noops: usize,
+    /// events the membership manager rejected (e.g. would empty the
+    /// cluster) — skipped, never fatal
+    pub skipped: usize,
+    /// rebuilt timing simulator (deterministic per-change reseed) when
+    /// anything changed
+    pub new_sim: Option<ClusterSim>,
+}
+
+impl BoundaryOutcome {
+    /// Events the membership manager accepted (effective or not).
+    pub fn applied(&self) -> usize {
+        self.changed.len() + self.noops
+    }
+}
+
+/// Apply every event of `trace` due at or before `epoch` (starting from
+/// `*next_event`, which advances), mutating `elastic` and notifying
+/// `system` with fresh caps after each effective event.  `reseeds` counts
+/// cluster changes across the run so each rebuild of the simulator gets a
+/// distinct deterministic seed.
+pub fn apply_due_events(
+    trace: &ChurnTrace,
+    next_event: &mut usize,
+    epoch: usize,
+    elastic: &mut ElasticCluster,
+    system: &mut dyn ElasticSystem,
+    w: &Workload,
+    seed: u64,
+    reseeds: &mut u64,
+) -> BoundaryOutcome {
+    let mut out =
+        BoundaryOutcome { changed: Vec::new(), noops: 0, skipped: 0, new_sim: None };
+    while *next_event < trace.events.len() && trace.events[*next_event].epoch <= epoch {
+        let te = &trace.events[*next_event];
+        *next_event += 1;
+        match elastic.apply(&te.event) {
+            Ok(delta) => {
+                if delta.is_empty() {
+                    out.noops += 1;
+                    continue;
+                }
+                let spec = elastic.spec();
+                let caps: Vec<u64> =
+                    spec.nodes.iter().map(|n| w.max_local_batch(n)).collect();
+                system.on_cluster_change(&delta, &spec, &caps);
+                *reseeds += 1;
+                out.new_sim = Some(ClusterSim::new(
+                    &spec,
+                    w,
+                    seed ^ reseeds.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                ));
+                out.changed.push((te.event.kind(), spec.n()));
+            }
+            Err(_) => out.skipped += 1,
+        }
+    }
+    out
+}
+
+/// Scenario knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ScenarioConfig {
+    pub max_epochs: usize,
+    pub seed: u64,
+    /// simulated batches averaged per epoch (as in `figures::run_system`)
+    pub reps: usize,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig { max_epochs: 4000, seed: 7, reps: 3 }
+    }
+}
+
+/// One epoch of an elastic run (the convergence stats + the elastic view).
+#[derive(Clone, Copy, Debug)]
+pub struct EpochRow {
+    pub epoch: usize,
+    pub n_nodes: usize,
+    pub total_batch: u64,
+    pub t_batch: f64,
+    pub wall_secs: f64,
+    pub progress: f64,
+    pub metric: f64,
+    /// events applied at this epoch's boundary
+    pub events: usize,
+}
+
+/// Full elastic-run result.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    pub system: String,
+    pub rows: Vec<EpochRow>,
+    pub time_to_target: Option<f64>,
+    pub events_applied: usize,
+    /// events rejected by the membership manager (e.g. would empty the
+    /// cluster) — skipped, never fatal
+    pub events_skipped: usize,
+    pub bootstrap_epochs: usize,
+    pub final_n: usize,
+}
+
+impl ScenarioReport {
+    pub fn reached(&self) -> bool {
+        self.time_to_target.is_some()
+    }
+}
+
+/// Run one system through `trace` on top of `base`, to the workload's
+/// target metric or `cfg.max_epochs`.  Deterministic in `cfg.seed`.
+pub fn run_scenario(
+    base: &ClusterSpec,
+    w: &Workload,
+    trace: &ChurnTrace,
+    system: &mut dyn ElasticSystem,
+    cfg: &ScenarioConfig,
+) -> ScenarioReport {
+    let mut elastic = ElasticCluster::new(base);
+    let mut sim = ClusterSim::new(&elastic.spec(), w, cfg.seed);
+    let mut ev_idx = 0usize;
+    let mut reseeds = 0u64;
+    let mut applied = 0usize;
+    let mut skipped = 0usize;
+    // (n_nodes, events applied) per epoch, filled by the policy closure
+    let mut side: Vec<(usize, usize)> = Vec::new();
+
+    let result = convergence::run(w, target_value(w), cfg.max_epochs, |epoch, phi| {
+        // ---- epoch boundary: apply every event that is now due
+        let out = apply_due_events(
+            trace,
+            &mut ev_idx,
+            epoch,
+            &mut elastic,
+            system,
+            w,
+            cfg.seed,
+            &mut reseeds,
+        );
+        let events_here = out.applied();
+        applied += events_here;
+        skipped += out.skipped;
+        if let Some(s) = out.new_sim {
+            sim = s;
+        }
+
+        // ---- plan / measure / observe, as in figures::run_system
+        let plan = system.plan_epoch(epoch, phi);
+        let mut t_mean = 0.0;
+        for _ in 0..cfg.reps.max(1) {
+            let out = sim.step(&plan.local_f64());
+            t_mean += out.t_batch;
+            system.observe_epoch(&out.per_node, out.t_batch);
+        }
+        let t = t_mean / cfg.reps.max(1) as f64;
+        side.push((elastic.n(), events_here));
+        // overhead is charged as 0 so the simulated clock — and therefore
+        // the whole run output — is bit-identical across invocations
+        // (planner wall-time is still accumulated planner-side)
+        (plan.total, t, 0.0)
+    });
+
+    let rows: Vec<EpochRow> = result
+        .epochs
+        .iter()
+        .zip(&side)
+        .map(|(e, &(n_nodes, events))| EpochRow {
+            epoch: e.epoch,
+            n_nodes,
+            total_batch: e.total_batch,
+            t_batch: e.t_batch,
+            wall_secs: e.wall_secs,
+            progress: e.progress,
+            metric: e.metric,
+            events,
+        })
+        .collect();
+
+    ScenarioReport {
+        system: system.name().to_string(),
+        rows,
+        time_to_target: result.time_to_target,
+        events_applied: applied,
+        events_skipped: skipped,
+        bootstrap_epochs: system.bootstrap_epochs(),
+        final_n: elastic.n(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster;
+    use crate::elastic::events::{spot_instance, ClusterEvent};
+    use crate::simulator::workload;
+
+    fn spot_setup() -> (ClusterSpec, Workload, ChurnTrace) {
+        let c = cluster::cluster_a();
+        let w = workload::cifar10();
+        let trace = spot_instance(&c, 400, 11);
+        (c, w, trace)
+    }
+
+    #[test]
+    fn scenario_is_bit_identical_across_runs() {
+        let (c, w, trace) = spot_setup();
+        let cfg = ScenarioConfig { max_epochs: 20000, seed: 5, reps: 3 };
+        let run = || {
+            let mut sys =
+                CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+            run_scenario(&c, &w, &trace, &mut sys, &cfg)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.rows.len(), b.rows.len());
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(x.total_batch, y.total_batch);
+            assert_eq!(x.n_nodes, y.n_nodes);
+            assert!(x.t_batch.to_bits() == y.t_batch.to_bits(), "epoch {}", x.epoch);
+            assert!(x.wall_secs.to_bits() == y.wall_secs.to_bits());
+        }
+        assert_eq!(a.time_to_target.map(f64::to_bits), b.time_to_target.map(f64::to_bits));
+        assert_eq!(a.events_applied, b.events_applied);
+    }
+
+    #[test]
+    fn membership_changes_show_up_in_rows() {
+        let (c, w, trace) = spot_setup();
+        let cfg = ScenarioConfig { max_epochs: 20000, seed: 5, reps: 3 };
+        let mut sys =
+            CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+        let r = run_scenario(&c, &w, &trace, &mut sys, &cfg);
+        assert!(r.events_applied >= 3, "{r:?}");
+        let n_seen: Vec<usize> = r.rows.iter().map(|row| row.n_nodes).collect();
+        assert!(n_seen.iter().any(|&n| n < c.n()), "a preemption must shrink the view");
+        assert_eq!(r.final_n, *n_seen.last().unwrap());
+        // the plan length always matched the view (run_scenario would have
+        // panicked in sim.step otherwise) and the run completed
+        assert!(r.reached(), "cannikin should still reach the target: {:?}", r.time_to_target);
+    }
+
+    #[test]
+    fn warm_replan_issues_fewer_bootstrap_epochs_than_cold_restart() {
+        let (c, w, trace) = spot_setup();
+        let cfg = ScenarioConfig { max_epochs: 20000, seed: 9, reps: 3 };
+        let mut warm =
+            CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+        let rw = run_scenario(&c, &w, &trace, &mut warm, &cfg);
+        let mut cold =
+            ColdRestartCannikin::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+        let rc = run_scenario(&c, &w, &trace, &mut cold, &cfg);
+        assert!(
+            rw.bootstrap_epochs < rc.bootstrap_epochs,
+            "warm {} vs cold {} bootstrap epochs",
+            rw.bootstrap_epochs,
+            rc.bootstrap_epochs
+        );
+        // and the warm planner is not meaningfully slower to the target
+        if let (Some(tw), Some(tc)) = (rw.time_to_target, rc.time_to_target) {
+            assert!(tw <= tc * 1.15, "warm {tw} vs cold {tc}");
+        }
+    }
+
+    #[test]
+    fn mid_training_leave_still_reaches_target() {
+        // the satellite e2e shape: a single NodeLeave mid-run
+        let c = cluster::cluster_a();
+        let w = workload::cifar10();
+        let mut trace = ChurnTrace::new("one-leave");
+        trace.push(12, ClusterEvent::NodeLeave { node: 2 });
+        let cfg = ScenarioConfig { max_epochs: 20000, seed: 3, reps: 3 };
+        let mut sys =
+            CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+        let r = run_scenario(&c, &w, &trace, &mut sys, &cfg);
+        assert_eq!(r.final_n, 2);
+        assert!(r.reached(), "loss/metric target must still be reached");
+        // after the leave every epoch plans for 2 nodes
+        assert!(r.rows.iter().skip(13).all(|row| row.n_nodes == 2));
+    }
+}

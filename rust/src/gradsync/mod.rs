@@ -16,6 +16,9 @@ pub struct Buckets {
 }
 
 impl Buckets {
+    /// `k` is clamped to `[1, max(len, 1)]`, so `k = 0`, `k > len` and
+    /// `len = 0` are all well-defined (a zero-length gradient gets one
+    /// empty bucket) — no input panics.
     pub fn new(len: usize, k: usize) -> Self {
         let k = k.max(1).min(len.max(1));
         let mut edges = Vec::with_capacity(k + 1);
@@ -37,13 +40,24 @@ impl Buckets {
 /// Eq. 9: `g = Σ rᵢ gᵢ` — weight each local gradient by its local batch
 /// ratio so every *sample* carries identical weight in the global
 /// gradient regardless of which (heterogeneously sized) batch held it.
+///
+/// Degenerate inputs are handled without panicking: an empty worker set or
+/// zero-length gradients yield a zeroed `out`.  Ratios are the Eq. 9
+/// `rᵢ = bᵢ/B`, so they must sum to 1 — debug builds assert it.
 pub fn aggregate_weighted(per_worker: &[&[f32]], ratios: &[f64], out: &mut [f32]) {
     assert_eq!(per_worker.len(), ratios.len());
-    assert!(!per_worker.is_empty());
+    out.fill(0.0);
+    if per_worker.is_empty() {
+        return;
+    }
+    debug_assert!(
+        (ratios.iter().sum::<f64>() - 1.0).abs() < 1e-6,
+        "Eq. 9 ratios must sum to 1, got {}",
+        ratios.iter().sum::<f64>()
+    );
     for g in per_worker {
         assert_eq!(g.len(), out.len());
     }
-    out.fill(0.0);
     for (g, &r) in per_worker.iter().zip(ratios) {
         let rf = r as f32;
         for (o, &x) in out.iter_mut().zip(g.iter()) {
@@ -173,6 +187,54 @@ mod tests {
         let b1 = Buckets::new(100, 1);
         assert_eq!(b1.n(), 1);
         assert_eq!(b1.range(0), 0..100);
+    }
+
+    #[test]
+    fn buckets_zero_length_and_zero_k() {
+        // len == 0: one empty bucket, every accessor total
+        let b = Buckets::new(0, 8);
+        assert_eq!(b.n(), 1);
+        assert_eq!(b.range(0), 0..0);
+        // k == 0 clamps to 1
+        let b = Buckets::new(10, 0);
+        assert_eq!(b.n(), 1);
+        assert_eq!(b.range(0), 0..10);
+        // k > len: no empty-slot panics, ranges still cover exactly
+        let b = Buckets::new(3, 100);
+        assert_eq!(b.n(), 3);
+        let total: usize = (0..b.n()).map(|j| b.range(j).len()).sum();
+        assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn weighted_aggregation_degenerate_inputs() {
+        // no workers: out is zeroed, no panic
+        let mut out = vec![7.0f32; 3];
+        aggregate_weighted(&[], &[], &mut out);
+        assert_eq!(out, vec![0.0, 0.0, 0.0]);
+        // zero-length gradients: nothing to do, no panic
+        let g0: Vec<f32> = vec![];
+        let g1: Vec<f32> = vec![];
+        let mut out: Vec<f32> = vec![];
+        aggregate_weighted(&[&g0, &g1], &[0.5, 0.5], &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "ratios must sum to 1")]
+    fn weighted_aggregation_rejects_bad_ratios_in_debug() {
+        let g = vec![1.0f32, 2.0];
+        let mut out = vec![0.0f32; 2];
+        aggregate_weighted(&[&g], &[0.4], &mut out);
+    }
+
+    #[test]
+    fn ring_all_reduce_zero_length_buffers() {
+        let mut bufs = vec![vec![], vec![], vec![]];
+        ring_all_reduce(&mut bufs);
+        assert!(bufs.iter().all(|b: &Vec<f32>| b.is_empty()));
+        assert_eq!(sq_norm(&[]), 0.0);
     }
 
     #[test]

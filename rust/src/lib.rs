@@ -16,6 +16,10 @@
 //! * **L2/L1 (python/, build-time only)** — the transformer LM and its
 //!   Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`, executed from
 //!   rust via [`runtime`] (PJRT CPU).
+//! * **L3+ elastic runtime** — the cluster is no longer a constant:
+//!   churn traces, the elastic membership manager, and warm-started
+//!   re-planning live in [`elastic`] (leader/simulator integration in
+//!   [`coordinator`] and [`elastic::scenario`]).
 //! * **Substrates** — everything the paper depends on that the offline
 //!   image does not provide: [`linalg`], [`util::json`], [`util::rng`],
 //!   [`util::stats`], [`benchkit`], the event-level cluster simulator
@@ -26,6 +30,7 @@ pub mod benchkit;
 pub mod cluster;
 pub mod coordinator;
 pub mod data;
+pub mod elastic;
 pub mod figures;
 pub mod gns;
 pub mod goodput;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   train     real-numerics end-to-end training over the AOT artifacts
 //!   sim       convergence simulation of one system on one workload
+//!   elastic   convergence simulation under a cluster churn trace
 //!   figures   regenerate the paper's tables & figures (results/*.csv)
 //!   predict   print the OptPerf allocation for a cluster + batch size
 //!   inspect   show an artifact directory's manifest
@@ -17,6 +18,7 @@ use anyhow::{anyhow, bail, Result};
 use cannikin::baselines::{AdaptDl, Ddp, LbBsp, System};
 use cannikin::cluster;
 use cannikin::coordinator::{train, BatchPolicy, CannikinPlanner, TrainConfig};
+use cannikin::elastic;
 use cannikin::figures;
 use cannikin::optperf;
 use cannikin::runtime::Manifest;
@@ -28,14 +30,18 @@ cannikin — heterogeneous-cluster adaptive-batch-size training (paper repro)
 USAGE:
   cannikin train   [--artifacts DIR] [--cluster a|b|c | --cluster-file F.json] [--workload W]
                    [--epochs N] [--steps N] [--lr F] [--fixed-batch B]
-                   [--corpus-kb N] [--seed N] [--log FILE]
+                   [--corpus-kb N] [--seed N] [--log FILE] [--trace T]
   cannikin sim     [--cluster a|b|c] [--workload W] [--system S] [--epochs N]
+  cannikin elastic [--cluster a|b|c] [--workload W] [--system ES] [--trace T]
+                   [--epochs N] [--seed N] [--save-trace FILE]
   cannikin figures [--fig 5|6|7|8|9|10|t5|pred|overlap|c|all]
   cannikin predict [--cluster a|b|c] [--workload W] --batch B
   cannikin inspect [--artifacts DIR]
 
 workloads: imagenet cifar10 librispeech squad movielens
-systems:   cannikin adaptdl lbbsp ddp";
+systems:   cannikin adaptdl lbbsp ddp
+elastic systems (ES): cannikin cannikin-cold even ddp
+traces (T): spot maintenance straggler, or a saved FILE.json";
 
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
     let mut out = HashMap::new();
@@ -78,6 +84,7 @@ fn run() -> Result<()> {
     match cmd.as_str() {
         "train" => cmd_train(&flags),
         "sim" => cmd_sim(&flags),
+        "elastic" => cmd_elastic(&flags),
         "figures" => cmd_figures(&flags),
         "predict" => cmd_predict(&flags),
         "inspect" => cmd_inspect(&flags),
@@ -102,6 +109,107 @@ fn workload_arg(flags: &HashMap<String, String>) -> Result<workload::Workload> {
     workload::by_name(name).ok_or_else(|| anyhow!("unknown workload {name:?}"))
 }
 
+/// `--trace` value: a preset name (seeded, generated for this cluster and
+/// horizon) or a path to a saved trace JSON.  Warns when the resolved
+/// trace has no event before `horizon` — the preset generators need room
+/// after the bootstrap epochs (first events land at epoch ≥ 6), so e.g.
+/// `train --trace spot` with the default 6 epochs would otherwise run
+/// silently non-elastic.
+fn trace_arg(
+    flags: &HashMap<String, String>,
+    c: &cluster::ClusterSpec,
+    horizon: usize,
+    seed: u64,
+) -> Result<Option<elastic::ChurnTrace>> {
+    let Some(spec) = flags.get("trace") else {
+        return Ok(None);
+    };
+    let trace = if spec.ends_with(".json") {
+        elastic::ChurnTrace::load(std::path::Path::new(spec))?
+    } else {
+        elastic::preset(spec, c, horizon, seed).ok_or_else(|| {
+            anyhow!("unknown trace {spec:?} (spot|maintenance|straggler|FILE.json)")
+        })?
+    };
+    if trace.events.iter().all(|e| e.epoch >= horizon) {
+        eprintln!(
+            "warning: trace {:?} has no event before epoch {horizon}; the run will not \
+             exercise the elastic path (raise --epochs or use a denser trace)",
+            trace.name
+        );
+    }
+    Ok(Some(trace))
+}
+
+fn cmd_elastic(flags: &HashMap<String, String>) -> Result<()> {
+    let c = cluster_arg(flags)?;
+    let w = workload_arg(flags)?;
+    let epochs: usize = get(flags, "epochs", "20000").parse()?;
+    let seed: u64 = get(flags, "seed", "7").parse()?;
+    let trace = trace_arg(flags, &c, epochs, seed)?
+        .unwrap_or_else(|| elastic::spot_instance(&c, epochs, seed));
+    if let Some(path) = flags.get("save-trace") {
+        trace.save(std::path::Path::new(path))?;
+        println!("trace saved to {path}");
+    }
+    let name = get(flags, "system", "cannikin").to_string();
+    let caps: Vec<u64> = c.nodes.iter().map(|n| w.max_local_batch(n)).collect();
+    let mut system: Box<dyn elastic::ElasticSystem> = match name.as_str() {
+        "cannikin" => Box::new(
+            CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive)
+                .with_caps(caps),
+        ),
+        "cannikin-cold" => Box::new(
+            elastic::ColdRestartCannikin::new(
+                c.n(),
+                w.b0,
+                w.b_max,
+                w.n_buckets,
+                BatchPolicy::Adaptive,
+            )
+            .with_caps(caps),
+        ),
+        "even" | "adaptdl" => Box::new(AdaptDl::new(c.n(), w.b0, w.b_max, w.n_buckets)),
+        "ddp" => Box::new(Ddp::with_total(c.n(), w.b0)),
+        other => bail!("unknown elastic system {other:?} (cannikin|cannikin-cold|even|ddp)"),
+    };
+    let counts = trace.counts();
+    println!(
+        "elastic scenario {:?} on {} / {}: {} events ({} departures, {} joins, {} slowdowns, {} recovers)",
+        trace.name,
+        c.name,
+        w.name,
+        trace.len(),
+        counts.departures(),
+        counts.joins,
+        counts.slowdowns,
+        counts.recovers
+    );
+    let cfg = elastic::ScenarioConfig { max_epochs: epochs, seed, reps: 3 };
+    let r = elastic::run_scenario(&c, &w, &trace, system.as_mut(), &cfg);
+    for row in r.rows.iter().step_by(usize::max(1, r.rows.len() / 25)) {
+        let flag = if row.events > 0 {
+            format!("  [{} event(s)]", row.events)
+        } else {
+            String::new()
+        };
+        println!(
+            "epoch {:>6}  n={:<2} B={:<6} t_batch={:.4}s  wall={:>10.1}s  {}={:.2}{}",
+            row.epoch, row.n_nodes, row.total_batch, row.t_batch, row.wall_secs, w.target,
+            row.metric, flag
+        );
+    }
+    println!(
+        "\n{}: applied {} events (skipped {}), final cluster size {}, bootstrap epochs {}",
+        r.system, r.events_applied, r.events_skipped, r.final_n, r.bootstrap_epochs
+    );
+    match r.time_to_target {
+        Some(t) => println!("{} reached {} in {t:.0} simulated seconds", r.system, w.target),
+        None => bail!("{name} did not reach {} within {epochs} epochs", w.target),
+    }
+    Ok(())
+}
+
 fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     let mut cfg = TrainConfig::quick(
         PathBuf::from(get(flags, "artifacts", "artifacts/tiny")),
@@ -120,6 +228,7 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(log) = flags.get("log") {
         cfg.log_path = Some(PathBuf::from(log));
     }
+    cfg.trace = trace_arg(flags, &cfg.cluster, cfg.epochs, cfg.seed)?;
     let report = train(&cfg)?;
     println!(
         "\ntrained {} epochs in {:.1}s real; final eval loss {:.4}",

@@ -79,6 +79,34 @@ fn is_compute_bottleneck(m: &ComputeModel, b: f64, gamma: f64, t_o: f64) -> bool
     (1.0 - gamma) * m.p(b) >= t_o
 }
 
+/// Assemble the App. A.3 boundary linear system: the first `c` nodes (in
+/// crossover `order`) are compute-classified (t_compute line), the rest
+/// comm-classified (syncStart line shifted by T_o).  Shared by Algorithm
+/// 1's boundary search and the §4.5 warm-start re-validation so the two
+/// paths can never drift.
+fn boundary_system(
+    model: &ClusterModel,
+    order: &[usize],
+    c: usize,
+    gamma: f64,
+    t_o: f64,
+) -> (Vec<f64>, Vec<f64>) {
+    let n = order.len();
+    let mut slopes = Vec::with_capacity(n);
+    let mut fixed = Vec::with_capacity(n);
+    for (pos, &i) in order.iter().enumerate() {
+        let m = &model.nodes[i];
+        if pos < c {
+            slopes.push(m.slope());
+            fixed.push(m.fixed());
+        } else {
+            slopes.push(m.sync_slope(gamma));
+            fixed.push(m.sync_fixed(gamma) + t_o);
+        }
+    }
+    (slopes, fixed)
+}
+
 /// The batch size at which node i crosses from comm- to compute-bottleneck
 /// as μ grows: solve t_compute(b) = syncStart(b) + T_o for the common μ.
 /// Nodes with a smaller crossover μ become compute-bottleneck first.
@@ -214,17 +242,7 @@ fn solve_interior(model: &ClusterModel, total_b: f64) -> Result<Allocation> {
     //   compute node: comp_slope·b + comp_fixed = μ
     //   comm node:    sync_slope·b + sync_fixed + T_o = μ     (App. A.3)
     let solve_boundary = |c: usize| -> (f64, Vec<f64>) {
-        let mut slopes = Vec::with_capacity(n);
-        let mut fixed = Vec::with_capacity(n);
-        for (pos, &i) in order.iter().enumerate() {
-            if pos < c {
-                slopes.push(comp_slopes[i]);
-                fixed.push(comp_fixed[i]);
-            } else {
-                slopes.push(sync_slopes[i]);
-                fixed.push(sync_fixed[i] + t_o);
-            }
-        }
+        let (slopes, fixed) = boundary_system(model, &order, c, gamma, t_o);
         solve_common_level(&slopes, &fixed, total_b)
     };
 
@@ -325,6 +343,140 @@ fn solve_interior(model: &ClusterModel, total_b: f64) -> Result<Allocation> {
         state: OverlapState::Mixed { n_compute: c },
         solves,
     })
+}
+
+// ---------------------------------------------------------------------------
+// §4.5 warm start: re-solve from a cached overlap state
+// ---------------------------------------------------------------------------
+
+/// Warm-started solve: try the cached [`OverlapState`] first.  When the
+/// hinted state still validates (the common case across consecutive epochs
+/// and across elastic re-planning — the overlap boundary moves slowly), the
+/// solve costs **one** linear-system solve instead of the full Algorithm-1
+/// search.  Falls back to [`solve`] when the hint no longer holds; a warm
+/// attempt that actually performed a solve is charged to `solves` so the
+/// Table-5 accounting stays honest (structurally inapplicable hints — e.g.
+/// a stale node count — cost nothing and are not charged).
+pub fn solve_with_hint(
+    model: &ClusterModel,
+    total_b: f64,
+    hint: Option<OverlapState>,
+) -> Result<Allocation> {
+    let Some(hint) = hint else {
+        return solve(model, total_b);
+    };
+    let (attempt, spent) = try_state(model, total_b, hint);
+    if let Some(a) = attempt {
+        return Ok(a);
+    }
+    let mut a = solve(model, total_b)?;
+    a.solves += spent;
+    Ok(a)
+}
+
+/// Solve assuming `state` and verify the KKT validity conditions.  Returns
+/// the allocation if the state is consistent, plus the number of
+/// linear-system solves actually performed (0 when the hint is
+/// structurally inapplicable and was rejected without solving).
+fn try_state(
+    model: &ClusterModel,
+    total_b: f64,
+    state: OverlapState,
+) -> (Option<Allocation>, usize) {
+    let n = model.n();
+    if n == 0 || total_b <= 0.0 {
+        return (None, 0);
+    }
+    let gamma = model.gamma;
+    let t_o = model.t_o();
+    let t_u = model.t_u();
+
+    match state {
+        OverlapState::AllCompute => {
+            let slopes: Vec<f64> = model.nodes.iter().map(|m| m.slope()).collect();
+            let fixed: Vec<f64> = model.nodes.iter().map(|m| m.fixed()).collect();
+            let (mu, b) = solve_common_level(&slopes, &fixed, total_b);
+            let ok = b
+                .iter()
+                .zip(&model.nodes)
+                .all(|(&bi, m)| bi >= 0.0 && is_compute_bottleneck(m, bi, gamma, t_o));
+            if ok {
+                (
+                    Some(Allocation {
+                        batch_sizes: b,
+                        t_pred: mu + t_u,
+                        state: OverlapState::AllCompute,
+                        solves: 1,
+                    }),
+                    1,
+                )
+            } else {
+                (None, 1)
+            }
+        }
+        OverlapState::AllComm => {
+            let slopes: Vec<f64> = model.nodes.iter().map(|m| m.sync_slope(gamma)).collect();
+            let fixed: Vec<f64> = model.nodes.iter().map(|m| m.sync_fixed(gamma)).collect();
+            let (mu, b) = solve_common_level(&slopes, &fixed, total_b);
+            let ok = b
+                .iter()
+                .zip(&model.nodes)
+                .all(|(&bi, m)| bi >= 0.0 && !is_compute_bottleneck(m, bi, gamma, t_o));
+            if ok {
+                (
+                    Some(Allocation {
+                        batch_sizes: b,
+                        t_pred: mu + model.t_comm,
+                        state: OverlapState::AllComm,
+                        solves: 1,
+                    }),
+                    1,
+                )
+            } else {
+                (None, 1)
+            }
+        }
+        OverlapState::Mixed { n_compute: c } => {
+            if c == 0 || c >= n {
+                return (None, 0);
+            }
+            // same crossover ranking + boundary system as solve_interior
+            let mut order: Vec<usize> = (0..n).collect();
+            let mu_star: Vec<f64> =
+                model.nodes.iter().map(|m| crossover_mu(m, gamma, t_o)).collect();
+            order.sort_by(|&a, &b| mu_star[a].partial_cmp(&mu_star[b]).unwrap());
+            let (slopes, fixed) = boundary_system(model, &order, c, gamma, t_o);
+            let (mu, b_sorted) = solve_common_level(&slopes, &fixed, total_b);
+            // validity: non-negative batches + each node's other constraint
+            for (pos, &i) in order.iter().enumerate() {
+                let bi = b_sorted[pos];
+                let m = &model.nodes[i];
+                if bi < 0.0 {
+                    return (None, 1);
+                }
+                if pos < c {
+                    if m.sync_start(bi, gamma) + t_o > mu + 1e-9 {
+                        return (None, 1);
+                    }
+                } else if m.t_compute(bi) > mu + 1e-9 {
+                    return (None, 1);
+                }
+            }
+            let mut b = vec![0.0; n];
+            for (pos, &i) in order.iter().enumerate() {
+                b[i] = b_sorted[pos];
+            }
+            (
+                Some(Allocation {
+                    batch_sizes: b,
+                    t_pred: mu + t_u,
+                    state: OverlapState::Mixed { n_compute: c },
+                    solves: 1,
+                }),
+                1,
+            )
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -597,6 +749,60 @@ mod tests {
         let b = integer_alloc(&[50.4, 30.3, 19.3], 100, &[40, 64, 64]);
         assert_eq!(b.iter().sum::<u64>(), 100);
         assert!(b[0] <= 40);
+    }
+
+    #[test]
+    fn warm_hint_matches_cold_solve_with_fewer_solves() {
+        let mut strictly_fewer = 0;
+        for t_comm in [1e-5, 0.03, 0.12, 0.5, 2.0] {
+            let model = hetero_model(t_comm);
+            for b in [12.0, 96.0, 300.0, 1000.0] {
+                let cold = solve(&model, b).unwrap();
+                let warm = solve_with_hint(&model, b, Some(cold.state)).unwrap();
+                assert_eq!(warm.state, cold.state, "t_comm={t_comm} B={b}");
+                assert!(
+                    (warm.t_pred - cold.t_pred).abs() / cold.t_pred < 1e-9,
+                    "t_comm={t_comm} B={b}: warm {} cold {}",
+                    warm.t_pred,
+                    cold.t_pred
+                );
+                for (x, y) in warm.batch_sizes.iter().zip(&cold.batch_sizes) {
+                    assert!((x - y).abs() < 1e-6 * b, "{x} vs {y}");
+                }
+                // at worst the rejected hint costs one extra solve (a
+                // pinned b=0 boundary rejects any interior hint); when the
+                // hint holds — the common case — the solve costs exactly 1
+                assert!(
+                    warm.solves <= cold.solves + 1,
+                    "warm {} vs cold {}",
+                    warm.solves,
+                    cold.solves
+                );
+                if warm.solves < cold.solves {
+                    assert_eq!(warm.solves, 1);
+                    strictly_fewer += 1;
+                }
+            }
+        }
+        // the cache must actually pay off somewhere in the sweep (e.g. the
+        // comm-dominant cases cost 2 cold, 1 warm; mixed cases cost more)
+        assert!(strictly_fewer >= 3, "only {strictly_fewer} warm wins");
+    }
+
+    #[test]
+    fn stale_hint_falls_back_to_full_search() {
+        // compute-dominant regime with an AllComm hint: must reject the
+        // hint and still find the true optimum
+        let model = hetero_model(1e-6);
+        let a = solve_with_hint(&model, 300.0, Some(OverlapState::AllComm)).unwrap();
+        let cold = solve(&model, 300.0).unwrap();
+        assert_eq!(a.state, cold.state);
+        assert!((a.t_pred - cold.t_pred).abs() < 1e-12);
+        // fallback charges the failed attempt
+        assert_eq!(a.solves, cold.solves + 1);
+        // no hint behaves exactly like solve()
+        let none = solve_with_hint(&model, 300.0, None).unwrap();
+        assert_eq!(none.solves, cold.solves);
     }
 
     #[test]

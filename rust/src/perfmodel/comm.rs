@@ -35,6 +35,12 @@ impl GammaEstimator {
         self.per_node.extend(std::iter::repeat(Moments::new()).take(k));
     }
 
+    /// Drop one node's observations in place (device degraded/recovered —
+    /// its γ measurement-noise profile changed, the slot stays).
+    pub fn reset_node(&mut self, node: usize) {
+        self.per_node[node] = Moments::new();
+    }
+
     pub fn n_obs(&self, node: usize) -> u64 {
         self.per_node[node].count()
     }
@@ -99,6 +105,15 @@ impl CommLearner {
 
     pub fn t_comm(&self) -> Option<f64> {
         self.t_min
+    }
+
+    /// Analytic rescale of the estimate (elastic membership change: ring
+    /// all-reduce time scales as 2(n−1)/n, so the learned minimum can be
+    /// carried across instead of re-learned from scratch).
+    pub fn rescale(&mut self, factor: f64) {
+        if let Some(t) = self.t_min {
+            self.t_min = Some(t * factor);
+        }
     }
 
     pub fn n_reports(&self) -> u64 {

@@ -1,0 +1,122 @@
+//! Cross-module elastic end-to-end tests: churn traces driving full
+//! convergence runs through the scenario runner, plus the comparative
+//! claims the elastic bench reports (cannikin-elastic vs naive even
+//! re-split vs static DDP; warm vs cold re-planning).
+
+use cannikin::baselines::{AdaptDl, Ddp};
+use cannikin::cluster;
+use cannikin::coordinator::{BatchPolicy, CannikinPlanner};
+use cannikin::elastic::{self, ChurnTrace, ColdRestartCannikin, ScenarioConfig};
+use cannikin::simulator::workload;
+
+fn cfg(seed: u64) -> ScenarioConfig {
+    ScenarioConfig { max_epochs: 20_000, seed, reps: 3 }
+}
+
+#[test]
+fn spot_churn_cannikin_beats_naive_even_resplit_and_static_ddp() {
+    let c = cluster::cluster_a();
+    let w = workload::cifar10();
+    let trace = elastic::spot_instance(&c, 20_000, 7);
+    let counts = trace.counts();
+    assert!(
+        counts.departures() >= 1 && counts.joins >= 1 && counts.slowdowns >= 1,
+        "{counts:?}"
+    );
+
+    let mut cank =
+        CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+    let r_cank = elastic::run_scenario(&c, &w, &trace, &mut cank, &cfg(7));
+    let mut even = AdaptDl::new(c.n(), w.b0, w.b_max, w.n_buckets);
+    let r_even = elastic::run_scenario(&c, &w, &trace, &mut even, &cfg(7));
+    let mut ddp = Ddp::with_total(c.n(), w.b0);
+    let r_ddp = elastic::run_scenario(&c, &w, &trace, &mut ddp, &cfg(7));
+
+    assert!(r_cank.events_applied >= 3, "{:?}", r_cank.events_applied);
+    let t_cank = r_cank.time_to_target.expect("cannikin must reach the target under churn");
+    // a baseline that never reaches the target is unboundedly worse
+    if let Some(t_even) = r_even.time_to_target {
+        assert!(t_cank < t_even, "cannikin {t_cank} vs naive-even {t_even}");
+    }
+    if let Some(t_ddp) = r_ddp.time_to_target {
+        assert!(t_cank < t_ddp, "cannikin {t_cank} vs static-ddp {t_ddp}");
+    }
+}
+
+#[test]
+fn warm_replan_strictly_fewer_bootstraps_than_cold_restart() {
+    let c = cluster::cluster_a();
+    let w = workload::cifar10();
+    let trace = elastic::spot_instance(&c, 20_000, 13);
+    let mut warm =
+        CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+    let r_warm = elastic::run_scenario(&c, &w, &trace, &mut warm, &cfg(13));
+    let mut cold =
+        ColdRestartCannikin::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+    let r_cold = elastic::run_scenario(&c, &w, &trace, &mut cold, &cfg(13));
+    assert!(
+        r_warm.bootstrap_epochs < r_cold.bootstrap_epochs,
+        "warm {} must be strictly below cold {}",
+        r_warm.bootstrap_epochs,
+        r_cold.bootstrap_epochs
+    );
+}
+
+#[test]
+fn saved_trace_reproduces_the_run_bit_identically() {
+    let c = cluster::cluster_a();
+    let w = workload::cifar10();
+    let trace = elastic::spot_instance(&c, 4000, 3);
+    let path = std::env::temp_dir()
+        .join(format!("cannikin-e2e-trace-{}.json", std::process::id()));
+    trace.save(&path).unwrap();
+    let loaded = ChurnTrace::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(trace, loaded, "JSON round-trip must be lossless");
+
+    let run = |t: &ChurnTrace| {
+        let mut sys =
+            CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+        elastic::run_scenario(&c, &w, t, &mut sys, &cfg(3))
+    };
+    let a = run(&trace);
+    let b = run(&loaded);
+    assert_eq!(a.rows.len(), b.rows.len());
+    assert_eq!(
+        a.time_to_target.map(f64::to_bits),
+        b.time_to_target.map(f64::to_bits)
+    );
+    for (x, y) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(x.total_batch, y.total_batch);
+        assert_eq!(x.n_nodes, y.n_nodes);
+        assert_eq!(x.t_batch.to_bits(), y.t_batch.to_bits());
+    }
+}
+
+#[test]
+fn maintenance_window_shrinks_then_restores_membership() {
+    let c = cluster::cluster_b();
+    let w = workload::cifar10();
+    let trace = elastic::maintenance_window(&c, 2000, 5);
+    let mut sys =
+        CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+    let r = elastic::run_scenario(&c, &w, &trace, &mut sys, &cfg(5));
+    let min_n = r.rows.iter().map(|x| x.n_nodes).min().unwrap();
+    assert_eq!(min_n, 12, "16-node cluster loses 4 during the window");
+    assert_eq!(r.final_n, 16, "membership restored after the window");
+    // the planner survived both transitions without re-bootstrapping
+    assert!(r.bootstrap_epochs <= 3, "{}", r.bootstrap_epochs);
+}
+
+#[test]
+fn straggler_drift_reaches_target_with_degraded_nodes() {
+    let c = cluster::cluster_a();
+    let w = workload::cifar10();
+    let trace = elastic::straggler_drift(&c, 20_000, 9);
+    assert!(trace.counts().slowdowns >= 3);
+    let mut sys =
+        CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+    let r = elastic::run_scenario(&c, &w, &trace, &mut sys, &cfg(9));
+    assert_eq!(r.final_n, 3, "drift never changes membership");
+    assert!(r.reached(), "target must be reached despite stragglers");
+}

@@ -1,0 +1,253 @@
+//! Host-side stand-in for the `xla` (PJRT) crate.
+//!
+//! The offline image does not ship the XLA/PJRT native bindings, so this
+//! crate reproduces exactly the API surface `cannikin::runtime` uses.  The
+//! split is deliberate:
+//!
+//! * **Literals are real.**  `Literal` is a plain host tensor (f32/i32 data
+//!   + dims), so every host-side path — `scalar`, `vec1`, `reshape`,
+//!   `to_vec`, `array_shape`, and the literal round-trip helpers built on
+//!   them — behaves like the real crate and stays fully tested.
+//! * **Execution is absent.**  `PjRtClient::cpu()` returns an error, so
+//!   anything that would compile or run HLO fails fast with a clear
+//!   message instead of silently fabricating numerics.  The AOT artifacts
+//!   work end-to-end only in an image with the real `xla` crate; the
+//!   runtime tests already skip themselves when `artifacts/` is absent.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error type; rendered with `{:?}` by callers.
+pub struct Error(String);
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const NO_BACKEND: &str =
+    "PJRT backend not available: this build uses the in-tree xla stub (host literals only); \
+     build against the real xla crate to execute AOT artifacts";
+
+/// A host tensor (or tuple of tensors).  Mirrors the real crate's shape
+/// behaviour for the element types cannikin uses (f32, i32).
+#[derive(Debug)]
+pub enum Literal {
+    F32 { data: Vec<f32>, dims: Vec<i64> },
+    I32 { data: Vec<i32>, dims: Vec<i64> },
+    Tuple(Vec<Literal>),
+}
+
+/// Element types the stub supports.
+pub trait NativeType: Copy {
+    fn scalar_literal(self) -> Literal;
+    fn vec1_literal(data: &[Self]) -> Literal;
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn scalar_literal(self) -> Literal {
+        Literal::F32 { data: vec![self], dims: Vec::new() }
+    }
+    fn vec1_literal(data: &[f32]) -> Literal {
+        Literal::F32 { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+    fn extract(lit: &Literal) -> Result<Vec<f32>> {
+        match lit {
+            Literal::F32 { data, .. } => Ok(data.clone()),
+            other => Err(Error::new(format!("literal is not f32: {other:?}"))),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn scalar_literal(self) -> Literal {
+        Literal::I32 { data: vec![self], dims: Vec::new() }
+    }
+    fn vec1_literal(data: &[i32]) -> Literal {
+        Literal::I32 { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+    fn extract(lit: &Literal) -> Result<Vec<i32>> {
+        match lit {
+            Literal::I32 { data, .. } => Ok(data.clone()),
+            other => Err(Error::new(format!("literal is not i32: {other:?}"))),
+        }
+    }
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        v.scalar_literal()
+    }
+
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::vec1_literal(data)
+    }
+
+    fn numel(&self) -> usize {
+        match self {
+            Literal::F32 { data, .. } => data.len(),
+            Literal::I32 { data, .. } => data.len(),
+            Literal::Tuple(items) => items.iter().map(|l| l.numel()).sum(),
+        }
+    }
+
+    /// New literal with the same data and the given dims (numel must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 {
+            return Err(Error::new(format!("negative dim in {dims:?}")));
+        }
+        if want as usize != self.numel() {
+            return Err(Error::new(format!(
+                "reshape {:?} wants {want} elements, literal has {}",
+                dims,
+                self.numel()
+            )));
+        }
+        match self {
+            Literal::F32 { data, .. } => {
+                Ok(Literal::F32 { data: data.clone(), dims: dims.to_vec() })
+            }
+            Literal::I32 { data, .. } => {
+                Ok(Literal::I32 { data: data.clone(), dims: dims.to_vec() })
+            }
+            Literal::Tuple(_) => Err(Error::new("cannot reshape a tuple literal")),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(items) => Ok(items),
+            other => Err(Error::new(format!("literal is not a tuple: {other:?}"))),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::F32 { dims, .. } | Literal::I32 { dims, .. } => {
+                Ok(ArrayShape { dims: dims.clone() })
+            }
+            Literal::Tuple(_) => Err(Error::new("tuple literal has no array shape")),
+        }
+    }
+}
+
+/// Array shape (dims only — that is all cannikin reads).
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::new(format!("cannot parse HLO {path:?}: {NO_BACKEND}")))
+    }
+}
+
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client — always unavailable in the stub.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::new(NO_BACKEND))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(NO_BACKEND))
+    }
+}
+
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(NO_BACKEND))
+    }
+}
+
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::new(NO_BACKEND))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let lit = Literal::vec1(&data).reshape(&[2, 3]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert_eq!(lit.array_shape().unwrap().dims(), &[2, 3]);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let data = vec![5i32, 6, 7, 8];
+        let lit = Literal::vec1(&data).reshape(&[4, 1]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn scalar_has_rank_zero() {
+        let lit = Literal::scalar(1.5f32);
+        assert!(lit.array_shape().unwrap().dims().is_empty());
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.5]);
+    }
+
+    #[test]
+    fn reshape_checks_numel() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn backend_is_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
