@@ -15,7 +15,7 @@ fn main() {
     // paper Table 2's 3-GPU heterogeneous cluster + the CIFAR-10 profile
     let c = cluster::cluster_a();
     let w = workload::cifar10();
-    let cfg = ScenarioConfig { max_epochs: 20_000, seed: 7, reps: 3 };
+    let cfg = ScenarioConfig { max_epochs: 20_000, seed: 7, ..Default::default() };
 
     // a seeded spot-instance churn trace: throttle → preempt → capacity back
     let trace = elastic::spot_instance(&c, cfg.max_epochs, cfg.seed);

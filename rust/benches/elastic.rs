@@ -8,13 +8,13 @@ use cannikin::baselines::{AdaptDl, Ddp};
 use cannikin::benchkit::{report, Bencher, Table};
 use cannikin::cluster;
 use cannikin::coordinator::{BatchPolicy, CannikinPlanner};
-use cannikin::elastic::{self, ElasticSystem, ScenarioConfig, ScenarioReport};
+use cannikin::elastic::{self, DetectionMode, ElasticSystem, ScenarioConfig, ScenarioReport};
 use cannikin::simulator::workload;
 
 fn main() {
     let c = cluster::cluster_a();
     let w = workload::cifar10();
-    let cfg = ScenarioConfig { max_epochs: 20_000, seed: 7, reps: 3 };
+    let cfg = ScenarioConfig { max_epochs: 20_000, seed: 7, ..Default::default() };
     let trace = elastic::spot_instance(&c, cfg.max_epochs, cfg.seed);
     let counts = trace.counts();
     println!(
@@ -78,6 +78,41 @@ fn main() {
         println!("cannikin-elastic vs static DDP: {tw:.0}s vs {td:.0}s");
     }
 
+    // ---- straggler detection: oracle replay vs observation-driven
+    // (hidden events + StragglerDetector) vs fully hidden (ablation floor)
+    let s_trace = elastic::straggler_drift(&c, cfg.max_epochs, cfg.seed);
+    let mut dtbl = Table::new(&[
+        "detection mode",
+        "epochs-to-target",
+        "time-to-target (sim s)",
+        "slowdowns (false)",
+        "mean lat (epochs)",
+        "missed",
+    ]);
+    for mode in [DetectionMode::Oracle, DetectionMode::Observed, DetectionMode::Off] {
+        let mut sys =
+            CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+        let cfg2 = ScenarioConfig { detect: mode, ..cfg };
+        let r = elastic::run_scenario(&c, &w, &s_trace, &mut sys, &cfg2);
+        let (slow, lat, missed) = match &r.detection {
+            Some(d) => (
+                format!("{} ({})", d.emitted_slowdowns, d.false_slowdowns),
+                d.mean_latency().map(|l| format!("{l:.1}")).unwrap_or_else(|| "-".into()),
+                d.missed.to_string(),
+            ),
+            None => ("-".to_string(), "-".to_string(), "-".to_string()),
+        };
+        dtbl.row(vec![
+            mode.name().to_string(),
+            r.epochs_to_target().map(|e| e.to_string()).unwrap_or_else(|| "-".into()),
+            r.time_to_target.map(|t| format!("{t:.0}")).unwrap_or_else(|| "-".into()),
+            slow,
+            lat,
+            missed,
+        ]);
+    }
+    dtbl.print("Straggler drift: oracle vs observation-driven detection (cifar10, cluster A)");
+
     // wall time of the scenario runner itself (the churn overhead is the
     // quantity a production scheduler would pay per event)
     let b = Bencher::new(1, 5);
@@ -85,6 +120,14 @@ fn main() {
         let mut sys =
             CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
         elastic::run_scenario(&c, &w, &trace, &mut sys, &cfg)
+    });
+    report(&r);
+
+    let r = b.run("elastic/run_scenario/cannikin/straggler-observed/20k-epochs", || {
+        let mut sys =
+            CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+        let cfg2 = ScenarioConfig { detect: DetectionMode::Observed, ..cfg };
+        elastic::run_scenario(&c, &w, &s_trace, &mut sys, &cfg2)
     });
     report(&r);
 }

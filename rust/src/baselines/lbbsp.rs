@@ -7,6 +7,7 @@
 //! whenever communication matters (paper Fig. 10).
 
 use super::{even_split, Plan, System};
+use crate::elastic::MembershipDelta;
 use crate::simulator::NodeBatchObs;
 use crate::util::round_preserving_sum;
 
@@ -42,6 +43,45 @@ impl LbBsp {
             .collect();
         self.current = round_preserving_sum(&scaled, total);
         self.total = total;
+    }
+
+    /// Elastic *membership* hook: keep the fixed total, drop departed
+    /// nodes' shares (redistributed proportionally), start newcomers at
+    /// the mean share.  Only call this for deltas that changed the node
+    /// set — degradation must not reach it (clearing `last_obs` would
+    /// disable the throughput-proportional rebalance, which is both
+    /// LB-BSP's adaptation loop and its only straggler "detection"; that
+    /// measurement-reactive contrast with Cannikin's model re-learning is
+    /// exactly what the detection experiments measure).
+    pub fn apply_membership(&mut self, delta: &MembershipDelta, n_nodes: usize) {
+        let mut removed = delta.removed.clone();
+        removed.sort_unstable_by(|a, b| b.cmp(a));
+        for i in removed {
+            if i < self.current.len() {
+                self.current.remove(i);
+            }
+        }
+        for _ in 0..delta.added {
+            let mean = if self.current.is_empty() {
+                self.total / n_nodes.max(1) as u64
+            } else {
+                self.current.iter().sum::<u64>() / self.current.len() as u64
+            };
+            self.current.push(mean.max(1));
+        }
+        self.n_nodes = n_nodes;
+        debug_assert_eq!(self.current.len(), n_nodes);
+        // stale: measurement indices no longer line up with the view
+        self.last_obs = None;
+        // renormalize the shares to the fixed total
+        let cur: Vec<f64> = self.current.iter().map(|&b| b as f64).collect();
+        let s: f64 = cur.iter().sum();
+        if s > 0.0 {
+            let scaled: Vec<f64> = cur.iter().map(|x| x / s * self.total as f64).collect();
+            self.current = round_preserving_sum(&scaled, self.total);
+        } else {
+            self.current = even_split(self.total, n_nodes);
+        }
     }
 }
 
@@ -127,5 +167,31 @@ mod tests {
         sys.set_total(200);
         assert_eq!(sys.current.iter().sum::<u64>(), 200);
         assert_eq!(sys.current, vec![80, 60, 40, 20]);
+    }
+
+    #[test]
+    fn membership_change_keeps_total_and_redistributes() {
+        let mut sys = LbBsp::new(4, 100, 5);
+        sys.current = vec![40, 30, 20, 10];
+        // node 1 departs: its share redistributes proportionally
+        let delta = MembershipDelta { removed: vec![1], added: 0, degraded: vec![] };
+        sys.apply_membership(&delta, 3);
+        assert_eq!(sys.current.len(), 3);
+        assert_eq!(sys.current.iter().sum::<u64>(), 100);
+        assert!(sys.current[0] > sys.current[2], "{:?}", sys.current);
+        // a newcomer starts at the mean share, total still fixed
+        let delta = MembershipDelta { removed: vec![], added: 1, degraded: vec![] };
+        sys.apply_membership(&delta, 4);
+        assert_eq!(sys.current.len(), 4);
+        assert_eq!(sys.current.iter().sum::<u64>(), 100);
+        assert!(*sys.current.last().unwrap() >= 1);
+        // renormalization is idempotent: re-applying an empty membership
+        // change leaves the split untouched (degrade-only deltas never
+        // even reach this method — the ElasticSystem impl filters them so
+        // the throughput measurements survive)
+        let delta = MembershipDelta { removed: vec![], added: 0, degraded: vec![0] };
+        let before = sys.current.clone();
+        sys.apply_membership(&delta, 4);
+        assert_eq!(sys.current, before);
     }
 }

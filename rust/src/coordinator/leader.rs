@@ -22,7 +22,7 @@ use crate::cluster::ClusterSpec;
 use crate::coordinator::dataloader::HeteroDataLoader;
 use crate::coordinator::planner::{BatchPolicy, CannikinPlanner};
 use crate::data::{synth_corpus, Sampler};
-use crate::elastic::{apply_due_events, ChurnTrace, ElasticCluster};
+use crate::elastic::{ChurnTrace, DetectionMode, DetectionStats, DetectorConfig, ElasticDriver};
 use crate::gns::{estimate_round, GnsTracker};
 use crate::gradsync::{ring_all_reduce, sq_norm, Buckets};
 use crate::metrics::JsonlLog;
@@ -46,6 +46,10 @@ pub struct TrainConfig {
     /// leader re-splits data, re-weights the Eq. 9 ratios, and warm-replans
     /// after every applied event
     pub trace: Option<ChurnTrace>,
+    /// how the trace's SlowDown/Recover events reach the planner: replayed
+    /// (`Oracle`), recovered from the simulated-clock timings by the
+    /// straggler detector (`Observed`), or concealed (`Off`)
+    pub detect: DetectionMode,
     /// JSONL step/epoch log (optional)
     pub log_path: Option<PathBuf>,
     /// print per-epoch lines
@@ -65,6 +69,7 @@ impl TrainConfig {
             corpus_bytes: 64 * 1024,
             policy: BatchPolicy::Adaptive,
             trace: None,
+            detect: DetectionMode::Oracle,
             log_path: None,
             verbose: false,
         }
@@ -96,6 +101,8 @@ pub struct TrainReport {
     /// per-step training losses, in order (the loss curve)
     pub loss_curve: Vec<f32>,
     pub real_secs: f64,
+    /// straggler-detection accounting (Some iff `detect` was `Observed`)
+    pub detection: Option<DetectionStats>,
 }
 
 /// Run the full training loop.
@@ -137,9 +144,18 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     )
     .with_caps(caps);
     let mut sim = ClusterSim::new(&cfg.cluster, &cfg.workload, cfg.seed);
-    let mut elastic = ElasticCluster::new(&cfg.cluster);
-    let mut ev_idx = 0usize;
-    let mut sim_reseeds = 0u64;
+    // event + detection plumbing, shared with the scenario runner so the
+    // two paths can never drift (an empty trace makes it a no-op)
+    let empty_trace = ChurnTrace::new("none");
+    let trace = cfg.trace.as_ref().unwrap_or(&empty_trace);
+    let mut driver = ElasticDriver::new(
+        &cfg.cluster,
+        &cfg.workload,
+        trace,
+        cfg.detect,
+        DetectorConfig::default(),
+        cfg.seed,
+    );
     let mut gns = GnsTracker::new(0.9);
     let log = match &cfg.log_path {
         Some(p) => Some(JsonlLog::create(p)?),
@@ -152,28 +168,21 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
 
     for epoch in 0..cfg.epochs {
         // ---- elastic: the leader rescales at the epoch boundary — apply
-        // due churn events via the shared helper (same semantics and
+        // due churn events via the shared driver (same semantics and
         // counting as the scenario runner), warm-replan, and rebuild the
         // simulated clock for the new node set (data re-splits and Eq. 9
         // ratios re-weight below simply because the plan's worker count
-        // changed)
-        if let Some(trace) = &cfg.trace {
-            let out = apply_due_events(
-                trace,
-                &mut ev_idx,
-                epoch,
-                &mut elastic,
-                &mut planner,
-                &cfg.workload,
-                cfg.seed,
-                &mut sim_reseeds,
-            );
+        // changed).  Hidden degradation events mutate the simulated clock
+        // but not the planner; the detector recovers them below.
+        {
+            let out = driver.boundary(epoch, &mut planner);
             if let Some(s) = out.new_sim {
                 sim = s;
             }
             if cfg.verbose {
-                for (kind, n_after) in &out.changed {
-                    println!("elastic: {kind} at epoch {epoch} -> {n_after} workers");
+                for (kind, n_after, hidden) in &out.changed {
+                    let vis = if *hidden { " [hidden]" } else { "" };
+                    println!("elastic: {kind} at epoch {epoch} -> {n_after} workers{vis}");
                 }
                 if out.skipped > 0 {
                     println!("elastic: skipped {} invalid event(s) at epoch {epoch}", out.skipped);
@@ -273,9 +282,12 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             momenta = m2;
 
             // ---- advance the simulated cluster clock & feed the learners
+            // (and the straggler detector, which sees only what a real
+            // instrumentation agent would: the per-node timings)
             let local_f: Vec<f64> = plan.local.iter().map(|&b| b as f64).collect();
             let simout = sim.step(&local_f);
             planner.observe_epoch(&simout.per_node, simout.t_batch);
+            driver.observe(&simout.per_node);
             epoch_sim_t += simout.t_batch;
 
             loss_curve.push(step_loss as f32);
@@ -290,6 +302,14 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                     ("gsq_global", Json::Num(gsq_global)),
                 ]))?;
             }
+        }
+
+        // ---- observation-driven detection closes the epoch: synthesized
+        // SlowDown/Recover events warm-replan the planner exactly like
+        // oracle ones would
+        let detected = driver.end_epoch(epoch, &mut planner);
+        if cfg.verbose && detected > 0 {
+            println!("elastic: detector flagged {detected} event(s) at epoch {epoch}");
         }
 
         // ---- end-of-epoch evaluation (largest bucket, deterministic set)
@@ -336,7 +356,12 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         epochs.push(report);
     }
 
-    Ok(TrainReport { epochs, loss_curve, real_secs: t_start.elapsed().as_secs_f64() })
+    Ok(TrainReport {
+        epochs,
+        loss_curve,
+        real_secs: t_start.elapsed().as_secs_f64(),
+        detection: driver.finish(),
+    })
 }
 
 #[cfg(test)]

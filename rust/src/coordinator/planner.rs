@@ -197,13 +197,18 @@ impl CannikinPlanner {
     ///
     /// Unlike a cold restart, this (1) keeps every surviving node's learned
     /// `ComputeLearner` / `GammaEstimator` state, so no Eq. 8 bootstrap
-    /// epochs are re-issued for them, and (2) carries the §4.5 OptPerf
+    /// epochs are re-issued for them, (2) carries the §4.5 OptPerf
     /// table's overlap states over as warm-start hints for the rebuild, so
-    /// most candidates re-solve in one linear-system solve.  `new_caps` are
-    /// the per-node memory caps for the *post-event* cluster view (same
-    /// node order as the membership manager's spec).
+    /// most candidates re-solve in one linear-system solve, and (3) lets a
+    /// `NodeJoin` that raises the cluster's total memory capacity grow
+    /// `b_max` — and with it the `goodput::candidates` grid — past the
+    /// value frozen at job start, so the extra capacity is exploitable
+    /// (ROADMAP item).  `new_caps` are the per-node memory caps for the
+    /// *post-event* cluster view (same node order as the membership
+    /// manager's spec).
     pub fn replan(&mut self, delta: &MembershipDelta, new_caps: &[u64]) {
         let n_old = self.n_nodes;
+        let old_cap = Self::cap_sum(&self.caps);
         // stash the stale table as warm hints before surgery clears it
         if let Some(table) = self.optperf_init.take() {
             self.warm_hints = table.into_iter().map(|(b, _, s)| (b, s)).collect();
@@ -236,10 +241,43 @@ impl CannikinPlanner {
         }
         assert_eq!(new_caps.len(), self.n_nodes, "caps must match the new view");
         self.caps = new_caps.to_vec();
+        // grow the candidate grid when a join raised the capacity ceiling:
+        // a capacity-limited b_max lifts straight to the new capacity, a
+        // statistically-chosen one scales with it (and never shrinks — the
+        // goodput argmax simply ignores candidates it doesn't want)
+        if delta.added > 0 {
+            if let (Some(old), Some(new)) = (old_cap, Self::cap_sum(new_caps)) {
+                if new > old && old > 0 {
+                    let grown = if self.b_max >= old {
+                        new
+                    } else {
+                        ((self.b_max as f64) * (new as f64 / old as f64)) as u64
+                    };
+                    self.b_max = self.b_max.max(grown.min(new));
+                }
+            }
+        }
+    }
+
+    /// Total memory capacity, None when any node is uncapped.
+    fn cap_sum(caps: &[u64]) -> Option<u64> {
+        caps.iter().try_fold(0u64, |acc, &c| {
+            if c == u64::MAX {
+                None
+            } else {
+                acc.checked_add(c)
+            }
+        })
     }
 
     pub fn n_nodes(&self) -> usize {
         self.n_nodes
+    }
+
+    /// Current upper end of the candidate total-batch grid (grows when
+    /// joins raise the cluster's capacity; see [`Self::replan`]).
+    pub fn b_max(&self) -> u64 {
+        self.b_max
     }
 }
 
@@ -588,6 +626,56 @@ mod elastic_tests {
         let boots = sys.bootstrap_epochs;
         let _ = sys.plan_epoch(6, phi);
         assert_eq!(sys.bootstrap_epochs, boots);
+    }
+
+    /// ROADMAP regression: a NodeJoin that raises the sum of per-node caps
+    /// must grow the candidate grid past the b_max frozen at job start,
+    /// and the planner must actually exploit the new headroom.
+    #[test]
+    fn node_join_past_old_b_max_is_exploited() {
+        let c = cluster::cluster_a();
+        let w = workload::cifar10();
+        let caps: Vec<u64> = c.nodes.iter().map(|n| w.max_local_batch(n)).collect();
+        let cap0: u64 = caps.iter().sum();
+        // capacity-limited job: b_max == the cluster's total capacity
+        let mut sys = CannikinPlanner::new(c.n(), w.b0, cap0, w.n_buckets, BatchPolicy::Adaptive)
+            .with_caps(caps);
+        let mut sim = ClusterSim::new(&c, &w, 51);
+        for e in 0..6 {
+            let plan = sys.plan_epoch(e, w.phi0);
+            let out = sim.step(&plan.local_f64());
+            sys.observe_epoch(&out.per_node, out.t_batch);
+        }
+        // at huge noise scale the goodput argmax saturates at b_max, which
+        // the caps can exactly hold
+        let plan = sys.plan_epoch(6, 1e12);
+        assert_eq!(plan.total, cap0, "pre-join the grid is capacity-limited");
+
+        // an A100 joins: caps (and the exploitable grid) grow
+        let c2 = c.with_nodes(vec![cluster::devices::a100()]);
+        let caps2: Vec<u64> = c2.nodes.iter().map(|n| w.max_local_batch(n)).collect();
+        let cap2: u64 = caps2.iter().sum();
+        assert!(cap2 > cap0);
+        let delta = MembershipDelta { removed: vec![], added: 1, degraded: vec![] };
+        sys.replan(&delta, &caps2);
+        assert_eq!(sys.b_max(), cap2, "capacity-limited b_max lifts to the new capacity");
+
+        let mut sim2 = ClusterSim::new(&c2, &w, 52);
+        for e in 7..10 {
+            let plan = sys.plan_epoch(e, w.phi0);
+            assert_eq!(plan.local.len(), 4);
+            let out = sim2.step(&plan.local_f64());
+            sys.observe_epoch(&out.per_node, out.t_batch);
+        }
+        let plan = sys.plan_epoch(10, 1e12);
+        assert!(
+            plan.total > cap0,
+            "a join past the old b_max must be exploited: total {} vs old cap {cap0}",
+            plan.total
+        );
+        for (b, cap) in plan.local.iter().zip(&caps2) {
+            assert!(b <= cap);
+        }
     }
 
     /// §6: removing a node keeps the remaining models; adding one recovers

@@ -1,0 +1,615 @@
+//! Observation-driven straggler detection: infer `SlowDown` / `Recover`
+//! events from the per-node, per-epoch compute timings the simulator (and
+//! the real leader loop) already produce, instead of trusting the churn
+//! trace to announce them (OmniLearn-style; see ROADMAP "straggler
+//! detection from timing observations").
+//!
+//! Per node the detector keeps a sliding window of per-epoch robust
+//! observations (the **median** over the epoch's batches of the local
+//! batch size and of the total compute time `a + P`).  From the window it
+//! maintains:
+//!
+//! * a **healthy reference line** `t ≈ slope·b + fixed` — least-squares
+//!   over window entries at least [`DetectorConfig::guard`] epochs old, so
+//!   an onsetting slowdown cannot contaminate the reference before it is
+//!   confirmed (`guard` must exceed `k_confirm`).  Fitting against a line
+//!   makes the drift signal invariant to the planner moving the node's
+//!   batch size around (the compute model is affine in `b`, Eq. 3);
+//! * a **residual-ratio baseline**: `ratio = t_obs / t_pred`, with a
+//!   median center and a MAD-derived robust spread (`util::stats`),
+//!   updated only on calm epochs so confirmed noise never widens the gate.
+//!
+//! An epoch *strikes* when the ratio drifts above
+//! `max(threshold, z_gate·spread)` relative to the center;
+//! [`DetectorConfig::k_confirm`] consecutive strikes emit a synthesized
+//! [`ClusterEvent::SlowDown`] whose factor estimates the speed loss
+//! (`center/ratio`).  The node is then *flagged*: the reference freezes at
+//! its healthy fit, deeper (or partial-recovery) drift re-emits a
+//! corrected `SlowDown` at most once per [`DetectorConfig::reemit_gap`]
+//! epochs, and [`DetectorConfig::k_recover`] consecutive epochs back
+//! within [`DetectorConfig::recover_margin`] of the healthy baseline emit
+//! a [`ClusterEvent::Recover`] — the margin sits well below the detection
+//! threshold, so the flag/recover pair has hysteresis and transient noise
+//! cannot thrash the planner.
+//!
+//! The detector is pure bookkeeping — no RNG, no clock — so a run that
+//! embeds it stays bit-identical under a fixed seed.
+
+use std::collections::VecDeque;
+
+use crate::elastic::events::ClusterEvent;
+use crate::elastic::membership::MembershipDelta;
+use crate::linalg::fit_line;
+use crate::simulator::NodeBatchObs;
+use crate::util::stats::{mad, median};
+
+/// How a run treats the trace's `SlowDown` / `Recover` events.  Membership
+/// events (join / leave / preempt) are always visible to the system:
+/// membership is observable in practice, silent degradation is not.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DetectionMode {
+    /// replay degradation events straight to the system (PR 1 behavior)
+    Oracle,
+    /// hide degradation events from the system; a [`StragglerDetector`]
+    /// must recover them from timing observations
+    Observed,
+    /// hide degradation events and run no detector (ablation lower bound)
+    Off,
+}
+
+impl DetectionMode {
+    pub fn by_name(name: &str) -> Option<DetectionMode> {
+        match name {
+            "oracle" => Some(DetectionMode::Oracle),
+            "observed" => Some(DetectionMode::Observed),
+            "off" => Some(DetectionMode::Off),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DetectionMode::Oracle => "oracle",
+            DetectionMode::Observed => "observed",
+            DetectionMode::Off => "off",
+        }
+    }
+}
+
+/// Detection knobs (defaults tuned for the simulator's device noise: the
+/// smallest injected drift, factor 0.85 ≈ +17.6% compute time, clears the
+/// default gate by >4 robust sigmas per epoch).
+#[derive(Clone, Copy, Debug)]
+pub struct DetectorConfig {
+    /// sliding window of per-epoch observations kept per node
+    pub window: usize,
+    /// newest epochs excluded from the healthy reference fit; must be
+    /// larger than `k_confirm` so an unconfirmed onset never leaks into
+    /// the reference
+    pub guard: usize,
+    /// guard-aged window entries required before detection arms
+    pub min_epochs: usize,
+    /// minimum relative compute-time drift that counts as a strike
+    pub threshold: f64,
+    /// robust z-score (MAD-based) the drift must also clear
+    pub z_gate: f64,
+    /// consecutive strike epochs before a `SlowDown` is emitted
+    pub k_confirm: usize,
+    /// drift at or below this counts toward recovery (hysteresis: keep it
+    /// well under `threshold`)
+    pub recover_margin: f64,
+    /// consecutive calm epochs before a `Recover` is emitted
+    pub k_recover: usize,
+    /// emitted-factor change that warrants a corrected `SlowDown`
+    pub redetect_delta: f64,
+    /// minimum epochs between two emissions for the same node
+    pub reemit_gap: usize,
+}
+
+impl Default for DetectorConfig {
+    fn default() -> Self {
+        DetectorConfig {
+            window: 24,
+            guard: 4,
+            min_epochs: 4,
+            threshold: 0.10,
+            z_gate: 6.0,
+            k_confirm: 3,
+            recover_margin: 0.05,
+            k_recover: 3,
+            redetect_delta: 0.07,
+            reemit_gap: 10,
+        }
+    }
+}
+
+/// Detection quality accounting for one run (reported alongside the
+/// scenario results; ground truth comes from the elastic cluster view).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DetectionStats {
+    pub emitted_slowdowns: usize,
+    pub emitted_recovers: usize,
+    /// synthesized `SlowDown`s for nodes that were actually healthy
+    pub false_slowdowns: usize,
+    /// synthesized `Recover`s for nodes that were actually still slowed
+    pub false_recovers: usize,
+    /// epochs from each hidden healthy→slowed transition to its detection
+    pub latencies: Vec<usize>,
+    /// hidden slowdowns never detected (node recovered, departed, or the
+    /// run ended first)
+    pub missed: usize,
+}
+
+impl DetectionStats {
+    pub fn mean_latency(&self) -> Option<f64> {
+        if self.latencies.is_empty() {
+            None
+        } else {
+            Some(self.latencies.iter().sum::<usize>() as f64 / self.latencies.len() as f64)
+        }
+    }
+
+    pub fn max_latency(&self) -> Option<usize> {
+        self.latencies.iter().copied().max()
+    }
+
+    /// No false alarms of either kind.
+    pub fn clean(&self) -> bool {
+        self.false_slowdowns == 0 && self.false_recovers == 0
+    }
+}
+
+/// variance floor for the residual-ratio spread (relative units)
+const SPREAD_FLOOR: f64 = 0.004;
+
+/// minimum relative batch-size diversity required to (re)fit the healthy
+/// reference line: a fit over near-constant `b` has an unidentifiable
+/// slope, and extrapolating it after the planner moves the node's batch
+/// would read as spurious drift.  With too little diversity the previous
+/// reference (always fit from diverse data — the Eq. 8 bootstrap epochs
+/// guarantee an initial spread) is kept and simply interpolated.
+const B_SPREAD_MIN: f64 = 0.10;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Status {
+    Healthy,
+    Flagged { factor: f64 },
+}
+
+enum Verdict {
+    Slow { factor: f64 },
+    Recovered,
+}
+
+#[derive(Clone, Debug)]
+struct NodeState {
+    /// per-epoch robust observations (epoch, median b, median a+P),
+    /// newest last; only pushed while healthy
+    hist: VecDeque<(usize, f64, f64)>,
+    /// healthy residual ratios backing the median/MAD baseline
+    ratios: VecDeque<f64>,
+    /// healthy reference line (slope, fixed); refit while healthy (guard-
+    /// lagged), frozen while flagged, retained across recovery
+    reference: Option<(f64, f64)>,
+    status: Status,
+    strikes: usize,
+    calm: usize,
+    deepen: usize,
+    /// ratios of the current strike/deepen streak (factor estimation)
+    streak: Vec<f64>,
+    last_emit: Option<usize>,
+    /// scratch: this epoch's per-batch samples
+    batch_b: Vec<f64>,
+    batch_t: Vec<f64>,
+}
+
+impl NodeState {
+    fn new() -> Self {
+        NodeState {
+            hist: VecDeque::new(),
+            ratios: VecDeque::new(),
+            reference: None,
+            status: Status::Healthy,
+            strikes: 0,
+            calm: 0,
+            deepen: 0,
+            streak: Vec::new(),
+            last_emit: None,
+            batch_b: Vec::new(),
+            batch_t: Vec::new(),
+        }
+    }
+
+    fn refit(&self, epoch: usize, cfg: &DetectorConfig) -> Option<(f64, f64)> {
+        let pts: Vec<(f64, f64)> = self
+            .hist
+            .iter()
+            .filter(|&&(e, _, _)| e + cfg.guard <= epoch)
+            .map(|&(_, b, t)| (b, t))
+            .collect();
+        if pts.len() < cfg.min_epochs {
+            return None;
+        }
+        let bs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+        let lo = bs.iter().cloned().fold(f64::MAX, f64::min);
+        let hi = bs.iter().cloned().fold(f64::MIN, f64::max);
+        if hi - lo < B_SPREAD_MIN * median(&bs).max(1.0) {
+            return None; // slope unidentifiable: keep the last diverse fit
+        }
+        let (slope, fixed) = fit_line(&pts).ok()?;
+        // physical sanity, as in ComputeLearner: times can't shrink with b
+        Some((slope.max(0.0), fixed.max(0.0)))
+    }
+
+    fn baseline(&self, cfg: &DetectorConfig) -> (f64, f64) {
+        if self.ratios.len() >= cfg.min_epochs {
+            let v: Vec<f64> = self.ratios.iter().copied().collect();
+            (median(&v).max(1e-9), (1.4826 * mad(&v)).max(SPREAD_FLOOR))
+        } else {
+            (1.0, SPREAD_FLOOR)
+        }
+    }
+
+    fn to_healthy(&mut self) {
+        // the frozen reference described the nominal profile, which the
+        // node just returned to — keep it; rebuild the windows fresh so
+        // slowed-era entries can never contaminate the next fit
+        self.status = Status::Healthy;
+        self.hist.clear();
+        self.ratios.clear();
+        self.strikes = 0;
+        self.calm = 0;
+        self.deepen = 0;
+        self.streak.clear();
+    }
+
+    fn end_epoch(&mut self, epoch: usize, cfg: &DetectorConfig) -> Option<Verdict> {
+        if self.batch_b.is_empty() {
+            return None; // node idle this epoch: nothing to judge
+        }
+        let b = median(&self.batch_b);
+        let t = median(&self.batch_t);
+        self.batch_b.clear();
+        self.batch_t.clear();
+
+        if self.status == Status::Healthy {
+            self.hist.push_back((epoch, b, t));
+            if self.hist.len() > cfg.window {
+                self.hist.pop_front();
+            }
+            if let Some(fit) = self.refit(epoch, cfg) {
+                self.reference = Some(fit);
+            }
+        }
+        let (slope, fixed) = self.reference?;
+        let pred = slope * b + fixed;
+        if pred <= 0.0 {
+            return None;
+        }
+        let ratio = t / pred;
+        let (center, spread) = self.baseline(cfg);
+        let drift = ratio / center - 1.0;
+
+        match self.status {
+            Status::Healthy => {
+                let gate = cfg.threshold.max(cfg.z_gate * spread);
+                if drift > gate {
+                    self.strikes += 1;
+                    self.streak.push(ratio);
+                    if self.strikes >= cfg.k_confirm {
+                        let factor = (center / median(&self.streak)).clamp(0.05, 0.95);
+                        self.status = Status::Flagged { factor };
+                        self.strikes = 0;
+                        self.streak.clear();
+                        self.calm = 0;
+                        self.last_emit = Some(epoch);
+                        return Some(Verdict::Slow { factor });
+                    }
+                } else {
+                    self.strikes = 0;
+                    self.streak.clear();
+                    self.ratios.push_back(ratio);
+                    if self.ratios.len() > cfg.window {
+                        self.ratios.pop_front();
+                    }
+                }
+                None
+            }
+            Status::Flagged { factor } => {
+                if drift <= cfg.recover_margin {
+                    self.calm += 1;
+                    self.deepen = 0;
+                    self.streak.clear();
+                    if self.calm >= cfg.k_recover {
+                        self.to_healthy();
+                        self.last_emit = Some(epoch);
+                        return Some(Verdict::Recovered);
+                    }
+                    return None;
+                }
+                self.calm = 0;
+                let factor_now = (center / ratio).clamp(0.05, 0.95);
+                if (factor_now - factor).abs() > cfg.redetect_delta {
+                    self.deepen += 1;
+                    self.streak.push(ratio);
+                    let gap_ok = self
+                        .last_emit
+                        .map_or(true, |e| epoch.saturating_sub(e) >= cfg.reemit_gap);
+                    if self.deepen >= cfg.k_confirm && gap_ok {
+                        let f = (center / median(&self.streak)).clamp(0.05, 0.95);
+                        self.status = Status::Flagged { factor: f };
+                        self.deepen = 0;
+                        self.streak.clear();
+                        self.last_emit = Some(epoch);
+                        return Some(Verdict::Slow { factor: f });
+                    }
+                } else {
+                    self.deepen = 0;
+                    self.streak.clear();
+                }
+                None
+            }
+        }
+    }
+}
+
+/// The detector: one [`NodeState`] per node of the current cluster view
+/// (same index space as the membership manager / planner / simulator).
+pub struct StragglerDetector {
+    cfg: DetectorConfig,
+    nodes: Vec<NodeState>,
+}
+
+impl StragglerDetector {
+    pub fn new(n_nodes: usize, cfg: DetectorConfig) -> Self {
+        assert!(
+            cfg.guard > cfg.k_confirm,
+            "guard ({}) must exceed k_confirm ({}): an unconfirmed onset must \
+             never enter the healthy reference fit",
+            cfg.guard,
+            cfg.k_confirm
+        );
+        assert!(cfg.k_confirm >= 1 && cfg.k_recover >= 1 && cfg.window >= cfg.min_epochs);
+        StragglerDetector { cfg, nodes: (0..n_nodes).map(|_| NodeState::new()).collect() }
+    }
+
+    pub fn n(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Feed one simulated/measured batch worth of per-node observations
+    /// (call once per batch; `obs` must match the current node view).
+    pub fn observe(&mut self, obs: &[NodeBatchObs]) {
+        assert_eq!(obs.len(), self.nodes.len(), "observation width must match the node view");
+        for (st, o) in self.nodes.iter_mut().zip(obs) {
+            if o.b > 0.0 && o.a_time + o.p_time > 0.0 {
+                st.batch_b.push(o.b);
+                st.batch_t.push(o.a_time + o.p_time);
+            }
+        }
+    }
+
+    /// Close the epoch: fold the scratch batches into per-epoch robust
+    /// stats and return any synthesized events (node indices refer to the
+    /// current view, like every [`ClusterEvent`]).
+    pub fn end_epoch(&mut self, epoch: usize) -> Vec<ClusterEvent> {
+        let cfg = self.cfg;
+        let mut out = Vec::new();
+        for (i, st) in self.nodes.iter_mut().enumerate() {
+            match st.end_epoch(epoch, &cfg) {
+                Some(Verdict::Slow { factor }) => {
+                    out.push(ClusterEvent::SlowDown { node: i, factor })
+                }
+                Some(Verdict::Recovered) => out.push(ClusterEvent::Recover { node: i }),
+                None => {}
+            }
+        }
+        out
+    }
+
+    /// Keep per-node state aligned with a membership change: removals
+    /// close the gap (their state is discarded), joins append fresh state.
+    pub fn sync_membership(&mut self, delta: &MembershipDelta) {
+        delta.resync_view(&mut self.nodes, NodeState::new);
+    }
+
+    pub fn is_flagged(&self, node: usize) -> bool {
+        matches!(self.nodes[node].status, Status::Flagged { .. })
+    }
+
+    /// The factor last emitted for a flagged node.
+    pub fn flagged_factor(&self, node: usize) -> Option<f64> {
+        match self.nodes[node].status {
+            Status::Flagged { factor } => Some(factor),
+            Status::Healthy => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::ComputeModel;
+    use crate::util::rng::Rng;
+
+    fn models3() -> Vec<ComputeModel> {
+        vec![
+            ComputeModel::new(0.2e-3, 1e-3, 1.2e-3, 2e-3),
+            ComputeModel::new(1.2e-3, 4.5e-3, 1.4e-3, 9e-3),
+            ComputeModel::new(1.4e-3, 12.5e-3, 4.2e-3, 25e-3),
+        ]
+    }
+
+    /// Simulate one epoch of noisy observations: node i runs batch `bs[i]`
+    /// at speed `slow[i] ×` nominal (1.0 = healthy).
+    fn feed_epoch(
+        det: &mut StragglerDetector,
+        epoch: usize,
+        models: &[ComputeModel],
+        bs: &[f64],
+        slow: &[f64],
+        rng: &mut Rng,
+    ) -> Vec<ClusterEvent> {
+        for _rep in 0..3 {
+            let obs: Vec<NodeBatchObs> = models
+                .iter()
+                .zip(bs)
+                .zip(slow)
+                .map(|((m, &b), &f)| NodeBatchObs {
+                    b,
+                    a_time: m.a(b) / f * rng.noise(0.012),
+                    p_time: m.p(b) / f * rng.noise(0.012),
+                    gamma_obs: 0.2,
+                    t_comm_obs: 0.1,
+                    finish: 0.0,
+                })
+                .collect();
+            det.observe(&obs);
+        }
+        det.end_epoch(epoch)
+    }
+
+    /// Batch sizes that wander per epoch (so the reference fit always has
+    /// batch diversity, like a real adaptive run).
+    fn batches(epoch: usize) -> Vec<f64> {
+        let wob = [0.85, 1.0, 1.2, 0.95, 1.1][epoch % 5];
+        vec![120.0 * wob, 80.0 * wob, 40.0 * wob]
+    }
+
+    #[test]
+    fn healthy_cluster_never_flags() {
+        let mut det = StragglerDetector::new(3, DetectorConfig::default());
+        let mut rng = Rng::new(7);
+        let m = models3();
+        for e in 0..300 {
+            let ev = feed_epoch(&mut det, e, &m, &batches(e), &[1.0, 1.0, 1.0], &mut rng);
+            assert!(ev.is_empty(), "false event(s) at epoch {e}: {ev:?}");
+        }
+    }
+
+    #[test]
+    fn abrupt_batch_shift_does_not_false_flag() {
+        // the affine reference makes detection invariant to the planner
+        // halving / doubling a node's allocation
+        let mut det = StragglerDetector::new(3, DetectorConfig::default());
+        let mut rng = Rng::new(9);
+        let m = models3();
+        for e in 0..200 {
+            let mut bs = batches(e);
+            if e >= 100 {
+                bs[0] *= 0.4;
+                bs[2] *= 2.5;
+            }
+            let ev = feed_epoch(&mut det, e, &m, &bs, &[1.0, 1.0, 1.0], &mut rng);
+            assert!(ev.is_empty(), "false event(s) at epoch {e}: {ev:?}");
+        }
+    }
+
+    #[test]
+    fn long_constant_batch_then_jump_does_not_false_flag() {
+        // the planner often pins allocations for long stretches: the
+        // reference must refuse to refit on diversity-free data (slope
+        // unidentifiable) and keep the last diverse fit, so the eventual
+        // batch-size jump reads as clean extrapolation, not drift
+        let mut det = StragglerDetector::new(3, DetectorConfig::default());
+        let mut rng = Rng::new(23);
+        let m = models3();
+        for e in 0..160 {
+            let scale = match e {
+                0 => 0.5,
+                1 => 0.75,
+                2 => 1.25,
+                3 => 0.9,
+                4 => 1.1,
+                _ if e < 100 => 1.0,   // long constant-b stretch
+                _ => 1.5,              // abrupt jump
+            };
+            let bs: Vec<f64> = [120.0, 80.0, 40.0].iter().map(|b| b * scale).collect();
+            let ev = feed_epoch(&mut det, e, &m, &bs, &[1.0, 1.0, 1.0], &mut rng);
+            assert!(ev.is_empty(), "false event(s) at epoch {e}: {ev:?}");
+        }
+    }
+
+    #[test]
+    fn detects_slowdown_with_bounded_latency_then_recovers() {
+        let mut det = StragglerDetector::new(3, DetectorConfig::default());
+        let mut rng = Rng::new(11);
+        let m = models3();
+        let mut slow_at = None;
+        let mut recover_at = None;
+        for e in 0..160 {
+            let f = if (50..120).contains(&e) { 0.7 } else { 1.0 };
+            let ev = feed_epoch(&mut det, e, &m, &batches(e), &[1.0, f, 1.0], &mut rng);
+            for ev in ev {
+                match ev {
+                    ClusterEvent::SlowDown { node, factor } => {
+                        assert_eq!(node, 1, "only the victim may be flagged");
+                        assert!((0.55..0.85).contains(&factor), "factor {factor}");
+                        assert!(slow_at.is_none(), "exactly one SlowDown expected");
+                        slow_at = Some(e);
+                    }
+                    ClusterEvent::Recover { node } => {
+                        assert_eq!(node, 1);
+                        assert!(recover_at.is_none());
+                        recover_at = Some(e);
+                    }
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+        }
+        let slow_at = slow_at.expect("slowdown must be detected");
+        assert!((50..=58).contains(&slow_at), "detection epoch {slow_at}");
+        let recover_at = recover_at.expect("recovery must be detected");
+        assert!((120..=130).contains(&recover_at), "recovery epoch {recover_at}");
+        assert!(!det.is_flagged(1));
+    }
+
+    #[test]
+    fn deepening_drift_reemits_with_corrected_factor() {
+        let mut det = StragglerDetector::new(3, DetectorConfig::default());
+        let mut rng = Rng::new(13);
+        let m = models3();
+        let mut factors = Vec::new();
+        for e in 0..100 {
+            let f = if e >= 60 {
+                0.55
+            } else if e >= 40 {
+                0.85
+            } else {
+                1.0
+            };
+            for ev in feed_epoch(&mut det, e, &m, &batches(e), &[f, 1.0, 1.0], &mut rng) {
+                if let ClusterEvent::SlowDown { node, factor } = ev {
+                    assert_eq!(node, 0);
+                    factors.push(factor);
+                }
+            }
+        }
+        assert!(factors.len() >= 2, "deepening must re-emit: {factors:?}");
+        assert!(
+            factors.last().unwrap() < &(factors[0] - 0.05),
+            "corrected factor must deepen: {factors:?}"
+        );
+        assert!((det.flagged_factor(0).unwrap() - 0.55).abs() < 0.12);
+    }
+
+    #[test]
+    fn membership_sync_shifts_flags_with_the_view() {
+        let mut det = StragglerDetector::new(3, DetectorConfig::default());
+        let mut rng = Rng::new(17);
+        let m = models3();
+        for e in 0..60 {
+            let f = if e >= 40 { 0.6 } else { 1.0 };
+            let _ = feed_epoch(&mut det, e, &m, &batches(e), &[1.0, 1.0, f], &mut rng);
+        }
+        assert!(det.is_flagged(2));
+        let delta = MembershipDelta { removed: vec![0], added: 0, degraded: vec![] };
+        det.sync_membership(&delta);
+        assert_eq!(det.n(), 2);
+        assert!(det.is_flagged(1), "flag must follow the node to its new index");
+        let delta = MembershipDelta { removed: vec![], added: 2, degraded: vec![] };
+        det.sync_membership(&delta);
+        assert_eq!(det.n(), 4);
+        assert!(!det.is_flagged(2) && !det.is_flagged(3));
+    }
+}

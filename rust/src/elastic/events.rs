@@ -24,8 +24,11 @@ use crate::util::rng::Rng;
 /// One cluster-runtime event.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ClusterEvent {
-    /// a new worker joins (scheduler grant / spot capacity back)
-    NodeJoin { device: DeviceProfile },
+    /// a new worker joins (scheduler grant / spot capacity back).  `uid`
+    /// optionally pins a stable worker identity (e.g. a spot instance
+    /// returning under its old name); the membership manager rejects a
+    /// join whose uid is already present, and auto-assigns one when `None`
+    NodeJoin { device: DeviceProfile, uid: Option<u64> },
     /// graceful leave (scheduler reclaim announced at an epoch boundary)
     NodeLeave { node: usize },
     /// abrupt spot preemption — same membership effect as `NodeLeave`,
@@ -128,8 +131,11 @@ impl ChurnTrace {
                     ("kind", Json::Str(te.event.kind().to_string())),
                 ];
                 match &te.event {
-                    ClusterEvent::NodeJoin { device } => {
+                    ClusterEvent::NodeJoin { device, uid } => {
                         pairs.push(("device", device_to_json(device)));
+                        if let Some(u) = uid {
+                            pairs.push(("uid", Json::Num(*u as f64)));
+                        }
                     }
                     ClusterEvent::NodeLeave { node } | ClusterEvent::Preempt { node } => {
                         pairs.push(("node", Json::Num(*node as f64)));
@@ -159,7 +165,10 @@ impl ChurnTrace {
             let kind = e.req("kind")?.as_str()?;
             let node = || -> Result<usize> { e.req("node")?.as_usize() };
             let event = match kind {
-                "join" => ClusterEvent::NodeJoin { device: device_from_json(e.req("device")?)? },
+                "join" => ClusterEvent::NodeJoin {
+                    device: device_from_json(e.req("device")?)?,
+                    uid: e.get("uid").map(|u| u.as_u64()).transpose()?,
+                },
                 "leave" => ClusterEvent::NodeLeave { node: node()? },
                 "preempt" => ClusterEvent::Preempt { node: node()? },
                 "slowdown" => {
@@ -250,7 +259,7 @@ pub fn spot_instance(cluster: &ClusterSpec, horizon: usize, seed: u64) -> ChurnT
         trace.push(t + 2, ClusterEvent::Preempt { node: victim });
         let dev = devs.remove(victim);
         let gap = 3 + rng.below(6) as usize;
-        trace.push(t + 2 + gap, ClusterEvent::NodeJoin { device: dev.clone() });
+        trace.push(t + 2 + gap, ClusterEvent::NodeJoin { device: dev.clone(), uid: None });
         devs.push(dev);
         t += 20 + rng.below(30) as usize;
     }
@@ -279,7 +288,7 @@ pub fn maintenance_window(cluster: &ClusterSpec, horizon: usize, seed: u64) -> C
     let survivor = rng.below((n - k) as u64) as usize;
     trace.push(start + 1, ClusterEvent::SlowDown { node: survivor, factor: 0.75 });
     for p in profs {
-        trace.push(start + dur, ClusterEvent::NodeJoin { device: p });
+        trace.push(start + dur, ClusterEvent::NodeJoin { device: p, uid: None });
     }
     trace.push(start + dur, ClusterEvent::Recover { node: survivor });
     trace
@@ -366,6 +375,16 @@ mod tests {
             let back = ChurnTrace::from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
             assert_eq!(t, back, "{name} roundtrip");
         }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_explicit_uid() {
+        let mut t = ChurnTrace::new("uid");
+        t.push(3, ClusterEvent::NodeJoin { device: crate::cluster::devices::a100(), uid: Some(42) });
+        t.push(5, ClusterEvent::NodeJoin { device: crate::cluster::devices::v100(), uid: None });
+        let back = ChurnTrace::from_json(&Json::parse(&t.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(t, back);
     }
 
     #[test]

@@ -6,9 +6,15 @@
 //! * node order is stable: removals close the gap, joins append — the view
 //!   index i always lines up with the planner's learner i and the
 //!   simulator's node i;
+//! * every node carries a stable worker uid (assigned at construction and
+//!   on join); a `NodeJoin` naming a uid already present is rejected;
 //! * a `SlowDown` factor is absolute w.r.t. the node's **nominal** profile
-//!   (two successive SlowDowns don't compound); `Recover` restores nominal;
+//!   (two successive SlowDowns don't compound); `Recover` restores nominal
+//!   and is rejected for a node that is not slowed (a scheduler replaying
+//!   a stale recover must not silently "succeed");
 //! * the last node can never be removed (the event errors instead).
+//!
+//! Every rejected event leaves the cluster view untouched.
 
 use anyhow::{bail, Result};
 
@@ -36,6 +42,24 @@ impl MembershipDelta {
     pub fn membership_changed(&self) -> bool {
         !self.removed.is_empty() || self.added > 0
     }
+
+    /// Apply this delta's membership change to a per-node side vector so
+    /// it stays index-aligned with the cluster view: removals close the
+    /// gap (descending index order), joins append `fill()`-initialized
+    /// entries.  Used by every consumer that mirrors per-node state
+    /// (driver bookkeeping, detector node states).
+    pub fn resync_view<T>(&self, view: &mut Vec<T>, mut fill: impl FnMut() -> T) {
+        let mut removed = self.removed.clone();
+        removed.sort_unstable_by(|a, b| b.cmp(a));
+        for i in removed {
+            if i < view.len() {
+                view.remove(i);
+            }
+        }
+        for _ in 0..self.added {
+            view.push(fill());
+        }
+    }
 }
 
 /// The mutable cluster view.
@@ -46,6 +70,10 @@ pub struct ElasticCluster {
     nominal: Vec<DeviceProfile>,
     /// current slowdown factor per node (1.0 = nominal)
     slow: Vec<f64>,
+    /// stable worker uid per current node
+    uid: Vec<u64>,
+    /// next auto-assigned uid
+    next_uid: u64,
 }
 
 impl ElasticCluster {
@@ -55,6 +83,8 @@ impl ElasticCluster {
             net_gbps: spec.net_gbps,
             nominal: spec.nodes.iter().map(|n| n.device.clone()).collect(),
             slow: vec![1.0; spec.n()],
+            uid: (0..spec.n() as u64).collect(),
+            next_uid: spec.n() as u64,
         }
     }
 
@@ -65,6 +95,11 @@ impl ElasticCluster {
     /// Current slowdown factor of node `i` (1.0 = nominal).
     pub fn slow_factor(&self, i: usize) -> f64 {
         self.slow[i]
+    }
+
+    /// Stable worker uids, in view order.
+    pub fn uids(&self) -> &[u64] {
+        &self.uid
     }
 
     /// Materialize the current view as a [`ClusterSpec`]: nominal profiles
@@ -86,15 +121,32 @@ impl ElasticCluster {
     }
 
     /// Apply one event; returns the delta consumers must react to.
-    /// Errors (cluster unchanged) on out-of-range indices, removing the
-    /// last node, or non-positive slowdown factors.
+    /// Errors (cluster unchanged) on out-of-range indices — e.g. a
+    /// `Preempt` of an already-departed node — removing the last node,
+    /// non-positive slowdown factors, recovering a node that is not
+    /// slowed, or joining with a uid already present.
     pub fn apply(&mut self, ev: &ClusterEvent) -> Result<MembershipDelta> {
         let n = self.n();
         let mut delta = MembershipDelta::default();
         match ev {
-            ClusterEvent::NodeJoin { device } => {
+            ClusterEvent::NodeJoin { device, uid } => {
+                let id = match uid {
+                    Some(u) => {
+                        if self.uid.contains(u) {
+                            bail!("join with duplicate worker uid {u}");
+                        }
+                        self.next_uid = self.next_uid.max(u.saturating_add(1));
+                        *u
+                    }
+                    None => {
+                        let u = self.next_uid;
+                        self.next_uid += 1;
+                        u
+                    }
+                };
                 self.nominal.push(device.clone());
                 self.slow.push(1.0);
+                self.uid.push(id);
                 delta.added = 1;
             }
             ClusterEvent::NodeLeave { node } | ClusterEvent::Preempt { node } => {
@@ -107,6 +159,7 @@ impl ElasticCluster {
                 }
                 self.nominal.remove(node);
                 self.slow.remove(node);
+                self.uid.remove(node);
                 delta.removed.push(node);
             }
             ClusterEvent::SlowDown { node, factor } => {
@@ -127,10 +180,11 @@ impl ElasticCluster {
                 if node >= n {
                     bail!("recover of node {node} but the view has {n} nodes");
                 }
-                if (self.slow[node] - 1.0).abs() > 1e-12 {
-                    self.slow[node] = 1.0;
-                    delta.degraded.push(node);
+                if (self.slow[node] - 1.0).abs() <= 1e-12 {
+                    bail!("recover of node {node} which is not slowed");
                 }
+                self.slow[node] = 1.0;
+                delta.degraded.push(node);
             }
         }
         Ok(delta)
@@ -156,10 +210,12 @@ mod tests {
         assert_eq!(spec.nodes[1].id, 1); // ids re-assigned contiguously
 
         let d = ec
-            .apply(&ClusterEvent::NodeJoin { device: cluster::devices::a100() })
+            .apply(&ClusterEvent::NodeJoin { device: cluster::devices::a100(), uid: None })
             .unwrap();
         assert_eq!(d.added, 1);
         assert_eq!(ec.spec().nodes[2].device.name, "A100");
+        // uids: [0, 2] survived the removal, the join got a fresh one
+        assert_eq!(ec.uids(), &[0, 2, 3]);
     }
 
     #[test]
@@ -178,9 +234,9 @@ mod tests {
         let d = ec.apply(&ClusterEvent::Recover { node: 0 }).unwrap();
         assert_eq!(d.degraded, vec![0]);
         assert!((ec.spec().nodes[0].device.speed - nominal).abs() < 1e-12);
-        // recovering a healthy node is a no-op delta
-        let d = ec.apply(&ClusterEvent::Recover { node: 0 }).unwrap();
-        assert!(d.is_empty());
+        // recovering a node that is no longer slowed errors cleanly
+        assert!(ec.apply(&ClusterEvent::Recover { node: 0 }).is_err());
+        assert!((ec.slow_factor(0) - 1.0).abs() < 1e-12);
     }
 
     #[test]
@@ -217,5 +273,61 @@ mod tests {
         let d = ec.apply(&ClusterEvent::Preempt { node: 15 }).unwrap();
         assert_eq!(d.removed, vec![15]);
         assert_eq!(ec.n(), 15);
+    }
+
+    #[test]
+    fn preempt_of_already_departed_node_errors_cleanly() {
+        let base = cluster::cluster_a();
+        let mut ec = ElasticCluster::new(&base);
+        ec.apply(&ClusterEvent::Preempt { node: 2 }).unwrap();
+        // the same index replayed is now out of range: rejected, and the
+        // surviving view is untouched
+        assert!(ec.apply(&ClusterEvent::Preempt { node: 2 }).is_err());
+        assert!(ec.apply(&ClusterEvent::NodeLeave { node: 2 }).is_err());
+        assert_eq!(ec.n(), 2);
+        assert_eq!(ec.uids(), &[0, 1]);
+        assert_eq!(ec.spec().nodes[1].device.name, "A4000");
+    }
+
+    #[test]
+    fn recover_of_never_slowed_node_errors_cleanly() {
+        let base = cluster::cluster_a();
+        let mut ec = ElasticCluster::new(&base);
+        assert!(ec.apply(&ClusterEvent::Recover { node: 1 }).is_err());
+        // state untouched: a real slowdown/recover cycle still works
+        ec.apply(&ClusterEvent::SlowDown { node: 1, factor: 0.5 }).unwrap();
+        let d = ec.apply(&ClusterEvent::Recover { node: 1 }).unwrap();
+        assert_eq!(d.degraded, vec![1]);
+        assert!(ec.apply(&ClusterEvent::Recover { node: 1 }).is_err());
+    }
+
+    #[test]
+    fn duplicate_uid_join_errors_and_leaves_state_intact() {
+        let base = cluster::cluster_a(); // uids 0, 1, 2
+        let mut ec = ElasticCluster::new(&base);
+        // an initial uid is taken
+        assert!(ec
+            .apply(&ClusterEvent::NodeJoin { device: cluster::devices::a100(), uid: Some(1) })
+            .is_err());
+        assert_eq!(ec.n(), 3);
+        assert_eq!(ec.uids(), &[0, 1, 2]);
+        // an explicit fresh uid is honored...
+        ec.apply(&ClusterEvent::NodeJoin { device: cluster::devices::a100(), uid: Some(9) })
+            .unwrap();
+        assert_eq!(ec.uids(), &[0, 1, 2, 9]);
+        // ...replaying it is rejected without corrupting the view
+        assert!(ec
+            .apply(&ClusterEvent::NodeJoin { device: cluster::devices::v100(), uid: Some(9) })
+            .is_err());
+        assert_eq!(ec.n(), 4);
+        // auto-assignment continues past the explicit uid
+        ec.apply(&ClusterEvent::NodeJoin { device: cluster::devices::v100(), uid: None })
+            .unwrap();
+        assert_eq!(ec.uids(), &[0, 1, 2, 9, 10]);
+        // a departed uid may return (spot capacity coming back)
+        ec.apply(&ClusterEvent::NodeLeave { node: 3 }).unwrap();
+        ec.apply(&ClusterEvent::NodeJoin { device: cluster::devices::a100(), uid: Some(9) })
+            .unwrap();
+        assert_eq!(ec.uids(), &[0, 1, 2, 10, 9]);
     }
 }

@@ -1,5 +1,5 @@
-//! Elastic cluster runtime: churn traces, straggler injection, and
-//! warm-started re-planning (the §6 "Adapt to schedulers" sketch grown
+//! Elastic cluster runtime: churn traces, straggler injection/**detection**,
+//! and warm-started re-planning (the §6 "Adapt to schedulers" sketch grown
 //! into a subsystem; Poplar-style membership change + OmniLearn-style
 //! straggler drift).
 //!
@@ -9,29 +9,51 @@
 //!   JSON load/save via `util::json`.
 //! * [`membership`] — [`ElasticCluster`], the mutable cluster view:
 //!   applies events one at a time and reports a [`MembershipDelta`] naming
-//!   exactly which per-node learned state is now stale.
+//!   exactly which per-node learned state is now stale.  Every node has a
+//!   stable worker uid; malformed events (stale index, duplicate uid,
+//!   recover of a healthy node, emptying the cluster) error cleanly and
+//!   leave the view untouched.
+//! * [`detect`] — observation-driven straggler detection.  Real clusters
+//!   only expose timing observations, so [`DetectionMode`] selects whether
+//!   a run replays the trace's `SlowDown`/`Recover` events to the system
+//!   (`Oracle`), hides them and recovers them with a [`StragglerDetector`]
+//!   (`Observed`), or hides them entirely (`Off`, the ablation floor).
+//!   The detector keeps per-node median/MAD baselines of the compute-time
+//!   residual against a guard-lagged affine reference (drift is therefore
+//!   invariant to the planner moving batch sizes around), confirms a drift
+//!   only after `k_confirm` consecutive over-threshold epochs, and uses a
+//!   recover margin well below the detection threshold — hysteresis, so
+//!   transient noise cannot thrash the planner.  Detection quality
+//!   (latency per hidden event, false positives, misses) is reported in
+//!   [`ScenarioReport::detection`].
 //! * [`scenario`] — the [`ElasticSystem`] trait (how a training system
-//!   reacts to a delta), [`run_scenario`] (a convergence run with the
-//!   trace applied at epoch boundaries, bit-identical under a fixed seed),
-//!   and the [`ColdRestartCannikin`] ablation.
+//!   reacts to a delta), the [`ElasticDriver`] (event + detection plumbing
+//!   shared by [`run_scenario`] and the real-numerics leader),
+//!   [`run_scenario`] itself (a convergence run with the trace applied at
+//!   epoch boundaries, bit-identical under a fixed seed), and the
+//!   [`ColdRestartCannikin`] ablation.
 //!
 //! The warm-replan path itself lives on
 //! [`CannikinPlanner::replan`](crate::coordinator::CannikinPlanner::replan):
 //! survivors keep their learned compute models and γ observations, T_comm
-//! rescales analytically with the ring size, and the §4.5 OptPerf table
+//! rescales analytically with the ring size, the §4.5 OptPerf table
 //! re-seeds from the cached overlap states via
-//! [`optperf::solve_with_hint`](crate::optperf::solve_with_hint).
+//! [`optperf::solve_with_hint`](crate::optperf::solve_with_hint), and a
+//! join that raises the cluster's total memory capacity grows the
+//! goodput candidate grid past the job-start `b_max`.
 
+pub mod detect;
 pub mod events;
 pub mod membership;
 pub mod scenario;
 
+pub use detect::{DetectionMode, DetectionStats, DetectorConfig, StragglerDetector};
 pub use events::{
     maintenance_window, preset, spot_instance, straggler_drift, ChurnTrace, ClusterEvent,
     EventCounts, TimedEvent,
 };
 pub use membership::{ElasticCluster, MembershipDelta};
 pub use scenario::{
-    apply_due_events, run_scenario, BoundaryOutcome, ColdRestartCannikin, ElasticSystem,
-    EpochRow, ScenarioConfig, ScenarioReport,
+    run_scenario, BoundaryOutcome, ColdRestartCannikin, ElasticDriver, ElasticSystem, EpochRow,
+    ScenarioConfig, ScenarioReport,
 };

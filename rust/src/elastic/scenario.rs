@@ -7,11 +7,24 @@
 //! [`crate::figures::run_system`] — plan, measure, observe, integrate
 //! convergence progress.  Everything is seeded: with the same seed the full
 //! run (epochs, batches, events, simulated times) is bit-identical.
+//!
+//! The [`ElasticDriver`] owns the event/detection plumbing and is shared
+//! with the real-numerics leader, so event semantics and counting can never
+//! drift between the two paths.  Under [`DetectionMode::Observed`] the
+//! trace's `SlowDown`/`Recover` events still mutate the *physical* cluster
+//! (and reseed the simulator) but are hidden from the system: a
+//! [`StragglerDetector`] must recover them from the timing observations,
+//! and its synthesized events drive the warm-replan path instead.
+//! Membership events (join / leave / preempt) stay oracle in every mode —
+//! membership is observable in practice, silent degradation is not.
 
-use crate::baselines::{AdaptDl, Ddp, Plan, System};
+use crate::baselines::{AdaptDl, Ddp, LbBsp, Plan, System};
 use crate::cluster::ClusterSpec;
 use crate::coordinator::planner::{BatchPolicy, CannikinPlanner};
-use crate::elastic::events::ChurnTrace;
+use crate::elastic::detect::{
+    DetectionMode, DetectionStats, DetectorConfig, StragglerDetector,
+};
+use crate::elastic::events::{ChurnTrace, ClusterEvent};
 use crate::elastic::membership::{ElasticCluster, MembershipDelta};
 use crate::figures::target_value;
 use crate::simulator::{convergence, ClusterSim, NodeBatchObs, Workload};
@@ -54,6 +67,19 @@ impl ElasticSystem for AdaptDl {
 impl ElasticSystem for Ddp {
     fn on_cluster_change(&mut self, _delta: &MembershipDelta, spec: &ClusterSpec, _caps: &[u64]) {
         self.set_n_nodes(spec.n());
+    }
+}
+
+/// LB-BSP elastic mode: departed shares are dropped and redistributed,
+/// newcomers start at the mean share.  Degradation deltas are deliberately
+/// ignored: the per-epoch throughput measurements already reflect the
+/// slowdown and rebalance the split within a few Δ-bounded steps — wiping
+/// them would disable the only adaptation signal LB-BSP has.
+impl ElasticSystem for LbBsp {
+    fn on_cluster_change(&mut self, delta: &MembershipDelta, spec: &ClusterSpec, _caps: &[u64]) {
+        if delta.membership_changed() {
+            self.apply_membership(delta, spec.n());
+        }
     }
 }
 
@@ -135,18 +161,18 @@ impl ElasticSystem for ColdRestartCannikin {
     }
 }
 
-/// Outcome of applying one epoch boundary's due churn events (shared by
-/// [`run_scenario`] and the real-numerics leader, so event semantics and
-/// counting can never drift between the two paths).
+/// Outcome of applying one epoch boundary's due churn events.
 pub struct BoundaryOutcome {
     /// events whose delta actually changed the cluster: (kind, node count
-    /// after the event)
-    pub changed: Vec<(&'static str, usize)>,
-    /// events accepted by the membership manager with no effect (e.g.
-    /// `Recover` on a healthy node)
+    /// after the event, hidden-from-the-system?)
+    pub changed: Vec<(&'static str, usize, bool)>,
+    /// changed events concealed from the system (Observed / Off modes)
+    pub hidden: usize,
+    /// events accepted by the membership manager with no effect (e.g. a
+    /// `SlowDown` repeating the current factor)
     pub noops: usize,
     /// events the membership manager rejected (e.g. would empty the
-    /// cluster) — skipped, never fatal
+    /// cluster, stale index, duplicate uid) — skipped, never fatal
     pub skipped: usize,
     /// rebuilt timing simulator (deterministic per-change reseed) when
     /// anything changed
@@ -160,48 +186,224 @@ impl BoundaryOutcome {
     }
 }
 
-/// Apply every event of `trace` due at or before `epoch` (starting from
-/// `*next_event`, which advances), mutating `elastic` and notifying
-/// `system` with fresh caps after each effective event.  `reseeds` counts
-/// cluster changes across the run so each rebuild of the simulator gets a
-/// distinct deterministic seed.
-pub fn apply_due_events(
-    trace: &ChurnTrace,
-    next_event: &mut usize,
-    epoch: usize,
-    elastic: &mut ElasticCluster,
-    system: &mut dyn ElasticSystem,
-    w: &Workload,
+/// Owns the elastic ground truth + event/detection plumbing for one run.
+/// Shared by [`run_scenario`] and the real-numerics leader.
+pub struct ElasticDriver<'a> {
+    trace: &'a ChurnTrace,
+    w: &'a Workload,
     seed: u64,
-    reseeds: &mut u64,
-) -> BoundaryOutcome {
-    let mut out =
-        BoundaryOutcome { changed: Vec::new(), noops: 0, skipped: 0, new_sim: None };
-    while *next_event < trace.events.len() && trace.events[*next_event].epoch <= epoch {
-        let te = &trace.events[*next_event];
-        *next_event += 1;
-        match elastic.apply(&te.event) {
-            Ok(delta) => {
-                if delta.is_empty() {
-                    out.noops += 1;
-                    continue;
-                }
-                let spec = elastic.spec();
-                let caps: Vec<u64> =
-                    spec.nodes.iter().map(|n| w.max_local_batch(n)).collect();
-                system.on_cluster_change(&delta, &spec, &caps);
-                *reseeds += 1;
-                out.new_sim = Some(ClusterSim::new(
-                    &spec,
-                    w,
-                    seed ^ reseeds.wrapping_mul(0x9E37_79B9_7F4A_7C15),
-                ));
-                out.changed.push((te.event.kind(), spec.n()));
-            }
-            Err(_) => out.skipped += 1,
+    mode: DetectionMode,
+    elastic: ElasticCluster,
+    next_event: usize,
+    reseeds: u64,
+    detector: Option<StragglerDetector>,
+    stats: DetectionStats,
+    /// per-node epoch of the not-yet-detected healthy→slowed transition
+    pending: Vec<Option<usize>>,
+    pub events_applied: usize,
+    pub events_hidden: usize,
+    pub events_skipped: usize,
+}
+
+impl<'a> ElasticDriver<'a> {
+    pub fn new(
+        base: &ClusterSpec,
+        w: &'a Workload,
+        trace: &'a ChurnTrace,
+        mode: DetectionMode,
+        det_cfg: DetectorConfig,
+        seed: u64,
+    ) -> Self {
+        let detector = (mode == DetectionMode::Observed)
+            .then(|| StragglerDetector::new(base.n(), det_cfg));
+        ElasticDriver {
+            trace,
+            w,
+            seed,
+            mode,
+            elastic: ElasticCluster::new(base),
+            next_event: 0,
+            reseeds: 0,
+            detector,
+            stats: DetectionStats::default(),
+            pending: vec![None; base.n()],
+            events_applied: 0,
+            events_hidden: 0,
+            events_skipped: 0,
         }
     }
-    out
+
+    pub fn n(&self) -> usize {
+        self.elastic.n()
+    }
+
+    /// Materialized ground-truth cluster view (effective speeds).
+    pub fn spec(&self) -> ClusterSpec {
+        self.elastic.spec()
+    }
+
+    /// Ground-truth slowdown factor of node `i` (1.0 = nominal).
+    pub fn slow_factor(&self, i: usize) -> f64 {
+        self.elastic.slow_factor(i)
+    }
+
+    fn caps(&self, spec: &ClusterSpec) -> Vec<u64> {
+        spec.nodes.iter().map(|n| self.w.max_local_batch(n)).collect()
+    }
+
+
+    /// Apply every trace event due at or before `epoch`, mutating the
+    /// ground truth and notifying `system` of the *visible* ones.  Each
+    /// effective event rebuilds the timing simulator with a distinct
+    /// deterministic seed.
+    pub fn boundary(&mut self, epoch: usize, system: &mut dyn ElasticSystem) -> BoundaryOutcome {
+        let mut out = BoundaryOutcome {
+            changed: Vec::new(),
+            hidden: 0,
+            noops: 0,
+            skipped: 0,
+            new_sim: None,
+        };
+        while self.next_event < self.trace.events.len()
+            && self.trace.events[self.next_event].epoch <= epoch
+        {
+            let te = self.trace.events[self.next_event].clone();
+            self.next_event += 1;
+            let hide = self.mode != DetectionMode::Oracle
+                && matches!(
+                    te.event,
+                    ClusterEvent::SlowDown { .. } | ClusterEvent::Recover { .. }
+                );
+            // ground-truth health before the event (detection bookkeeping)
+            let was_healthy = match te.event {
+                ClusterEvent::SlowDown { node, .. } | ClusterEvent::Recover { node }
+                    if node < self.elastic.n() =>
+                {
+                    self.elastic.slow_factor(node) >= 1.0 - 1e-9
+                }
+                _ => true,
+            };
+            match self.elastic.apply(&te.event) {
+                Ok(delta) => {
+                    if delta.is_empty() {
+                        out.noops += 1;
+                        continue;
+                    }
+                    if hide {
+                        out.hidden += 1;
+                        match te.event {
+                            ClusterEvent::SlowDown { node, .. } => {
+                                if was_healthy && self.pending[node].is_none() {
+                                    self.pending[node] = Some(epoch);
+                                }
+                            }
+                            ClusterEvent::Recover { node } => {
+                                // the slowdown cleared before detection
+                                if self.pending[node].take().is_some() {
+                                    self.stats.missed += 1;
+                                }
+                            }
+                            _ => unreachable!("only degradation events are hidden"),
+                        }
+                    } else {
+                        let spec = self.elastic.spec();
+                        let caps = self.caps(&spec);
+                        system.on_cluster_change(&delta, &spec, &caps);
+                    }
+                    if delta.membership_changed() {
+                        // a pending (undetected) slowdown departing with
+                        // its node can never be detected now: that is a
+                        // miss, per DetectionStats' contract
+                        for &i in &delta.removed {
+                            if i < self.pending.len() && self.pending[i].is_some() {
+                                self.stats.missed += 1;
+                            }
+                        }
+                        delta.resync_view(&mut self.pending, || None);
+                        if let Some(d) = &mut self.detector {
+                            d.sync_membership(&delta);
+                        }
+                    }
+                    self.reseeds += 1;
+                    out.new_sim = Some(ClusterSim::new(
+                        &self.elastic.spec(),
+                        self.w,
+                        self.seed ^ self.reseeds.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    ));
+                    out.changed.push((te.event.kind(), self.elastic.n(), hide));
+                }
+                Err(_) => out.skipped += 1,
+            }
+        }
+        self.events_applied += out.applied();
+        self.events_hidden += out.hidden;
+        self.events_skipped += out.skipped;
+        out
+    }
+
+    /// Feed one batch worth of per-node timing observations to the
+    /// detector (no-op outside [`DetectionMode::Observed`]).
+    pub fn observe(&mut self, obs: &[NodeBatchObs]) {
+        if let Some(d) = &mut self.detector {
+            d.observe(obs);
+        }
+    }
+
+    /// Close the epoch: let the detector judge it and route any
+    /// synthesized `SlowDown`/`Recover` events to the system as degraded
+    /// deltas (the physical cluster is *not* touched — the events are
+    /// belief updates, the truth already changed at the hidden boundary).
+    /// Returns the number of synthesized events.
+    pub fn end_epoch(&mut self, epoch: usize, system: &mut dyn ElasticSystem) -> usize {
+        let Some(det) = &mut self.detector else {
+            return 0;
+        };
+        let events = det.end_epoch(epoch);
+        let mut n_events = 0;
+        for ev in events {
+            let node = match ev {
+                ClusterEvent::SlowDown { node, .. } | ClusterEvent::Recover { node } => node,
+                _ => continue,
+            };
+            if node >= self.elastic.n() {
+                continue;
+            }
+            let truly_slow = self.elastic.slow_factor(node) < 1.0 - 1e-9;
+            match ev {
+                ClusterEvent::SlowDown { .. } => {
+                    self.stats.emitted_slowdowns += 1;
+                    if truly_slow {
+                        if let Some(t0) = self.pending[node].take() {
+                            self.stats.latencies.push(epoch.saturating_sub(t0));
+                        }
+                    } else {
+                        self.stats.false_slowdowns += 1;
+                    }
+                }
+                ClusterEvent::Recover { .. } => {
+                    self.stats.emitted_recovers += 1;
+                    if truly_slow {
+                        self.stats.false_recovers += 1;
+                    }
+                }
+                _ => {}
+            }
+            let delta = MembershipDelta { removed: vec![], added: 0, degraded: vec![node] };
+            let spec = self.elastic.spec();
+            let caps = self.caps(&spec);
+            system.on_cluster_change(&delta, &spec, &caps);
+            n_events += 1;
+        }
+        n_events
+    }
+
+    /// Final detection accounting (Some iff a detector ran): undetected
+    /// transitions still pending at run end count as missed.
+    pub fn finish(mut self) -> Option<DetectionStats> {
+        self.detector.as_ref()?;
+        self.stats.missed += self.pending.iter().filter(|p| p.is_some()).count();
+        Some(self.stats)
+    }
 }
 
 /// Scenario knobs.
@@ -211,11 +413,22 @@ pub struct ScenarioConfig {
     pub seed: u64,
     /// simulated batches averaged per epoch (as in `figures::run_system`)
     pub reps: usize,
+    /// how the trace's degradation events reach the system (see
+    /// [`DetectionMode`])
+    pub detect: DetectionMode,
+    /// detector knobs (only read under [`DetectionMode::Observed`])
+    pub detector: DetectorConfig,
 }
 
 impl Default for ScenarioConfig {
     fn default() -> Self {
-        ScenarioConfig { max_epochs: 4000, seed: 7, reps: 3 }
+        ScenarioConfig {
+            max_epochs: 4000,
+            seed: 7,
+            reps: 3,
+            detect: DetectionMode::Oracle,
+            detector: DetectorConfig::default(),
+        }
     }
 }
 
@@ -229,8 +442,10 @@ pub struct EpochRow {
     pub wall_secs: f64,
     pub progress: f64,
     pub metric: f64,
-    /// events applied at this epoch's boundary
+    /// trace events applied at this epoch's boundary
     pub events: usize,
+    /// detector-synthesized events routed to the system this epoch
+    pub detected: usize,
 }
 
 /// Full elastic-run result.
@@ -240,16 +455,26 @@ pub struct ScenarioReport {
     pub rows: Vec<EpochRow>,
     pub time_to_target: Option<f64>,
     pub events_applied: usize,
+    /// applied events that were concealed from the system (Observed/Off)
+    pub events_hidden: usize,
     /// events rejected by the membership manager (e.g. would empty the
     /// cluster) — skipped, never fatal
     pub events_skipped: usize,
     pub bootstrap_epochs: usize,
     pub final_n: usize,
+    /// detection accounting (Some iff a detector ran)
+    pub detection: Option<DetectionStats>,
 }
 
 impl ScenarioReport {
     pub fn reached(&self) -> bool {
         self.time_to_target.is_some()
+    }
+
+    /// Index of the epoch in which the target was crossed.
+    pub fn epochs_to_target(&self) -> Option<usize> {
+        let t = self.time_to_target?;
+        self.rows.iter().find(|r| r.wall_secs >= t).map(|r| r.epoch)
     }
 }
 
@@ -262,30 +487,15 @@ pub fn run_scenario(
     system: &mut dyn ElasticSystem,
     cfg: &ScenarioConfig,
 ) -> ScenarioReport {
-    let mut elastic = ElasticCluster::new(base);
-    let mut sim = ClusterSim::new(&elastic.spec(), w, cfg.seed);
-    let mut ev_idx = 0usize;
-    let mut reseeds = 0u64;
-    let mut applied = 0usize;
-    let mut skipped = 0usize;
-    // (n_nodes, events applied) per epoch, filled by the policy closure
-    let mut side: Vec<(usize, usize)> = Vec::new();
+    let mut driver = ElasticDriver::new(base, w, trace, cfg.detect, cfg.detector, cfg.seed);
+    let mut sim = ClusterSim::new(&driver.spec(), w, cfg.seed);
+    // (n_nodes, boundary events, detected events) per epoch
+    let mut side: Vec<(usize, usize, usize)> = Vec::new();
 
     let result = convergence::run(w, target_value(w), cfg.max_epochs, |epoch, phi| {
         // ---- epoch boundary: apply every event that is now due
-        let out = apply_due_events(
-            trace,
-            &mut ev_idx,
-            epoch,
-            &mut elastic,
-            system,
-            w,
-            cfg.seed,
-            &mut reseeds,
-        );
+        let out = driver.boundary(epoch, system);
         let events_here = out.applied();
-        applied += events_here;
-        skipped += out.skipped;
         if let Some(s) = out.new_sim {
             sim = s;
         }
@@ -297,9 +507,13 @@ pub fn run_scenario(
             let out = sim.step(&plan.local_f64());
             t_mean += out.t_batch;
             system.observe_epoch(&out.per_node, out.t_batch);
+            driver.observe(&out.per_node);
         }
         let t = t_mean / cfg.reps.max(1) as f64;
-        side.push((elastic.n(), events_here));
+
+        // ---- observation-driven detection closes the epoch
+        let detected = driver.end_epoch(epoch, system);
+        side.push((driver.n(), events_here, detected));
         // overhead is charged as 0 so the simulated clock — and therefore
         // the whole run output — is bit-identical across invocations
         // (planner wall-time is still accumulated planner-side)
@@ -310,7 +524,7 @@ pub fn run_scenario(
         .epochs
         .iter()
         .zip(&side)
-        .map(|(e, &(n_nodes, events))| EpochRow {
+        .map(|(e, &(n_nodes, events, detected))| EpochRow {
             epoch: e.epoch,
             n_nodes,
             total_batch: e.total_batch,
@@ -319,17 +533,21 @@ pub fn run_scenario(
             progress: e.progress,
             metric: e.metric,
             events,
+            detected,
         })
         .collect();
 
+    let final_n = driver.n();
     ScenarioReport {
         system: system.name().to_string(),
         rows,
         time_to_target: result.time_to_target,
-        events_applied: applied,
-        events_skipped: skipped,
+        events_applied: driver.events_applied,
+        events_hidden: driver.events_hidden,
+        events_skipped: driver.events_skipped,
         bootstrap_epochs: system.bootstrap_epochs(),
-        final_n: elastic.n(),
+        final_n,
+        detection: driver.finish(),
     }
 }
 
@@ -337,7 +555,7 @@ pub fn run_scenario(
 mod tests {
     use super::*;
     use crate::cluster;
-    use crate::elastic::events::{spot_instance, ClusterEvent};
+    use crate::elastic::events::{spot_instance, straggler_drift, ClusterEvent};
     use crate::simulator::workload;
 
     fn spot_setup() -> (ClusterSpec, Workload, ChurnTrace) {
@@ -350,7 +568,7 @@ mod tests {
     #[test]
     fn scenario_is_bit_identical_across_runs() {
         let (c, w, trace) = spot_setup();
-        let cfg = ScenarioConfig { max_epochs: 20000, seed: 5, reps: 3 };
+        let cfg = ScenarioConfig { max_epochs: 20000, seed: 5, ..Default::default() };
         let run = || {
             let mut sys =
                 CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
@@ -367,16 +585,18 @@ mod tests {
         }
         assert_eq!(a.time_to_target.map(f64::to_bits), b.time_to_target.map(f64::to_bits));
         assert_eq!(a.events_applied, b.events_applied);
+        assert_eq!(a.detection, None, "oracle mode runs no detector");
     }
 
     #[test]
     fn membership_changes_show_up_in_rows() {
         let (c, w, trace) = spot_setup();
-        let cfg = ScenarioConfig { max_epochs: 20000, seed: 5, reps: 3 };
+        let cfg = ScenarioConfig { max_epochs: 20000, seed: 5, ..Default::default() };
         let mut sys =
             CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
         let r = run_scenario(&c, &w, &trace, &mut sys, &cfg);
         assert!(r.events_applied >= 3, "{r:?}");
+        assert_eq!(r.events_hidden, 0, "oracle mode hides nothing");
         let n_seen: Vec<usize> = r.rows.iter().map(|row| row.n_nodes).collect();
         assert!(n_seen.iter().any(|&n| n < c.n()), "a preemption must shrink the view");
         assert_eq!(r.final_n, *n_seen.last().unwrap());
@@ -388,7 +608,7 @@ mod tests {
     #[test]
     fn warm_replan_issues_fewer_bootstrap_epochs_than_cold_restart() {
         let (c, w, trace) = spot_setup();
-        let cfg = ScenarioConfig { max_epochs: 20000, seed: 9, reps: 3 };
+        let cfg = ScenarioConfig { max_epochs: 20000, seed: 9, ..Default::default() };
         let mut warm =
             CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
         let rw = run_scenario(&c, &w, &trace, &mut warm, &cfg);
@@ -414,7 +634,7 @@ mod tests {
         let w = workload::cifar10();
         let mut trace = ChurnTrace::new("one-leave");
         trace.push(12, ClusterEvent::NodeLeave { node: 2 });
-        let cfg = ScenarioConfig { max_epochs: 20000, seed: 3, reps: 3 };
+        let cfg = ScenarioConfig { max_epochs: 20000, seed: 3, ..Default::default() };
         let mut sys =
             CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
         let r = run_scenario(&c, &w, &trace, &mut sys, &cfg);
@@ -422,5 +642,70 @@ mod tests {
         assert!(r.reached(), "loss/metric target must still be reached");
         // after the leave every epoch plans for 2 nodes
         assert!(r.rows.iter().skip(13).all(|row| row.n_nodes == 2));
+    }
+
+    #[test]
+    fn off_mode_hides_degradation_from_the_system() {
+        // ColdRestartCannikin restarts on every visible change, so its
+        // restart counter witnesses exactly what the driver exposed
+        let c = cluster::cluster_a();
+        let w = workload::cifar10();
+        let trace = straggler_drift(&c, 20_000, 9);
+        assert!(trace.counts().slowdowns >= 3);
+
+        let mut oracle =
+            ColdRestartCannikin::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+        let cfg_o = ScenarioConfig { max_epochs: 20_000, seed: 9, ..Default::default() };
+        let ro = run_scenario(&c, &w, &trace, &mut oracle, &cfg_o);
+        assert!(oracle.restarts >= 3, "oracle mode must surface the slowdowns");
+        assert_eq!(ro.events_hidden, 0);
+
+        let mut off =
+            ColdRestartCannikin::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+        let cfg_off = ScenarioConfig {
+            max_epochs: 20_000,
+            seed: 9,
+            detect: DetectionMode::Off,
+            ..Default::default()
+        };
+        let roff = run_scenario(&c, &w, &trace, &mut off, &cfg_off);
+        assert_eq!(off.restarts, 0, "off mode must conceal the slowdowns");
+        assert!(roff.events_hidden >= 3, "{}", roff.events_hidden);
+        assert_eq!(roff.detection, None, "off mode runs no detector");
+    }
+
+    #[test]
+    fn observed_mode_detects_and_notifies_instead_of_the_oracle() {
+        let c = cluster::cluster_a();
+        let w = workload::cifar10();
+        let trace = straggler_drift(&c, 20_000, 9);
+        let mut sys =
+            ColdRestartCannikin::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+        let cfg = ScenarioConfig {
+            max_epochs: 20_000,
+            seed: 9,
+            detect: DetectionMode::Observed,
+            ..Default::default()
+        };
+        let r = run_scenario(&c, &w, &trace, &mut sys, &cfg);
+        let d = r.detection.expect("observed mode must report detection stats");
+        assert!(d.emitted_slowdowns >= 1, "{d:?}");
+        assert!(d.clean(), "no false alarms expected: {d:?}");
+        assert!(sys.restarts >= 1, "synthesized events must reach the system");
+        // detected events show up in the rows
+        assert!(r.rows.iter().map(|row| row.detected).sum::<usize>() >= 1);
+    }
+
+    #[test]
+    fn lbbsp_survives_membership_churn() {
+        let (c, w, trace) = spot_setup();
+        let cfg = ScenarioConfig { max_epochs: 20000, seed: 5, ..Default::default() };
+        let mut sys = LbBsp::new(c.n(), 128, 5);
+        let r = run_scenario(&c, &w, &trace, &mut sys, &cfg);
+        assert!(r.events_applied >= 3);
+        // the fixed total survives every membership change
+        assert!(r.rows.iter().all(|row| row.total_batch == 128));
+        let n_seen: Vec<usize> = r.rows.iter().map(|row| row.n_nodes).collect();
+        assert!(n_seen.iter().any(|&n| n < c.n()));
     }
 }

@@ -18,7 +18,7 @@ use anyhow::{anyhow, bail, Result};
 use cannikin::baselines::{AdaptDl, Ddp, LbBsp, System};
 use cannikin::cluster;
 use cannikin::coordinator::{train, BatchPolicy, CannikinPlanner, TrainConfig};
-use cannikin::elastic;
+use cannikin::elastic::{self, DetectionMode, DetectionStats};
 use cannikin::figures;
 use cannikin::optperf;
 use cannikin::runtime::Manifest;
@@ -30,18 +30,23 @@ cannikin — heterogeneous-cluster adaptive-batch-size training (paper repro)
 USAGE:
   cannikin train   [--artifacts DIR] [--cluster a|b|c | --cluster-file F.json] [--workload W]
                    [--epochs N] [--steps N] [--lr F] [--fixed-batch B]
-                   [--corpus-kb N] [--seed N] [--log FILE] [--trace T]
+                   [--corpus-kb N] [--seed N] [--log FILE] [--trace T] [--detect D]
   cannikin sim     [--cluster a|b|c] [--workload W] [--system S] [--epochs N]
   cannikin elastic [--cluster a|b|c] [--workload W] [--system ES] [--trace T]
-                   [--epochs N] [--seed N] [--save-trace FILE]
+                   [--epochs N] [--seed N] [--save-trace FILE] [--detect D]
   cannikin figures [--fig 5|6|7|8|9|10|t5|pred|overlap|c|all]
   cannikin predict [--cluster a|b|c] [--workload W] --batch B
   cannikin inspect [--artifacts DIR]
 
 workloads: imagenet cifar10 librispeech squad movielens
 systems:   cannikin adaptdl lbbsp ddp
-elastic systems (ES): cannikin cannikin-cold even ddp
-traces (T): spot maintenance straggler, or a saved FILE.json";
+elastic systems (ES): cannikin cannikin-cold even lbbsp ddp
+traces (T): spot maintenance straggler, or a saved FILE.json
+detection (D): oracle   — replay the trace's SlowDown/Recover events (default)
+               observed — hide them; the straggler detector must recover them
+                          from timing observations (latency/false-positive
+                          accounting is reported)
+               off      — hide them entirely (ablation floor)";
 
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
     let mut out = HashMap::new();
@@ -141,6 +146,25 @@ fn trace_arg(
     Ok(Some(trace))
 }
 
+fn detect_arg(flags: &HashMap<String, String>) -> Result<DetectionMode> {
+    let name = get(flags, "detect", "oracle");
+    DetectionMode::by_name(name)
+        .ok_or_else(|| anyhow!("unknown detection mode {name:?} (oracle|observed|off)"))
+}
+
+fn print_detection(d: &DetectionStats) {
+    println!(
+        "detector: {} slowdown(s) emitted ({} false), {} recover(s) ({} false), {} missed",
+        d.emitted_slowdowns, d.false_slowdowns, d.emitted_recovers, d.false_recovers, d.missed
+    );
+    match (d.mean_latency(), d.max_latency()) {
+        (Some(mean), Some(max)) => {
+            println!("detector: detection latency mean {mean:.1} epochs, max {max}")
+        }
+        _ => println!("detector: no hidden slowdown was detectable this run"),
+    }
+}
+
 fn cmd_elastic(flags: &HashMap<String, String>) -> Result<()> {
     let c = cluster_arg(flags)?;
     let w = workload_arg(flags)?;
@@ -170,29 +194,36 @@ fn cmd_elastic(flags: &HashMap<String, String>) -> Result<()> {
             .with_caps(caps),
         ),
         "even" | "adaptdl" => Box::new(AdaptDl::new(c.n(), w.b0, w.b_max, w.n_buckets)),
+        "lbbsp" => Box::new(LbBsp::new(c.n(), w.b0, 5)),
         "ddp" => Box::new(Ddp::with_total(c.n(), w.b0)),
-        other => bail!("unknown elastic system {other:?} (cannikin|cannikin-cold|even|ddp)"),
+        other => {
+            bail!("unknown elastic system {other:?} (cannikin|cannikin-cold|even|lbbsp|ddp)")
+        }
     };
+    let detect = detect_arg(flags)?;
     let counts = trace.counts();
     println!(
-        "elastic scenario {:?} on {} / {}: {} events ({} departures, {} joins, {} slowdowns, {} recovers)",
+        "elastic scenario {:?} on {} / {} [detect={}]: {} events ({} departures, {} joins, {} slowdowns, {} recovers)",
         trace.name,
         c.name,
         w.name,
+        detect.name(),
         trace.len(),
         counts.departures(),
         counts.joins,
         counts.slowdowns,
         counts.recovers
     );
-    let cfg = elastic::ScenarioConfig { max_epochs: epochs, seed, reps: 3 };
+    let cfg = elastic::ScenarioConfig { max_epochs: epochs, seed, detect, ..Default::default() };
     let r = elastic::run_scenario(&c, &w, &trace, system.as_mut(), &cfg);
     for row in r.rows.iter().step_by(usize::max(1, r.rows.len() / 25)) {
-        let flag = if row.events > 0 {
-            format!("  [{} event(s)]", row.events)
-        } else {
-            String::new()
-        };
+        let mut flag = String::new();
+        if row.events > 0 {
+            flag.push_str(&format!("  [{} event(s)]", row.events));
+        }
+        if row.detected > 0 {
+            flag.push_str(&format!("  [{} detected]", row.detected));
+        }
         println!(
             "epoch {:>6}  n={:<2} B={:<6} t_batch={:.4}s  wall={:>10.1}s  {}={:.2}{}",
             row.epoch, row.n_nodes, row.total_batch, row.t_batch, row.wall_secs, w.target,
@@ -200,9 +231,13 @@ fn cmd_elastic(flags: &HashMap<String, String>) -> Result<()> {
         );
     }
     println!(
-        "\n{}: applied {} events (skipped {}), final cluster size {}, bootstrap epochs {}",
-        r.system, r.events_applied, r.events_skipped, r.final_n, r.bootstrap_epochs
+        "\n{}: applied {} events ({} hidden, skipped {}), final cluster size {}, bootstrap epochs {}",
+        r.system, r.events_applied, r.events_hidden, r.events_skipped, r.final_n,
+        r.bootstrap_epochs
     );
+    if let Some(d) = &r.detection {
+        print_detection(d);
+    }
     match r.time_to_target {
         Some(t) => println!("{} reached {} in {t:.0} simulated seconds", r.system, w.target),
         None => bail!("{name} did not reach {} within {epochs} epochs", w.target),
@@ -229,6 +264,7 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
         cfg.log_path = Some(PathBuf::from(log));
     }
     cfg.trace = trace_arg(flags, &cfg.cluster, cfg.epochs, cfg.seed)?;
+    cfg.detect = detect_arg(flags)?;
     let report = train(&cfg)?;
     println!(
         "\ntrained {} epochs in {:.1}s real; final eval loss {:.4}",
@@ -236,6 +272,9 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
         report.real_secs,
         report.epochs.last().map(|e| e.eval_loss).unwrap_or(f32::NAN),
     );
+    if let Some(d) = &report.detection {
+        print_detection(d);
+    }
     Ok(())
 }
 

@@ -114,6 +114,15 @@ pub fn median(xs: &[f64]) -> f64 {
     }
 }
 
+/// Median absolute deviation — the robust scale companion to [`median`]
+/// (σ ≈ 1.4826·MAD for Gaussian data).  The straggler detector uses it to
+/// set drift gates that outliers cannot inflate.
+pub fn mad(xs: &[f64]) -> f64 {
+    let m = median(xs);
+    let dev: Vec<f64> = xs.iter().map(|x| (x - m).abs()).collect();
+    median(&dev)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,5 +174,15 @@ mod tests {
     fn median_odd_even() {
         assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
         assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn mad_is_robust_to_outliers() {
+        // symmetric data: MAD = 1; one huge outlier barely moves it
+        assert_eq!(mad(&[1.0, 2.0, 3.0]), 1.0);
+        let with_outlier = mad(&[1.0, 2.0, 3.0, 2.0, 1e9]);
+        assert!(with_outlier <= 1.0, "{with_outlier}");
+        // constant data has zero spread
+        assert_eq!(mad(&[5.0, 5.0, 5.0]), 0.0);
     }
 }

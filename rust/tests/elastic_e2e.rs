@@ -6,11 +6,17 @@
 use cannikin::baselines::{AdaptDl, Ddp};
 use cannikin::cluster;
 use cannikin::coordinator::{BatchPolicy, CannikinPlanner};
-use cannikin::elastic::{self, ChurnTrace, ColdRestartCannikin, ScenarioConfig};
+use cannikin::elastic::{
+    self, ChurnTrace, ColdRestartCannikin, DetectionMode, ScenarioConfig, ScenarioReport,
+};
 use cannikin::simulator::workload;
 
 fn cfg(seed: u64) -> ScenarioConfig {
-    ScenarioConfig { max_epochs: 20_000, seed, reps: 3 }
+    ScenarioConfig { max_epochs: 20_000, seed, ..Default::default() }
+}
+
+fn cfg_mode(seed: u64, detect: DetectionMode) -> ScenarioConfig {
+    ScenarioConfig { max_epochs: 20_000, seed, detect, ..Default::default() }
 }
 
 #[test]
@@ -119,4 +125,111 @@ fn straggler_drift_reaches_target_with_degraded_nodes() {
     let r = elastic::run_scenario(&c, &w, &trace, &mut sys, &cfg(9));
     assert_eq!(r.final_n, 3, "drift never changes membership");
     assert!(r.reached(), "target must be reached despite stragglers");
+}
+
+// ---------------------------------------------------------------------------
+// observation-driven detection (DetectionMode::Observed)
+// ---------------------------------------------------------------------------
+
+fn run_straggler(seed: u64, detect: DetectionMode) -> ScenarioReport {
+    let c = cluster::cluster_a();
+    let w = workload::cifar10();
+    let trace = elastic::straggler_drift(&c, 20_000, seed);
+    let mut sys =
+        CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+    elastic::run_scenario(&c, &w, &trace, &mut sys, &cfg_mode(seed, detect))
+}
+
+/// Acceptance: on the straggler_drift preset with hidden oracle events,
+/// the detector flags the victim within a bounded epoch lag, with no false
+/// alarms, and the run stays bit-identical across invocations.
+#[test]
+fn observed_detection_flags_victim_within_bounded_lag_and_is_deterministic() {
+    let a = run_straggler(9, DetectionMode::Observed);
+    let d = a.detection.clone().expect("observed mode must report detection stats");
+    // the trace hides 3 slowdown steps + 1 recover on one victim: the
+    // healthy→slowed transition must be caught quickly...
+    assert_eq!(d.missed, 0, "{d:?}");
+    assert!(d.emitted_slowdowns >= 1, "{d:?}");
+    assert!(!d.latencies.is_empty(), "{d:?}");
+    assert!(d.max_latency().unwrap() <= 8, "detection lag too high: {d:?}");
+    // ...with zero false alarms, and the recovery must be noticed too
+    assert!(d.clean(), "{d:?}");
+    assert!(d.emitted_recovers >= 1, "{d:?}");
+    assert!(a.reached(), "target must still be reached under observed detection");
+
+    // bit-identical determinism under the same seed
+    let b = run_straggler(9, DetectionMode::Observed);
+    assert_eq!(a.rows.len(), b.rows.len());
+    for (x, y) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(x.total_batch, y.total_batch);
+        assert_eq!(x.n_nodes, y.n_nodes);
+        assert_eq!(x.detected, y.detected);
+        assert_eq!(x.t_batch.to_bits(), y.t_batch.to_bits(), "epoch {}", x.epoch);
+        assert_eq!(x.wall_secs.to_bits(), y.wall_secs.to_bits());
+    }
+    assert_eq!(a.time_to_target.map(f64::to_bits), b.time_to_target.map(f64::to_bits));
+    assert_eq!(a.detection, b.detection, "detection accounting must be deterministic");
+}
+
+/// Acceptance: hidden-event detection costs at most 15% extra epochs over
+/// the oracle replay.
+#[test]
+fn observed_detection_converges_within_15_percent_of_oracle_epochs() {
+    let oracle = run_straggler(9, DetectionMode::Oracle);
+    let observed = run_straggler(9, DetectionMode::Observed);
+    let e_oracle = oracle.epochs_to_target().expect("oracle run must reach the target");
+    let e_observed = observed.epochs_to_target().expect("observed run must reach the target");
+    assert!(
+        e_observed as f64 <= e_oracle as f64 * 1.15,
+        "observed {e_observed} epochs vs oracle {e_oracle} (>15% worse)"
+    );
+}
+
+/// Acceptance: an all-healthy run must produce zero false-positive
+/// detections (the hysteresis/threshold design goal).
+#[test]
+fn observed_detection_has_zero_false_positives_on_healthy_trace() {
+    let c = cluster::cluster_a();
+    let w = workload::cifar10();
+    let trace = ChurnTrace::new("all-healthy");
+    let mut sys =
+        CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+    let r = elastic::run_scenario(
+        &c,
+        &w,
+        &trace,
+        &mut sys,
+        &cfg_mode(21, DetectionMode::Observed),
+    );
+    assert!(r.reached());
+    let d = r.detection.expect("observed mode must report detection stats");
+    assert_eq!(d.emitted_slowdowns, 0, "{d:?}");
+    assert_eq!(d.emitted_recovers, 0, "{d:?}");
+    assert_eq!(d.false_slowdowns, 0, "{d:?}");
+    assert_eq!(d.missed, 0, "{d:?}");
+    assert!(r.rows.iter().all(|row| row.detected == 0));
+}
+
+/// The detector also rides along in the spot preset, where membership
+/// churn (oracle) interleaves with hidden throttle warnings: the run must
+/// stay healthy and emit no false alarms for the unaffected nodes.
+#[test]
+fn observed_mode_survives_membership_churn() {
+    let c = cluster::cluster_a();
+    let w = workload::cifar10();
+    let trace = elastic::spot_instance(&c, 20_000, 7);
+    let mut sys =
+        CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+    let r = elastic::run_scenario(
+        &c,
+        &w,
+        &trace,
+        &mut sys,
+        &cfg_mode(7, DetectionMode::Observed),
+    );
+    assert!(r.reached(), "cannikin must reach the target under observed spot churn");
+    assert!(r.events_hidden >= 1, "spot throttle warnings are hidden");
+    let d = r.detection.expect("observed mode must report detection stats");
+    assert!(d.clean(), "no false alarms under churn: {d:?}");
 }

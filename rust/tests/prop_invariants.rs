@@ -3,12 +3,14 @@
 //! substitute for proptest, see util::prop).
 
 use cannikin::baselines::{even_split, System};
-use cannikin::cluster::random_cluster;
+use cannikin::cluster::{random_cluster, DeviceProfile};
 use cannikin::coordinator::{BatchPolicy, CannikinPlanner};
+use cannikin::elastic::{ChurnTrace, ClusterEvent, ElasticCluster, TimedEvent};
 use cannikin::gns;
 use cannikin::optperf;
 use cannikin::perfmodel::ClusterModel;
 use cannikin::simulator::{workload, ClusterSim};
+use cannikin::util::json::Json;
 use cannikin::util::prop::{check, close, ensure};
 use cannikin::util::rng::Rng;
 
@@ -205,6 +207,139 @@ fn prop_even_split_is_fair_and_exact() {
             let max = *s.iter().max().unwrap();
             let min = *s.iter().min().unwrap();
             ensure(max - min <= 1, "balance")
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// elastic: churn-trace JSON round-trips + membership state integrity
+// ---------------------------------------------------------------------------
+
+fn random_device(rng: &mut Rng) -> DeviceProfile {
+    DeviceProfile::new(
+        ["A100", "V100", "RTX6000", "oddball-η"][rng.below(4) as usize],
+        0.05 + rng.f64() * 5.0,
+        1.0 + rng.f64() * 80.0,
+        rng.f64() * 0.2,
+        rng.f64() * 0.05,
+    )
+}
+
+/// Factors deliberately include extremes the membership layer would
+/// reject — serialization must preserve them verbatim regardless.
+fn random_factor(rng: &mut Rng) -> f64 {
+    match rng.below(7) {
+        0 => 1e-12,
+        1 => 1e-6,
+        2 => 4.0,
+        3 => 1e9,
+        4 => 12345.678901,
+        5 => 1.0,
+        _ => rng.f64() * 4.0,
+    }
+}
+
+fn random_trace(rng: &mut Rng) -> ChurnTrace {
+    let n_ev = rng.below(14) as usize;
+    let mut events = Vec::new();
+    for _ in 0..n_ev {
+        // epochs intentionally out of order (from_json must sort stably)
+        let epoch = rng.below(10_000) as usize;
+        let node = rng.below(32) as usize;
+        let event = match rng.below(5) {
+            0 => ClusterEvent::NodeJoin {
+                device: random_device(rng),
+                uid: if rng.below(2) == 0 { Some(rng.below(1 << 50)) } else { None },
+            },
+            1 => ClusterEvent::NodeLeave { node },
+            2 => ClusterEvent::Preempt { node },
+            3 => ClusterEvent::SlowDown { node, factor: random_factor(rng) },
+            _ => ClusterEvent::Recover { node },
+        };
+        events.push(TimedEvent { epoch, event });
+    }
+    ChurnTrace { name: format!("fuzz-{}", rng.below(1000)), events }
+}
+
+#[test]
+fn prop_churn_trace_json_roundtrips_across_all_event_kinds() {
+    check(
+        "trace-json-roundtrip",
+        150,
+        |rng| random_trace(rng),
+        |t| {
+            let pretty = t.to_json().to_string_pretty();
+            let back = ChurnTrace::from_json(&Json::parse(&pretty).map_err(|e| e.to_string())?)
+                .map_err(|e| e.to_string())?;
+            // from_json stably sorts by epoch; compare against the stably
+            // sorted original (same-epoch order is preserved)
+            let mut want = t.clone();
+            want.events.sort_by_key(|e| e.epoch);
+            ensure(back == want, format!("roundtrip mismatch:\n{want:?}\nvs\n{back:?}"))?;
+            ensure(back.counts() == t.counts(), "per-kind counts must survive")?;
+            // serialization is deterministic and idempotent
+            let again = Json::parse(&back.to_json().to_string_pretty())
+                .map_err(|e| e.to_string())?;
+            ensure(
+                ChurnTrace::from_json(&again).map_err(|e| e.to_string())? == want,
+                "second roundtrip must be a fixed point",
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_elastic_membership_never_corrupts_state() {
+    // whatever garbage the event stream throws at it — stale indices,
+    // duplicate uids, invalid factors, attempts to empty the cluster —
+    // the view either applies an event or rejects it atomically
+    check(
+        "elastic-membership-fuzz",
+        60,
+        |rng| {
+            let n = 2 + rng.below(5) as usize;
+            let cluster = random_cluster(rng, n);
+            let seed = rng.next_u64();
+            (cluster, seed)
+        },
+        |(cluster, seed)| {
+            let mut rng = Rng::new(*seed);
+            let mut ec = ElasticCluster::new(cluster);
+            for _ in 0..60 {
+                let n = ec.n();
+                let node = rng.below((n + 2) as u64) as usize; // often stale
+                let ev = match rng.below(5) {
+                    0 => ClusterEvent::NodeJoin {
+                        device: random_device(&mut rng),
+                        uid: if rng.below(3) == 0 { Some(rng.below(8)) } else { None },
+                    },
+                    1 => ClusterEvent::NodeLeave { node },
+                    2 => ClusterEvent::Preempt { node },
+                    3 => ClusterEvent::SlowDown {
+                        node,
+                        factor: rng.f64() * 6.0 - 0.5, // sometimes invalid
+                    },
+                    _ => ClusterEvent::Recover { node },
+                };
+                let _ = ec.apply(&ev); // errors are fine; corruption is not
+                ensure(ec.n() >= 1, "cluster can never empty")?;
+                let spec = ec.spec();
+                ensure(spec.n() == ec.n(), "spec width matches the view")?;
+                ensure(ec.uids().len() == ec.n(), "one uid per node")?;
+                let mut uids = ec.uids().to_vec();
+                uids.sort_unstable();
+                uids.dedup();
+                ensure(uids.len() == ec.n(), "uids stay unique")?;
+                for i in 0..ec.n() {
+                    let f = ec.slow_factor(i);
+                    ensure(f > 0.0 && f <= 4.0, format!("slow factor {f} out of range"))?;
+                    ensure(
+                        spec.nodes[i].device.speed > 0.0,
+                        "effective speeds stay positive",
+                    )?;
+                }
+            }
+            Ok(())
         },
     );
 }
