@@ -1,20 +1,21 @@
 //! Elastic churn demo: train through spot-instance preemptions, re-joins
 //! and silent throttling, and compare Cannikin's warm-started re-planning
-//! against the naive elastic baselines.
+//! against the naive elastic baselines — all built through the system
+//! registry and run through the one unified driver.
 //!
 //!     cargo run --release --example elastic_churn
 
-use cannikin::baselines::{AdaptDl, Ddp};
+use cannikin::api::{self, BuildOptions, SystemRegistry};
 use cannikin::benchkit::Table;
 use cannikin::cluster;
-use cannikin::coordinator::{BatchPolicy, CannikinPlanner};
-use cannikin::elastic::{self, ElasticSystem, ScenarioConfig};
+use cannikin::elastic::{self, ScenarioConfig};
 use cannikin::simulator::workload;
 
 fn main() {
     // paper Table 2's 3-GPU heterogeneous cluster + the CIFAR-10 profile
     let c = cluster::cluster_a();
     let w = workload::cifar10();
+    let reg = SystemRegistry::builtin();
     let cfg = ScenarioConfig { max_epochs: 20_000, seed: 7, ..Default::default() };
 
     // a seeded spot-instance churn trace: throttle → preempt → capacity back
@@ -26,8 +27,9 @@ fn main() {
 
     // run the same scenario under each system
     let mut tbl = Table::new(&["system", "reached", "time-to-target (sim s)", "bootstrap epochs"]);
-    let mut run = |label: &str, sys: &mut dyn ElasticSystem| {
-        let r = elastic::run_scenario(&c, &w, &trace, sys, &cfg);
+    let mut run = |label: &str, name: &str| {
+        let mut sys = reg.build(name, &c, &w, &BuildOptions::default()).unwrap();
+        let r = api::run(&c, &w, &trace, sys.as_mut(), &cfg);
         tbl.row(vec![
             label.to_string(),
             if r.reached() { "yes".to_string() } else { "no".to_string() },
@@ -37,21 +39,10 @@ fn main() {
         r
     };
 
-    let mut warm =
-        CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
-    let r_warm = run("cannikin-elastic", &mut warm);
-    let mut cold = elastic::ColdRestartCannikin::new(
-        c.n(),
-        w.b0,
-        w.b_max,
-        w.n_buckets,
-        BatchPolicy::Adaptive,
-    );
-    let r_cold = run("cannikin-cold-restart", &mut cold);
-    let mut even = AdaptDl::new(c.n(), w.b0, w.b_max, w.n_buckets);
-    let _ = run("naive-even-resplit", &mut even);
-    let mut ddp = Ddp::with_total(c.n(), w.b0);
-    let _ = run("static-ddp", &mut ddp);
+    let r_warm = run("cannikin-elastic", "cannikin");
+    let r_cold = run("cannikin-cold-restart", "cannikin-cold");
+    let _ = run("naive-even-resplit", "adaptdl");
+    let _ = run("static-ddp", "ddp");
 
     tbl.print(&format!("spot churn on {} / {}", c.name, w.name));
     println!(

@@ -1,0 +1,63 @@
+//! The declarative experiment API end-to-end: build an `ExperimentSpec`
+//! programmatically, save/reload it as JSON (the `cannikin run spec.json`
+//! input format), execute it through the system registry and the unified
+//! driver, then serialize the `RunReport` and parse it back — the same
+//! serialization contract the CI smoke job checks via
+//! `cannikin run specs/smoke.json --json | cannikin report -`.
+//!
+//!     cargo run --release --example experiment_spec
+
+use cannikin::api::{compare, run_spec, ExperimentSpec, RunReport, SystemRegistry};
+use cannikin::elastic::DetectionMode;
+use cannikin::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    // 1. describe the experiment declaratively
+    let spec = ExperimentSpec {
+        name: "spot-churn-observed".to_string(),
+        cluster: "a".to_string(),
+        workload: "cifar10".to_string(),
+        system: "cannikin".to_string(),
+        trace: Some("spot".to_string()),
+        detect: DetectionMode::Observed,
+        max_epochs: 20_000,
+        ..Default::default()
+    };
+    println!("spec JSON (what `cannikin run` consumes):\n{}\n", spec.to_json().to_string_pretty());
+
+    // the spec itself round-trips JSON losslessly
+    let spec_back = ExperimentSpec::from_json(&Json::parse(&spec.to_json().to_string_compact())?)?;
+    assert_eq!(spec, spec_back);
+
+    // 2. execute it: registry resolves the system, the unified driver runs
+    let reg = SystemRegistry::builtin();
+    let report = run_spec(&spec, &reg)?;
+    println!("{}", report.summary());
+    if let Some(d) = &report.detection {
+        println!(
+            "detector: {} slowdown(s), {} recover(s), mean latency {:?} epochs",
+            d.emitted_slowdowns,
+            d.emitted_recovers,
+            d.mean_latency()
+        );
+    }
+
+    // 3. the report is machine-readable and parses back losslessly
+    let json = report.to_json().to_string_pretty();
+    let back = RunReport::from_json(&Json::parse(&json)?)?;
+    assert_eq!(report, back, "RunReport JSON round-trip must be lossless");
+    println!("\nRunReport serialized to {} bytes of JSON and parsed back losslessly", json.len());
+
+    // 4. the same spec fans out over a system list (`cannikin compare`)
+    let systems: Vec<String> =
+        ["cannikin", "cannikin-cold", "adaptdl", "ddp"].iter().map(|s| s.to_string()).collect();
+    println!("\ncompare over {:?}:", systems);
+    for r in compare(&spec, &systems, &reg)? {
+        println!(
+            "  {:<14} time-to-target {}",
+            r.system,
+            r.time_to_target.map(|t| format!("{t:.0}s")).unwrap_or_else(|| "-".to_string())
+        );
+    }
+    Ok(())
+}

@@ -3,9 +3,9 @@
 //!
 //!     cargo run --release --example quickstart
 
-use cannikin::baselines::System;
+use cannikin::api::{BuildOptions, SystemRegistry, TrainingSystem as _};
 use cannikin::cluster;
-use cannikin::coordinator::{BatchPolicy, CannikinPlanner};
+use cannikin::coordinator::BatchPolicy;
 use cannikin::optperf;
 use cannikin::simulator::{workload, ClusterSim};
 
@@ -30,8 +30,14 @@ fn main() -> anyhow::Result<()> {
     }
 
     // 2. Cannikin learns it online from noisy per-batch measurements
-    let mut planner =
-        CannikinPlanner::new(cluster.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Fixed(128));
+    // (built through the system registry, like every other driver)
+    let reg = SystemRegistry::builtin();
+    let mut planner = reg.build(
+        "cannikin",
+        &cluster,
+        &w,
+        &BuildOptions::with_policy(BatchPolicy::Fixed(128)),
+    )?;
     let mut sim = ClusterSim::new(&cluster, &w, 0);
     println!("\nonline learning (even split -> OptPerf):");
     for epoch in 0..6 {

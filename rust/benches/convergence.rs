@@ -1,29 +1,28 @@
 //! Bench: Fig. 8 end-to-end — full convergence-time comparison for one
-//! workload (the figure harness row), plus the raw convergence simulator.
+//! workload (the figure harness row), plus the raw unified driver.
+//! Systems come from the registry; runs go through `api::run_static`
+//! (the same `ElasticDriver` path the elastic scenarios use).
 
-use cannikin::baselines::System;
+use cannikin::api::{run_static, BuildOptions, SystemRegistry};
 use cannikin::benchkit::{report, Bencher};
 use cannikin::cluster;
-use cannikin::coordinator::{BatchPolicy, CannikinPlanner};
-use cannikin::figures;
 use cannikin::simulator::workload;
 
 fn main() {
     let b = Bencher::new(1, 5);
     let c = cluster::cluster_b();
     let w = workload::cifar10();
+    let reg = SystemRegistry::builtin();
     let r = b.run("fig8/one-row (cifar10, 4 systems)", || {
-        for mut sys in [
-            Box::new(CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive))
-                as Box<dyn System>,
-        ] {
-            figures::run_system(&c, &w, sys.as_mut(), 2000, 3);
+        for name in ["cannikin", "adaptdl", "lbbsp", "ddp"] {
+            let mut sys = reg.build(name, &c, &w, &BuildOptions::default()).unwrap();
+            run_static(&c, &w, sys.as_mut(), 2000, 3);
         }
     });
     report(&r);
-    let mut sys = CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
-    let r = b.run("run_system/cannikin/cifar10/2000-epochs", || {
-        figures::run_system(&c, &w, &mut sys, 2000, 3)
+    let mut sys = reg.build("cannikin", &c, &w, &BuildOptions::default()).unwrap();
+    let r = b.run("run_static/cannikin/cifar10/2000-epochs", || {
+        run_static(&c, &w, sys.as_mut(), 2000, 3)
     });
     report(&r);
 }

@@ -1,19 +1,20 @@
 //! Bench: elastic time-to-target under the spot-instance churn preset —
-//! cannikin-elastic (warm replan) vs a cold-restart ablation vs the naive
+//! cannikin (warm replan) vs the cold-restart ablation vs the naive
 //! even-re-split baseline vs static DDP, plus the runner's own wall time.
-//! Registered in benchkit (harness = false); rows append to the table the
-//! EXPERIMENTS notes quote.
+//! Systems come from the registry; every run goes through the unified
+//! driver (`api::run`).  Registered in benchkit (harness = false); rows
+//! append to the table the EXPERIMENTS notes quote.
 
-use cannikin::baselines::{AdaptDl, Ddp};
+use cannikin::api::{self, BuildOptions, RunReport, SystemRegistry};
 use cannikin::benchkit::{report, Bencher, Table};
 use cannikin::cluster;
-use cannikin::coordinator::{BatchPolicy, CannikinPlanner};
-use cannikin::elastic::{self, DetectionMode, ElasticSystem, ScenarioConfig, ScenarioReport};
+use cannikin::elastic::{self, DetectionMode, ScenarioConfig};
 use cannikin::simulator::workload;
 
 fn main() {
     let c = cluster::cluster_a();
     let w = workload::cifar10();
+    let reg = SystemRegistry::builtin();
     let cfg = ScenarioConfig { max_epochs: 20_000, seed: 7, ..Default::default() };
     let trace = elastic::spot_instance(&c, cfg.max_epochs, cfg.seed);
     let counts = trace.counts();
@@ -26,8 +27,9 @@ fn main() {
     );
 
     let mut tbl = Table::new(&["system", "time-to-target (sim s)", "bootstrap epochs", "events"]);
-    let mut run = |label: &str, sys: &mut dyn ElasticSystem| -> ScenarioReport {
-        let r = elastic::run_scenario(&c, &w, &trace, sys, &cfg);
+    let mut run = |label: &str, name: &str| -> RunReport {
+        let mut sys = reg.build(name, &c, &w, &BuildOptions::default()).unwrap();
+        let r = api::run(&c, &w, &trace, sys.as_mut(), &cfg);
         tbl.row(vec![
             label.to_string(),
             r.time_to_target.map(|t| format!("{t:.0}")).unwrap_or_else(|| "-".to_string()),
@@ -37,34 +39,18 @@ fn main() {
         r
     };
 
-    let mut warm =
-        CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
-    let r_warm = run("cannikin-elastic (warm replan)", &mut warm);
-    let warm_solves = warm.total_solves;
-
-    let mut cold = elastic::ColdRestartCannikin::new(
-        c.n(),
-        w.b0,
-        w.b_max,
-        w.n_buckets,
-        BatchPolicy::Adaptive,
-    );
-    let r_cold = run("cannikin (cold restart ablation)", &mut cold);
-
-    let mut even = AdaptDl::new(c.n(), w.b0, w.b_max, w.n_buckets);
-    let r_even = run("naive even-re-split", &mut even);
-
-    let mut ddp = Ddp::with_total(c.n(), w.b0);
-    let r_ddp = run("static DDP", &mut ddp);
+    let r_warm = run("cannikin-elastic (warm replan)", "cannikin");
+    let r_cold = run("cannikin (cold restart ablation)", "cannikin-cold");
+    let r_even = run("naive even-re-split", "even");
+    let r_ddp = run("static DDP", "ddp");
 
     tbl.print("Elastic spot-churn, cifar10 on cluster A (lower is better)");
 
     println!(
-        "\nwarm vs cold: bootstrap epochs {} vs {} (strictly fewer: {}), planner solves {}",
+        "\nwarm vs cold: bootstrap epochs {} vs {} (strictly fewer: {})",
         r_warm.bootstrap_epochs,
         r_cold.bootstrap_epochs,
         r_warm.bootstrap_epochs < r_cold.bootstrap_epochs,
-        warm_solves,
     );
     if let (Some(tw), Some(te)) = (r_warm.time_to_target, r_even.time_to_target) {
         println!(
@@ -90,10 +76,9 @@ fn main() {
         "missed",
     ]);
     for mode in [DetectionMode::Oracle, DetectionMode::Observed, DetectionMode::Off] {
-        let mut sys =
-            CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+        let mut sys = reg.build("cannikin", &c, &w, &BuildOptions::default()).unwrap();
         let cfg2 = ScenarioConfig { detect: mode, ..cfg };
-        let r = elastic::run_scenario(&c, &w, &s_trace, &mut sys, &cfg2);
+        let r = api::run(&c, &w, &s_trace, sys.as_mut(), &cfg2);
         let (slow, lat, missed) = match &r.detection {
             Some(d) => (
                 format!("{} ({})", d.emitted_slowdowns, d.false_slowdowns),
@@ -116,18 +101,16 @@ fn main() {
     // wall time of the scenario runner itself (the churn overhead is the
     // quantity a production scheduler would pay per event)
     let b = Bencher::new(1, 5);
-    let r = b.run("elastic/run_scenario/cannikin/spot/20k-epochs", || {
-        let mut sys =
-            CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
-        elastic::run_scenario(&c, &w, &trace, &mut sys, &cfg)
+    let r = b.run("elastic/run/cannikin/spot/20k-epochs", || {
+        let mut sys = reg.build("cannikin", &c, &w, &BuildOptions::default()).unwrap();
+        api::run(&c, &w, &trace, sys.as_mut(), &cfg)
     });
     report(&r);
 
-    let r = b.run("elastic/run_scenario/cannikin/straggler-observed/20k-epochs", || {
-        let mut sys =
-            CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+    let r = b.run("elastic/run/cannikin/straggler-observed/20k-epochs", || {
+        let mut sys = reg.build("cannikin", &c, &w, &BuildOptions::default()).unwrap();
         let cfg2 = ScenarioConfig { detect: DetectionMode::Observed, ..cfg };
-        elastic::run_scenario(&c, &w, &s_trace, &mut sys, &cfg2)
+        api::run(&c, &w, &s_trace, sys.as_mut(), &cfg2)
     });
     report(&r);
 }

@@ -1,0 +1,112 @@
+//! The unified experiment API: one trait, one registry, one declarative
+//! spec, one report.
+//!
+//! The paper's core claim is a *comparison* — Cannikin vs. AdaptDL /
+//! LB-BSP / DDP across clusters, workloads and churn traces — and this
+//! module is the single programmatic surface for describing and running
+//! such comparisons:
+//!
+//! * [`TrainingSystem`] — the one trait every system implements.  It
+//!   merges the old `baselines::System` (plan / observe) with the old
+//!   `elastic::ElasticSystem` (membership-change hooks): the elastic hooks
+//!   have default no-op implementations, so a purely static system is just
+//!   a `TrainingSystem` that ignores cluster changes, and a static sim is
+//!   an elastic run with an empty trace.
+//! * [`SystemRegistry`] — the **only** place systems are constructed (a
+//!   grep-enforced test in `rust/tests/api_contract.rs` keeps it that
+//!   way).  Every builder receives the same `(&ClusterSpec, &Workload,
+//!   &BuildOptions)` triple and applies memory caps / batch policy
+//!   uniformly, which is what fixed the historical `sim`-vs-`elastic`
+//!   caps inconsistency: the CLI, the figure harness, the benches and the
+//!   real-numerics leader all construct through it, so a new system plugs
+//!   in once and every driver picks it up.
+//! * [`ExperimentSpec`] — a declarative description of one run (cluster +
+//!   workload + system + trace + detection mode + policy + seed +
+//!   horizon) that round-trips JSON via `util::json`.  `cannikin run
+//!   spec.json` executes one, `cannikin compare spec.json --systems …`
+//!   executes a batch of them over a system list.
+//! * [`RunReport`] — the one machine-readable result (epoch rows, time to
+//!   target, event/detection accounting) with lossless JSON
+//!   serialization; `--json` on `sim` / `elastic` / `run` emits it, and
+//!   `cannikin report` parses it back.
+//!
+//! Execution itself is a single path: [`run`] (=
+//! [`crate::elastic::run_scenario`]) drives any [`TrainingSystem`]
+//! through the `ElasticDriver` — event application, straggler detection,
+//! convergence integration — and [`run_static`] is the same run with an
+//! empty trace.  The former `figures::run_system` is gone; the figure
+//! harness, the `sim` subcommand and the elastic scenarios now share one
+//! driver, so their semantics can never drift (eventless `elastic` and
+//! `sim` agree bit-for-bit).
+
+pub mod registry;
+pub mod report;
+pub mod spec;
+
+pub use registry::{BuildOptions, SystemRegistry};
+pub use report::{EpochRow, RunReport};
+pub use spec::{compare, run_spec, ExperimentSpec};
+
+use crate::baselines::Plan;
+use crate::cluster::ClusterSpec;
+use crate::elastic::{ChurnTrace, MembershipDelta, ScenarioConfig};
+use crate::simulator::{NodeBatchObs, Workload};
+
+/// Re-exported single execution path: drive a [`TrainingSystem`] through a
+/// churn trace to the workload's target metric (see
+/// [`crate::elastic::scenario`]).  A static sim is the same call with an
+/// empty trace — use [`run_static`] for that.
+pub use crate::elastic::scenario::run_scenario as run;
+
+/// A data-parallel training system under evaluation.
+///
+/// Per epoch the driver calls [`plan_epoch`](TrainingSystem::plan_epoch)
+/// (decide the batch configuration), measures it, then
+/// [`observe_epoch`](TrainingSystem::observe_epoch) (feed back the
+/// measurements).  Under an elastic run the driver additionally calls
+/// [`on_cluster_change`](TrainingSystem::on_cluster_change) at every
+/// epoch boundary whose membership/health delta is visible to the system.
+/// The elastic hooks default to no-ops, so a static system implements
+/// only the planning pair.
+pub trait TrainingSystem {
+    fn name(&self) -> &'static str;
+
+    /// Decide the next epoch's configuration.  `phi` is the current
+    /// gradient noise scale (systems that don't adapt ignore it).
+    fn plan_epoch(&mut self, epoch: usize, phi: f64) -> Plan;
+
+    /// Feed back per-node measurements and the observed batch time.
+    fn observe_epoch(&mut self, obs: &[NodeBatchObs], t_batch: f64);
+
+    /// Called at the epoch boundary right after `delta` was applied.
+    /// `spec` is the post-event cluster view and `caps` the per-node
+    /// memory caps (same node order).  Default: ignore the change (a
+    /// static system keeps planning for its original node count — the
+    /// driver will surface the mismatch, so genuinely elastic systems
+    /// must override this).
+    fn on_cluster_change(&mut self, _delta: &MembershipDelta, _spec: &ClusterSpec, _caps: &[u64]) {}
+
+    /// Eq. 8 bootstrap epochs issued so far (warm-vs-cold accounting);
+    /// systems without a bootstrap phase report 0.
+    fn bootstrap_epochs(&self) -> usize {
+        0
+    }
+}
+
+/// Run a system on a *static* cluster: the unified driver with an empty
+/// trace.  Replaces the former `figures::run_system` — same plan /
+/// measure / observe loop, same reps, but one code path with the elastic
+/// scenarios (the clock charges scheduler overhead as 0 so runs are
+/// bit-identical across invocations; planner wall time is still
+/// accumulated planner-side for the Table 5 accounting).
+pub fn run_static(
+    cluster: &ClusterSpec,
+    w: &Workload,
+    system: &mut dyn TrainingSystem,
+    max_epochs: usize,
+    seed: u64,
+) -> RunReport {
+    let trace = ChurnTrace::new("static");
+    let cfg = ScenarioConfig { max_epochs, seed, ..Default::default() };
+    run(cluster, w, &trace, system, &cfg)
+}

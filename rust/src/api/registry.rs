@@ -1,0 +1,292 @@
+//! [`SystemRegistry`] — the single construction point for training
+//! systems.
+//!
+//! Every caller that needs a system (CLI subcommands, the figure harness,
+//! the benches, the real-numerics leader, the e2e tests) resolves a name
+//! here and gets a `Box<dyn TrainingSystem>` built from the same
+//! `(&ClusterSpec, &Workload, &BuildOptions)` triple.  That uniformity is
+//! the point: the batch policy and, for every system that plans per-node
+//! allocations, the per-node memory caps ([`Workload::max_local_batch`])
+//! are applied identically on every path — historically the `sim`
+//! subcommand silently dropped the caps that `elastic` wired, which this
+//! design makes impossible.  A test in `rust/tests/api_contract.rs`
+//! grep-enforces that no production code constructs a system directly.
+
+use anyhow::{anyhow, Result};
+
+use crate::api::TrainingSystem;
+use crate::baselines::{AdaptDl, Ddp, LbBsp};
+use crate::cluster::ClusterSpec;
+use crate::coordinator::planner::{BatchPolicy, CannikinPlanner};
+use crate::elastic::ColdRestartCannikin;
+use crate::simulator::Workload;
+use crate::util::text::suggest;
+
+/// Knobs a caller may vary without touching the builders themselves.
+#[derive(Clone, Copy, Debug)]
+pub struct BuildOptions {
+    /// total-batch policy.  For the fixed-total baselines (LB-BSP / DDP)
+    /// `Fixed(b)` also sets their total; `Adaptive` leaves them at the
+    /// workload's B₀ (the paper's §5.1 setting).
+    pub policy: BatchPolicy,
+    /// apply per-node memory caps from [`Workload::max_local_batch`] to
+    /// systems that plan per-node allocations (the Cannikin planners).
+    /// The even-split / iterative baselines have no caps concept — their
+    /// builders ignore this knob.  Disable only for controlled
+    /// experiments on the uncapped planner.
+    pub apply_caps: bool,
+    /// override the workload's B₀ (e.g. the leader clamps it to the AOT
+    /// artifact's bucket capacity)
+    pub b0: Option<u64>,
+    /// override the workload's b_max (same use)
+    pub b_max: Option<u64>,
+}
+
+impl Default for BuildOptions {
+    fn default() -> Self {
+        BuildOptions { policy: BatchPolicy::Adaptive, apply_caps: true, b0: None, b_max: None }
+    }
+}
+
+impl BuildOptions {
+    pub fn with_policy(policy: BatchPolicy) -> Self {
+        BuildOptions { policy, ..Default::default() }
+    }
+
+    fn b0(&self, w: &Workload) -> u64 {
+        self.b0.unwrap_or(w.b0)
+    }
+
+    fn b_max(&self, w: &Workload) -> u64 {
+        self.b_max.unwrap_or(w.b_max)
+    }
+
+    /// Total batch for the fixed-total baselines (honors the `b0`
+    /// override, so e.g. the leader's AOT bucket-capacity clamp applies
+    /// to LB-BSP/DDP exactly as it does to the adaptive systems).
+    fn fixed_total(&self, w: &Workload) -> u64 {
+        match self.policy {
+            BatchPolicy::Fixed(b) => b,
+            BatchPolicy::Adaptive => self.b0(w),
+        }
+    }
+
+    fn caps(&self, c: &ClusterSpec, w: &Workload) -> Vec<u64> {
+        if self.apply_caps {
+            c.nodes.iter().map(|n| w.max_local_batch(n)).collect()
+        } else {
+            vec![u64::MAX; c.n()]
+        }
+    }
+}
+
+type Builder = Box<dyn Fn(&ClusterSpec, &Workload, &BuildOptions) -> Box<dyn TrainingSystem>>;
+
+struct Entry {
+    name: &'static str,
+    aliases: &'static [&'static str],
+    summary: &'static str,
+    build: Builder,
+}
+
+/// Name → builder table; see the module docs.
+pub struct SystemRegistry {
+    entries: Vec<Entry>,
+}
+
+impl SystemRegistry {
+    /// An empty registry (for callers composing their own system set).
+    pub fn empty() -> Self {
+        SystemRegistry { entries: Vec::new() }
+    }
+
+    /// The built-in systems the paper compares (§5.1) plus the elastic
+    /// ablation:
+    ///
+    /// * `cannikin` — the §4 planner (warm replan under churn)
+    /// * `cannikin-cold` — cold-restart ablation (fresh planner per event)
+    /// * `adaptdl` (alias `even`) — goodput-adaptive total, even split
+    /// * `lbbsp` — fixed total, Δ-bounded iterative local tuning
+    /// * `ddp` — fixed total, even split
+    pub fn builtin() -> Self {
+        let mut r = SystemRegistry::empty();
+        r.register(
+            "cannikin",
+            &[],
+            "Cannikin planner: learned per-node models + OptPerf + goodput (warm replan)",
+            |c, w, o| {
+                Box::new(
+                    CannikinPlanner::new(c.n(), o.b0(w), o.b_max(w), w.n_buckets, o.policy)
+                        .with_caps(o.caps(c, w)),
+                )
+            },
+        );
+        r.register(
+            "cannikin-cold",
+            &[],
+            "Cannikin ablation: cold-restarts the planner after every cluster change",
+            |c, w, o| {
+                Box::new(
+                    ColdRestartCannikin::new(c.n(), o.b0(w), o.b_max(w), w.n_buckets, o.policy)
+                        .with_caps(o.caps(c, w)),
+                )
+            },
+        );
+        r.register(
+            "adaptdl",
+            &["even"],
+            "AdaptDL/Pollux-like: goodput-adaptive total batch, even split",
+            |c, w, o| Box::new(AdaptDl::new(c.n(), o.b0(w), o.b_max(w), w.n_buckets)),
+        );
+        r.register(
+            "lbbsp",
+            &[],
+            "LB-BSP: fixed total batch, per-node batches tuned iteratively (Δ=5)",
+            |c, w, o| Box::new(LbBsp::new(c.n(), o.fixed_total(w), 5)),
+        );
+        r.register(
+            "ddp",
+            &[],
+            "PyTorch-DDP-like: fixed total batch, even split",
+            |c, w, o| Box::new(Ddp::with_total(c.n(), o.fixed_total(w))),
+        );
+        r
+    }
+
+    /// Register a system under `name` (+ optional aliases).  Later
+    /// registrations win on name collision, so callers can shadow a
+    /// built-in with an experimental variant.
+    pub fn register(
+        &mut self,
+        name: &'static str,
+        aliases: &'static [&'static str],
+        summary: &'static str,
+        build: impl Fn(&ClusterSpec, &Workload, &BuildOptions) -> Box<dyn TrainingSystem> + 'static,
+    ) {
+        self.entries.retain(|e| e.name != name);
+        self.entries.push(Entry { name, aliases, summary, build: Box::new(build) });
+    }
+
+    /// Canonical names, sorted (aliases not included).
+    pub fn names(&self) -> Vec<&'static str> {
+        let mut ns: Vec<&'static str> = self.entries.iter().map(|e| e.name).collect();
+        ns.sort_unstable();
+        ns
+    }
+
+    fn resolve(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .iter()
+            .rev() // later registrations win
+            .find(|e| e.name == name || e.aliases.contains(&name))
+            .ok_or_else(|| {
+                let hint = suggest(name, self.entries.iter().map(|e| e.name))
+                    .map(|s| format!(" (did you mean {s:?}?)"))
+                    .unwrap_or_default();
+                anyhow!(
+                    "unknown system {name:?}{hint}; known systems: {}",
+                    self.names().join(", ")
+                )
+            })
+    }
+
+    /// Fail-fast name check (same error as [`Self::build`]) without
+    /// constructing anything — batch callers validate every name before
+    /// spending minutes on the first run.
+    pub fn check(&self, name: &str) -> Result<()> {
+        self.resolve(name).map(|_| ())
+    }
+
+    /// Build `name` for the given cluster/workload.  Unknown names error
+    /// with a typo suggestion and the full list.
+    pub fn build(
+        &self,
+        name: &str,
+        cluster: &ClusterSpec,
+        workload: &Workload,
+        opts: &BuildOptions,
+    ) -> Result<Box<dyn TrainingSystem>> {
+        let entry = self.resolve(name)?;
+        Ok((entry.build)(cluster, workload, opts))
+    }
+
+    /// Human-readable enumeration (the `--system help` output).
+    pub fn help(&self) -> String {
+        let mut entries: Vec<&Entry> = self.entries.iter().collect();
+        entries.sort_unstable_by_key(|e| e.name);
+        let mut out = String::from("registered training systems:\n");
+        for e in entries {
+            let alias = if e.aliases.is_empty() {
+                String::new()
+            } else {
+                format!(" (alias {})", e.aliases.join(", "))
+            };
+            out.push_str(&format!("  {:<14}{alias} — {}\n", e.name, e.summary));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster;
+    use crate::simulator::workload;
+
+    #[test]
+    fn builtin_builds_every_name_and_alias() {
+        let reg = SystemRegistry::builtin();
+        let c = cluster::cluster_a();
+        let w = workload::cifar10();
+        assert_eq!(reg.names(), vec!["adaptdl", "cannikin", "cannikin-cold", "ddp", "lbbsp"]);
+        for name in reg.names() {
+            let sys = reg.build(name, &c, &w, &BuildOptions::default()).unwrap();
+            assert!(!sys.name().is_empty());
+        }
+        // the elastic CLI's historical alias
+        let sys = reg.build("even", &c, &w, &BuildOptions::default()).unwrap();
+        assert_eq!(sys.name(), "adaptdl");
+    }
+
+    #[test]
+    fn unknown_name_errors_with_suggestion() {
+        let reg = SystemRegistry::builtin();
+        let c = cluster::cluster_a();
+        let w = workload::cifar10();
+        let err = reg.build("canikin", &c, &w, &BuildOptions::default()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("did you mean"), "{msg}");
+        assert!(msg.contains("cannikin"), "{msg}");
+        // the constructor-free fail-fast check agrees with build
+        assert!(reg.check("canikin").is_err());
+        assert!(reg.check("even").is_ok(), "aliases must pass the check");
+    }
+
+    #[test]
+    fn fixed_policy_sets_the_baselines_total() {
+        let reg = SystemRegistry::builtin();
+        let c = cluster::cluster_a();
+        let w = workload::cifar10();
+        for name in ["lbbsp", "ddp", "cannikin"] {
+            let mut sys = reg
+                .build(name, &c, &w, &BuildOptions::with_policy(BatchPolicy::Fixed(128)))
+                .unwrap();
+            let plan = sys.plan_epoch(0, 0.0);
+            assert_eq!(plan.total, 128, "{name}");
+            assert_eq!(plan.local.iter().sum::<u64>(), 128, "{name}");
+        }
+    }
+
+    #[test]
+    fn later_registration_shadows_builtin() {
+        let mut reg = SystemRegistry::builtin();
+        reg.register("ddp", &[], "shadowed", |c, w, o| {
+            Box::new(Ddp::with_total(c.n(), o.fixed_total(w) * 2))
+        });
+        let c = cluster::cluster_a();
+        let w = workload::cifar10();
+        let mut sys = reg.build("ddp", &c, &w, &BuildOptions::default()).unwrap();
+        assert_eq!(sys.plan_epoch(0, 0.0).total, w.b0 * 2);
+        assert_eq!(reg.names().len(), 5, "shadowing must not duplicate names");
+    }
+}

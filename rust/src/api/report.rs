@@ -1,0 +1,312 @@
+//! [`RunReport`] — the one machine-readable result type every execution
+//! path emits.
+//!
+//! It subsumes what used to be two divergent shapes: the elastic runner's
+//! `ScenarioReport` and the figure harness's raw epoch rows.  A static sim
+//! is just an elastic run with an empty trace, so the event/detection
+//! fields are simply zero/`None` there.  The real-numerics trainer keeps
+//! its own [`crate::coordinator::TrainReport`] (per-step losses, real
+//! wall time); `RunReport` is the *simulated* counterpart and shares the
+//! same detection accounting type.
+//!
+//! Serialization is lossless: [`RunReport::to_json`] followed by
+//! [`RunReport::from_json`] reproduces the report exactly (`f64`s round
+//! trip through Rust's shortest-representation `Display`; integers are
+//! exact below 2^53, the JSON substrate's `f64` mantissa).  The
+//! `cannikin run … --json | cannikin report -` CI smoke and the property
+//! tests in `rust/tests/api_contract.rs` guard this contract.
+
+use anyhow::Result;
+
+use crate::elastic::{DetectionMode, DetectionStats};
+use crate::util::json::Json;
+
+/// One epoch of a run: the convergence stats plus the elastic view.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EpochRow {
+    pub epoch: usize,
+    pub n_nodes: usize,
+    pub total_batch: u64,
+    pub t_batch: f64,
+    pub wall_secs: f64,
+    pub progress: f64,
+    pub metric: f64,
+    /// trace events applied at this epoch's boundary
+    pub events: usize,
+    /// detector-synthesized events routed to the system this epoch
+    pub detected: usize,
+}
+
+/// Full result of one experiment run (any system, any trace, any mode).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunReport {
+    pub system: String,
+    pub cluster: String,
+    pub workload: String,
+    /// churn trace name (`"static"` for an eventless run)
+    pub trace: String,
+    pub seed: u64,
+    pub max_epochs: usize,
+    pub detect: DetectionMode,
+    pub rows: Vec<EpochRow>,
+    pub time_to_target: Option<f64>,
+    pub events_applied: usize,
+    /// applied events that were concealed from the system (Observed/Off)
+    pub events_hidden: usize,
+    /// events rejected by the membership manager (e.g. would empty the
+    /// cluster) — skipped, never fatal
+    pub events_skipped: usize,
+    pub bootstrap_epochs: usize,
+    pub final_n: usize,
+    /// detection accounting (Some iff a detector ran)
+    pub detection: Option<DetectionStats>,
+}
+
+impl RunReport {
+    pub fn reached(&self) -> bool {
+        self.time_to_target.is_some()
+    }
+
+    /// Index of the epoch in which the target was crossed.
+    pub fn epochs_to_target(&self) -> Option<usize> {
+        let t = self.time_to_target?;
+        self.rows.iter().find(|r| r.wall_secs >= t).map(|r| r.epoch)
+    }
+
+    /// One-line human summary (the `report` subcommand's headline).
+    pub fn summary(&self) -> String {
+        let outcome = match self.time_to_target {
+            Some(t) => format!("reached target in {t:.0} sim s"),
+            None => format!("did not reach target within {} epochs", self.max_epochs),
+        };
+        format!(
+            "{} on {}/{} trace {:?} [detect={}]: {} epochs, {outcome}; \
+             {} events applied ({} hidden, {} skipped), final n={}, bootstrap epochs {}",
+            self.system,
+            self.cluster,
+            self.workload,
+            self.trace,
+            self.detect.name(),
+            self.rows.len(),
+            self.events_applied,
+            self.events_hidden,
+            self.events_skipped,
+            self.final_n,
+            self.bootstrap_epochs,
+        )
+    }
+
+    // ------------------------------------------------------------- JSON
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("system", Json::Str(self.system.clone())),
+            ("cluster", Json::Str(self.cluster.clone())),
+            ("workload", Json::Str(self.workload.clone())),
+            ("trace", Json::Str(self.trace.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("max_epochs", Json::Num(self.max_epochs as f64)),
+            ("detect", Json::Str(self.detect.name().to_string())),
+            ("rows", Json::Arr(self.rows.iter().map(row_to_json).collect())),
+            (
+                "time_to_target",
+                self.time_to_target.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("events_applied", Json::Num(self.events_applied as f64)),
+            ("events_hidden", Json::Num(self.events_hidden as f64)),
+            ("events_skipped", Json::Num(self.events_skipped as f64)),
+            ("bootstrap_epochs", Json::Num(self.bootstrap_epochs as f64)),
+            ("final_n", Json::Num(self.final_n as f64)),
+            (
+                "detection",
+                self.detection.as_ref().map(detection_to_json).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunReport> {
+        let detect_name = j.req("detect")?.as_str()?;
+        let detect = DetectionMode::by_name(detect_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown detection mode {detect_name:?}"))?;
+        let rows = j
+            .req("rows")?
+            .as_arr()?
+            .iter()
+            .map(row_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let time_to_target = match j.req("time_to_target")? {
+            Json::Null => None,
+            other => Some(other.as_f64()?),
+        };
+        let detection = match j.req("detection")? {
+            Json::Null => None,
+            other => Some(detection_from_json(other)?),
+        };
+        Ok(RunReport {
+            system: j.req("system")?.as_str()?.to_string(),
+            cluster: j.req("cluster")?.as_str()?.to_string(),
+            workload: j.req("workload")?.as_str()?.to_string(),
+            trace: j.req("trace")?.as_str()?.to_string(),
+            seed: j.req("seed")?.as_u64()?,
+            max_epochs: j.req("max_epochs")?.as_usize()?,
+            detect,
+            rows,
+            time_to_target,
+            events_applied: j.req("events_applied")?.as_usize()?,
+            events_hidden: j.req("events_hidden")?.as_usize()?,
+            events_skipped: j.req("events_skipped")?.as_usize()?,
+            bootstrap_epochs: j.req("bootstrap_epochs")?.as_usize()?,
+            final_n: j.req("final_n")?.as_usize()?,
+            detection,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .map_err(|e| anyhow::anyhow!("writing report {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<RunReport> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+}
+
+fn row_to_json(r: &EpochRow) -> Json {
+    Json::obj(vec![
+        ("epoch", Json::Num(r.epoch as f64)),
+        ("n_nodes", Json::Num(r.n_nodes as f64)),
+        ("total_batch", Json::Num(r.total_batch as f64)),
+        ("t_batch", Json::Num(r.t_batch)),
+        ("wall_secs", Json::Num(r.wall_secs)),
+        ("progress", Json::Num(r.progress)),
+        ("metric", Json::Num(r.metric)),
+        ("events", Json::Num(r.events as f64)),
+        ("detected", Json::Num(r.detected as f64)),
+    ])
+}
+
+fn row_from_json(j: &Json) -> Result<EpochRow> {
+    Ok(EpochRow {
+        epoch: j.req("epoch")?.as_usize()?,
+        n_nodes: j.req("n_nodes")?.as_usize()?,
+        total_batch: j.req("total_batch")?.as_u64()?,
+        t_batch: j.req("t_batch")?.as_f64()?,
+        wall_secs: j.req("wall_secs")?.as_f64()?,
+        progress: j.req("progress")?.as_f64()?,
+        metric: j.req("metric")?.as_f64()?,
+        events: j.req("events")?.as_usize()?,
+        detected: j.req("detected")?.as_usize()?,
+    })
+}
+
+fn detection_to_json(d: &DetectionStats) -> Json {
+    Json::obj(vec![
+        ("emitted_slowdowns", Json::Num(d.emitted_slowdowns as f64)),
+        ("emitted_recovers", Json::Num(d.emitted_recovers as f64)),
+        ("false_slowdowns", Json::Num(d.false_slowdowns as f64)),
+        ("false_recovers", Json::Num(d.false_recovers as f64)),
+        (
+            "latencies",
+            Json::Arr(d.latencies.iter().map(|&l| Json::Num(l as f64)).collect()),
+        ),
+        ("missed", Json::Num(d.missed as f64)),
+    ])
+}
+
+fn detection_from_json(j: &Json) -> Result<DetectionStats> {
+    Ok(DetectionStats {
+        emitted_slowdowns: j.req("emitted_slowdowns")?.as_usize()?,
+        emitted_recovers: j.req("emitted_recovers")?.as_usize()?,
+        false_slowdowns: j.req("false_slowdowns")?.as_usize()?,
+        false_recovers: j.req("false_recovers")?.as_usize()?,
+        latencies: j
+            .req("latencies")?
+            .as_arr()?
+            .iter()
+            .map(|l| l.as_usize())
+            .collect::<Result<Vec<_>>>()?,
+        missed: j.req("missed")?.as_usize()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunReport {
+        RunReport {
+            system: "cannikin".into(),
+            cluster: "cluster-a".into(),
+            workload: "cifar10".into(),
+            trace: "spot".into(),
+            seed: 7,
+            max_epochs: 100,
+            detect: DetectionMode::Observed,
+            rows: vec![
+                EpochRow {
+                    epoch: 0,
+                    n_nodes: 3,
+                    total_batch: 64,
+                    t_batch: 0.123456789012345,
+                    wall_secs: 96.5,
+                    progress: 12.25,
+                    metric: 1.0 / 3.0,
+                    events: 1,
+                    detected: 0,
+                },
+                EpochRow {
+                    epoch: 1,
+                    n_nodes: 2,
+                    total_batch: 256,
+                    t_batch: 1e-7,
+                    wall_secs: 1.5e8,
+                    progress: 0.0,
+                    metric: 93.999999,
+                    events: 0,
+                    detected: 2,
+                },
+            ],
+            time_to_target: Some(1234.5678),
+            events_applied: 3,
+            events_hidden: 1,
+            events_skipped: 0,
+            bootstrap_epochs: 2,
+            final_n: 2,
+            detection: Some(DetectionStats {
+                emitted_slowdowns: 2,
+                emitted_recovers: 1,
+                false_slowdowns: 0,
+                false_recovers: 0,
+                latencies: vec![3, 5],
+                missed: 1,
+            }),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let r = sample();
+        let pretty = r.to_json().to_string_pretty();
+        let back = RunReport::from_json(&Json::parse(&pretty).unwrap()).unwrap();
+        assert_eq!(r, back);
+        let compact = r.to_json().to_string_compact();
+        let back2 = RunReport::from_json(&Json::parse(&compact).unwrap()).unwrap();
+        assert_eq!(r, back2);
+    }
+
+    #[test]
+    fn null_fields_roundtrip() {
+        let mut r = sample();
+        r.time_to_target = None;
+        r.detection = None;
+        let back = RunReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(r, back);
+        assert!(!back.reached());
+    }
+
+    #[test]
+    fn epochs_to_target_finds_crossing_row() {
+        let r = sample();
+        assert_eq!(r.epochs_to_target(), Some(1));
+    }
+}

@@ -1,0 +1,361 @@
+//! [`ExperimentSpec`] — a declarative, JSON-round-trippable description of
+//! one experiment, and the batch/compare entry points over it.
+//!
+//! The spec names *what* to run; resolution to concrete objects happens at
+//! execution time: `cluster` / `trace` values ending in `.json` load from
+//! that file, anything else resolves through the preset tables
+//! ([`crate::cluster::by_name`], [`crate::elastic::preset`]).  `policy`
+//! serializes as the string `"adaptive"` or a plain number (the fixed
+//! total batch).  Numeric fields ride on the JSON substrate's `f64`, so
+//! values round-trip exactly below 2^53 (seeds and epoch counts in
+//! practice).
+//!
+//! ```json
+//! { "name": "smoke", "cluster": "a", "workload": "cifar10",
+//!   "system": "cannikin", "trace": "spot", "detect": "observed",
+//!   "policy": "adaptive", "seed": 7, "max_epochs": 400, "reps": 3 }
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::api::registry::{BuildOptions, SystemRegistry};
+use crate::api::report::RunReport;
+use crate::cluster::{self, ClusterSpec};
+use crate::coordinator::planner::BatchPolicy;
+use crate::elastic::{self, ChurnTrace, DetectionMode, ScenarioConfig};
+use crate::simulator::{workload, Workload};
+use crate::util::json::Json;
+use crate::util::text::suggest;
+
+/// One experiment, declaratively.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentSpec {
+    /// free-form label (reports echo it via the trace/cluster names)
+    pub name: String,
+    /// cluster preset (`a` / `b` / `c`) or a cluster-config `*.json` path
+    pub cluster: String,
+    /// workload name (`imagenet` / `cifar10` / `librispeech` / `squad` /
+    /// `movielens`)
+    pub workload: String,
+    /// system name resolved through the [`SystemRegistry`]
+    pub system: String,
+    /// churn trace: preset (`spot` / `maintenance` / `straggler`) or a
+    /// saved `*.json` path; `None` runs a static cluster
+    pub trace: Option<String>,
+    pub detect: DetectionMode,
+    pub policy: BatchPolicy,
+    pub seed: u64,
+    /// epoch horizon (the run stops here if the target is not reached)
+    pub max_epochs: usize,
+    /// simulated batches averaged per epoch
+    pub reps: usize,
+}
+
+impl Default for ExperimentSpec {
+    fn default() -> Self {
+        ExperimentSpec {
+            name: "experiment".to_string(),
+            cluster: "a".to_string(),
+            workload: "cifar10".to_string(),
+            system: "cannikin".to_string(),
+            trace: None,
+            detect: DetectionMode::Oracle,
+            policy: BatchPolicy::Adaptive,
+            seed: 7,
+            max_epochs: 4000,
+            reps: 3,
+        }
+    }
+}
+
+impl ExperimentSpec {
+    // ------------------------------------------------------------- JSON
+
+    pub fn to_json(&self) -> Json {
+        let policy = match self.policy {
+            BatchPolicy::Adaptive => Json::Str("adaptive".to_string()),
+            BatchPolicy::Fixed(b) => Json::Num(b as f64),
+        };
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("cluster", Json::Str(self.cluster.clone())),
+            ("workload", Json::Str(self.workload.clone())),
+            ("system", Json::Str(self.system.clone())),
+            (
+                "trace",
+                self.trace.as_ref().map(|t| Json::Str(t.clone())).unwrap_or(Json::Null),
+            ),
+            ("detect", Json::Str(self.detect.name().to_string())),
+            ("policy", policy),
+            ("seed", Json::Num(self.seed as f64)),
+            ("max_epochs", Json::Num(self.max_epochs as f64)),
+            ("reps", Json::Num(self.reps as f64)),
+        ])
+    }
+
+    /// Parse a spec.  `cluster`, `workload` and `system` are required;
+    /// everything else falls back to [`ExperimentSpec::default`].
+    /// Unknown keys error with a typo suggestion — a misspelled
+    /// `"max_epoch"` must not silently run the default horizon (the same
+    /// failure mode the CLI's flag validation exists to prevent).
+    pub fn from_json(j: &Json) -> Result<ExperimentSpec> {
+        const KEYS: [&str; 10] = [
+            "name", "cluster", "workload", "system", "trace", "detect", "policy", "seed",
+            "max_epochs", "reps",
+        ];
+        for key in j.as_obj()?.keys() {
+            if !KEYS.contains(&key.as_str()) {
+                let hint = suggest(key, KEYS)
+                    .map(|s| format!(" (did you mean {s:?}?)"))
+                    .unwrap_or_default();
+                bail!("unknown spec key {key:?}{hint}; known keys: {}", KEYS.join(", "));
+            }
+        }
+        let d = ExperimentSpec::default();
+        let opt_str = |key: &str| -> Result<Option<String>> {
+            match j.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(v) => Ok(Some(v.as_str()?.to_string())),
+            }
+        };
+        let detect = match opt_str("detect")? {
+            Some(name) => DetectionMode::by_name(&name)
+                .ok_or_else(|| anyhow!("unknown detection mode {name:?} (oracle|observed|off)"))?,
+            None => d.detect,
+        };
+        let policy = match j.get("policy") {
+            None | Some(Json::Null) => d.policy,
+            Some(Json::Str(s)) if s == "adaptive" => BatchPolicy::Adaptive,
+            Some(Json::Num(_)) => BatchPolicy::Fixed(j.req("policy")?.as_u64()?),
+            Some(other) => bail!("bad policy {other:?} (\"adaptive\" or a fixed total batch)"),
+        };
+        let spec = ExperimentSpec {
+            name: opt_str("name")?.unwrap_or(d.name),
+            cluster: j.req("cluster")?.as_str()?.to_string(),
+            workload: j.req("workload")?.as_str()?.to_string(),
+            system: j.req("system")?.as_str()?.to_string(),
+            trace: opt_str("trace")?,
+            detect,
+            policy,
+            seed: j.get("seed").map(|s| s.as_u64()).transpose()?.unwrap_or(d.seed),
+            max_epochs: j
+                .get("max_epochs")
+                .map(|s| s.as_usize())
+                .transpose()?
+                .unwrap_or(d.max_epochs),
+            reps: j.get("reps").map(|s| s.as_usize()).transpose()?.unwrap_or(d.reps),
+        };
+        if spec.max_epochs == 0 {
+            bail!("max_epochs must be >= 1");
+        }
+        if spec.reps == 0 {
+            bail!("reps must be >= 1");
+        }
+        if spec.policy == BatchPolicy::Fixed(0) {
+            bail!("policy: a fixed total batch must be >= 1");
+        }
+        Ok(spec)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .map_err(|e| anyhow!("writing spec {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ExperimentSpec> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+
+    // -------------------------------------------------------- resolution
+
+    pub fn resolve_cluster(&self) -> Result<ClusterSpec> {
+        resolve_cluster_name(&self.cluster)
+    }
+
+    pub fn resolve_workload(&self) -> Result<Workload> {
+        workload::by_name(&self.workload)
+            .ok_or_else(|| anyhow!("unknown workload {:?}", self.workload))
+    }
+
+    /// Resolve the trace against a concrete cluster (presets are generated
+    /// for this cluster / horizon / seed).  `None` → the empty trace.
+    pub fn resolve_trace(&self, c: &ClusterSpec) -> Result<ChurnTrace> {
+        match &self.trace {
+            None => Ok(ChurnTrace::new("static")),
+            Some(spec) if spec.ends_with(".json") => {
+                ChurnTrace::load(std::path::Path::new(spec))
+            }
+            Some(spec) => elastic::preset(spec, c, self.max_epochs, self.seed).ok_or_else(|| {
+                anyhow!("unknown trace {spec:?} (spot|maintenance|straggler|FILE.json)")
+            }),
+        }
+    }
+
+    /// The scenario knobs this spec pins down.
+    pub fn scenario_config(&self) -> ScenarioConfig {
+        ScenarioConfig {
+            max_epochs: self.max_epochs,
+            seed: self.seed,
+            reps: self.reps,
+            detect: self.detect,
+            ..Default::default()
+        }
+    }
+}
+
+/// `"a" | "b" | "c"` preset, or a cluster-config `*.json` path.
+pub fn resolve_cluster_name(name: &str) -> Result<ClusterSpec> {
+    if name.ends_with(".json") {
+        return ClusterSpec::from_json_file(std::path::Path::new(name));
+    }
+    cluster::by_name(name).ok_or_else(|| anyhow!("unknown cluster {name:?} (a|b|c|FILE.json)"))
+}
+
+/// Execute one spec through the registry: resolve, build, run the unified
+/// driver, return the report.
+pub fn run_spec(spec: &ExperimentSpec, registry: &SystemRegistry) -> Result<RunReport> {
+    let c = spec.resolve_cluster()?;
+    let w = spec.resolve_workload()?;
+    let trace = spec.resolve_trace(&c)?;
+    let opts = BuildOptions { policy: spec.policy, ..Default::default() };
+    let mut system = registry.build(&spec.system, &c, &w, &opts)?;
+    Ok(crate::api::run(&c, &w, &trace, system.as_mut(), &spec.scenario_config()))
+}
+
+/// Batch execution: the same spec once per system in `systems` (every
+/// other knob — cluster, workload, trace, seed — held fixed, which is the
+/// paper's comparison methodology).  Reports come back in input order.
+pub fn compare(
+    spec: &ExperimentSpec,
+    systems: &[String],
+    registry: &SystemRegistry,
+) -> Result<Vec<RunReport>> {
+    if systems.is_empty() {
+        bail!("compare needs at least one system");
+    }
+    // fail fast: a typo in the last name must not discard finished runs
+    for s in systems {
+        registry.check(s)?;
+    }
+    systems
+        .iter()
+        .map(|s| {
+            let one = ExperimentSpec { system: s.clone(), ..spec.clone() };
+            run_spec(&one, registry)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_all_fields() {
+        let spec = ExperimentSpec {
+            name: "weird \"name\"\nwith escapes".to_string(),
+            cluster: "b".to_string(),
+            workload: "squad".to_string(),
+            system: "lbbsp".to_string(),
+            trace: Some("maintenance".to_string()),
+            detect: DetectionMode::Off,
+            policy: BatchPolicy::Fixed(4096),
+            seed: 123_456_789,
+            max_epochs: 777,
+            reps: 5,
+        };
+        let back = ExperimentSpec::from_json(&Json::parse(
+            &spec.to_json().to_string_pretty(),
+        )
+        .unwrap())
+        .unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn missing_optionals_take_defaults() {
+        let j = Json::parse(r#"{"cluster":"a","workload":"cifar10","system":"ddp"}"#).unwrap();
+        let spec = ExperimentSpec::from_json(&j).unwrap();
+        let d = ExperimentSpec::default();
+        assert_eq!(spec.trace, None);
+        assert_eq!(spec.detect, d.detect);
+        assert_eq!(spec.policy, d.policy);
+        assert_eq!(spec.seed, d.seed);
+        assert_eq!(spec.max_epochs, d.max_epochs);
+    }
+
+    #[test]
+    fn rejects_bad_fields() {
+        for src in [
+            r#"{"workload":"cifar10","system":"ddp"}"#,
+            r#"{"cluster":"a","workload":"cifar10","system":"ddp","detect":"psychic"}"#,
+            r#"{"cluster":"a","workload":"cifar10","system":"ddp","policy":true}"#,
+            r#"{"cluster":"a","workload":"cifar10","system":"ddp","policy":0}"#,
+            r#"{"cluster":"a","workload":"cifar10","system":"ddp","max_epochs":0}"#,
+        ] {
+            assert!(ExperimentSpec::from_json(&Json::parse(src).unwrap()).is_err(), "{src}");
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_keys_with_a_suggestion() {
+        let src = r#"{"cluster":"a","workload":"cifar10","system":"ddp","max_epoch":400}"#;
+        let err = ExperimentSpec::from_json(&Json::parse(src).unwrap()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("max_epoch"), "{msg}");
+        assert!(msg.contains("max_epochs"), "{msg}");
+    }
+
+    #[test]
+    fn resolution_catches_unknown_names() {
+        let mut spec = ExperimentSpec { workload: "pong".into(), ..Default::default() };
+        assert!(spec.resolve_workload().is_err());
+        spec.workload = "cifar10".into();
+        spec.cluster = "z".into();
+        assert!(spec.resolve_cluster().is_err());
+        spec.cluster = "a".into();
+        spec.trace = Some("blackout".into());
+        let c = spec.resolve_cluster().unwrap();
+        assert!(spec.resolve_trace(&c).is_err());
+    }
+
+    #[test]
+    fn run_spec_executes_end_to_end() {
+        let spec = ExperimentSpec {
+            trace: Some("spot".to_string()),
+            max_epochs: 60,
+            ..Default::default()
+        };
+        let reg = SystemRegistry::builtin();
+        let r = run_spec(&spec, &reg).unwrap();
+        assert_eq!(r.rows.len(), 60, "60-epoch horizon, target unreachable that fast");
+        assert_eq!(r.system, "cannikin");
+        assert_eq!(r.trace, "spot");
+        assert!(r.events_applied >= 1);
+    }
+
+    #[test]
+    fn compare_fails_fast_on_a_bad_name_before_running_anything() {
+        // a huge horizon would take minutes if any run started
+        let spec = ExperimentSpec { max_epochs: 10_000_000, ..Default::default() };
+        let reg = SystemRegistry::builtin();
+        let systems = vec!["cannikin".to_string(), "lbsp".to_string()];
+        let err = compare(&spec, &systems, &reg).unwrap_err();
+        assert!(format!("{err:#}").contains("lbsp"), "{err:#}");
+    }
+
+    #[test]
+    fn compare_holds_everything_but_the_system_fixed() {
+        let spec = ExperimentSpec { max_epochs: 40, ..Default::default() };
+        let reg = SystemRegistry::builtin();
+        let systems = vec!["ddp".to_string(), "lbbsp".to_string()];
+        let rs = compare(&spec, &systems, &reg).unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].system, "pytorch-ddp");
+        assert_eq!(rs[1].system, "lb-bsp");
+        for r in &rs {
+            assert_eq!(r.cluster, "cluster-a");
+            assert_eq!(r.seed, spec.seed);
+        }
+    }
+}

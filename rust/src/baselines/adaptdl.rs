@@ -6,7 +6,10 @@
 //! gain over DDP is total-batch adaptivity; none comes from fixing the
 //! heterogeneity-induced straggling.
 
-use super::{even_split, Plan, System};
+use super::{even_split, Plan};
+use crate::api::TrainingSystem;
+use crate::cluster::ClusterSpec;
+use crate::elastic::MembershipDelta;
 use crate::goodput;
 use crate::optperf;
 use crate::perfmodel::{ClusterModel, CommLearner, ComputeLearner, ComputeObs, GammaEstimator};
@@ -84,9 +87,15 @@ impl AdaptDl {
     }
 }
 
-impl System for AdaptDl {
+impl TrainingSystem for AdaptDl {
     fn name(&self) -> &'static str {
         "adaptdl"
+    }
+
+    /// Naive even-re-split elastic mode: on any change, throw the learned
+    /// state away and re-learn from scratch over the new (even-split) view.
+    fn on_cluster_change(&mut self, _delta: &MembershipDelta, spec: &ClusterSpec, _caps: &[u64]) {
+        self.reset_membership(spec.n());
     }
 
     fn plan_epoch(&mut self, _epoch: usize, phi: f64) -> Plan {

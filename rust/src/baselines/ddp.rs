@@ -3,7 +3,10 @@
 //! heterogeneous cluster is pure straggling: every batch runs at the
 //! slowest node's pace (paper Fig. 8's worst performer).
 
-use super::{even_split, Plan, System};
+use super::{even_split, Plan};
+use crate::api::TrainingSystem;
+use crate::cluster::ClusterSpec;
+use crate::elastic::MembershipDelta;
 use crate::simulator::NodeBatchObs;
 
 pub struct Ddp {
@@ -29,9 +32,15 @@ impl Ddp {
     }
 }
 
-impl System for Ddp {
+impl TrainingSystem for Ddp {
     fn name(&self) -> &'static str {
         "pytorch-ddp"
+    }
+
+    /// Static DDP: fixed total batch, even re-split over whatever nodes
+    /// remain.
+    fn on_cluster_change(&mut self, _delta: &MembershipDelta, spec: &ClusterSpec, _caps: &[u64]) {
+        self.set_n_nodes(spec.n());
     }
 
     fn plan_epoch(&mut self, _epoch: usize, _phi: f64) -> Plan {

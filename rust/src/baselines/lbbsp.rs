@@ -6,7 +6,9 @@
 //! compute/communication overlap, so its fixed point is OptPerf-suboptimal
 //! whenever communication matters (paper Fig. 10).
 
-use super::{even_split, Plan, System};
+use super::{even_split, Plan};
+use crate::api::TrainingSystem;
+use crate::cluster::ClusterSpec;
 use crate::elastic::MembershipDelta;
 use crate::simulator::NodeBatchObs;
 use crate::util::round_preserving_sum;
@@ -85,9 +87,21 @@ impl LbBsp {
     }
 }
 
-impl System for LbBsp {
+impl TrainingSystem for LbBsp {
     fn name(&self) -> &'static str {
         "lb-bsp"
+    }
+
+    /// LB-BSP elastic mode: departed shares are dropped and redistributed,
+    /// newcomers start at the mean share.  Degradation deltas are
+    /// deliberately ignored: the per-epoch throughput measurements already
+    /// reflect the slowdown and rebalance the split within a few Δ-bounded
+    /// steps — wiping them would disable the only adaptation signal LB-BSP
+    /// has.
+    fn on_cluster_change(&mut self, delta: &MembershipDelta, spec: &ClusterSpec, _caps: &[u64]) {
+        if delta.membership_changed() {
+            self.apply_membership(delta, spec.n());
+        }
     }
 
     fn plan_epoch(&mut self, _epoch: usize, _phi: f64) -> Plan {
@@ -187,7 +201,7 @@ mod tests {
         assert!(*sys.current.last().unwrap() >= 1);
         // renormalization is idempotent: re-applying an empty membership
         // change leaves the split untouched (degrade-only deltas never
-        // even reach this method — the ElasticSystem impl filters them so
+        // even reach this method — `on_cluster_change` filters them so
         // the throughput measurements survive)
         let delta = MembershipDelta { removed: vec![], added: 0, degraded: vec![0] };
         let before = sys.current.clone();

@@ -1,5 +1,7 @@
-//! Baseline training systems (paper §5.1) + the trait Cannikin shares with
-//! them so the figure harness can drive all four identically.
+//! Baseline training systems (paper §5.1).  All of them — and Cannikin —
+//! implement the one [`crate::api::TrainingSystem`] trait and are
+//! constructed exclusively through the [`crate::api::SystemRegistry`], so
+//! every driver (figures, CLI, benches, leader) runs all four identically.
 //!
 //! * [`ddp`] — PyTorch-DistributedDataParallel-like: fixed total batch,
 //!   even split across nodes.
@@ -16,8 +18,6 @@ pub use adaptdl::AdaptDl;
 pub use ddp::Ddp;
 pub use lbbsp::LbBsp;
 
-use crate::simulator::NodeBatchObs;
-
 /// One epoch's plan from a training system.
 #[derive(Clone, Debug)]
 pub struct Plan {
@@ -33,19 +33,6 @@ impl Plan {
     pub fn local_f64(&self) -> Vec<f64> {
         self.local.iter().map(|&b| b as f64).collect()
     }
-}
-
-/// A data-parallel training system under evaluation: plans each epoch's
-/// batch configuration and learns from the resulting measurements.
-pub trait System {
-    fn name(&self) -> &'static str;
-
-    /// Decide the next epoch's configuration.  `phi` is the current
-    /// gradient noise scale (systems that don't adapt ignore it).
-    fn plan_epoch(&mut self, epoch: usize, phi: f64) -> Plan;
-
-    /// Feed back per-node measurements and the observed batch time.
-    fn observe_epoch(&mut self, obs: &[NodeBatchObs], t_batch: f64);
 }
 
 /// Split `total` across `n` nodes as evenly as possible (DDP semantics).

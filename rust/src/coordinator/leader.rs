@@ -17,10 +17,10 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
-use crate::baselines::System;
+use crate::api::{BuildOptions, SystemRegistry, TrainingSystem as _};
 use crate::cluster::ClusterSpec;
 use crate::coordinator::dataloader::HeteroDataLoader;
-use crate::coordinator::planner::{BatchPolicy, CannikinPlanner};
+use crate::coordinator::planner::BatchPolicy;
 use crate::data::{synth_corpus, Sampler};
 use crate::elastic::{ChurnTrace, DetectionMode, DetectionStats, DetectorConfig, ElasticDriver};
 use crate::gns::{estimate_round, GnsTracker};
@@ -42,6 +42,10 @@ pub struct TrainConfig {
     pub seed: u64,
     pub corpus_bytes: usize,
     pub policy: BatchPolicy,
+    /// training system driving the batch configuration, resolved through
+    /// the [`SystemRegistry`] (default `"cannikin"`; the baselines run on
+    /// the real-numerics path too)
+    pub system: String,
     /// churn trace applied at epoch boundaries (elastic training); the
     /// leader re-splits data, re-weights the Eq. 9 ratios, and warm-replans
     /// after every applied event
@@ -68,6 +72,7 @@ impl TrainConfig {
             seed: 0,
             corpus_bytes: 64 * 1024,
             policy: BatchPolicy::Adaptive,
+            system: "cannikin".to_string(),
             trace: None,
             detect: DetectionMode::Oracle,
             log_path: None,
@@ -128,21 +133,18 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let flat_len: usize = manifest.params.iter().map(|p| p.numel()).sum();
     let grad_buckets = Buckets::new(flat_len, cfg.workload.n_buckets);
 
-    // planner + simulated clock
-    let caps: Vec<u64> = cfg
-        .cluster
-        .nodes
-        .iter()
-        .map(|node| cfg.workload.max_local_batch(node))
-        .collect();
-    let mut planner = CannikinPlanner::new(
-        n,
-        cfg.workload.b0.min(biggest_bucket as u64 * n as u64),
-        (biggest_bucket * n) as u64,
-        cfg.workload.n_buckets,
-        cfg.policy,
-    )
-    .with_caps(caps);
+    // planner + simulated clock.  The system comes from the registry like
+    // everywhere else (caps applied uniformly); only the batch grid is
+    // clamped to what the AOT artifact's buckets can physically hold.
+    let b_max = (biggest_bucket * n) as u64;
+    let opts = BuildOptions {
+        policy: cfg.policy,
+        b0: Some(cfg.workload.b0.min(b_max)),
+        b_max: Some(b_max),
+        ..Default::default()
+    };
+    let mut planner =
+        SystemRegistry::builtin().build(&cfg.system, &cfg.cluster, &cfg.workload, &opts)?;
     let mut sim = ClusterSim::new(&cfg.cluster, &cfg.workload, cfg.seed);
     // event + detection plumbing, shared with the scenario runner so the
     // two paths can never drift (an empty trace makes it a no-op)
@@ -175,7 +177,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         // changed).  Hidden degradation events mutate the simulated clock
         // but not the planner; the detector recovers them below.
         {
-            let out = driver.boundary(epoch, &mut planner);
+            let out = driver.boundary(epoch, planner.as_mut());
             if let Some(s) = out.new_sim {
                 sim = s;
             }
@@ -189,7 +191,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 }
             }
         }
-        let n = planner.n_nodes();
+        let n = driver.n();
         let phi = gns.b_noise().unwrap_or(cfg.workload.phi0);
         let plan = planner.plan_epoch(epoch, phi);
         let total: u64 = plan.local.iter().sum();
@@ -307,7 +309,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         // ---- observation-driven detection closes the epoch: synthesized
         // SlowDown/Recover events warm-replan the planner exactly like
         // oracle ones would
-        let detected = driver.end_epoch(epoch, &mut planner);
+        let detected = driver.end_epoch(epoch, planner.as_mut());
         if cfg.verbose && detected > 0 {
             println!("elastic: detector flagged {detected} event(s) at epoch {epoch}");
         }

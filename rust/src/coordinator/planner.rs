@@ -1,4 +1,5 @@
-//! The Cannikin planner — the paper's §4 workflow as a [`System`]:
+//! The Cannikin planner — the paper's §4 workflow as a
+//! [`TrainingSystem`]:
 //!
 //! * epochs 0–1: Eq. 8 bootstrap (inverse per-sample-time allocation)
 //!   while varying the total batch so the per-node linear models become
@@ -17,7 +18,9 @@
 
 use std::time::Instant;
 
-use crate::baselines::{even_split, Plan, System};
+use crate::api::TrainingSystem;
+use crate::baselines::{even_split, Plan};
+use crate::cluster::ClusterSpec;
 use crate::elastic::MembershipDelta;
 use crate::goodput;
 use crate::optperf::{self, Allocation, OverlapState};
@@ -281,7 +284,7 @@ impl CannikinPlanner {
     }
 }
 
-impl System for CannikinPlanner {
+impl TrainingSystem for CannikinPlanner {
     fn name(&self) -> &'static str {
         "cannikin"
     }
@@ -303,6 +306,17 @@ impl System for CannikinPlanner {
                 self.comm.observe(o.t_comm_obs);
             }
         }
+    }
+
+    /// Warm-started re-planning: survivors keep their learned models, the
+    /// §4.5 table re-seeds from cached overlap states (see
+    /// [`CannikinPlanner::replan`]).
+    fn on_cluster_change(&mut self, delta: &MembershipDelta, _spec: &ClusterSpec, caps: &[u64]) {
+        self.replan(delta, caps);
+    }
+
+    fn bootstrap_epochs(&self) -> usize {
+        self.bootstrap_epochs
     }
 }
 

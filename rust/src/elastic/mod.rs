@@ -25,13 +25,15 @@
 //!   recover margin well below the detection threshold — hysteresis, so
 //!   transient noise cannot thrash the planner.  Detection quality
 //!   (latency per hidden event, false positives, misses) is reported in
-//!   [`ScenarioReport::detection`].
-//! * [`scenario`] — the [`ElasticSystem`] trait (how a training system
-//!   reacts to a delta), the [`ElasticDriver`] (event + detection plumbing
+//!   [`crate::api::RunReport::detection`].
+//! * [`scenario`] — the [`ElasticDriver`] (event + detection plumbing
 //!   shared by [`run_scenario`] and the real-numerics leader),
 //!   [`run_scenario`] itself (a convergence run with the trace applied at
-//!   epoch boundaries, bit-identical under a fixed seed), and the
-//!   [`ColdRestartCannikin`] ablation.
+//!   epoch boundaries, bit-identical under a fixed seed — the unified
+//!   execution path behind [`crate::api::run`] /
+//!   [`crate::api::run_static`]), and the [`ColdRestartCannikin`]
+//!   ablation.  How a system reacts to a delta is the
+//!   [`crate::api::TrainingSystem::on_cluster_change`] hook.
 //!
 //! The warm-replan path itself lives on
 //! [`CannikinPlanner::replan`](crate::coordinator::CannikinPlanner::replan):
@@ -54,6 +56,5 @@ pub use events::{
 };
 pub use membership::{ElasticCluster, MembershipDelta};
 pub use scenario::{
-    run_scenario, BoundaryOutcome, ColdRestartCannikin, ElasticDriver, ElasticSystem, EpochRow,
-    ScenarioConfig, ScenarioReport,
+    run_scenario, BoundaryOutcome, ColdRestartCannikin, ElasticDriver, ScenarioConfig,
 };

@@ -1,12 +1,17 @@
 //! Elastic scenario runner: drives a training system through a convergence
 //! run while a [`ChurnTrace`] mutates the cluster underneath it.
 //!
-//! Per epoch boundary: due events apply to the [`ElasticCluster`], the
-//! system is notified (so it can warm-replan or cold-restart), the timing
-//! simulator is rebuilt for the new node set, then the epoch proceeds as in
-//! [`crate::figures::run_system`] — plan, measure, observe, integrate
-//! convergence progress.  Everything is seeded: with the same seed the full
-//! run (epochs, batches, events, simulated times) is bit-identical.
+//! This is the crate's **single execution path** (exposed as
+//! [`crate::api::run`]): per epoch boundary, due events apply to the
+//! [`ElasticCluster`], the system is notified through its
+//! [`TrainingSystem::on_cluster_change`] hook (so it can warm-replan or
+//! cold-restart), the timing simulator is rebuilt for the new node set,
+//! then the epoch proceeds — plan, measure, observe, integrate convergence
+//! progress.  A *static* sim ([`crate::api::run_static`], the `sim`
+//! subcommand, the figure harness) is exactly this run with an empty
+//! trace, so the two can never disagree.  Everything is seeded: with the
+//! same seed the full run (epochs, batches, events, simulated times) is
+//! bit-identical.
 //!
 //! The [`ElasticDriver`] owns the event/detection plumbing and is shared
 //! with the real-numerics leader, so event semantics and counting can never
@@ -18,7 +23,8 @@
 //! Membership events (join / leave / preempt) stay oracle in every mode —
 //! membership is observable in practice, silent degradation is not.
 
-use crate::baselines::{AdaptDl, Ddp, LbBsp, Plan, System};
+use crate::api::{EpochRow, RunReport, TrainingSystem};
+use crate::baselines::Plan;
 use crate::cluster::ClusterSpec;
 use crate::coordinator::planner::{BatchPolicy, CannikinPlanner};
 use crate::elastic::detect::{
@@ -28,60 +34,6 @@ use crate::elastic::events::{ChurnTrace, ClusterEvent};
 use crate::elastic::membership::{ElasticCluster, MembershipDelta};
 use crate::figures::target_value;
 use crate::simulator::{convergence, ClusterSim, NodeBatchObs, Workload};
-
-/// A training system that can survive cluster membership changes.
-pub trait ElasticSystem: System {
-    /// Called at the epoch boundary right after `delta` was applied.
-    /// `spec` is the post-event cluster view and `caps` the per-node
-    /// memory caps (same node order).
-    fn on_cluster_change(&mut self, delta: &MembershipDelta, spec: &ClusterSpec, caps: &[u64]);
-
-    /// Eq. 8 bootstrap epochs issued so far (warm-vs-cold accounting);
-    /// systems without a bootstrap phase report 0.
-    fn bootstrap_epochs(&self) -> usize {
-        0
-    }
-}
-
-/// Cannikin with warm-started re-planning: survivors keep their learned
-/// models, the §4.5 table re-seeds from cached overlap states.
-impl ElasticSystem for CannikinPlanner {
-    fn on_cluster_change(&mut self, delta: &MembershipDelta, _spec: &ClusterSpec, caps: &[u64]) {
-        self.replan(delta, caps);
-    }
-
-    fn bootstrap_epochs(&self) -> usize {
-        self.bootstrap_epochs
-    }
-}
-
-/// Naive even-re-split elastic mode: on any change, throw the learned
-/// state away and re-learn from scratch over the new (even-split) view.
-impl ElasticSystem for AdaptDl {
-    fn on_cluster_change(&mut self, _delta: &MembershipDelta, spec: &ClusterSpec, _caps: &[u64]) {
-        self.reset_membership(spec.n());
-    }
-}
-
-/// Static DDP: fixed total batch, even re-split over whatever nodes remain.
-impl ElasticSystem for Ddp {
-    fn on_cluster_change(&mut self, _delta: &MembershipDelta, spec: &ClusterSpec, _caps: &[u64]) {
-        self.set_n_nodes(spec.n());
-    }
-}
-
-/// LB-BSP elastic mode: departed shares are dropped and redistributed,
-/// newcomers start at the mean share.  Degradation deltas are deliberately
-/// ignored: the per-epoch throughput measurements already reflect the
-/// slowdown and rebalance the split within a few Δ-bounded steps — wiping
-/// them would disable the only adaptation signal LB-BSP has.
-impl ElasticSystem for LbBsp {
-    fn on_cluster_change(&mut self, delta: &MembershipDelta, spec: &ClusterSpec, _caps: &[u64]) {
-        if delta.membership_changed() {
-            self.apply_membership(delta, spec.n());
-        }
-    }
-}
 
 /// Ablation baseline for the warm-start claim: a Cannikin planner that
 /// **cold-restarts** (fresh learners, fresh table, Eq. 8 bootstrap from
@@ -130,7 +82,7 @@ impl ColdRestartCannikin {
     }
 }
 
-impl System for ColdRestartCannikin {
+impl TrainingSystem for ColdRestartCannikin {
     fn name(&self) -> &'static str {
         "cannikin-cold"
     }
@@ -144,9 +96,7 @@ impl System for ColdRestartCannikin {
     fn observe_epoch(&mut self, obs: &[NodeBatchObs], t_batch: f64) {
         self.inner.observe_epoch(obs, t_batch);
     }
-}
 
-impl ElasticSystem for ColdRestartCannikin {
     fn on_cluster_change(&mut self, _delta: &MembershipDelta, spec: &ClusterSpec, caps: &[u64]) {
         self.bootstrap_carry += self.inner.bootstrap_epochs;
         self.solves_carry += self.inner.total_solves;
@@ -256,7 +206,7 @@ impl<'a> ElasticDriver<'a> {
     /// ground truth and notifying `system` of the *visible* ones.  Each
     /// effective event rebuilds the timing simulator with a distinct
     /// deterministic seed.
-    pub fn boundary(&mut self, epoch: usize, system: &mut dyn ElasticSystem) -> BoundaryOutcome {
+    pub fn boundary(&mut self, epoch: usize, system: &mut dyn TrainingSystem) -> BoundaryOutcome {
         let mut out = BoundaryOutcome {
             changed: Vec::new(),
             hidden: 0,
@@ -354,7 +304,7 @@ impl<'a> ElasticDriver<'a> {
     /// deltas (the physical cluster is *not* touched — the events are
     /// belief updates, the truth already changed at the hidden boundary).
     /// Returns the number of synthesized events.
-    pub fn end_epoch(&mut self, epoch: usize, system: &mut dyn ElasticSystem) -> usize {
+    pub fn end_epoch(&mut self, epoch: usize, system: &mut dyn TrainingSystem) -> usize {
         let Some(det) = &mut self.detector else {
             return 0;
         };
@@ -411,7 +361,7 @@ impl<'a> ElasticDriver<'a> {
 pub struct ScenarioConfig {
     pub max_epochs: usize,
     pub seed: u64,
-    /// simulated batches averaged per epoch (as in `figures::run_system`)
+    /// simulated batches averaged per epoch
     pub reps: usize,
     /// how the trace's degradation events reach the system (see
     /// [`DetectionMode`])
@@ -432,61 +382,18 @@ impl Default for ScenarioConfig {
     }
 }
 
-/// One epoch of an elastic run (the convergence stats + the elastic view).
-#[derive(Clone, Copy, Debug)]
-pub struct EpochRow {
-    pub epoch: usize,
-    pub n_nodes: usize,
-    pub total_batch: u64,
-    pub t_batch: f64,
-    pub wall_secs: f64,
-    pub progress: f64,
-    pub metric: f64,
-    /// trace events applied at this epoch's boundary
-    pub events: usize,
-    /// detector-synthesized events routed to the system this epoch
-    pub detected: usize,
-}
-
-/// Full elastic-run result.
-#[derive(Clone, Debug)]
-pub struct ScenarioReport {
-    pub system: String,
-    pub rows: Vec<EpochRow>,
-    pub time_to_target: Option<f64>,
-    pub events_applied: usize,
-    /// applied events that were concealed from the system (Observed/Off)
-    pub events_hidden: usize,
-    /// events rejected by the membership manager (e.g. would empty the
-    /// cluster) — skipped, never fatal
-    pub events_skipped: usize,
-    pub bootstrap_epochs: usize,
-    pub final_n: usize,
-    /// detection accounting (Some iff a detector ran)
-    pub detection: Option<DetectionStats>,
-}
-
-impl ScenarioReport {
-    pub fn reached(&self) -> bool {
-        self.time_to_target.is_some()
-    }
-
-    /// Index of the epoch in which the target was crossed.
-    pub fn epochs_to_target(&self) -> Option<usize> {
-        let t = self.time_to_target?;
-        self.rows.iter().find(|r| r.wall_secs >= t).map(|r| r.epoch)
-    }
-}
-
 /// Run one system through `trace` on top of `base`, to the workload's
-/// target metric or `cfg.max_epochs`.  Deterministic in `cfg.seed`.
+/// target metric or `cfg.max_epochs`.  Deterministic in `cfg.seed`.  This
+/// is the unified execution path behind [`crate::api::run`] /
+/// [`crate::api::run_static`]; the result is the crate-wide
+/// [`RunReport`].
 pub fn run_scenario(
     base: &ClusterSpec,
     w: &Workload,
     trace: &ChurnTrace,
-    system: &mut dyn ElasticSystem,
+    system: &mut dyn TrainingSystem,
     cfg: &ScenarioConfig,
-) -> ScenarioReport {
+) -> RunReport {
     let mut driver = ElasticDriver::new(base, w, trace, cfg.detect, cfg.detector, cfg.seed);
     let mut sim = ClusterSim::new(&driver.spec(), w, cfg.seed);
     // (n_nodes, boundary events, detected events) per epoch
@@ -500,7 +407,7 @@ pub fn run_scenario(
             sim = s;
         }
 
-        // ---- plan / measure / observe, as in figures::run_system
+        // ---- plan / measure / observe
         let plan = system.plan_epoch(epoch, phi);
         let mut t_mean = 0.0;
         for _ in 0..cfg.reps.max(1) {
@@ -538,8 +445,14 @@ pub fn run_scenario(
         .collect();
 
     let final_n = driver.n();
-    ScenarioReport {
+    RunReport {
         system: system.name().to_string(),
+        cluster: base.name.clone(),
+        workload: w.name.to_string(),
+        trace: trace.name.clone(),
+        seed: cfg.seed,
+        max_epochs: cfg.max_epochs,
+        detect: cfg.detect,
         rows,
         time_to_target: result.time_to_target,
         events_applied: driver.events_applied,

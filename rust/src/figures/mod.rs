@@ -2,16 +2,23 @@
 //! (§5, §6).  Each `fig*` function prints the rows/series the paper
 //! reports and writes a CSV under `results/`.  See DESIGN.md's
 //! per-experiment index and EXPERIMENTS.md for paper-vs-measured notes.
+//!
+//! Systems are constructed exclusively through the
+//! [`crate::api::SystemRegistry`] and every convergence run goes through
+//! the unified driver ([`crate::api::run_static`] — the same
+//! `ElasticDriver` path the elastic scenarios use, with an empty trace),
+//! so the figures are bit-reproducible and can never drift from the CLI
+//! or bench semantics.
 
 use anyhow::Result;
 
-use crate::baselines::{AdaptDl, Ddp, LbBsp, System};
+use crate::api::{run_static, BuildOptions, SystemRegistry, TrainingSystem};
 use crate::benchkit::Table;
 use crate::cluster::{self, ClusterSpec};
-use crate::coordinator::planner::{BatchPolicy, CannikinPlanner};
+use crate::coordinator::planner::BatchPolicy;
 use crate::metrics::{results_dir, write_csv};
 use crate::optperf;
-use crate::simulator::{convergence, workload, ClusterSim, Workload};
+use crate::simulator::{workload, ClusterSim, Workload};
 
 /// Target metric values per workload (Table 4's "Target" column).
 pub fn target_value(w: &Workload) -> f64 {
@@ -25,42 +32,20 @@ pub fn target_value(w: &Workload) -> f64 {
     }
 }
 
-/// Drive one system through a full convergence run on a simulated cluster.
-/// Each epoch: the system plans, the timing simulator measures `reps`
-/// batches with the plan, the system observes, and the convergence model
-/// integrates progress.
-pub fn run_system(
-    cluster: &ClusterSpec,
-    w: &Workload,
-    system: &mut dyn System,
-    max_epochs: usize,
-    seed: u64,
-) -> convergence::RunResult {
-    let mut sim = ClusterSim::new(cluster, w, seed);
-    let reps = 3;
-    convergence::run(w, target_value(w), max_epochs, |epoch, phi| {
-        let plan = system.plan_epoch(epoch, phi);
-        let mut t_mean = 0.0;
-        for _ in 0..reps {
-            let out = sim.step(&plan.local_f64());
-            t_mean += out.t_batch;
-            system.observe_epoch(&out.per_node, out.t_batch);
-        }
-        (plan.total, t_mean / reps as f64, plan.overhead)
-    })
-}
-
-fn make_systems(cluster: &ClusterSpec, w: &Workload) -> Vec<Box<dyn System>> {
-    let n = cluster.n();
-    vec![
-        Box::new(CannikinPlanner::new(n, w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive)),
-        Box::new(AdaptDl::new(n, w.b0, w.b_max, w.n_buckets)),
-        // paper §5.1: the fixed-batch baselines train at the user's
-        // original total batch size B0 (Table 4) — this is precisely what
-        // costs them in the convergence experiments ("up to 85%/82%")
-        Box::new(LbBsp::new(n, w.b0, 5)),
-        Box::new(Ddp::with_total(n, w.b0)),
-    ]
+/// The paper's §5.1 line-up, registry-built.  The fixed-batch baselines
+/// (LB-BSP, DDP) train at the user's original total batch size B₀
+/// (Table 4) — `BuildOptions::default()` is `Adaptive`, which pins them
+/// there; this is precisely what costs them in the convergence
+/// experiments ("up to 85%/82%").
+fn make_systems(cluster: &ClusterSpec, w: &Workload) -> Vec<Box<dyn TrainingSystem>> {
+    let reg = SystemRegistry::builtin();
+    ["cannikin", "adaptdl", "lbbsp", "ddp"]
+        .iter()
+        .map(|name| {
+            reg.build(name, cluster, w, &BuildOptions::default())
+                .expect("builtin system")
+        })
+        .collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -72,13 +57,14 @@ pub fn fig5() -> Result<()> {
     let w = workload::cifar10();
     let mut rows = Vec::new();
     let mut tbl = Table::new(&["epoch", "cannikin B", "adaptdl B", "cannikin acc", "adaptdl acc"]);
-    let mut cank = CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
-    let mut adap = AdaptDl::new(c.n(), w.b0, w.b_max, w.n_buckets);
-    let r1 = run_system(&c, &w, &mut cank, 9000, 1);
-    let r2 = run_system(&c, &w, &mut adap, 9000, 1);
-    let n = r1.epochs.len().min(r2.epochs.len());
+    let reg = SystemRegistry::builtin();
+    let mut cank = reg.build("cannikin", &c, &w, &BuildOptions::default())?;
+    let mut adap = reg.build("adaptdl", &c, &w, &BuildOptions::default())?;
+    let r1 = run_static(&c, &w, cank.as_mut(), 9000, 1);
+    let r2 = run_static(&c, &w, adap.as_mut(), 9000, 1);
+    let n = r1.rows.len().min(r2.rows.len());
     for e in (0..n).step_by(usize::max(1, n / 40)) {
-        let (a, b) = (&r1.epochs[e], &r2.epochs[e]);
+        let (a, b) = (&r1.rows[e], &r2.rows[e]);
         rows.push(vec![
             e.to_string(),
             a.total_batch.to_string(),
@@ -166,13 +152,13 @@ pub fn fig7() -> Result<()> {
         let mut rows = Vec::new();
         let mut summary = Table::new(&["system", "time-to-target (s)", "epochs"]);
         for mut sys in make_systems(&c, &w) {
-            let r = run_system(&c, &w, sys.as_mut(), 3000, 7);
+            let r = run_static(&c, &w, sys.as_mut(), 3000, 7);
             summary.row(vec![
                 sys.name().to_string(),
                 r.time_to_target.map(|t| format!("{t:.0}")).unwrap_or("∅".into()),
-                r.epochs.len().to_string(),
+                r.rows.len().to_string(),
             ]);
-            for e in r.epochs.iter().step_by(usize::max(1, r.epochs.len() / 60)) {
+            for e in r.rows.iter().step_by(usize::max(1, r.rows.len() / 60)) {
                 rows.push(vec![
                     sys.name().to_string(),
                     format!("{:.1}", e.wall_secs),
@@ -203,12 +189,12 @@ pub fn fig8() -> Result<Vec<(String, Vec<(String, f64)>)>> {
     for w in workload::all() {
         let mut times = Vec::new();
         for mut sys in make_systems(&c, &w) {
-            let r = run_system(&c, &w, sys.as_mut(), 4000, 13);
+            let r = run_static(&c, &w, sys.as_mut(), 4000, 13);
             // systems that do not reach the target inside the epoch budget
             // (e.g. fixed-small-batch DDP late in training) extrapolate
             // from their progress rate
             let t = r.time_to_target.unwrap_or_else(|| {
-                let last = r.epochs.last().unwrap();
+                let last = r.rows.last().unwrap();
                 last.wall_secs * w.s_target / last.progress.max(1e-9)
             });
             times.push((sys.name().to_string(), t));
@@ -253,8 +239,10 @@ pub fn fig9() -> Result<Vec<(usize, f64, f64)>> {
     let epochs = 16;
     let reps = 12;
 
-    let mut cank = CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Fixed(total));
-    let mut lbbsp = LbBsp::new(c.n(), total, 5);
+    let reg = SystemRegistry::builtin();
+    let fixed = BuildOptions::with_policy(BatchPolicy::Fixed(total));
+    let mut cank = reg.build("cannikin", &c, &w, &fixed)?;
+    let mut lbbsp = reg.build("lbbsp", &c, &w, &fixed)?;
     let mut sim_c = ClusterSim::new(&c, &w, 21);
     let mut sim_l = ClusterSim::new(&c, &w, 21);
 
@@ -387,8 +375,9 @@ pub fn table5() -> Result<Vec<(String, f64, f64)>> {
     let mut tbl = Table::new(&["dataset", "model", "max overhead", "overall overhead"]);
     let mut rows = Vec::new();
     let mut out = Vec::new();
+    let reg = SystemRegistry::builtin();
     for w in workload::all() {
-        let mut sys = CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+        let mut sys = reg.build("cannikin", &c, &w, &BuildOptions::default())?;
         let mut sim = ClusterSim::new(&c, &w, 31);
         let mut max_ratio = 0.0f64;
         let mut tot_overhead = 0.0;
@@ -555,9 +544,9 @@ pub fn cluster_c_study() -> Result<Vec<(String, f64)>> {
     let mut tbl = Table::new(&["system", "time-to-target (s)", "normalized"]);
     let mut times = Vec::new();
     for mut sys in make_systems(&c, &w) {
-        let r = run_system(&c, &w, sys.as_mut(), 4000, 17);
+        let r = run_static(&c, &w, sys.as_mut(), 4000, 17);
         let t = r.time_to_target.unwrap_or_else(|| {
-            let last = r.epochs.last().unwrap();
+            let last = r.rows.last().unwrap();
             last.wall_secs * w.s_target / last.progress.max(1e-9)
         });
         times.push((sys.name().to_string(), t));

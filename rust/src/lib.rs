@@ -24,7 +24,14 @@
 //!   image does not provide: [`linalg`], [`util::json`], [`util::rng`],
 //!   [`util::stats`], [`benchkit`], the event-level cluster simulator
 //!   ([`simulator`]) and the baseline systems ([`baselines`]).
+//! * **Experiment API** — the public surface for describing and running
+//!   comparisons lives in [`api`]: the [`api::TrainingSystem`] trait every
+//!   system implements, the [`api::SystemRegistry`] (the only place
+//!   systems are constructed), the declarative [`api::ExperimentSpec`]
+//!   (`cannikin run spec.json`), and the machine-readable
+//!   [`api::RunReport`] every execution path emits.
 
+pub mod api;
 pub mod baselines;
 pub mod benchkit;
 pub mod cluster;

@@ -2,70 +2,174 @@
 //!
 //! Subcommands:
 //!   train     real-numerics end-to-end training over the AOT artifacts
-//!   sim       convergence simulation of one system on one workload
+//!   sim       convergence simulation of one system on a static cluster
 //!   elastic   convergence simulation under a cluster churn trace
+//!   run       execute a declarative ExperimentSpec (spec.json)
+//!   compare   run one spec once per system in a list
+//!   report    parse a RunReport JSON back (serialization-contract check)
 //!   figures   regenerate the paper's tables & figures (results/*.csv)
 //!   predict   print the OptPerf allocation for a cluster + batch size
 //!   inspect   show an artifact directory's manifest
 //!
-//! (Hand-rolled arg parsing: clap is not in the offline vendor set.)
+//! Every system is constructed through the `api::SystemRegistry` —
+//! `--system help` enumerates it — and `sim` / `elastic` / `run` /
+//! `compare` all execute through the one unified driver, so an eventless
+//! `elastic` run and a `sim` run are bit-identical.  `--json` switches
+//! the output to the machine-readable `RunReport` (informational lines go
+//! to stderr so the JSON pipes cleanly).
+//!
+//! (Hand-rolled arg parsing: clap is not in the offline vendor set.
+//! Flags are validated per-subcommand against the specs below; typos get
+//! a suggestion instead of being silently ignored.)
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Result};
 
-use cannikin::baselines::{AdaptDl, Ddp, LbBsp, System};
-use cannikin::cluster;
-use cannikin::coordinator::{train, BatchPolicy, CannikinPlanner, TrainConfig};
+use cannikin::api::{self, BuildOptions, ExperimentSpec, RunReport, SystemRegistry};
+use cannikin::benchkit::Table;
+use cannikin::coordinator::{train, BatchPolicy, TrainConfig};
 use cannikin::elastic::{self, DetectionMode, DetectionStats};
 use cannikin::figures;
 use cannikin::optperf;
 use cannikin::runtime::Manifest;
 use cannikin::simulator::workload;
+use cannikin::cluster;
+use cannikin::util::json::Json;
+use cannikin::util::text::suggest;
 
 const USAGE: &str = "\
 cannikin — heterogeneous-cluster adaptive-batch-size training (paper repro)
 
 USAGE:
   cannikin train   [--artifacts DIR] [--cluster a|b|c | --cluster-file F.json] [--workload W]
-                   [--epochs N] [--steps N] [--lr F] [--fixed-batch B]
+                   [--system S] [--epochs N] [--steps N] [--lr F] [--fixed-batch B]
                    [--corpus-kb N] [--seed N] [--log FILE] [--trace T] [--detect D]
-  cannikin sim     [--cluster a|b|c] [--workload W] [--system S] [--epochs N]
-  cannikin elastic [--cluster a|b|c] [--workload W] [--system ES] [--trace T]
-                   [--epochs N] [--seed N] [--save-trace FILE] [--detect D]
+  cannikin sim     [--cluster a|b|c] [--workload W] [--system S] [--epochs N] [--seed N]
+                   [--json]
+  cannikin elastic [--cluster a|b|c] [--workload W] [--system S] [--trace T]
+                   [--epochs N] [--seed N] [--save-trace FILE] [--detect D] [--json]
+  cannikin run     SPEC.json [--json]
+  cannikin compare SPEC.json [--systems S1,S2,…] [--json]
+  cannikin report  FILE.json|-
   cannikin figures [--fig 5|6|7|8|9|10|t5|pred|overlap|c|all]
   cannikin predict [--cluster a|b|c] [--workload W] --batch B
   cannikin inspect [--artifacts DIR]
 
-workloads: imagenet cifar10 librispeech squad movielens
-systems:   cannikin adaptdl lbbsp ddp
-elastic systems (ES): cannikin cannikin-cold even lbbsp ddp
-traces (T): spot maintenance straggler, or a saved FILE.json
+workloads:   imagenet cifar10 librispeech squad movielens
+systems (S): resolved via the system registry — `--system help` lists them
+traces (T):  spot maintenance straggler, or a saved FILE.json
 detection (D): oracle   — replay the trace's SlowDown/Recover events (default)
                observed — hide them; the straggler detector must recover them
                           from timing observations (latency/false-positive
                           accounting is reported)
-               off      — hide them entirely (ablation floor)";
+               off      — hide them entirely (ablation floor)
+SPEC.json:   a declarative ExperimentSpec — see `rust/src/api/spec.rs` and
+             specs/smoke.json; `run --json | cannikin report -` round-trips";
 
-fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
-    let mut out = HashMap::new();
+/// (flag, takes-value) validation spec of one subcommand.
+type FlagSpec = &'static [(&'static str, bool)];
+
+const TRAIN_FLAGS: FlagSpec = &[
+    ("artifacts", true),
+    ("cluster", true),
+    ("cluster-file", true),
+    ("workload", true),
+    ("system", true),
+    ("epochs", true),
+    ("steps", true),
+    ("lr", true),
+    ("fixed-batch", true),
+    ("corpus-kb", true),
+    ("seed", true),
+    ("log", true),
+    ("trace", true),
+    ("detect", true),
+];
+const SIM_FLAGS: FlagSpec = &[
+    ("cluster", true),
+    ("cluster-file", true),
+    ("workload", true),
+    ("system", true),
+    ("epochs", true),
+    ("seed", true),
+    ("json", false),
+];
+const ELASTIC_FLAGS: FlagSpec = &[
+    ("cluster", true),
+    ("cluster-file", true),
+    ("workload", true),
+    ("system", true),
+    ("trace", true),
+    ("epochs", true),
+    ("seed", true),
+    ("save-trace", true),
+    ("detect", true),
+    ("json", false),
+];
+const RUN_FLAGS: FlagSpec = &[("json", false)];
+const COMPARE_FLAGS: FlagSpec = &[("systems", true), ("json", false)];
+const REPORT_FLAGS: FlagSpec = &[];
+const FIGURES_FLAGS: FlagSpec = &[("fig", true)];
+const PREDICT_FLAGS: FlagSpec = &[
+    ("cluster", true),
+    ("cluster-file", true),
+    ("workload", true),
+    ("batch", true),
+];
+const INSPECT_FLAGS: FlagSpec = &[("artifacts", true)];
+
+/// Parse `args` against `spec`: leading non-flag tokens become
+/// positionals, `--flag [value]` pairs are validated (unknown flags error
+/// with a typo suggestion; a valued flag without a value errors too).
+fn parse_args(
+    sub: &str,
+    args: &[String],
+    spec: FlagSpec,
+    n_positional: usize,
+) -> Result<(Vec<String>, HashMap<String, String>)> {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
     let mut i = 0;
     while i < args.len() {
         let a = &args[i];
         if let Some(key) = a.strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                out.insert(key.to_string(), args[i + 1].clone());
+            let (_, takes_value) = *spec.iter().find(|(name, _)| *name == key).ok_or_else(|| {
+                let hint = suggest(key, spec.iter().map(|(name, _)| *name))
+                    .map(|s| format!(" (did you mean --{s}?)"))
+                    .unwrap_or_default();
+                let known: Vec<String> =
+                    spec.iter().map(|(name, _)| format!("--{name}")).collect();
+                anyhow!(
+                    "unknown flag --{key} for `{sub}`{hint}; valid flags: {}",
+                    if known.is_empty() { "(none)".to_string() } else { known.join(" ") }
+                )
+            })?;
+            if flags.contains_key(key) {
+                bail!("flag --{key} given twice");
+            }
+            if takes_value {
+                let Some(value) = args.get(i + 1).filter(|v| !v.starts_with("--")) else {
+                    bail!("flag --{key} expects a value");
+                };
+                flags.insert(key.to_string(), value.clone());
                 i += 2;
             } else {
-                out.insert(key.to_string(), "true".to_string());
+                flags.insert(key.to_string(), "true".to_string());
                 i += 1;
             }
+        } else if positional.len() < n_positional {
+            positional.push(a.clone());
+            i += 1;
         } else {
-            bail!("unexpected argument {a:?}");
+            bail!("unexpected argument {a:?} for `{sub}`");
         }
     }
-    Ok(out)
+    if positional.len() < n_positional {
+        bail!("`{sub}` expects {n_positional} positional argument(s), got {}", positional.len());
+    }
+    Ok((positional, flags))
 }
 
 fn get<'a>(flags: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'a str {
@@ -85,25 +189,64 @@ fn run() -> Result<()> {
         println!("{USAGE}");
         return Ok(());
     };
-    let flags = parse_flags(&args[1..])?;
+    let rest = &args[1..];
     match cmd.as_str() {
-        "train" => cmd_train(&flags),
-        "sim" => cmd_sim(&flags),
-        "elastic" => cmd_elastic(&flags),
-        "figures" => cmd_figures(&flags),
-        "predict" => cmd_predict(&flags),
-        "inspect" => cmd_inspect(&flags),
+        "train" => {
+            let (_, flags) = parse_args("train", rest, TRAIN_FLAGS, 0)?;
+            cmd_train(&flags)
+        }
+        "sim" => {
+            let (_, flags) = parse_args("sim", rest, SIM_FLAGS, 0)?;
+            cmd_sim(&flags)
+        }
+        "elastic" => {
+            let (_, flags) = parse_args("elastic", rest, ELASTIC_FLAGS, 0)?;
+            cmd_elastic(&flags)
+        }
+        "run" => {
+            let (pos, flags) = parse_args("run", rest, RUN_FLAGS, 1)?;
+            cmd_run(&pos[0], &flags)
+        }
+        "compare" => {
+            let (pos, flags) = parse_args("compare", rest, COMPARE_FLAGS, 1)?;
+            cmd_compare(&pos[0], &flags)
+        }
+        "report" => {
+            let (pos, _) = parse_args("report", rest, REPORT_FLAGS, 1)?;
+            cmd_report(&pos[0])
+        }
+        "figures" => {
+            let (_, flags) = parse_args("figures", rest, FIGURES_FLAGS, 0)?;
+            cmd_figures(&flags)
+        }
+        "predict" => {
+            let (_, flags) = parse_args("predict", rest, PREDICT_FLAGS, 0)?;
+            cmd_predict(&flags)
+        }
+        "inspect" => {
+            let (_, flags) = parse_args("inspect", rest, INSPECT_FLAGS, 0)?;
+            cmd_inspect(&flags)
+        }
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
         }
-        other => bail!("unknown command {other:?}\n{USAGE}"),
+        other => {
+            let subs = [
+                "train", "sim", "elastic", "run", "compare", "report", "figures", "predict",
+                "inspect",
+            ];
+            let hint = suggest(other, subs)
+                .map(|s| format!(" (did you mean `{s}`?)"))
+                .unwrap_or_default();
+            bail!("unknown command {other:?}{hint}\n{USAGE}")
+        }
     }
 }
 
 fn cluster_arg(flags: &HashMap<String, String>) -> Result<cluster::ClusterSpec> {
     if let Some(path) = flags.get("cluster-file") {
-        return cluster::ClusterSpec::from_json_file(std::path::Path::new(path));
+        return cluster::ClusterSpec::from_json_file(Path::new(path));
     }
     let name = get(flags, "cluster", "a");
     cluster::by_name(name).ok_or_else(|| anyhow!("unknown cluster {name:?} (a|b|c)"))
@@ -130,7 +273,7 @@ fn trace_arg(
         return Ok(None);
     };
     let trace = if spec.ends_with(".json") {
-        elastic::ChurnTrace::load(std::path::Path::new(spec))?
+        elastic::ChurnTrace::load(Path::new(spec))?
     } else {
         elastic::preset(spec, c, horizon, seed).ok_or_else(|| {
             anyhow!("unknown trace {spec:?} (spot|maintenance|straggler|FILE.json)")
@@ -152,6 +295,18 @@ fn detect_arg(flags: &HashMap<String, String>) -> Result<DetectionMode> {
         .ok_or_else(|| anyhow!("unknown detection mode {name:?} (oracle|observed|off)"))
 }
 
+/// `--system` helper shared by `sim`/`elastic`: `help` prints the registry
+/// enumeration and returns None.
+fn system_arg<'a>(flags: &'a HashMap<String, String>, reg: &SystemRegistry) -> Option<&'a str> {
+    let name = get(flags, "system", "cannikin");
+    if name == "help" {
+        println!("{}", reg.help());
+        None
+    } else {
+        Some(name)
+    }
+}
+
 fn print_detection(d: &DetectionStats) {
     println!(
         "detector: {} slowdown(s) emitted ({} false), {} recover(s) ({} false), {} missed",
@@ -165,57 +320,8 @@ fn print_detection(d: &DetectionStats) {
     }
 }
 
-fn cmd_elastic(flags: &HashMap<String, String>) -> Result<()> {
-    let c = cluster_arg(flags)?;
-    let w = workload_arg(flags)?;
-    let epochs: usize = get(flags, "epochs", "20000").parse()?;
-    let seed: u64 = get(flags, "seed", "7").parse()?;
-    let trace = trace_arg(flags, &c, epochs, seed)?
-        .unwrap_or_else(|| elastic::spot_instance(&c, epochs, seed));
-    if let Some(path) = flags.get("save-trace") {
-        trace.save(std::path::Path::new(path))?;
-        println!("trace saved to {path}");
-    }
-    let name = get(flags, "system", "cannikin").to_string();
-    let caps: Vec<u64> = c.nodes.iter().map(|n| w.max_local_batch(n)).collect();
-    let mut system: Box<dyn elastic::ElasticSystem> = match name.as_str() {
-        "cannikin" => Box::new(
-            CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive)
-                .with_caps(caps),
-        ),
-        "cannikin-cold" => Box::new(
-            elastic::ColdRestartCannikin::new(
-                c.n(),
-                w.b0,
-                w.b_max,
-                w.n_buckets,
-                BatchPolicy::Adaptive,
-            )
-            .with_caps(caps),
-        ),
-        "even" | "adaptdl" => Box::new(AdaptDl::new(c.n(), w.b0, w.b_max, w.n_buckets)),
-        "lbbsp" => Box::new(LbBsp::new(c.n(), w.b0, 5)),
-        "ddp" => Box::new(Ddp::with_total(c.n(), w.b0)),
-        other => {
-            bail!("unknown elastic system {other:?} (cannikin|cannikin-cold|even|lbbsp|ddp)")
-        }
-    };
-    let detect = detect_arg(flags)?;
-    let counts = trace.counts();
-    println!(
-        "elastic scenario {:?} on {} / {} [detect={}]: {} events ({} departures, {} joins, {} slowdowns, {} recovers)",
-        trace.name,
-        c.name,
-        w.name,
-        detect.name(),
-        trace.len(),
-        counts.departures(),
-        counts.joins,
-        counts.slowdowns,
-        counts.recovers
-    );
-    let cfg = elastic::ScenarioConfig { max_epochs: epochs, seed, detect, ..Default::default() };
-    let r = elastic::run_scenario(&c, &w, &trace, system.as_mut(), &cfg);
+/// Human rendering of a report: ~25 sampled epoch rows + the footer.
+fn print_report(r: &RunReport, target_label: &str) {
     for row in r.rows.iter().step_by(usize::max(1, r.rows.len() / 25)) {
         let mut flag = String::new();
         if row.events > 0 {
@@ -226,21 +332,201 @@ fn cmd_elastic(flags: &HashMap<String, String>) -> Result<()> {
         }
         println!(
             "epoch {:>6}  n={:<2} B={:<6} t_batch={:.4}s  wall={:>10.1}s  {}={:.2}{}",
-            row.epoch, row.n_nodes, row.total_batch, row.t_batch, row.wall_secs, w.target,
+            row.epoch, row.n_nodes, row.total_batch, row.t_batch, row.wall_secs, target_label,
             row.metric, flag
         );
     }
     println!(
-        "\n{}: applied {} events ({} hidden, skipped {}), final cluster size {}, bootstrap epochs {}",
+        "\n{}: applied {} events ({} hidden, skipped {}), final cluster size {}, \
+         bootstrap epochs {}",
         r.system, r.events_applied, r.events_hidden, r.events_skipped, r.final_n,
         r.bootstrap_epochs
     );
     if let Some(d) = &r.detection {
         print_detection(d);
     }
+}
+
+fn cmd_sim(flags: &HashMap<String, String>) -> Result<()> {
+    let reg = SystemRegistry::builtin();
+    let Some(name) = system_arg(flags, &reg) else {
+        return Ok(());
+    };
+    let c = cluster_arg(flags)?;
+    let w = workload_arg(flags)?;
+    let epochs: usize = get(flags, "epochs", "4000").parse()?;
+    let seed: u64 = get(flags, "seed", "7").parse()?;
+    let mut system = reg.build(name, &c, &w, &BuildOptions::default())?;
+    let r = api::run_static(&c, &w, system.as_mut(), epochs, seed);
+    if flags.contains_key("json") {
+        println!("{}", r.to_json().to_string_pretty());
+        return Ok(());
+    }
+    for e in r.rows.iter().step_by(usize::max(1, r.rows.len() / 25)) {
+        println!(
+            "epoch {:>5}  B={:<6} t_batch={:.4}s  wall={:>9.1}s  {}={:.2}",
+            e.epoch, e.total_batch, e.t_batch, e.wall_secs, w.target, e.metric
+        );
+    }
+    match r.time_to_target {
+        Some(t) => println!("\n{} reached {} in {t:.0} simulated seconds", r.system, w.target),
+        None => println!("\n{} did not reach {} within {epochs} epochs", r.system, w.target),
+    }
+    Ok(())
+}
+
+fn cmd_elastic(flags: &HashMap<String, String>) -> Result<()> {
+    let reg = SystemRegistry::builtin();
+    let Some(name) = system_arg(flags, &reg) else {
+        return Ok(());
+    };
+    let json = flags.contains_key("json");
+    let c = cluster_arg(flags)?;
+    let w = workload_arg(flags)?;
+    let epochs: usize = get(flags, "epochs", "20000").parse()?;
+    let seed: u64 = get(flags, "seed", "7").parse()?;
+    let trace = trace_arg(flags, &c, epochs, seed)?
+        .unwrap_or_else(|| elastic::spot_instance(&c, epochs, seed));
+    if let Some(path) = flags.get("save-trace") {
+        trace.save(Path::new(path))?;
+        eprintln!("trace saved to {path}");
+    }
+    let mut system = reg.build(name, &c, &w, &BuildOptions::default())?;
+    let detect = detect_arg(flags)?;
+    let counts = trace.counts();
+    if !json {
+        println!(
+            "elastic scenario {:?} on {} / {} [detect={}]: {} events ({} departures, \
+             {} joins, {} slowdowns, {} recovers)",
+            trace.name,
+            c.name,
+            w.name,
+            detect.name(),
+            trace.len(),
+            counts.departures(),
+            counts.joins,
+            counts.slowdowns,
+            counts.recovers
+        );
+    }
+    let cfg = elastic::ScenarioConfig { max_epochs: epochs, seed, detect, ..Default::default() };
+    let r = api::run(&c, &w, &trace, system.as_mut(), &cfg);
+    if json {
+        println!("{}", r.to_json().to_string_pretty());
+        return Ok(());
+    }
+    print_report(&r, w.target);
+    // same outcome, same exit code as `sim`/`run` (one unified driver)
     match r.time_to_target {
         Some(t) => println!("{} reached {} in {t:.0} simulated seconds", r.system, w.target),
-        None => bail!("{name} did not reach {} within {epochs} epochs", w.target),
+        None => println!("{} did not reach {} within {epochs} epochs", r.system, w.target),
+    }
+    Ok(())
+}
+
+fn cmd_run(spec_path: &str, flags: &HashMap<String, String>) -> Result<()> {
+    let spec = ExperimentSpec::load(Path::new(spec_path))?;
+    let reg = SystemRegistry::builtin();
+    let json = flags.contains_key("json");
+    if !json {
+        println!(
+            "spec {:?}: {} on {}/{} trace {:?} [detect={}] seed {} horizon {}",
+            spec.name,
+            spec.system,
+            spec.cluster,
+            spec.workload,
+            spec.trace.as_deref().unwrap_or("static"),
+            spec.detect.name(),
+            spec.seed,
+            spec.max_epochs
+        );
+    }
+    let w = spec.resolve_workload()?;
+    let r = api::run_spec(&spec, &reg)?;
+    if json {
+        println!("{}", r.to_json().to_string_pretty());
+        return Ok(());
+    }
+    print_report(&r, w.target);
+    match r.time_to_target {
+        Some(t) => println!("{} reached {} in {t:.0} simulated seconds", r.system, w.target),
+        None => {
+            println!("{} did not reach {} within {} epochs", r.system, w.target, spec.max_epochs)
+        }
+    }
+    Ok(())
+}
+
+fn cmd_compare(spec_path: &str, flags: &HashMap<String, String>) -> Result<()> {
+    let spec = ExperimentSpec::load(Path::new(spec_path))?;
+    let reg = SystemRegistry::builtin();
+    let systems: Vec<String> = match flags.get("systems") {
+        Some(list) => {
+            list.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+        }
+        None => reg.names().iter().map(|s| s.to_string()).collect(),
+    };
+    let json = flags.contains_key("json");
+    if !json {
+        println!(
+            "comparing {} system(s) on {}/{} trace {:?} (seed {}, horizon {})",
+            systems.len(),
+            spec.cluster,
+            spec.workload,
+            spec.trace.as_deref().unwrap_or("static"),
+            spec.seed,
+            spec.max_epochs
+        );
+    }
+    let reports = api::compare(&spec, &systems, &reg)?;
+    if json {
+        println!(
+            "{}",
+            Json::Arr(reports.iter().map(|r| r.to_json()).collect()).to_string_pretty()
+        );
+        return Ok(());
+    }
+    let mut tbl = Table::new(&[
+        "system",
+        "time-to-target (sim s)",
+        "epochs",
+        "bootstrap epochs",
+        "events",
+    ]);
+    for r in &reports {
+        tbl.row(vec![
+            r.system.clone(),
+            r.time_to_target.map(|t| format!("{t:.0}")).unwrap_or_else(|| "-".to_string()),
+            r.epochs_to_target()
+                .map(|e| e.to_string())
+                .unwrap_or_else(|| format!(">{}", r.rows.len())),
+            r.bootstrap_epochs.to_string(),
+            r.events_applied.to_string(),
+        ]);
+    }
+    tbl.print(&format!("compare — spec {:?} (lower is better)", spec.name));
+    Ok(())
+}
+
+fn cmd_report(path: &str) -> Result<()> {
+    let text = if path == "-" {
+        use std::io::Read as _;
+        let mut buf = String::new();
+        std::io::stdin().read_to_string(&mut buf)?;
+        buf
+    } else {
+        std::fs::read_to_string(path).map_err(|e| anyhow!("reading {path}: {e}"))?
+    };
+    let r = RunReport::from_json(&Json::parse(&text)?)?;
+    // the round-trip is the contract: emitting our parse of the report
+    // must reproduce it exactly
+    let reserialized = RunReport::from_json(&r.to_json())?;
+    if reserialized != r {
+        bail!("report did not survive a re-serialization round-trip");
+    }
+    println!("{}", r.summary());
+    if let Some(d) = &r.detection {
+        print_detection(d);
     }
     Ok(())
 }
@@ -256,6 +542,7 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     cfg.lr = get(flags, "lr", "0.05").parse()?;
     cfg.seed = get(flags, "seed", "0").parse()?;
     cfg.corpus_bytes = get(flags, "corpus-kb", "64").parse::<usize>()? * 1024;
+    cfg.system = get(flags, "system", "cannikin").to_string();
     cfg.verbose = true;
     if let Some(b) = flags.get("fixed-batch") {
         cfg.policy = BatchPolicy::Fixed(b.parse()?);
@@ -274,38 +561,6 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     );
     if let Some(d) = &report.detection {
         print_detection(d);
-    }
-    Ok(())
-}
-
-fn cmd_sim(flags: &HashMap<String, String>) -> Result<()> {
-    let c = cluster_arg(flags)?;
-    let w = workload_arg(flags)?;
-    let epochs: usize = get(flags, "epochs", "4000").parse()?;
-    let name = get(flags, "system", "cannikin").to_string();
-    let mut system: Box<dyn System> = match name.as_str() {
-        "cannikin" => Box::new(CannikinPlanner::new(
-            c.n(),
-            w.b0,
-            w.b_max,
-            w.n_buckets,
-            BatchPolicy::Adaptive,
-        )),
-        "adaptdl" => Box::new(AdaptDl::new(c.n(), w.b0, w.b_max, w.n_buckets)),
-        "lbbsp" => Box::new(LbBsp::new(c.n(), w.b0, 5)),
-        "ddp" => Box::new(Ddp::with_total(c.n(), w.b0)),
-        other => bail!("unknown system {other:?}"),
-    };
-    let r = figures::run_system(&c, &w, system.as_mut(), epochs, 7);
-    for e in r.epochs.iter().step_by(usize::max(1, r.epochs.len() / 25)) {
-        println!(
-            "epoch {:>5}  B={:<6} t_batch={:.4}s  wall={:>9.1}s  {}={:.2}",
-            e.epoch, e.total_batch, e.t_batch, e.wall_secs, w.target, e.metric
-        );
-    }
-    match r.time_to_target {
-        Some(t) => println!("\n{name} reached {} in {t:.0} simulated seconds", w.target),
-        None => println!("\n{name} did not reach {} within {epochs} epochs", w.target),
     }
     Ok(())
 }

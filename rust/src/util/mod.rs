@@ -7,6 +7,7 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod text;
 
 /// Round a vector of non-negative reals to integers preserving the exact
 /// total (largest-remainder / Hamilton method).  Used by the

@@ -1,0 +1,55 @@
+//! Tiny text helpers: edit distance + "did you mean" suggestion, used by
+//! the CLI flag validator and the system registry for typo'd names.
+
+/// Levenshtein distance (unit costs) over Unicode scalar values.
+pub fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    if a.is_empty() {
+        return b.len();
+    }
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Closest candidate to `input`, if any is close enough to plausibly be a
+/// typo (distance ≤ 2, or ≤ a third of the input's length for long names).
+pub fn suggest<'a>(input: &str, candidates: impl IntoIterator<Item = &'a str>) -> Option<&'a str> {
+    let budget = 2usize.max(input.chars().count() / 3);
+    candidates
+        .into_iter()
+        .map(|c| (edit_distance(input, c), c))
+        .filter(|&(d, _)| d <= budget)
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, c)| c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distance_basics() {
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("epoch", "epochs"), 1);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+    }
+
+    #[test]
+    fn suggest_finds_near_miss_and_rejects_garbage() {
+        let cands = ["epochs", "seed", "system", "workload"];
+        assert_eq!(suggest("epoch", cands), Some("epochs"));
+        assert_eq!(suggest("sede", cands), Some("seed"));
+        assert_eq!(suggest("zzzzzz", cands), None);
+    }
+}

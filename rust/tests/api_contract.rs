@@ -1,0 +1,374 @@
+//! Contract tests for the unified experiment API (`cannikin::api`):
+//!
+//! * `ExperimentSpec` / `RunReport` JSON round-trip property tests — the
+//!   serialization contract behind `cannikin run --json` and `cannikin
+//!   report`;
+//! * registry enumeration — every registered system builds and runs a
+//!   50-epoch scenario to completion;
+//! * the `sim`-vs-`elastic` caps regression — a static run and an
+//!   eventless elastic run agree bit-for-bit, and registry-built planners
+//!   respect memory caps (the historical `cmd_sim` bug);
+//! * grep enforcement — no production code constructs a training system
+//!   outside the `SystemRegistry`.
+
+use std::path::{Path, PathBuf};
+
+use cannikin::api::{
+    self, run_spec, BuildOptions, EpochRow, ExperimentSpec, RunReport, SystemRegistry,
+    TrainingSystem as _,
+};
+use cannikin::cluster;
+use cannikin::coordinator::BatchPolicy;
+use cannikin::elastic::{ChurnTrace, DetectionMode, DetectionStats, ScenarioConfig};
+use cannikin::simulator::{workload, ClusterSim};
+use cannikin::util::json::Json;
+use cannikin::util::prop::{check, ensure};
+use cannikin::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// JSON round-trip property tests
+// ---------------------------------------------------------------------------
+
+fn rand_name(rng: &mut Rng, max_len: u64) -> String {
+    let alphabet: Vec<char> =
+        "abcdefghijklmnopqrstuvwxyz0123456789-_ .\"\\\n\té∅".chars().collect();
+    let len = rng.below(max_len) as usize;
+    (0..len).map(|_| alphabet[rng.below(alphabet.len() as u64) as usize]).collect()
+}
+
+/// Any finite f64 shape the reports actually carry: integral values,
+/// tiny/huge magnitudes, negatives, zero.
+fn rand_f64(rng: &mut Rng) -> f64 {
+    match rng.below(6) {
+        0 => 0.0,
+        1 => rng.below(100_000) as f64,
+        2 => rng.f64(),
+        3 => -rng.f64() * 1e6,
+        4 => rng.f64() * 1e300,
+        _ => rng.f64() * 1e-300,
+    }
+}
+
+fn rand_spec(rng: &mut Rng) -> ExperimentSpec {
+    let traces = ["spot", "maintenance", "straggler", "saved/trace.json"];
+    ExperimentSpec {
+        name: rand_name(rng, 24),
+        cluster: rand_name(rng, 12),
+        workload: rand_name(rng, 12),
+        system: rand_name(rng, 12),
+        trace: if rng.below(2) == 0 {
+            None
+        } else {
+            Some(traces[rng.below(traces.len() as u64) as usize].to_string())
+        },
+        detect: [DetectionMode::Oracle, DetectionMode::Observed, DetectionMode::Off]
+            [rng.below(3) as usize],
+        policy: if rng.below(2) == 0 {
+            BatchPolicy::Adaptive
+        } else {
+            BatchPolicy::Fixed(1 + rng.below(1_000_000))
+        },
+        // JSON numbers ride on f64: exact below 2^53
+        seed: rng.next_u64() >> 11,
+        max_epochs: 1 + rng.below(1_000_000) as usize,
+        reps: 1 + rng.below(16) as usize,
+    }
+}
+
+fn rand_report(rng: &mut Rng) -> RunReport {
+    let n_rows = rng.below(40) as usize;
+    let rows: Vec<EpochRow> = (0..n_rows)
+        .map(|epoch| EpochRow {
+            epoch,
+            n_nodes: 1 + rng.below(64) as usize,
+            total_batch: rng.below(1 << 20),
+            t_batch: rand_f64(rng),
+            wall_secs: rand_f64(rng),
+            progress: rand_f64(rng),
+            metric: rand_f64(rng),
+            events: rng.below(4) as usize,
+            detected: rng.below(3) as usize,
+        })
+        .collect();
+    let detection = (rng.below(2) == 0).then(|| DetectionStats {
+        emitted_slowdowns: rng.below(10) as usize,
+        emitted_recovers: rng.below(10) as usize,
+        false_slowdowns: rng.below(4) as usize,
+        false_recovers: rng.below(4) as usize,
+        latencies: (0..rng.below(6)).map(|_| rng.below(100) as usize).collect(),
+        missed: rng.below(4) as usize,
+    });
+    RunReport {
+        system: rand_name(rng, 16),
+        cluster: rand_name(rng, 16),
+        workload: rand_name(rng, 16),
+        trace: rand_name(rng, 16),
+        seed: rng.next_u64() >> 11,
+        max_epochs: rng.below(1 << 20) as usize,
+        detect: [DetectionMode::Oracle, DetectionMode::Observed, DetectionMode::Off]
+            [rng.below(3) as usize],
+        rows,
+        time_to_target: (rng.below(2) == 0).then(|| rand_f64(rng)),
+        events_applied: rng.below(20) as usize,
+        events_hidden: rng.below(10) as usize,
+        events_skipped: rng.below(5) as usize,
+        bootstrap_epochs: rng.below(10) as usize,
+        final_n: 1 + rng.below(64) as usize,
+        detection,
+    }
+}
+
+#[test]
+fn prop_experiment_spec_json_roundtrip_is_lossless() {
+    check(
+        "spec-json-roundtrip",
+        300,
+        |rng| rand_spec(rng),
+        |spec| {
+            let pretty = spec.to_json().to_string_pretty();
+            let back = ExperimentSpec::from_json(
+                &Json::parse(&pretty).map_err(|e| e.to_string())?,
+            )
+            .map_err(|e| e.to_string())?;
+            ensure(*spec == back, format!("pretty roundtrip changed the spec:\n{pretty}"))?;
+            let compact = spec.to_json().to_string_compact();
+            let back2 = ExperimentSpec::from_json(
+                &Json::parse(&compact).map_err(|e| e.to_string())?,
+            )
+            .map_err(|e| e.to_string())?;
+            ensure(*spec == back2, format!("compact roundtrip changed the spec:\n{compact}"))
+        },
+    );
+}
+
+#[test]
+fn prop_run_report_json_roundtrip_is_lossless() {
+    check(
+        "report-json-roundtrip",
+        200,
+        |rng| rand_report(rng),
+        |report| {
+            let text = report.to_json().to_string_pretty();
+            let back =
+                RunReport::from_json(&Json::parse(&text).map_err(|e| e.to_string())?)
+                    .map_err(|e| e.to_string())?;
+            ensure(*report == back, "roundtrip changed the report".to_string())
+        },
+    );
+}
+
+#[test]
+fn real_run_report_roundtrips_through_a_file() {
+    let spec = ExperimentSpec {
+        trace: Some("spot".to_string()),
+        detect: DetectionMode::Observed,
+        max_epochs: 120,
+        ..Default::default()
+    };
+    let reg = SystemRegistry::builtin();
+    let report = run_spec(&spec, &reg).unwrap();
+    assert!(report.events_applied >= 1, "spot trace must land events in 120 epochs");
+    let path = std::env::temp_dir()
+        .join(format!("cannikin-api-report-{}.json", std::process::id()));
+    report.save(&path).unwrap();
+    let back = RunReport::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(report, back, "file roundtrip must be lossless");
+}
+
+#[test]
+fn spec_file_roundtrip() {
+    let spec = ExperimentSpec {
+        trace: Some("straggler".to_string()),
+        policy: BatchPolicy::Fixed(256),
+        ..Default::default()
+    };
+    let path = std::env::temp_dir()
+        .join(format!("cannikin-api-spec-{}.json", std::process::id()));
+    spec.save(&path).unwrap();
+    let back = ExperimentSpec::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(spec, back);
+}
+
+/// The committed CI smoke spec must stay loadable, resolvable and
+/// runnable, and its report must survive the round trip the smoke job
+/// exercises (`run specs/smoke.json --json | report -`).
+#[test]
+fn committed_smoke_spec_runs_and_roundtrips() {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("specs/smoke.json");
+    let spec = ExperimentSpec::load(&path).unwrap();
+    let reg = SystemRegistry::builtin();
+    let report = run_spec(&spec, &reg).unwrap();
+    assert_eq!(report.rows.len(), spec.max_epochs, "smoke horizon must not reach the target");
+    assert!(report.events_applied >= 1, "smoke spec must exercise the elastic path");
+    let back = RunReport::from_json(&report.to_json()).unwrap();
+    assert_eq!(report, back);
+}
+
+// ---------------------------------------------------------------------------
+// registry enumeration
+// ---------------------------------------------------------------------------
+
+/// Every registered system builds and survives a 50-epoch churn scenario
+/// (none can reach the CIFAR-10 target that fast, so all 50 rows exist
+/// and stay well-formed).
+#[test]
+fn every_registered_system_runs_a_50_epoch_scenario() {
+    let reg = SystemRegistry::builtin();
+    assert!(reg.names().len() >= 5, "{:?}", reg.names());
+    for name in reg.names() {
+        let spec = ExperimentSpec {
+            system: name.to_string(),
+            trace: Some("spot".to_string()),
+            max_epochs: 50,
+            ..Default::default()
+        };
+        let r = run_spec(&spec, &reg).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(r.rows.len(), 50, "{name}");
+        for row in &r.rows {
+            assert!(row.total_batch >= 1, "{name}: {row:?}");
+            assert!(row.n_nodes >= 1, "{name}: {row:?}");
+            assert!(row.t_batch.is_finite() && row.t_batch > 0.0, "{name}: {row:?}");
+        }
+        assert_eq!(r.final_n, r.rows.last().unwrap().n_nodes, "{name}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sim / elastic unification + caps regression
+// ---------------------------------------------------------------------------
+
+/// The caps-inconsistency regression (ISSUE 3 satellite): `sim` and
+/// `elastic --trace` with an eventless trace are now the same code path
+/// and must agree bit-for-bit.
+#[test]
+fn static_sim_and_eventless_elastic_agree_bit_for_bit() {
+    let c = cluster::cluster_a();
+    let w = workload::cifar10();
+    let reg = SystemRegistry::builtin();
+
+    let mut s1 = reg.build("cannikin", &c, &w, &BuildOptions::default()).unwrap();
+    let sim_run = api::run_static(&c, &w, s1.as_mut(), 600, 7);
+
+    let mut s2 = reg.build("cannikin", &c, &w, &BuildOptions::default()).unwrap();
+    let eventless = ChurnTrace::new("static");
+    let cfg = ScenarioConfig { max_epochs: 600, seed: 7, ..Default::default() };
+    let elastic_run = api::run(&c, &w, &eventless, s2.as_mut(), &cfg);
+
+    assert_eq!(sim_run.rows.len(), elastic_run.rows.len());
+    for (a, b) in sim_run.rows.iter().zip(&elastic_run.rows) {
+        assert_eq!(a.total_batch, b.total_batch, "epoch {}", a.epoch);
+        assert_eq!(a.t_batch.to_bits(), b.t_batch.to_bits(), "epoch {}", a.epoch);
+        assert_eq!(a.wall_secs.to_bits(), b.wall_secs.to_bits(), "epoch {}", a.epoch);
+        assert_eq!(a.metric.to_bits(), b.metric.to_bits(), "epoch {}", a.epoch);
+    }
+    assert_eq!(
+        sim_run.time_to_target.map(f64::to_bits),
+        elastic_run.time_to_target.map(f64::to_bits)
+    );
+    assert_eq!(sim_run.events_applied, 0);
+    assert_eq!(elastic_run.events_applied, 0);
+}
+
+/// Registry-built planners carry the workload's memory caps on the static
+/// path too.  LibriSpeech on cluster A makes the caps bind: the P4000 can
+/// hold ~122 samples while an even split of b_max=512 wants ~171, so the
+/// old (uncapped) `cmd_sim` construction would have violated the cap on
+/// the very first epoch.
+#[test]
+fn registry_applies_memory_caps_on_the_static_path() {
+    let c = cluster::cluster_a();
+    let w = workload::librispeech();
+    let caps: Vec<u64> = c.nodes.iter().map(|n| w.max_local_batch(n)).collect();
+    let even = w.b_max / c.n() as u64;
+    assert!(
+        caps.iter().any(|&cap| cap < even),
+        "precondition: caps must bind for this workload ({caps:?} vs even {even})"
+    );
+    let reg = SystemRegistry::builtin();
+    let mut sys = reg
+        .build("cannikin", &c, &w, &BuildOptions::with_policy(BatchPolicy::Fixed(w.b_max)))
+        .unwrap();
+    let mut sim = ClusterSim::new(&c, &w, 5);
+    for epoch in 0..10 {
+        let plan = sys.plan_epoch(epoch, w.phi0);
+        assert_eq!(plan.local.iter().sum::<u64>(), w.b_max);
+        for (b, cap) in plan.local.iter().zip(&caps) {
+            assert!(b <= cap, "epoch {epoch}: {:?} violates caps {caps:?}", plan.local);
+        }
+        let out = sim.step(&plan.local_f64());
+        sys.observe_epoch(&out.per_node, out.t_batch);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// grep enforcement: SystemRegistry is the only construction point
+// ---------------------------------------------------------------------------
+
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.is_dir() {
+            rust_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// ISSUE 3 acceptance: zero direct constructions of the system types
+/// outside the `SystemRegistry` and unit tests.  `#[cfg(test)]` blocks
+/// (all repo files keep them at the bottom) are stripped before matching.
+/// Allowlisted:
+/// * `api/registry.rs` — the registry itself;
+/// * `elastic/scenario.rs` — `ColdRestartCannikin` *is* a system whose
+///   cold-restart semantics consist of constructing a fresh inner
+///   planner.
+#[test]
+fn no_direct_system_construction_outside_the_registry() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut files = Vec::new();
+    for dir in ["rust/src", "rust/benches", "rust/tests", "examples"] {
+        rust_files(&root.join(dir), &mut files);
+    }
+    assert!(files.len() > 30, "walker must see the whole tree ({} files)", files.len());
+
+    let allow = ["rust/src/api/registry.rs", "rust/src/elastic/scenario.rs"];
+    // built by concatenation so this file does not match itself
+    let joiner = "::";
+    let patterns: Vec<String> = [
+        ("CannikinPlanner", "new("),
+        ("ColdRestartCannikin", "new("),
+        ("AdaptDl", "new("),
+        ("LbBsp", "new("),
+        ("Ddp", "new("),
+        ("Ddp", "with_total("),
+    ]
+    .iter()
+    .map(|(ty, ctor)| format!("{ty}{joiner}{ctor}"))
+    .collect();
+
+    let mut violations = Vec::new();
+    for file in &files {
+        let rel = file.strip_prefix(&root).unwrap().to_string_lossy().replace('\\', "/");
+        if allow.contains(&rel.as_str()) {
+            continue;
+        }
+        let text = std::fs::read_to_string(file).unwrap();
+        // unit-test blocks sit at the bottom of every file in this repo
+        let prod = text.split("#[cfg(test)]").next().unwrap();
+        for (lineno, line) in prod.lines().enumerate() {
+            for pat in &patterns {
+                if line.contains(pat.as_str()) {
+                    violations.push(format!("{rel}:{}: {}", lineno + 1, line.trim()));
+                }
+            }
+        }
+    }
+    assert!(
+        violations.is_empty(),
+        "systems must be constructed through api::SystemRegistry only:\n{}",
+        violations.join("\n")
+    );
+}

@@ -1,15 +1,20 @@
 //! Cross-module elastic end-to-end tests: churn traces driving full
-//! convergence runs through the scenario runner, plus the comparative
-//! claims the elastic bench reports (cannikin-elastic vs naive even
-//! re-split vs static DDP; warm vs cold re-planning).
+//! convergence runs through the unified driver (`api::run`), plus the
+//! comparative claims the elastic bench reports (cannikin-elastic vs
+//! naive even re-split vs static DDP; warm vs cold re-planning).  All
+//! systems are built through the `SystemRegistry`, like every production
+//! caller.
 
-use cannikin::baselines::{AdaptDl, Ddp};
-use cannikin::cluster;
-use cannikin::coordinator::{BatchPolicy, CannikinPlanner};
-use cannikin::elastic::{
-    self, ChurnTrace, ColdRestartCannikin, DetectionMode, ScenarioConfig, ScenarioReport,
-};
-use cannikin::simulator::workload;
+use cannikin::api::{self, BuildOptions, RunReport, SystemRegistry, TrainingSystem};
+use cannikin::cluster::{self, ClusterSpec};
+use cannikin::elastic::{self, ChurnTrace, DetectionMode, ScenarioConfig};
+use cannikin::simulator::{workload, Workload};
+
+fn build(name: &str, c: &ClusterSpec, w: &Workload) -> Box<dyn TrainingSystem> {
+    SystemRegistry::builtin()
+        .build(name, c, w, &BuildOptions::default())
+        .expect("builtin system")
+}
 
 fn cfg(seed: u64) -> ScenarioConfig {
     ScenarioConfig { max_epochs: 20_000, seed, ..Default::default() }
@@ -30,13 +35,12 @@ fn spot_churn_cannikin_beats_naive_even_resplit_and_static_ddp() {
         "{counts:?}"
     );
 
-    let mut cank =
-        CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
-    let r_cank = elastic::run_scenario(&c, &w, &trace, &mut cank, &cfg(7));
-    let mut even = AdaptDl::new(c.n(), w.b0, w.b_max, w.n_buckets);
-    let r_even = elastic::run_scenario(&c, &w, &trace, &mut even, &cfg(7));
-    let mut ddp = Ddp::with_total(c.n(), w.b0);
-    let r_ddp = elastic::run_scenario(&c, &w, &trace, &mut ddp, &cfg(7));
+    let mut cank = build("cannikin", &c, &w);
+    let r_cank = api::run(&c, &w, &trace, cank.as_mut(), &cfg(7));
+    let mut even = build("adaptdl", &c, &w);
+    let r_even = api::run(&c, &w, &trace, even.as_mut(), &cfg(7));
+    let mut ddp = build("ddp", &c, &w);
+    let r_ddp = api::run(&c, &w, &trace, ddp.as_mut(), &cfg(7));
 
     assert!(r_cank.events_applied >= 3, "{:?}", r_cank.events_applied);
     let t_cank = r_cank.time_to_target.expect("cannikin must reach the target under churn");
@@ -54,12 +58,10 @@ fn warm_replan_strictly_fewer_bootstraps_than_cold_restart() {
     let c = cluster::cluster_a();
     let w = workload::cifar10();
     let trace = elastic::spot_instance(&c, 20_000, 13);
-    let mut warm =
-        CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
-    let r_warm = elastic::run_scenario(&c, &w, &trace, &mut warm, &cfg(13));
-    let mut cold =
-        ColdRestartCannikin::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
-    let r_cold = elastic::run_scenario(&c, &w, &trace, &mut cold, &cfg(13));
+    let mut warm = build("cannikin", &c, &w);
+    let r_warm = api::run(&c, &w, &trace, warm.as_mut(), &cfg(13));
+    let mut cold = build("cannikin-cold", &c, &w);
+    let r_cold = api::run(&c, &w, &trace, cold.as_mut(), &cfg(13));
     assert!(
         r_warm.bootstrap_epochs < r_cold.bootstrap_epochs,
         "warm {} must be strictly below cold {}",
@@ -81,9 +83,8 @@ fn saved_trace_reproduces_the_run_bit_identically() {
     assert_eq!(trace, loaded, "JSON round-trip must be lossless");
 
     let run = |t: &ChurnTrace| {
-        let mut sys =
-            CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
-        elastic::run_scenario(&c, &w, t, &mut sys, &cfg(3))
+        let mut sys = build("cannikin", &c, &w);
+        api::run(&c, &w, t, sys.as_mut(), &cfg(3))
     };
     let a = run(&trace);
     let b = run(&loaded);
@@ -104,9 +105,8 @@ fn maintenance_window_shrinks_then_restores_membership() {
     let c = cluster::cluster_b();
     let w = workload::cifar10();
     let trace = elastic::maintenance_window(&c, 2000, 5);
-    let mut sys =
-        CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
-    let r = elastic::run_scenario(&c, &w, &trace, &mut sys, &cfg(5));
+    let mut sys = build("cannikin", &c, &w);
+    let r = api::run(&c, &w, &trace, sys.as_mut(), &cfg(5));
     let min_n = r.rows.iter().map(|x| x.n_nodes).min().unwrap();
     assert_eq!(min_n, 12, "16-node cluster loses 4 during the window");
     assert_eq!(r.final_n, 16, "membership restored after the window");
@@ -120,9 +120,8 @@ fn straggler_drift_reaches_target_with_degraded_nodes() {
     let w = workload::cifar10();
     let trace = elastic::straggler_drift(&c, 20_000, 9);
     assert!(trace.counts().slowdowns >= 3);
-    let mut sys =
-        CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
-    let r = elastic::run_scenario(&c, &w, &trace, &mut sys, &cfg(9));
+    let mut sys = build("cannikin", &c, &w);
+    let r = api::run(&c, &w, &trace, sys.as_mut(), &cfg(9));
     assert_eq!(r.final_n, 3, "drift never changes membership");
     assert!(r.reached(), "target must be reached despite stragglers");
 }
@@ -131,13 +130,12 @@ fn straggler_drift_reaches_target_with_degraded_nodes() {
 // observation-driven detection (DetectionMode::Observed)
 // ---------------------------------------------------------------------------
 
-fn run_straggler(seed: u64, detect: DetectionMode) -> ScenarioReport {
+fn run_straggler(seed: u64, detect: DetectionMode) -> RunReport {
     let c = cluster::cluster_a();
     let w = workload::cifar10();
     let trace = elastic::straggler_drift(&c, 20_000, seed);
-    let mut sys =
-        CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
-    elastic::run_scenario(&c, &w, &trace, &mut sys, &cfg_mode(seed, detect))
+    let mut sys = build("cannikin", &c, &w);
+    api::run(&c, &w, &trace, sys.as_mut(), &cfg_mode(seed, detect))
 }
 
 /// Acceptance: on the straggler_drift preset with hidden oracle events,
@@ -193,15 +191,8 @@ fn observed_detection_has_zero_false_positives_on_healthy_trace() {
     let c = cluster::cluster_a();
     let w = workload::cifar10();
     let trace = ChurnTrace::new("all-healthy");
-    let mut sys =
-        CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
-    let r = elastic::run_scenario(
-        &c,
-        &w,
-        &trace,
-        &mut sys,
-        &cfg_mode(21, DetectionMode::Observed),
-    );
+    let mut sys = build("cannikin", &c, &w);
+    let r = api::run(&c, &w, &trace, sys.as_mut(), &cfg_mode(21, DetectionMode::Observed));
     assert!(r.reached());
     let d = r.detection.expect("observed mode must report detection stats");
     assert_eq!(d.emitted_slowdowns, 0, "{d:?}");
@@ -219,15 +210,8 @@ fn observed_mode_survives_membership_churn() {
     let c = cluster::cluster_a();
     let w = workload::cifar10();
     let trace = elastic::spot_instance(&c, 20_000, 7);
-    let mut sys =
-        CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
-    let r = elastic::run_scenario(
-        &c,
-        &w,
-        &trace,
-        &mut sys,
-        &cfg_mode(7, DetectionMode::Observed),
-    );
+    let mut sys = build("cannikin", &c, &w);
+    let r = api::run(&c, &w, &trace, sys.as_mut(), &cfg_mode(7, DetectionMode::Observed));
     assert!(r.reached(), "cannikin must reach the target under observed spot churn");
     assert!(r.events_hidden >= 1, "spot throttle warnings are hidden");
     let d = r.detection.expect("observed mode must report detection stats");

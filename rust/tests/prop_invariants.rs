@@ -2,9 +2,9 @@
 //! coordinator's routing / batching / state management — the offline
 //! substitute for proptest, see util::prop).
 
-use cannikin::baselines::{even_split, System};
+use cannikin::api::{BuildOptions, SystemRegistry, TrainingSystem as _};
+use cannikin::baselines::even_split;
 use cannikin::cluster::{random_cluster, DeviceProfile};
-use cannikin::coordinator::{BatchPolicy, CannikinPlanner};
 use cannikin::elastic::{ChurnTrace, ClusterEvent, ElasticCluster, TimedEvent};
 use cannikin::gns;
 use cannikin::optperf;
@@ -166,14 +166,13 @@ fn prop_planner_plans_are_always_valid() {
             let w = workload::cifar10();
             let caps: Vec<u64> =
                 cluster.nodes.iter().map(|nd| w.max_local_batch(nd)).collect();
-            let mut planner = CannikinPlanner::new(
-                cluster.n(),
-                w.b0,
-                w.b_max.min(caps.iter().sum::<u64>()),
-                w.n_buckets,
-                BatchPolicy::Adaptive,
-            )
-            .with_caps(caps.clone());
+            let opts = BuildOptions {
+                b_max: Some(w.b_max.min(caps.iter().sum::<u64>())),
+                ..Default::default()
+            };
+            let mut planner = SystemRegistry::builtin()
+                .build("cannikin", cluster, &w, &opts)
+                .map_err(|e| e.to_string())?;
             let mut sim = ClusterSim::new(cluster, &w, *seed);
             let mut phi = w.phi0;
             for e in 0..10 {
