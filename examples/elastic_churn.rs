@@ -22,7 +22,14 @@ fn main() {
     let trace = elastic::spot_instance(&c, cfg.max_epochs, cfg.seed);
     println!("churn trace {:?} ({} events):", trace.name, trace.len());
     for te in &trace.events {
-        println!("  epoch {:>4}  {}", te.epoch, te.event.kind());
+        // spot preemptions land mid-epoch (frac > 0): the victim's
+        // in-flight work is lost and re-dispatched
+        let at = if te.frac > 0.0 {
+            format!("{}+{:.2}", te.epoch, te.frac)
+        } else {
+            te.epoch.to_string()
+        };
+        println!("  epoch {at:>7}  {}", te.event.kind());
     }
 
     // run the same scenario under each system

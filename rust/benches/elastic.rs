@@ -26,7 +26,13 @@ fn main() {
         counts.slowdowns
     );
 
-    let mut tbl = Table::new(&["system", "time-to-target (sim s)", "bootstrap epochs", "events"]);
+    let mut tbl = Table::new(&[
+        "system",
+        "time-to-target (sim s)",
+        "bootstrap epochs",
+        "events",
+        "wasted (s)",
+    ]);
     let mut run = |label: &str, name: &str| -> RunReport {
         let mut sys = reg.build(name, &c, &w, &BuildOptions::default()).unwrap();
         let r = api::run(&c, &w, &trace, sys.as_mut(), &cfg);
@@ -35,6 +41,7 @@ fn main() {
             r.time_to_target.map(|t| format!("{t:.0}")).unwrap_or_else(|| "-".to_string()),
             r.bootstrap_epochs.to_string(),
             r.events_applied.to_string(),
+            format!("{:.1}", r.wasted_work_secs),
         ]);
         r
     };
@@ -97,6 +104,27 @@ fn main() {
         ]);
     }
     dtbl.print("Straggler drift: oracle vs observation-driven detection (cifar10, cluster A)");
+
+    // ---- membership inference: the spot preset's mid-epoch preemptions
+    // under Observed are never announced — the missing-heartbeat rule
+    // must infer each departure from the node falling silent
+    {
+        let mut sys = reg.build("cannikin", &c, &w, &BuildOptions::default()).unwrap();
+        let cfg2 = ScenarioConfig { detect: DetectionMode::Observed, ..cfg };
+        let r = api::run(&c, &w, &trace, sys.as_mut(), &cfg2);
+        let d = r.detection.as_ref().expect("observed mode reports detection stats");
+        println!(
+            "\nspot/observed membership inference: {} preemption(s) inferred \
+             ({} false alarms, {} missed), mean lag {} epochs, wasted {:.1}s, \
+             reached target: {}",
+            d.inferred_preempts,
+            d.false_preempts,
+            d.missed_preempts,
+            d.mean_preempt_latency().map(|l| format!("{l:.1}")).unwrap_or_else(|| "-".into()),
+            r.wasted_work_secs,
+            r.reached(),
+        );
+    }
 
     // wall time of the scenario runner itself (the churn overhead is the
     // quantity a production scheduler would pay per event)

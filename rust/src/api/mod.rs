@@ -26,9 +26,10 @@
 //!   spec.json` executes one, `cannikin compare spec.json --systems …`
 //!   executes a batch of them over a system list.
 //! * [`RunReport`] — the one machine-readable result (epoch rows, time to
-//!   target, event/detection accounting) with lossless JSON
-//!   serialization; `--json` on `sim` / `elastic` / `run` emits it, and
-//!   `cannikin report` parses it back.
+//!   target, event/detection accounting — effective and no-op events
+//!   counted apart, mid-epoch events per row, wasted re-dispatch seconds)
+//!   with lossless JSON serialization; `--json` on `sim` / `elastic` /
+//!   `run` emits it, and `cannikin report` parses it back.
 //!
 //! Execution itself is a single path: [`run`] (=
 //! [`crate::elastic::run_scenario`]) drives any [`TrainingSystem`]
@@ -78,12 +79,14 @@ pub trait TrainingSystem {
     /// Feed back per-node measurements and the observed batch time.
     fn observe_epoch(&mut self, obs: &[NodeBatchObs], t_batch: f64);
 
-    /// Called at the epoch boundary right after `delta` was applied.
-    /// `spec` is the post-event cluster view and `caps` the per-node
-    /// memory caps (same node order).  Default: ignore the change (a
-    /// static system keeps planning for its original node count — the
-    /// driver will surface the mismatch, so genuinely elastic systems
-    /// must override this).
+    /// Called right after `delta` was applied — at an epoch boundary, or
+    /// *inside* an epoch for a fractional-offset event (the driver keeps
+    /// running the current plan, re-dispatched, until the next
+    /// `plan_epoch`).  `spec` is the post-event cluster view and `caps`
+    /// the per-node memory caps (same node order).  Default: ignore the
+    /// change (a static system keeps planning for its original node count
+    /// — the driver will surface the mismatch, so genuinely elastic
+    /// systems must override this).
     fn on_cluster_change(&mut self, _delta: &MembershipDelta, _spec: &ClusterSpec, _caps: &[u64]) {}
 
     /// Eq. 8 bootstrap epochs issued so far (warm-vs-cold accounting);

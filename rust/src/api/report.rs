@@ -31,8 +31,13 @@ pub struct EpochRow {
     pub wall_secs: f64,
     pub progress: f64,
     pub metric: f64,
-    /// trace events applied at this epoch's boundary
+    /// effective trace events applied at this epoch's boundary (no-op
+    /// replays are counted run-wide in [`RunReport::events_noop`], never
+    /// here)
     pub events: usize,
+    /// effective trace events applied **inside** this epoch (fractional
+    /// offsets — they split the epoch into segments)
+    pub mid_epoch_events: usize,
     /// detector-synthesized events routed to the system this epoch
     pub detected: usize,
 }
@@ -50,12 +55,20 @@ pub struct RunReport {
     pub detect: DetectionMode,
     pub rows: Vec<EpochRow>,
     pub time_to_target: Option<f64>,
+    /// events that actually changed the cluster (boundary + mid-epoch)
     pub events_applied: usize,
+    /// events the membership manager accepted with no effect (e.g. a
+    /// trace replaying the current slowdown factor) — counted apart so
+    /// per-run event totals mean what they say
+    pub events_noop: usize,
     /// applied events that were concealed from the system (Observed/Off)
     pub events_hidden: usize,
     /// events rejected by the membership manager (e.g. would empty the
     /// cluster) — skipped, never fatal
     pub events_skipped: usize,
+    /// seconds charged to the simulated clock with zero progress: work
+    /// lost to abrupt mid-epoch departures and re-processed by survivors
+    pub wasted_work_secs: f64,
     pub bootstrap_epochs: usize,
     pub final_n: usize,
     /// detection accounting (Some iff a detector ran)
@@ -81,7 +94,8 @@ impl RunReport {
         };
         format!(
             "{} on {}/{} trace {:?} [detect={}]: {} epochs, {outcome}; \
-             {} events applied ({} hidden, {} skipped), final n={}, bootstrap epochs {}",
+             {} events applied ({} no-op, {} hidden, {} skipped), \
+             {:.1}s wasted, final n={}, bootstrap epochs {}",
             self.system,
             self.cluster,
             self.workload,
@@ -89,8 +103,10 @@ impl RunReport {
             self.detect.name(),
             self.rows.len(),
             self.events_applied,
+            self.events_noop,
             self.events_hidden,
             self.events_skipped,
+            self.wasted_work_secs,
             self.final_n,
             self.bootstrap_epochs,
         )
@@ -113,8 +129,10 @@ impl RunReport {
                 self.time_to_target.map(Json::Num).unwrap_or(Json::Null),
             ),
             ("events_applied", Json::Num(self.events_applied as f64)),
+            ("events_noop", Json::Num(self.events_noop as f64)),
             ("events_hidden", Json::Num(self.events_hidden as f64)),
             ("events_skipped", Json::Num(self.events_skipped as f64)),
+            ("wasted_work_secs", Json::Num(self.wasted_work_secs)),
             ("bootstrap_epochs", Json::Num(self.bootstrap_epochs as f64)),
             ("final_n", Json::Num(self.final_n as f64)),
             (
@@ -125,6 +143,16 @@ impl RunReport {
     }
 
     pub fn from_json(j: &Json) -> Result<RunReport> {
+        // fields introduced by the mid-epoch-semantics release default to
+        // zero when absent, so report files written by older binaries
+        // still parse (the writer always emits them, so round trips of
+        // current reports stay lossless)
+        let opt_usize = |key: &str| -> Result<usize> {
+            match j.get(key) {
+                None | Some(Json::Null) => Ok(0),
+                Some(v) => v.as_usize(),
+            }
+        };
         let detect_name = j.req("detect")?.as_str()?;
         let detect = DetectionMode::by_name(detect_name)
             .ok_or_else(|| anyhow::anyhow!("unknown detection mode {detect_name:?}"))?;
@@ -153,8 +181,13 @@ impl RunReport {
             rows,
             time_to_target,
             events_applied: j.req("events_applied")?.as_usize()?,
+            events_noop: opt_usize("events_noop")?,
             events_hidden: j.req("events_hidden")?.as_usize()?,
             events_skipped: j.req("events_skipped")?.as_usize()?,
+            wasted_work_secs: match j.get("wasted_work_secs") {
+                None | Some(Json::Null) => 0.0,
+                Some(v) => v.as_f64()?,
+            },
             bootstrap_epochs: j.req("bootstrap_epochs")?.as_usize()?,
             final_n: j.req("final_n")?.as_usize()?,
             detection,
@@ -181,6 +214,7 @@ fn row_to_json(r: &EpochRow) -> Json {
         ("progress", Json::Num(r.progress)),
         ("metric", Json::Num(r.metric)),
         ("events", Json::Num(r.events as f64)),
+        ("mid_epoch_events", Json::Num(r.mid_epoch_events as f64)),
         ("detected", Json::Num(r.detected as f64)),
     ])
 }
@@ -195,37 +229,58 @@ fn row_from_json(j: &Json) -> Result<EpochRow> {
         progress: j.req("progress")?.as_f64()?,
         metric: j.req("metric")?.as_f64()?,
         events: j.req("events")?.as_usize()?,
+        // absent in pre-mid-epoch report files: default 0
+        mid_epoch_events: match j.get("mid_epoch_events") {
+            None | Some(Json::Null) => 0,
+            Some(v) => v.as_usize()?,
+        },
         detected: j.req("detected")?.as_usize()?,
     })
 }
 
 fn detection_to_json(d: &DetectionStats) -> Json {
+    let usizes = |v: &[usize]| Json::Arr(v.iter().map(|&l| Json::Num(l as f64)).collect());
     Json::obj(vec![
         ("emitted_slowdowns", Json::Num(d.emitted_slowdowns as f64)),
         ("emitted_recovers", Json::Num(d.emitted_recovers as f64)),
         ("false_slowdowns", Json::Num(d.false_slowdowns as f64)),
         ("false_recovers", Json::Num(d.false_recovers as f64)),
-        (
-            "latencies",
-            Json::Arr(d.latencies.iter().map(|&l| Json::Num(l as f64)).collect()),
-        ),
+        ("latencies", usizes(&d.latencies)),
         ("missed", Json::Num(d.missed as f64)),
+        ("inferred_preempts", Json::Num(d.inferred_preempts as f64)),
+        ("false_preempts", Json::Num(d.false_preempts as f64)),
+        ("preempt_latencies", usizes(&d.preempt_latencies)),
+        ("missed_preempts", Json::Num(d.missed_preempts as f64)),
     ])
 }
 
 fn detection_from_json(j: &Json) -> Result<DetectionStats> {
+    let usizes = |key: &str| -> Result<Vec<usize>> {
+        j.req(key)?.as_arr()?.iter().map(|l| l.as_usize()).collect()
+    };
+    // membership-inference fields default to empty when absent (reports
+    // written before the missing-heartbeat rule existed)
+    let opt_usize = |key: &str| -> Result<usize> {
+        match j.get(key) {
+            None | Some(Json::Null) => Ok(0),
+            Some(v) => v.as_usize(),
+        }
+    };
+    let preempt_latencies = match j.get("preempt_latencies") {
+        None | Some(Json::Null) => Vec::new(),
+        Some(v) => v.as_arr()?.iter().map(|l| l.as_usize()).collect::<Result<Vec<_>>>()?,
+    };
     Ok(DetectionStats {
         emitted_slowdowns: j.req("emitted_slowdowns")?.as_usize()?,
         emitted_recovers: j.req("emitted_recovers")?.as_usize()?,
         false_slowdowns: j.req("false_slowdowns")?.as_usize()?,
         false_recovers: j.req("false_recovers")?.as_usize()?,
-        latencies: j
-            .req("latencies")?
-            .as_arr()?
-            .iter()
-            .map(|l| l.as_usize())
-            .collect::<Result<Vec<_>>>()?,
+        latencies: usizes("latencies")?,
         missed: j.req("missed")?.as_usize()?,
+        inferred_preempts: opt_usize("inferred_preempts")?,
+        false_preempts: opt_usize("false_preempts")?,
+        preempt_latencies,
+        missed_preempts: opt_usize("missed_preempts")?,
     })
 }
 
@@ -252,6 +307,7 @@ mod tests {
                     progress: 12.25,
                     metric: 1.0 / 3.0,
                     events: 1,
+                    mid_epoch_events: 0,
                     detected: 0,
                 },
                 EpochRow {
@@ -263,13 +319,16 @@ mod tests {
                     progress: 0.0,
                     metric: 93.999999,
                     events: 0,
+                    mid_epoch_events: 1,
                     detected: 2,
                 },
             ],
             time_to_target: Some(1234.5678),
             events_applied: 3,
+            events_noop: 1,
             events_hidden: 1,
             events_skipped: 0,
+            wasted_work_secs: 17.25000000000125,
             bootstrap_epochs: 2,
             final_n: 2,
             detection: Some(DetectionStats {
@@ -279,6 +338,10 @@ mod tests {
                 false_recovers: 0,
                 latencies: vec![3, 5],
                 missed: 1,
+                inferred_preempts: 1,
+                false_preempts: 0,
+                preempt_latencies: vec![2],
+                missed_preempts: 0,
             }),
         }
     }
@@ -308,5 +371,33 @@ mod tests {
     fn epochs_to_target_finds_crossing_row() {
         let r = sample();
         assert_eq!(r.epochs_to_target(), Some(1));
+    }
+
+    #[test]
+    fn pre_mid_epoch_report_files_still_parse() {
+        // a report written before events_noop / wasted_work_secs /
+        // mid_epoch_events / the membership-inference detection fields
+        // existed must parse with those fields zeroed
+        let old = r#"{
+          "system": "cannikin", "cluster": "cluster-a", "workload": "cifar10",
+          "trace": "spot", "seed": 7, "max_epochs": 2, "detect": "observed",
+          "rows": [{ "epoch": 0, "n_nodes": 3, "total_batch": 64,
+                     "t_batch": 0.1, "wall_secs": 9.5, "progress": 1.5,
+                     "metric": 10.0, "events": 1, "detected": 0 }],
+          "time_to_target": null, "events_applied": 1, "events_hidden": 0,
+          "events_skipped": 0, "bootstrap_epochs": 2, "final_n": 3,
+          "detection": { "emitted_slowdowns": 1, "emitted_recovers": 0,
+                         "false_slowdowns": 0, "false_recovers": 0,
+                         "latencies": [4], "missed": 0 }
+        }"#;
+        let r = RunReport::from_json(&Json::parse(old).unwrap()).unwrap();
+        assert_eq!(r.events_noop, 0);
+        assert_eq!(r.wasted_work_secs, 0.0);
+        assert_eq!(r.rows[0].mid_epoch_events, 0);
+        let d = r.detection.unwrap();
+        assert_eq!(d.inferred_preempts, 0);
+        assert_eq!(d.false_preempts, 0);
+        assert!(d.preempt_latencies.is_empty());
+        assert_eq!(d.missed_preempts, 0);
     }
 }

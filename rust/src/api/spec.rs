@@ -40,7 +40,9 @@ pub struct ExperimentSpec {
     /// system name resolved through the [`SystemRegistry`]
     pub system: String,
     /// churn trace: preset (`spot` / `maintenance` / `straggler`) or a
-    /// saved `*.json` path; `None` runs a static cluster
+    /// saved `*.json` path; `None` runs a static cluster.  Saved traces
+    /// carry fractional in-epoch offsets (`"frac"`) losslessly, so a
+    /// spec-driven run reproduces mid-epoch preemptions bit-for-bit
     pub trace: Option<String>,
     pub detect: DetectionMode,
     pub policy: BatchPolicy,

@@ -18,11 +18,14 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use crate::api::{BuildOptions, SystemRegistry, TrainingSystem as _};
+use crate::baselines::even_split;
 use crate::cluster::ClusterSpec;
 use crate::coordinator::dataloader::HeteroDataLoader;
 use crate::coordinator::planner::BatchPolicy;
 use crate::data::{synth_corpus, Sampler};
-use crate::elastic::{ChurnTrace, DetectionMode, DetectionStats, DetectorConfig, ElasticDriver};
+use crate::elastic::{
+    ChurnTrace, DetectionMode, DetectionStats, DetectorConfig, ElasticDriver, TimedEvent,
+};
 use crate::gns::{estimate_round, GnsTracker};
 use crate::gradsync::{ring_all_reduce, sq_norm, Buckets};
 use crate::metrics::JsonlLog;
@@ -98,6 +101,21 @@ pub struct EpochReport {
     pub planner_secs: f64,
     /// GNS estimate at end of epoch (None until estimable)
     pub phi: Option<f64>,
+}
+
+/// Spread a departed worker's allocation over the eligible plan slots as
+/// evenly as possible (deterministic; conserves the total) — the
+/// runtime-level re-dispatch between a mid-epoch departure and the next
+/// boundary re-plan.
+fn redispatch_units(local: &mut [u64], gone: u64, eligible: impl Fn(usize) -> bool) {
+    let targets: Vec<usize> = (0..local.len()).filter(|&i| eligible(i)).collect();
+    if targets.is_empty() || gone == 0 {
+        return;
+    }
+    let share = even_split(gone, targets.len());
+    for (k, &i) in targets.iter().enumerate() {
+        local[i] += share[k];
+    }
 }
 
 #[derive(Debug)]
@@ -191,16 +209,59 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 }
             }
         }
-        let n = driver.n();
         let phi = gns.b_noise().unwrap_or(cfg.workload.phi0);
-        let plan = planner.plan_epoch(epoch, phi);
-        let total: u64 = plan.local.iter().sum();
-        let ratios: Vec<f64> =
-            plan.local.iter().map(|&b| b as f64 / total as f64).collect();
+        let mut plan = planner.plan_epoch(epoch, phi);
+        // mid-epoch events land at step granularity on this path: an event
+        // at fraction f applies before step ⌈f·steps⌉ (an event past the
+        // last step applies at the epoch's end), via the same shared
+        // driver core the scenario runner uses
+        let mid: Vec<(usize, TimedEvent)> = driver
+            .take_mid_epoch(epoch)
+            .into_iter()
+            .map(|te| ((te.frac * cfg.steps_per_epoch as f64).ceil().max(1.0) as usize, te))
+            .collect();
+        let mut next_mid = 0;
 
         let mut epoch_loss = 0.0f64;
         let mut epoch_sim_t = 0.0f64;
-        for _step in 0..cfg.steps_per_epoch {
+        for step in 0..cfg.steps_per_epoch {
+            while next_mid < mid.len() && mid[next_mid].0 <= step {
+                let te = &mid[next_mid].1;
+                next_mid += 1;
+                let eff = driver.apply_mid_epoch(epoch, te, planner.as_mut());
+                if let Some(s) = eff.new_sim {
+                    sim = s;
+                }
+                if !eff.effective {
+                    continue;
+                }
+                if let Some(a) = eff.removed {
+                    // visible departure: drop the slot, survivors absorb
+                    // its allocation until the next boundary re-plan
+                    let gone = plan.local.remove(a);
+                    redispatch_units(&mut plan.local, gone, |i| !driver.is_ghost(i));
+                } else if let Some(a) = eff.ghosted {
+                    // silent death (Observed): the slot stays but computes
+                    // nothing; its in-flight micro-batches re-dispatch
+                    let gone = std::mem::take(&mut plan.local[a]);
+                    redispatch_units(&mut plan.local, gone, |i| i != a && !driver.is_ghost(i));
+                }
+                for _ in 0..eff.added {
+                    plan.local.push(0);
+                }
+                if cfg.verbose {
+                    println!(
+                        "elastic: mid-epoch {} at epoch {epoch} step {step} -> {} workers",
+                        te.event.kind(),
+                        driver.n()
+                    );
+                }
+            }
+            let n = plan.local.len();
+            let total: u64 = plan.local.iter().sum();
+            let ratios: Vec<f64> =
+                plan.local.iter().map(|&b| b as f64 / total as f64).collect();
+
             // ---- per-worker local gradient estimation (real numerics)
             let batches = loader.load_step(&plan.local)?;
             let mut worker_flat: Vec<Vec<f32>> = Vec::with_capacity(n);
@@ -285,12 +346,13 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
 
             // ---- advance the simulated cluster clock & feed the learners
             // (and the straggler detector, which sees only what a real
-            // instrumentation agent would: the per-node timings)
+            // instrumentation agent would: the per-node timings, with
+            // ghost slots silent — the missing-heartbeat signal)
             let local_f: Vec<f64> = plan.local.iter().map(|&b| b as f64).collect();
-            let simout = sim.step(&local_f);
-            planner.observe_epoch(&simout.per_node, simout.t_batch);
-            driver.observe(&simout.per_node);
-            epoch_sim_t += simout.t_batch;
+            let (sim_t_batch, obs) = driver.step(&mut sim, &local_f);
+            planner.observe_epoch(&obs, sim_t_batch);
+            driver.observe(&obs);
+            epoch_sim_t += sim_t_batch;
 
             loss_curve.push(step_loss as f32);
             epoch_loss += step_loss;
@@ -300,15 +362,35 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                     ("epoch", Json::Num(epoch as f64)),
                     ("loss", Json::Num(step_loss)),
                     ("total_batch", Json::Num(total as f64)),
-                    ("sim_t_batch", Json::Num(simout.t_batch)),
+                    ("sim_t_batch", Json::Num(sim_t_batch)),
                     ("gsq_global", Json::Num(gsq_global)),
                 ]))?;
             }
         }
 
+        // events mapped past the last step land at the epoch's end; the
+        // steps are done, so there is nothing left to re-dispatch
+        while next_mid < mid.len() {
+            let te = &mid[next_mid].1;
+            next_mid += 1;
+            let eff = driver.apply_mid_epoch(epoch, te, planner.as_mut());
+            if let Some(s) = eff.new_sim {
+                sim = s;
+            }
+            if let Some(a) = eff.removed {
+                plan.local.remove(a);
+            } else if let Some(a) = eff.ghosted {
+                plan.local[a] = 0;
+            }
+            for _ in 0..eff.added {
+                plan.local.push(0);
+            }
+        }
+
         // ---- observation-driven detection closes the epoch: synthesized
         // SlowDown/Recover events warm-replan the planner exactly like
-        // oracle ones would
+        // oracle ones would, and an inferred mid-epoch preemption shrinks
+        // the planner's view through the same path
         let detected = driver.end_epoch(epoch, planner.as_mut());
         if cfg.verbose && detected > 0 {
             println!("elastic: detector flagged {detected} event(s) at epoch {epoch}");
@@ -319,9 +401,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         let eval_loss = rt.eval_step(biggest_bucket, &params, &etoks, &ewts)?;
 
         sim_wall += epoch_sim_t;
+        let total: u64 = plan.local.iter().sum();
         let report = EpochReport {
             epoch,
-            n_nodes: n,
+            n_nodes: driver.n(),
             total_batch: total,
             local: plan.local.clone(),
             train_loss: (epoch_loss / cfg.steps_per_epoch as f64) as f32,

@@ -32,6 +32,19 @@
 //! threshold, so the flag/recover pair has hysteresis and transient noise
 //! cannot thrash the planner.
 //!
+//! **Membership inference (missing-heartbeat rule).**  An abrupt mid-epoch
+//! `Preempt` sends no goodbye: the node simply stops producing
+//! [`NodeBatchObs`].  Observation *presence* is therefore a signal of its
+//! own, separate from the timings: the runtime's instrumentation layer
+//! reports, per batch, which nodes delivered anything at all (an idle
+//! worker still heartbeats a zero-batch report; a dead one is silent at
+//! the transport level).  A node silent for
+//! [`DetectorConfig::k_missing`] consecutive epochs is declared gone —
+//! the detector synthesizes a [`ClusterEvent::Preempt`] exactly once, and
+//! the driver's warm-replan path consumes it like a trace event.  The
+//! k-epoch confirmation keeps a one-epoch hiccup (e.g. a paused
+//! container) from amputating a live node.
+//!
 //! The detector is pure bookkeeping — no RNG, no clock — so a run that
 //! embeds it stays bit-identical under a fixed seed.
 
@@ -104,6 +117,10 @@ pub struct DetectorConfig {
     pub redetect_delta: f64,
     /// minimum epochs between two emissions for the same node
     pub reemit_gap: usize,
+    /// consecutive epochs with **no observation at all** from a node
+    /// (missing heartbeat, not merely an idle/zero-batch epoch) before a
+    /// synthesized `Preempt` declares it gone
+    pub k_missing: usize,
 }
 
 impl Default for DetectorConfig {
@@ -119,6 +136,7 @@ impl Default for DetectorConfig {
             k_recover: 3,
             redetect_delta: 0.07,
             reemit_gap: 10,
+            k_missing: 2,
         }
     }
 }
@@ -138,6 +156,15 @@ pub struct DetectionStats {
     /// hidden slowdowns never detected (node recovered, departed, or the
     /// run ended first)
     pub missed: usize,
+    /// membership changes recovered by the missing-heartbeat rule:
+    /// synthesized `Preempt`s for nodes that had genuinely departed
+    pub inferred_preempts: usize,
+    /// synthesized `Preempt`s for nodes that were actually alive
+    pub false_preempts: usize,
+    /// epochs from each unannounced departure to its inference
+    pub preempt_latencies: Vec<usize>,
+    /// unannounced departures never inferred before the run ended
+    pub missed_preempts: usize,
 }
 
 impl DetectionStats {
@@ -153,9 +180,20 @@ impl DetectionStats {
         self.latencies.iter().copied().max()
     }
 
-    /// No false alarms of either kind.
+    /// No false alarms of any kind (degradation or membership).
     pub fn clean(&self) -> bool {
-        self.false_slowdowns == 0 && self.false_recovers == 0
+        self.false_slowdowns == 0 && self.false_recovers == 0 && self.false_preempts == 0
+    }
+
+    pub fn mean_preempt_latency(&self) -> Option<f64> {
+        if self.preempt_latencies.is_empty() {
+            None
+        } else {
+            Some(
+                self.preempt_latencies.iter().sum::<usize>() as f64
+                    / self.preempt_latencies.len() as f64,
+            )
+        }
     }
 }
 
@@ -179,6 +217,9 @@ enum Status {
 enum Verdict {
     Slow { factor: f64 },
     Recovered,
+    /// missing-heartbeat: the node produced nothing for `k_missing`
+    /// consecutive epochs — infer an unannounced departure
+    Gone,
 }
 
 #[derive(Clone, Debug)]
@@ -201,6 +242,13 @@ struct NodeState {
     /// scratch: this epoch's per-batch samples
     batch_b: Vec<f64>,
     batch_t: Vec<f64>,
+    /// scratch: did *any* report (even zero-batch) arrive this epoch?
+    reported: bool,
+    /// consecutive epochs with no report at all (missing heartbeats)
+    silent_epochs: usize,
+    /// a `Gone` verdict was emitted; the slot is inert until membership
+    /// sync removes it
+    gone: bool,
 }
 
 impl NodeState {
@@ -217,6 +265,21 @@ impl NodeState {
             last_emit: None,
             batch_b: Vec::new(),
             batch_t: Vec::new(),
+            reported: false,
+            silent_epochs: 0,
+            gone: false,
+        }
+    }
+
+    /// One batch report (or its absence) for this node.
+    fn ingest(&mut self, o: &NodeBatchObs, present: bool) {
+        if !present {
+            return;
+        }
+        self.reported = true;
+        if o.b > 0.0 && o.a_time + o.p_time > 0.0 {
+            self.batch_b.push(o.b);
+            self.batch_t.push(o.a_time + o.p_time);
         }
     }
 
@@ -264,8 +327,26 @@ impl NodeState {
     }
 
     fn end_epoch(&mut self, epoch: usize, cfg: &DetectorConfig) -> Option<Verdict> {
+        if self.gone {
+            // already declared gone: inert until membership sync drops it
+            self.reported = false;
+            self.batch_b.clear();
+            self.batch_t.clear();
+            return None;
+        }
+        if !self.reported {
+            // not even a zero-batch heartbeat arrived: transport silence
+            self.silent_epochs += 1;
+            if self.silent_epochs >= cfg.k_missing {
+                self.gone = true;
+                return Some(Verdict::Gone);
+            }
+            return None;
+        }
+        self.reported = false;
+        self.silent_epochs = 0;
         if self.batch_b.is_empty() {
-            return None; // node idle this epoch: nothing to judge
+            return None; // node idle this epoch (but alive): nothing to judge
         }
         let b = median(&self.batch_b);
         let t = median(&self.batch_t);
@@ -370,6 +451,7 @@ impl StragglerDetector {
             cfg.k_confirm
         );
         assert!(cfg.k_confirm >= 1 && cfg.k_recover >= 1 && cfg.window >= cfg.min_epochs);
+        assert!(cfg.k_missing >= 1, "a node must be silent for at least one full epoch");
         StragglerDetector { cfg, nodes: (0..n_nodes).map(|_| NodeState::new()).collect() }
     }
 
@@ -379,14 +461,31 @@ impl StragglerDetector {
 
     /// Feed one simulated/measured batch worth of per-node observations
     /// (call once per batch; `obs` must match the current node view).
+    /// Every node is assumed to have reported — use
+    /// [`Self::observe_present`] when some slots were silent.
     pub fn observe(&mut self, obs: &[NodeBatchObs]) {
-        assert_eq!(obs.len(), self.nodes.len(), "observation width must match the node view");
-        for (st, o) in self.nodes.iter_mut().zip(obs) {
-            if o.b > 0.0 && o.a_time + o.p_time > 0.0 {
-                st.batch_b.push(o.b);
-                st.batch_t.push(o.a_time + o.p_time);
-            }
+        for (st, o) in self.assert_width(obs) {
+            st.ingest(o, true);
         }
+    }
+
+    /// Like [`Self::observe`], but `present[i] == false` marks a node
+    /// whose report never arrived (transport-level silence — the
+    /// missing-heartbeat signal), as opposed to an idle node that
+    /// heartbeats a zero-batch observation.
+    pub fn observe_present(&mut self, obs: &[NodeBatchObs], present: &[bool]) {
+        assert_eq!(present.len(), obs.len(), "presence width must match the observations");
+        for ((st, o), &p) in self.assert_width(obs).zip(present) {
+            st.ingest(o, p);
+        }
+    }
+
+    fn assert_width<'a>(
+        &'a mut self,
+        obs: &'a [NodeBatchObs],
+    ) -> impl Iterator<Item = (&'a mut NodeState, &'a NodeBatchObs)> {
+        assert_eq!(obs.len(), self.nodes.len(), "observation width must match the node view");
+        self.nodes.iter_mut().zip(obs)
     }
 
     /// Close the epoch: fold the scratch batches into per-epoch robust
@@ -401,6 +500,7 @@ impl StragglerDetector {
                     out.push(ClusterEvent::SlowDown { node: i, factor })
                 }
                 Some(Verdict::Recovered) => out.push(ClusterEvent::Recover { node: i }),
+                Some(Verdict::Gone) => out.push(ClusterEvent::Preempt { node: i }),
                 None => {}
             }
         }
@@ -415,6 +515,11 @@ impl StragglerDetector {
 
     pub fn is_flagged(&self, node: usize) -> bool {
         matches!(self.nodes[node].status, Status::Flagged { .. })
+    }
+
+    /// Has the missing-heartbeat rule declared this node gone?
+    pub fn is_gone(&self, node: usize) -> bool {
+        self.nodes[node].gone
     }
 
     /// The factor last emitted for a flagged node.
@@ -591,6 +696,81 @@ mod tests {
             "corrected factor must deepen: {factors:?}"
         );
         assert!((det.flagged_factor(0).unwrap() - 0.55).abs() < 0.12);
+    }
+
+    /// Like `feed_epoch`, but node reports can be suppressed entirely
+    /// (`present[i] == false` — transport silence) or delivered as an
+    /// idle zero-batch heartbeat (`bs[i] == 0.0`).
+    fn feed_epoch_present(
+        det: &mut StragglerDetector,
+        epoch: usize,
+        models: &[ComputeModel],
+        bs: &[f64],
+        present: &[bool],
+        rng: &mut Rng,
+    ) -> Vec<ClusterEvent> {
+        for _rep in 0..3 {
+            let obs: Vec<NodeBatchObs> = models
+                .iter()
+                .zip(bs)
+                .map(|(m, &b)| NodeBatchObs {
+                    b,
+                    a_time: if b > 0.0 { m.a(b) * rng.noise(0.012) } else { 0.0 },
+                    p_time: if b > 0.0 { m.p(b) * rng.noise(0.012) } else { 0.0 },
+                    gamma_obs: 0.2,
+                    t_comm_obs: 0.1,
+                    finish: 0.0,
+                })
+                .collect();
+            det.observe_present(&obs, present);
+        }
+        det.end_epoch(epoch)
+    }
+
+    #[test]
+    fn missing_heartbeat_infers_departure_within_k_missing_epochs() {
+        let cfg = DetectorConfig::default();
+        let mut det = StragglerDetector::new(3, cfg);
+        let mut rng = Rng::new(31);
+        let m = models3();
+        let mut gone_at = None;
+        for e in 0..40 {
+            let present = [true, e < 20, true];
+            let ev =
+                feed_epoch_present(&mut det, e, &m, &batches(e), &present, &mut rng);
+            for ev in ev {
+                match ev {
+                    ClusterEvent::Preempt { node } => {
+                        assert_eq!(node, 1, "only the silent node may be declared gone");
+                        assert!(gone_at.is_none(), "Gone must be emitted exactly once");
+                        gone_at = Some(e);
+                    }
+                    other => panic!("unexpected {other:?} at epoch {e}"),
+                }
+            }
+        }
+        // silent from epoch 20 on: k_missing = 2 silent epochs confirm at 21
+        let gone_at = gone_at.expect("departure must be inferred");
+        assert_eq!(gone_at, 20 + det.cfg.k_missing - 1);
+        assert!(det.is_gone(1));
+    }
+
+    #[test]
+    fn idle_heartbeat_and_one_epoch_hiccup_do_not_trigger_membership_alarm() {
+        let mut det = StragglerDetector::new(3, DetectorConfig::default());
+        let mut rng = Rng::new(37);
+        let m = models3();
+        for e in 0..80 {
+            let mut bs = batches(e);
+            if (30..60).contains(&e) {
+                bs[1] = 0.0; // idle (planner assigned nothing) but alive
+            }
+            // a single-epoch transport hiccup below k_missing = 2
+            let present = [true, e != 45, true];
+            let ev = feed_epoch_present(&mut det, e, &m, &bs, &present, &mut rng);
+            assert!(ev.is_empty(), "false event(s) at epoch {e}: {ev:?}");
+        }
+        assert!(!det.is_gone(1));
     }
 
     #[test]

@@ -4,14 +4,27 @@
 //! Event **node indices always refer to the cluster view at the moment the
 //! event applies** (events are applied one at a time, in timeline order, by
 //! [`super::ElasticCluster`]); generators maintain a mirror of the
-//! membership so every emitted index is valid.  Three presets reproduce the
-//! production failure modes the ROADMAP calls for:
+//! membership so every emitted index is valid.
+//!
+//! An event lands either *at* an epoch boundary ([`TimedEvent::frac`]` ==
+//! 0.0`, the PR-1 semantics) or *inside* the epoch (`frac ∈ (0, 1)`, the
+//! fraction of the epoch's work dispatched before the event hits).  The
+//! timeline is totally ordered by `(epoch, frac)`; same-position events
+//! keep their push order.  Mid-epoch semantics (what a fractional
+//! `Preempt` costs, how it is inferred when unannounced) live in
+//! [`super::scenario`]; this module only carries the offset losslessly —
+//! including through JSON, where `frac` is emitted only when non-zero so
+//! pre-existing boundary-only trace files parse unchanged.
+//!
+//! Three presets reproduce the production failure modes the ROADMAP calls
+//! for:
 //!
 //! * `spot` — spot-instance churn: a throttle warning (`SlowDown`), then a
-//!   `Preempt`, then the capacity returns (`NodeJoin` of the same device);
+//!   **mid-epoch** `Preempt` (spot reclaims don't wait for an epoch
+//!   boundary), then the capacity returns (`NodeJoin` of the same device);
 //! * `maintenance` — a maintenance window: a block of nodes leaves at the
 //!   window start and rejoins at the end, with one surviving node throttled
-//!   for the duration;
+//!   for the duration (all boundary-aligned: maintenance is scheduled);
 //! * `straggler` — OmniLearn-style silent straggler drift: step-wise
 //!   deepening `SlowDown`s on a victim node, later `Recover`ed.
 
@@ -31,8 +44,12 @@ pub enum ClusterEvent {
     NodeJoin { device: DeviceProfile, uid: Option<u64> },
     /// graceful leave (scheduler reclaim announced at an epoch boundary)
     NodeLeave { node: usize },
-    /// abrupt spot preemption — same membership effect as `NodeLeave`,
-    /// kept distinct for reporting and for mid-epoch semantics later
+    /// abrupt spot preemption.  Same membership effect as `NodeLeave`, but
+    /// genuinely distinct semantics when it lands mid-epoch: the node's
+    /// in-flight work is lost and its shard re-dispatches (wasted seconds
+    /// are charged to the run), and under `DetectionMode::Observed` the
+    /// departure is *inferred* from missing observations rather than
+    /// announced — see `super::scenario`
     Preempt { node: usize },
     /// silent degradation: the node's effective speed becomes
     /// `factor × nominal` (factor is absolute w.r.t. nominal, not
@@ -54,11 +71,28 @@ impl ClusterEvent {
     }
 }
 
-/// An event pinned to the epoch boundary at which it applies.
+/// An event pinned to the point of the run at which it applies: epoch
+/// `epoch`, after a fraction `frac ∈ [0, 1)` of that epoch's work has been
+/// dispatched.  `frac == 0.0` is the epoch boundary (the common case);
+/// `frac > 0.0` splits the epoch into segments (see `super::scenario`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TimedEvent {
     pub epoch: usize,
+    /// in-epoch offset, `0.0 ≤ frac < 1.0` (0 = the epoch boundary)
+    pub frac: f64,
     pub event: ClusterEvent,
+}
+
+impl TimedEvent {
+    /// Timeline order: `(epoch, frac)`, boundary events first.
+    pub fn position(&self) -> (usize, f64) {
+        (self.epoch, self.frac)
+    }
+}
+
+/// `frac` domain check shared by the builder and the JSON parser.
+fn valid_frac(frac: f64) -> bool {
+    frac.is_finite() && (0.0..1.0).contains(&frac)
 }
 
 /// Per-kind totals of a trace (reporting + acceptance checks).
@@ -90,11 +124,28 @@ impl ChurnTrace {
         ChurnTrace { name: name.to_string(), events: Vec::new() }
     }
 
-    /// Append an event; the builder keeps the timeline sorted (stable, so
-    /// same-epoch events apply in push order).
+    /// Append a boundary event (`frac = 0.0`); the timeline stays sorted
+    /// and same-position events keep their push order.
     pub fn push(&mut self, epoch: usize, event: ClusterEvent) {
-        self.events.push(TimedEvent { epoch, event });
-        self.events.sort_by_key(|e| e.epoch);
+        self.push_at(epoch, 0.0, event);
+    }
+
+    /// Append an event at a fractional in-epoch offset.  Insertion is by
+    /// binary search on `(epoch, frac)` — O(log n) to locate (the old
+    /// sort-per-push made trace construction quadratic and leaned on sort
+    /// stability) — and the insertion point sits *after* every event at
+    /// the same position, so same-position relative order is push order by
+    /// construction.
+    ///
+    /// Panics if `frac` is not in `[0, 1)` (a trace with an out-of-domain
+    /// offset is a builder bug, not input data — files go through
+    /// [`ChurnTrace::from_json`], which errors instead).
+    pub fn push_at(&mut self, epoch: usize, frac: f64, event: ClusterEvent) {
+        assert!(valid_frac(frac), "event frac {frac} outside [0, 1)");
+        let idx = self
+            .events
+            .partition_point(|e| e.epoch < epoch || (e.epoch == epoch && e.frac <= frac));
+        self.events.insert(idx, TimedEvent { epoch, frac, event });
     }
 
     pub fn len(&self) -> usize {
@@ -130,6 +181,11 @@ impl ChurnTrace {
                     ("epoch", Json::Num(te.epoch as f64)),
                     ("kind", Json::Str(te.event.kind().to_string())),
                 ];
+                if te.frac != 0.0 {
+                    // boundary events omit the key, so pre-frac trace
+                    // files and this writer agree byte-for-byte on them
+                    pairs.push(("frac", Json::Num(te.frac)));
+                }
                 match &te.event {
                     ClusterEvent::NodeJoin { device, uid } => {
                         pairs.push(("device", device_to_json(device)));
@@ -162,6 +218,13 @@ impl ChurnTrace {
         let mut events = Vec::new();
         for e in j.req("events")?.as_arr()? {
             let epoch = e.req("epoch")?.as_usize()?;
+            let frac = match e.get("frac") {
+                None | Some(Json::Null) => 0.0,
+                Some(v) => v.as_f64()?,
+            };
+            if !valid_frac(frac) {
+                bail!("event frac {frac} outside [0, 1)");
+            }
             let kind = e.req("kind")?.as_str()?;
             let node = || -> Result<usize> { e.req("node")?.as_usize() };
             let event = match kind {
@@ -177,9 +240,13 @@ impl ChurnTrace {
                 "recover" => ClusterEvent::Recover { node: node()? },
                 other => bail!("unknown event kind {other:?}"),
             };
-            events.push(TimedEvent { epoch, event });
+            events.push(TimedEvent { epoch, frac, event });
         }
-        events.sort_by_key(|e| e.epoch);
+        // stable, so same-position events keep file order (frac is domain-
+        // checked above: the partial order on it is total here)
+        events.sort_by(|a, b| {
+            a.epoch.cmp(&b.epoch).then(a.frac.partial_cmp(&b.frac).expect("frac is finite"))
+        });
         Ok(ChurnTrace { name, events })
     }
 
@@ -235,9 +302,11 @@ pub fn preset(
 }
 
 /// Spot-instance churn: repeated (throttle → preempt → capacity returns)
-/// incidents.  Every incident contributes one `SlowDown`, one `Preempt`
-/// and one `NodeJoin`, so with `horizon >= 30` the trace always contains
-/// at least one of each kind.
+/// incidents.  Every incident contributes one `SlowDown`, one **mid-epoch**
+/// `Preempt` (a reclaim gives ~2 minutes of notice, not an epoch — the
+/// node dies a fraction of the way into the epoch's work) and one
+/// `NodeJoin`, so with `horizon >= 30` the trace always contains at least
+/// one of each kind.
 pub fn spot_instance(cluster: &ClusterSpec, horizon: usize, seed: u64) -> ChurnTrace {
     let mut rng = Rng::new(seed ^ 0x5707_aace);
     let mut devs: Vec<DeviceProfile> =
@@ -256,7 +325,8 @@ pub fn spot_instance(cluster: &ClusterSpec, horizon: usize, seed: u64) -> ChurnT
         // throttle warning precedes the preemption
         let factor = 0.5 + 0.1 * rng.below(3) as f64;
         trace.push(t, ClusterEvent::SlowDown { node: victim, factor });
-        trace.push(t + 2, ClusterEvent::Preempt { node: victim });
+        let frac = [0.25, 0.5, 0.75][rng.below(3) as usize];
+        trace.push_at(t + 2, frac, ClusterEvent::Preempt { node: victim });
         let dev = devs.remove(victim);
         let gap = 3 + rng.below(6) as usize;
         trace.push(t + 2 + gap, ClusterEvent::NodeJoin { device: dev.clone(), uid: None });
@@ -337,8 +407,17 @@ mod tests {
         assert!(counts.departures() >= 1, "{counts:?}");
         assert!(counts.joins >= 1, "{counts:?}");
         assert!(counts.slowdowns >= 1, "{counts:?}");
-        // sorted timeline
-        assert!(a.events.windows(2).all(|w| w[0].epoch <= w[1].epoch));
+        // sorted timeline (by position: epoch, then in-epoch offset)
+        assert!(a.events.windows(2).all(|w| w[0].position() <= w[1].position()));
+        // every preemption is mid-epoch, everything else boundary-aligned
+        for te in &a.events {
+            match te.event {
+                ClusterEvent::Preempt { .. } => {
+                    assert!(te.frac > 0.0 && te.frac < 1.0, "{te:?}")
+                }
+                _ => assert_eq!(te.frac, 0.0, "{te:?}"),
+            }
+        }
     }
 
     #[test]
@@ -391,6 +470,64 @@ mod tests {
     fn json_rejects_bad_kinds() {
         let j = Json::parse(r#"{"name":"x","events":[{"epoch":1,"kind":"explode"}]}"#).unwrap();
         assert!(ChurnTrace::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn json_rejects_out_of_domain_frac() {
+        for frac in ["1.0", "-0.25", "2.5"] {
+            let src = format!(
+                r#"{{"name":"x","events":[{{"epoch":1,"kind":"recover","node":0,"frac":{frac}}}]}}"#
+            );
+            assert!(ChurnTrace::from_json(&Json::parse(&src).unwrap()).is_err(), "{frac}");
+        }
+    }
+
+    #[test]
+    fn push_at_keeps_the_timeline_sorted_and_same_position_push_order() {
+        let mut t = ChurnTrace::new("order");
+        // pushed deliberately out of timeline order
+        t.push_at(5, 0.5, ClusterEvent::Recover { node: 0 });
+        t.push(3, ClusterEvent::NodeLeave { node: 1 });
+        t.push_at(5, 0.25, ClusterEvent::SlowDown { node: 2, factor: 0.5 });
+        t.push(5, ClusterEvent::NodeLeave { node: 3 });
+        // three events at the same position, in a recognizable push order
+        t.push_at(4, 0.5, ClusterEvent::Recover { node: 4 });
+        t.push_at(4, 0.5, ClusterEvent::Recover { node: 5 });
+        t.push_at(4, 0.5, ClusterEvent::Recover { node: 6 });
+        assert!(t.events.windows(2).all(|w| w[0].position() <= w[1].position()));
+        let nodes: Vec<usize> = t
+            .events
+            .iter()
+            .map(|te| match te.event {
+                ClusterEvent::NodeLeave { node }
+                | ClusterEvent::Recover { node }
+                | ClusterEvent::SlowDown { node, .. } => node,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(nodes, vec![1, 4, 5, 6, 3, 2, 0], "{:?}", t.events);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside [0, 1)")]
+    fn push_at_rejects_out_of_domain_frac() {
+        let mut t = ChurnTrace::new("bad");
+        t.push_at(1, 1.0, ClusterEvent::Recover { node: 0 });
+    }
+
+    #[test]
+    fn fractional_events_roundtrip_json_losslessly() {
+        let mut t = ChurnTrace::new("offsets");
+        t.push_at(7, 0.123456789012345, ClusterEvent::Preempt { node: 1 });
+        t.push_at(7, 0.5, ClusterEvent::SlowDown { node: 0, factor: 0.75 });
+        t.push(7, ClusterEvent::NodeLeave { node: 2 });
+        t.push_at(9, 1.0 - f64::EPSILON, ClusterEvent::Recover { node: 0 });
+        let back =
+            ChurnTrace::from_json(&Json::parse(&t.to_json().to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(t, back);
+        // boundary event emitted without the key (old files stay valid)
+        let text = t.to_json().to_string_pretty();
+        assert_eq!(text.matches("frac").count(), 3, "{text}");
     }
 
     #[test]

@@ -21,6 +21,16 @@ use anyhow::{bail, Result};
 use crate::cluster::{ClusterSpec, DeviceProfile};
 use crate::elastic::events::ClusterEvent;
 
+/// The one "is this node at its nominal speed" tolerance, shared by every
+/// consumer of slowdown factors: the membership manager (no-op `SlowDown`
+/// detection, `Recover` validation, [`ElasticCluster::spec`]) and the
+/// [`super::ElasticDriver`]'s detection bookkeeping.  Historically the
+/// driver tested `1e-9` while the manager tested `1e-12`: a factor between
+/// the two was a state change to the manager but "healthy" to the driver,
+/// which corrupted the pending/missed detection accounting.  One constant,
+/// one answer.
+pub const HEALTHY_EPS: f64 = 1e-9;
+
 /// What one applied event changed, in terms consumers can act on.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct MembershipDelta {
@@ -97,6 +107,13 @@ impl ElasticCluster {
         self.slow[i]
     }
 
+    /// Is node `i` at its nominal speed (within [`HEALTHY_EPS`])?  The
+    /// single source of truth for "healthy" — drivers must not roll their
+    /// own epsilon.
+    pub fn is_healthy(&self, i: usize) -> bool {
+        (self.slow[i] - 1.0).abs() <= HEALTHY_EPS
+    }
+
     /// Stable worker uids, in view order.
     pub fn uids(&self) -> &[u64] {
         &self.uid
@@ -110,7 +127,7 @@ impl ElasticCluster {
             .iter()
             .zip(&self.slow)
             .map(|(d, &s)| {
-                if (s - 1.0).abs() < 1e-12 {
+                if (s - 1.0).abs() <= HEALTHY_EPS {
                     d.clone()
                 } else {
                     DeviceProfile { speed: d.speed * s, ..d.clone() }
@@ -120,21 +137,69 @@ impl ElasticCluster {
         ClusterSpec::new(&self.name, devs, self.net_gbps)
     }
 
+    /// Read-only validation + effect prediction for one event: `Err` iff
+    /// [`Self::apply`] would reject it, `Ok(false)` for an accepted no-op
+    /// (e.g. a `SlowDown` replaying the current factor), `Ok(true)` for an
+    /// event that would change the view.  `apply` routes through this, so
+    /// the two can never disagree — callers (the elastic driver's epoch
+    /// loop) use it to decide whether an event is worth splitting an epoch
+    /// over *before* paying any cost.
+    pub fn classify(&self, ev: &ClusterEvent) -> Result<bool> {
+        let n = self.n();
+        match ev {
+            ClusterEvent::NodeJoin { uid, .. } => {
+                if let Some(u) = uid {
+                    if self.uid.contains(u) {
+                        bail!("join with duplicate worker uid {u}");
+                    }
+                }
+                Ok(true)
+            }
+            ClusterEvent::NodeLeave { node } | ClusterEvent::Preempt { node } => {
+                if *node >= n {
+                    bail!("{} of node {node} but the view has {n} nodes", ev.kind());
+                }
+                if n <= 1 {
+                    bail!("cannot remove the last node");
+                }
+                Ok(true)
+            }
+            ClusterEvent::SlowDown { node, factor } => {
+                if *node >= n {
+                    bail!("slowdown of node {node} but the view has {n} nodes");
+                }
+                if !(*factor > 0.0) || *factor > 4.0 {
+                    bail!("slowdown factor {factor} out of range");
+                }
+                Ok((self.slow[*node] - factor).abs() > HEALTHY_EPS)
+            }
+            ClusterEvent::Recover { node } => {
+                if *node >= n {
+                    bail!("recover of node {node} but the view has {n} nodes");
+                }
+                if self.is_healthy(*node) {
+                    bail!("recover of node {node} which is not slowed");
+                }
+                Ok(true)
+            }
+        }
+    }
+
     /// Apply one event; returns the delta consumers must react to.
     /// Errors (cluster unchanged) on out-of-range indices — e.g. a
     /// `Preempt` of an already-departed node — removing the last node,
     /// non-positive slowdown factors, recovering a node that is not
     /// slowed, or joining with a uid already present.
     pub fn apply(&mut self, ev: &ClusterEvent) -> Result<MembershipDelta> {
-        let n = self.n();
+        let effective = self.classify(ev)?;
         let mut delta = MembershipDelta::default();
+        if !effective {
+            return Ok(delta); // accepted no-op: view untouched
+        }
         match ev {
             ClusterEvent::NodeJoin { device, uid } => {
                 let id = match uid {
                     Some(u) => {
-                        if self.uid.contains(u) {
-                            bail!("join with duplicate worker uid {u}");
-                        }
                         self.next_uid = self.next_uid.max(u.saturating_add(1));
                         *u
                     }
@@ -151,12 +216,6 @@ impl ElasticCluster {
             }
             ClusterEvent::NodeLeave { node } | ClusterEvent::Preempt { node } => {
                 let node = *node;
-                if node >= n {
-                    bail!("{} of node {node} but the view has {n} nodes", ev.kind());
-                }
-                if n <= 1 {
-                    bail!("cannot remove the last node");
-                }
                 self.nominal.remove(node);
                 self.slow.remove(node);
                 self.uid.remove(node);
@@ -164,25 +223,11 @@ impl ElasticCluster {
             }
             ClusterEvent::SlowDown { node, factor } => {
                 let node = *node;
-                if node >= n {
-                    bail!("slowdown of node {node} but the view has {n} nodes");
-                }
-                if !(*factor > 0.0) || *factor > 4.0 {
-                    bail!("slowdown factor {factor} out of range");
-                }
-                if (self.slow[node] - factor).abs() > 1e-12 {
-                    self.slow[node] = *factor;
-                    delta.degraded.push(node);
-                }
+                self.slow[node] = *factor;
+                delta.degraded.push(node);
             }
             ClusterEvent::Recover { node } => {
                 let node = *node;
-                if node >= n {
-                    bail!("recover of node {node} but the view has {n} nodes");
-                }
-                if (self.slow[node] - 1.0).abs() <= 1e-12 {
-                    bail!("recover of node {node} which is not slowed");
-                }
                 self.slow[node] = 1.0;
                 delta.degraded.push(node);
             }
@@ -299,6 +344,38 @@ mod tests {
         let d = ec.apply(&ClusterEvent::Recover { node: 1 }).unwrap();
         assert_eq!(d.degraded, vec![1]);
         assert!(ec.apply(&ClusterEvent::Recover { node: 1 }).is_err());
+    }
+
+    #[test]
+    fn healthy_epsilon_boundary_values_agree_everywhere() {
+        // regression for the two-epsilon bug: a factor inside HEALTHY_EPS
+        // of nominal must be a no-op everywhere (no delta, still healthy,
+        // effective speed untouched); a factor just outside must be a
+        // state change everywhere.  Before the shared constant, factors in
+        // (1e-12, 1e-9) off nominal were a state change to the manager but
+        // "healthy" to the driver.
+        let base = cluster::cluster_a();
+        let nominal = base.nodes[0].device.speed;
+        for (factor, healthy) in [
+            (1.0 - HEALTHY_EPS / 2.0, true),  // the old corruption window
+            (1.0 + HEALTHY_EPS / 2.0, true),
+            (1.0 - 2.0 * HEALTHY_EPS, false),
+            (1.0 + 2.0 * HEALTHY_EPS, false),
+        ] {
+            let mut ec = ElasticCluster::new(&base);
+            let d = ec.apply(&ClusterEvent::SlowDown { node: 0, factor }).unwrap();
+            assert_eq!(d.is_empty(), healthy, "factor {factor}");
+            assert_eq!(ec.is_healthy(0), healthy, "factor {factor}");
+            let speed = ec.spec().nodes[0].device.speed;
+            if healthy {
+                assert_eq!(speed.to_bits(), nominal.to_bits(), "factor {factor}");
+                // recover of a healthy node stays an error
+                assert!(ec.apply(&ClusterEvent::Recover { node: 0 }).is_err());
+            } else {
+                assert_ne!(speed.to_bits(), nominal.to_bits(), "factor {factor}");
+                assert!(ec.apply(&ClusterEvent::Recover { node: 0 }).is_ok());
+            }
+        }
     }
 
     #[test]

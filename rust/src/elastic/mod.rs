@@ -6,34 +6,53 @@
 //! * [`events`] — the [`ClusterEvent`] timeline ([`ChurnTrace`]):
 //!   NodeJoin / NodeLeave / Preempt / SlowDown / Recover, deterministic
 //!   seeded preset generators (`spot` / `maintenance` / `straggler`) and
-//!   JSON load/save via `util::json`.
+//!   JSON load/save via `util::json`.  Every [`TimedEvent`] carries a
+//!   fractional in-epoch offset (`frac ∈ [0, 1)`, 0 = the boundary):
+//!   `Preempt` and `NodeLeave` are now genuinely distinct — a graceful
+//!   leave drains, an abrupt mid-epoch preempt loses the victim's
+//!   in-flight shard work (re-processed by survivors, charged as
+//!   `wasted_work_secs`) and, under Observed detection, is *inferred*
+//!   rather than announced.  The spot preset emits mid-epoch preempts.
 //! * [`membership`] — [`ElasticCluster`], the mutable cluster view:
 //!   applies events one at a time and reports a [`MembershipDelta`] naming
 //!   exactly which per-node learned state is now stale.  Every node has a
 //!   stable worker uid; malformed events (stale index, duplicate uid,
 //!   recover of a healthy node, emptying the cluster) error cleanly and
 //!   leave the view untouched.
-//! * [`detect`] — observation-driven straggler detection.  Real clusters
-//!   only expose timing observations, so [`DetectionMode`] selects whether
-//!   a run replays the trace's `SlowDown`/`Recover` events to the system
-//!   (`Oracle`), hides them and recovers them with a [`StragglerDetector`]
-//!   (`Observed`), or hides them entirely (`Off`, the ablation floor).
-//!   The detector keeps per-node median/MAD baselines of the compute-time
-//!   residual against a guard-lagged affine reference (drift is therefore
-//!   invariant to the planner moving batch sizes around), confirms a drift
-//!   only after `k_confirm` consecutive over-threshold epochs, and uses a
-//!   recover margin well below the detection threshold — hysteresis, so
-//!   transient noise cannot thrash the planner.  Detection quality
-//!   (latency per hidden event, false positives, misses) is reported in
+//! * [`detect`] — observation-driven straggler detection **and membership
+//!   inference**.  Real clusters only expose timing observations, so
+//!   [`DetectionMode`] selects whether a run replays the trace's
+//!   `SlowDown`/`Recover` events to the system (`Oracle`), hides them and
+//!   recovers them with a [`StragglerDetector`] (`Observed`), or hides
+//!   them entirely (`Off`, the ablation floor).  The detector keeps
+//!   per-node median/MAD baselines of the compute-time residual against a
+//!   guard-lagged affine reference (drift is therefore invariant to the
+//!   planner moving batch sizes around), confirms a drift only after
+//!   `k_confirm` consecutive over-threshold epochs, and uses a recover
+//!   margin well below the detection threshold — hysteresis, so transient
+//!   noise cannot thrash the planner.  The **missing-heartbeat rule**
+//!   declares a node gone after [`DetectorConfig::k_missing`] (default 2)
+//!   consecutive epochs with no report at all — transport silence, which
+//!   an idle-but-alive worker's zero-batch heartbeat does not trigger —
+//!   and synthesizes the membership change an abrupt mid-epoch `Preempt`
+//!   never announced.  Detection quality (latency per hidden event, false
+//!   positives/alarms, misses, inferred preemptions) is reported in
 //!   [`crate::api::RunReport::detection`].
 //! * [`scenario`] — the [`ElasticDriver`] (event + detection plumbing
 //!   shared by [`run_scenario`] and the real-numerics leader),
-//!   [`run_scenario`] itself (a convergence run with the trace applied at
-//!   epoch boundaries, bit-identical under a fixed seed — the unified
-//!   execution path behind [`crate::api::run`] /
+//!   [`run_scenario`] itself (a convergence run over the **segmented
+//!   timeline**: boundary events apply between epochs, fractional events
+//!   split the epoch — pre-event work kept, abrupt departures charged as
+//!   wasted re-dispatch seconds; bit-identical under a fixed seed — the
+//!   unified execution path behind [`crate::api::run`] /
 //!   [`crate::api::run_static`]), and the [`ColdRestartCannikin`]
 //!   ablation.  How a system reacts to a delta is the
 //!   [`crate::api::TrainingSystem::on_cluster_change`] hook.
+//!
+//! One shared tolerance, [`membership::HEALTHY_EPS`], defines "at nominal
+//! speed" for *every* consumer (the manager's no-op/`Recover` checks and
+//! the driver's detection bookkeeping), so a factor can never be a state
+//! change to one layer and healthy to another.
 //!
 //! The warm-replan path itself lives on
 //! [`CannikinPlanner::replan`](crate::coordinator::CannikinPlanner::replan):
@@ -54,7 +73,8 @@ pub use events::{
     maintenance_window, preset, spot_instance, straggler_drift, ChurnTrace, ClusterEvent,
     EventCounts, TimedEvent,
 };
-pub use membership::{ElasticCluster, MembershipDelta};
+pub use membership::{ElasticCluster, MembershipDelta, HEALTHY_EPS};
 pub use scenario::{
-    run_scenario, BoundaryOutcome, ColdRestartCannikin, ElasticDriver, ScenarioConfig,
+    run_scenario, BoundaryOutcome, ColdRestartCannikin, ElasticDriver, MidEpochEffect,
+    ScenarioConfig,
 };

@@ -11,7 +11,24 @@
 //! subcommand, the figure harness) is exactly this run with an empty
 //! trace, so the two can never disagree.  Everything is seeded: with the
 //! same seed the full run (epochs, batches, events, simulated times) is
-//! bit-identical.
+//! bit-identical — including across the segmented timeline below.
+//!
+//! **Mid-epoch events (the segmented timeline).**  An event with
+//! [`TimedEvent::frac`]` > 0` lands a fraction of the way into the
+//! epoch's work, splitting the simulated epoch into segments: work
+//! dispatched before the event is kept (its gradient syncs happened), the
+//! rest of the epoch runs under the post-event cluster.  A mid-epoch
+//! departure re-dispatches the departed node's allocation to the
+//! survivors pro rata for the remainder of the epoch (the system re-plans
+//! properly only at the next boundary — exactly the stale-plan window
+//! that makes fast re-planning matter).  An **abrupt** departure
+//! ([`crate::elastic::ClusterEvent::Preempt`], as opposed to a graceful
+//! `NodeLeave` that drains first) additionally loses the in-flight work
+//! on the dead node: its sampler cursor dies with it, so the `frac`-sized
+//! consumed part of its shard must be conservatively re-processed by the
+//! survivors — seconds charged to the clock with **zero** convergence
+//! progress, reported as [`crate::api::RunReport::wasted_work_secs`]
+//! (monotone in how late in the epoch the preemption hits).
 //!
 //! The [`ElasticDriver`] owns the event/detection plumbing and is shared
 //! with the real-numerics leader, so event semantics and counting can never
@@ -20,19 +37,31 @@
 //! (and reseed the simulator) but are hidden from the system: a
 //! [`StragglerDetector`] must recover them from the timing observations,
 //! and its synthesized events drive the warm-replan path instead.
-//! Membership events (join / leave / preempt) stay oracle in every mode —
-//! membership is observable in practice, silent degradation is not.
+//! Announced membership events (joins, boundary leaves/preempts, graceful
+//! mid-epoch leaves) stay oracle in every mode — a scheduler reclaim is
+//! observable in practice.  The exception is an **abrupt mid-epoch
+//! `Preempt` under `Observed`**: nobody announces it, so the driver keeps
+//! the dead node in the system's view as a *ghost* — it stops producing
+//! [`NodeBatchObs`], the detector's missing-heartbeat rule
+//! ([`crate::elastic::DetectorConfig::k_missing`]) infers the departure,
+//! and only that synthesized event shrinks the system's view (through the
+//! same warm-replan path a trace event would take).  The driver maintains
+//! the mapping between the *physical* node set (what the simulator runs)
+//! and the *announced* view (what the system plans for); trace indices
+//! always refer to the physical view, so a trace means the same thing in
+//! every detection mode.
 
 use crate::api::{EpochRow, RunReport, TrainingSystem};
 use crate::baselines::Plan;
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, DeviceProfile};
 use crate::coordinator::planner::{BatchPolicy, CannikinPlanner};
 use crate::elastic::detect::{
     DetectionMode, DetectionStats, DetectorConfig, StragglerDetector,
 };
-use crate::elastic::events::{ChurnTrace, ClusterEvent};
+use crate::elastic::events::{ChurnTrace, ClusterEvent, TimedEvent};
 use crate::elastic::membership::{ElasticCluster, MembershipDelta};
 use crate::figures::target_value;
+use crate::simulator::convergence::{EpochExec, Segment};
 use crate::simulator::{convergence, ClusterSim, NodeBatchObs, Workload};
 
 /// Ablation baseline for the warm-start claim: a Cannikin planner that
@@ -118,8 +147,9 @@ pub struct BoundaryOutcome {
     pub changed: Vec<(&'static str, usize, bool)>,
     /// changed events concealed from the system (Observed / Off modes)
     pub hidden: usize,
-    /// events accepted by the membership manager with no effect (e.g. a
-    /// `SlowDown` repeating the current factor)
+    /// events accepted by the membership manager with **no** effect (e.g.
+    /// a `SlowDown` repeating the current factor) — counted apart from the
+    /// effective ones, never mixed into `events_applied`
     pub noops: usize,
     /// events the membership manager rejected (e.g. would empty the
     /// cluster, stale index, duplicate uid) — skipped, never fatal
@@ -130,10 +160,71 @@ pub struct BoundaryOutcome {
 }
 
 impl BoundaryOutcome {
-    /// Events the membership manager accepted (effective or not).
-    pub fn applied(&self) -> usize {
-        self.changed.len() + self.noops
+    /// Events that actually changed the cluster.
+    pub fn effective(&self) -> usize {
+        self.changed.len()
     }
+}
+
+/// What one applied **mid-epoch** event means for the in-flight epoch.
+pub struct MidEpochEffect {
+    /// the event changed the cluster (noops/rejections are false)
+    pub effective: bool,
+    /// announced slot that vanished from the system's view (visible
+    /// departures): the epoch loop must drop its plan entry and
+    /// re-dispatch the allocation
+    pub removed: Option<usize>,
+    /// announced slot that silently died (Observed-mode ghost): the plan
+    /// entry stays — the system doesn't know — and [`ElasticDriver::step`]
+    /// re-dispatches its allocation at the runtime level
+    pub ghosted: Option<usize>,
+    /// nodes appended to the announced view (joins): the epoch loop
+    /// extends the plan with zero-allocation slots until the next boundary
+    pub added: usize,
+    /// the departure was abrupt (`Preempt`): the dead node's consumed
+    /// shard is lost and must be re-processed — wasted seconds
+    pub abrupt: bool,
+    pub new_sim: Option<ClusterSim>,
+}
+
+impl MidEpochEffect {
+    fn inert() -> Self {
+        MidEpochEffect {
+            effective: false,
+            removed: None,
+            ghosted: None,
+            added: 0,
+            abrupt: false,
+            new_sim: None,
+        }
+    }
+}
+
+/// One slot of the system-facing (announced) view: either backed by a
+/// physical node, or a *ghost* — a node that abruptly departed mid-epoch
+/// under [`DetectionMode::Observed`] and whose disappearance the detector
+/// has not yet inferred.
+struct ViewSlot {
+    /// index into the physical ground truth ([`ElasticCluster`]); `None`
+    /// for a ghost
+    phys: Option<usize>,
+    /// frozen device profile (what the system still believes in) and the
+    /// departure epoch of a ghost
+    ghost: Option<(DeviceProfile, usize)>,
+}
+
+/// Classification of one applied trace event (internal to the driver).
+enum Applied {
+    Skipped,
+    Noop,
+    Changed {
+        hidden: bool,
+        removed: Option<usize>,
+        ghosted: Option<usize>,
+        added: usize,
+        abrupt: bool,
+        new_sim: Option<ClusterSim>,
+    },
 }
 
 /// Owns the elastic ground truth + event/detection plumbing for one run.
@@ -144,13 +235,21 @@ pub struct ElasticDriver<'a> {
     seed: u64,
     mode: DetectionMode,
     elastic: ElasticCluster,
+    /// announced (system-facing) view: physical nodes + ghosts, in the
+    /// index space every plan / observation / detector state uses
+    view: Vec<ViewSlot>,
     next_event: usize,
     reseeds: u64,
     detector: Option<StragglerDetector>,
     stats: DetectionStats,
-    /// per-node epoch of the not-yet-detected healthy→slowed transition
+    /// per announced slot: epoch of the not-yet-detected healthy→slowed
+    /// transition
     pending: Vec<Option<usize>>,
+    /// effective events applied to the cluster (no-ops counted apart)
     pub events_applied: usize,
+    /// accepted events that changed nothing (e.g. a replayed `SlowDown`
+    /// at the current factor)
+    pub events_noop: usize,
     pub events_hidden: usize,
     pub events_skipped: usize,
 }
@@ -172,40 +271,238 @@ impl<'a> ElasticDriver<'a> {
             seed,
             mode,
             elastic: ElasticCluster::new(base),
+            view: (0..base.n()).map(|i| ViewSlot { phys: Some(i), ghost: None }).collect(),
             next_event: 0,
             reseeds: 0,
             detector,
             stats: DetectionStats::default(),
             pending: vec![None; base.n()],
             events_applied: 0,
+            events_noop: 0,
             events_hidden: 0,
             events_skipped: 0,
         }
     }
 
+    /// Announced (system-facing) node count — physical nodes plus ghosts.
     pub fn n(&self) -> usize {
-        self.elastic.n()
+        self.view.len()
     }
 
-    /// Materialized ground-truth cluster view (effective speeds).
+    /// Does announced slot `i` hold a ghost (a dead node the system has
+    /// not yet been told about)?
+    pub fn is_ghost(&self, i: usize) -> bool {
+        self.view[i].phys.is_none()
+    }
+
+    /// The announced (system-facing) cluster view.  Ghost slots keep the
+    /// profile they died with — the system's picture until the departure
+    /// is inferred.
     pub fn spec(&self) -> ClusterSpec {
+        let phys = self.elastic.spec();
+        if self.view.iter().all(|s| s.phys.is_some()) {
+            return phys;
+        }
+        let devs: Vec<DeviceProfile> = self
+            .view
+            .iter()
+            .map(|s| match (&s.phys, &s.ghost) {
+                (Some(p), _) => phys.nodes[*p].device.clone(),
+                (None, Some((dev, _))) => dev.clone(),
+                _ => unreachable!("a view slot is physical xor ghost"),
+            })
+            .collect();
+        ClusterSpec::new(&phys.name, devs, phys.net_gbps)
+    }
+
+    /// Materialized *physical* ground truth (what the simulator runs).
+    pub fn phys_spec(&self) -> ClusterSpec {
         self.elastic.spec()
     }
 
-    /// Ground-truth slowdown factor of node `i` (1.0 = nominal).
+    /// Ground-truth slowdown factor of announced slot `i` (1.0 = nominal;
+    /// 0.0 for a ghost, which produces no work at all).
     pub fn slow_factor(&self, i: usize) -> f64 {
-        self.elastic.slow_factor(i)
+        match self.view[i].phys {
+            Some(p) => self.elastic.slow_factor(p),
+            None => 0.0,
+        }
     }
 
     fn caps(&self, spec: &ClusterSpec) -> Vec<u64> {
         spec.nodes.iter().map(|n| self.w.max_local_batch(n)).collect()
     }
 
+    fn announced_of_phys(&self, p: usize) -> Option<usize> {
+        self.view.iter().position(|s| s.phys == Some(p))
+    }
 
-    /// Apply every trace event due at or before `epoch`, mutating the
-    /// ground truth and notifying `system` of the *visible* ones.  Each
-    /// effective event rebuilds the timing simulator with a distinct
-    /// deterministic seed.
+    /// Deterministic per-change simulator reseed.
+    fn reseed_sim(&mut self) -> ClusterSim {
+        self.reseeds += 1;
+        ClusterSim::new(
+            &self.elastic.spec(),
+            self.w,
+            self.seed ^ self.reseeds.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        )
+    }
+
+    /// Fold a physical-space delta into the announced view and return the
+    /// system-facing delta (announced pre-event indices, like every
+    /// [`MembershipDelta`]).
+    fn announce(&mut self, phys_delta: &MembershipDelta) -> MembershipDelta {
+        let mut out = MembershipDelta::default();
+        for &r in &phys_delta.removed {
+            let a = self.announced_of_phys(r).expect("removed phys node must be in the view");
+            out.removed.push(a);
+            self.view.remove(a);
+            for s in &mut self.view {
+                if let Some(p) = &mut s.phys {
+                    if *p > r {
+                        *p -= 1;
+                    }
+                }
+            }
+        }
+        for k in 0..phys_delta.added {
+            // joins append in both spaces
+            let p = self.elastic.n() - phys_delta.added + k;
+            self.view.push(ViewSlot { phys: Some(p), ghost: None });
+        }
+        out.added = phys_delta.added;
+        for &d in &phys_delta.degraded {
+            if let Some(a) = self.announced_of_phys(d) {
+                out.degraded.push(a);
+            }
+        }
+        out
+    }
+
+    /// Deliver a visible announced-space delta to the system and keep the
+    /// per-slot side state (pending bookkeeping, detector) aligned.
+    fn notify(&mut self, announced: &MembershipDelta, system: &mut dyn TrainingSystem) {
+        let spec = self.spec();
+        let caps = self.caps(&spec);
+        system.on_cluster_change(announced, &spec, &caps);
+        if announced.membership_changed() {
+            // a pending (undetected) slowdown departing with its node can
+            // never be detected now: that is a miss, per DetectionStats'
+            // contract
+            for &i in &announced.removed {
+                if i < self.pending.len() && self.pending[i].is_some() {
+                    self.stats.missed += 1;
+                }
+            }
+            announced.resync_view(&mut self.pending, || None);
+            if let Some(d) = &mut self.detector {
+                d.sync_membership(announced);
+            }
+        }
+    }
+
+    /// The one event-application core, shared by [`Self::boundary`] and
+    /// [`Self::apply_mid_epoch`] so the two timelines can never drift.
+    /// `mid` selects the mid-epoch semantics: an abrupt `Preempt` under
+    /// [`DetectionMode::Observed`] becomes a *ghost* (unannounced — the
+    /// missing-heartbeat rule must infer it) instead of an oracle
+    /// notification.
+    fn apply_one(
+        &mut self,
+        epoch: usize,
+        event: &ClusterEvent,
+        mid: bool,
+        system: &mut dyn TrainingSystem,
+    ) -> Applied {
+        if mid && self.mode == DetectionMode::Observed {
+            if let ClusterEvent::Preempt { node } = event {
+                let p = *node;
+                if p >= self.elastic.n() {
+                    return Applied::Skipped;
+                }
+                let a = self.announced_of_phys(p).expect("phys node is in the view");
+                // freeze the profile the system believes in: the announced
+                // spec keeps describing the ghost until inference
+                let dev = self.spec().nodes[a].device.clone();
+                return match self.elastic.apply(event) {
+                    Err(_) => Applied::Skipped,
+                    Ok(_phys_delta) => {
+                        // the removal folds into the physical side of the
+                        // mapping only; the announced slot stays, as a ghost
+                        self.view[a] = ViewSlot { phys: None, ghost: Some((dev, epoch)) };
+                        for s in &mut self.view {
+                            if let Some(q) = &mut s.phys {
+                                if *q > p {
+                                    *q -= 1;
+                                }
+                            }
+                        }
+                        let new_sim = Some(self.reseed_sim());
+                        Applied::Changed {
+                            hidden: true,
+                            removed: None,
+                            ghosted: Some(a),
+                            added: 0,
+                            abrupt: true,
+                            new_sim,
+                        }
+                    }
+                };
+            }
+        }
+
+        let hide = self.mode != DetectionMode::Oracle
+            && matches!(event, ClusterEvent::SlowDown { .. } | ClusterEvent::Recover { .. });
+        // ground-truth health before the event (detection bookkeeping);
+        // the epsilon is the membership manager's own — one constant
+        let was_healthy = match event {
+            ClusterEvent::SlowDown { node, .. } | ClusterEvent::Recover { node }
+                if *node < self.elastic.n() =>
+            {
+                self.elastic.is_healthy(*node)
+            }
+            _ => true,
+        };
+        let abrupt = matches!(event, ClusterEvent::Preempt { .. });
+        match self.elastic.apply(event) {
+            Err(_) => Applied::Skipped,
+            Ok(delta) if delta.is_empty() => Applied::Noop,
+            Ok(delta) => {
+                let announced = self.announce(&delta);
+                let removed = announced.removed.first().copied();
+                let added = announced.added;
+                if hide {
+                    let a = announced
+                        .degraded
+                        .first()
+                        .copied()
+                        .expect("a hidden degradation names its slot");
+                    match event {
+                        ClusterEvent::SlowDown { .. } => {
+                            if was_healthy && self.pending[a].is_none() {
+                                self.pending[a] = Some(epoch);
+                            }
+                        }
+                        ClusterEvent::Recover { .. } => {
+                            // the slowdown cleared before detection
+                            if self.pending[a].take().is_some() {
+                                self.stats.missed += 1;
+                            }
+                        }
+                        _ => unreachable!("only degradation events are hidden"),
+                    }
+                } else {
+                    self.notify(&announced, system);
+                }
+                let new_sim = Some(self.reseed_sim());
+                Applied::Changed { hidden: hide, removed, ghosted: None, added, abrupt, new_sim }
+            }
+        }
+    }
+
+    /// Apply every trace event due at or before this epoch's boundary
+    /// (position ≤ `(epoch, 0.0)`), mutating the ground truth and
+    /// notifying `system` of the *visible* ones.  Each effective event
+    /// rebuilds the timing simulator with a distinct deterministic seed.
     pub fn boundary(&mut self, epoch: usize, system: &mut dyn TrainingSystem) -> BoundaryOutcome {
         let mut out = BoundaryOutcome {
             changed: Vec::new(),
@@ -214,111 +511,212 @@ impl<'a> ElasticDriver<'a> {
             skipped: 0,
             new_sim: None,
         };
-        while self.next_event < self.trace.events.len()
-            && self.trace.events[self.next_event].epoch <= epoch
-        {
+        loop {
+            let due = self.trace.events.get(self.next_event).is_some_and(|te| {
+                te.epoch < epoch || (te.epoch == epoch && te.frac <= 0.0)
+            });
+            if !due {
+                break;
+            }
             let te = self.trace.events[self.next_event].clone();
             self.next_event += 1;
-            let hide = self.mode != DetectionMode::Oracle
-                && matches!(
-                    te.event,
-                    ClusterEvent::SlowDown { .. } | ClusterEvent::Recover { .. }
-                );
-            // ground-truth health before the event (detection bookkeeping)
-            let was_healthy = match te.event {
-                ClusterEvent::SlowDown { node, .. } | ClusterEvent::Recover { node }
-                    if node < self.elastic.n() =>
-                {
-                    self.elastic.slow_factor(node) >= 1.0 - 1e-9
-                }
-                _ => true,
-            };
-            match self.elastic.apply(&te.event) {
-                Ok(delta) => {
-                    if delta.is_empty() {
-                        out.noops += 1;
-                        continue;
-                    }
-                    if hide {
+            match self.apply_one(epoch, &te.event, false, system) {
+                Applied::Skipped => out.skipped += 1,
+                Applied::Noop => out.noops += 1,
+                Applied::Changed { hidden, new_sim, .. } => {
+                    if hidden {
                         out.hidden += 1;
-                        match te.event {
-                            ClusterEvent::SlowDown { node, .. } => {
-                                if was_healthy && self.pending[node].is_none() {
-                                    self.pending[node] = Some(epoch);
-                                }
-                            }
-                            ClusterEvent::Recover { node } => {
-                                // the slowdown cleared before detection
-                                if self.pending[node].take().is_some() {
-                                    self.stats.missed += 1;
-                                }
-                            }
-                            _ => unreachable!("only degradation events are hidden"),
-                        }
-                    } else {
-                        let spec = self.elastic.spec();
-                        let caps = self.caps(&spec);
-                        system.on_cluster_change(&delta, &spec, &caps);
                     }
-                    if delta.membership_changed() {
-                        // a pending (undetected) slowdown departing with
-                        // its node can never be detected now: that is a
-                        // miss, per DetectionStats' contract
-                        for &i in &delta.removed {
-                            if i < self.pending.len() && self.pending[i].is_some() {
-                                self.stats.missed += 1;
-                            }
-                        }
-                        delta.resync_view(&mut self.pending, || None);
-                        if let Some(d) = &mut self.detector {
-                            d.sync_membership(&delta);
-                        }
+                    if new_sim.is_some() {
+                        out.new_sim = new_sim;
                     }
-                    self.reseeds += 1;
-                    out.new_sim = Some(ClusterSim::new(
-                        &self.elastic.spec(),
-                        self.w,
-                        self.seed ^ self.reseeds.wrapping_mul(0x9E37_79B9_7F4A_7C15),
-                    ));
-                    out.changed.push((te.event.kind(), self.elastic.n(), hide));
+                    out.changed.push((te.event.kind(), self.n(), hidden));
                 }
-                Err(_) => out.skipped += 1,
             }
         }
-        self.events_applied += out.applied();
+        self.events_applied += out.effective();
+        self.events_noop += out.noops;
         self.events_hidden += out.hidden;
         self.events_skipped += out.skipped;
         out
     }
 
-    /// Feed one batch worth of per-node timing observations to the
-    /// detector (no-op outside [`DetectionMode::Observed`]).
-    pub fn observe(&mut self, obs: &[NodeBatchObs]) {
-        if let Some(d) = &mut self.detector {
-            d.observe(obs);
+    /// Would this event change the cluster if applied right now?
+    /// Read-only ([`ElasticCluster::classify`], which `apply` itself
+    /// routes through) — the epoch loop uses it so an inert event (no-op
+    /// replay, stale index) never splits the epoch or costs extra
+    /// measurement, keeping the run bit-identical to one without it.
+    pub fn peek_effective(&self, te: &TimedEvent) -> bool {
+        matches!(self.elastic.classify(&te.event), Ok(true))
+    }
+
+    /// Consume the events that land **inside** this epoch
+    /// (`te.epoch == epoch && te.frac > 0`), in timeline order.  The epoch
+    /// loop applies each at its fraction via [`Self::apply_mid_epoch`].
+    pub fn take_mid_epoch(&mut self, epoch: usize) -> Vec<TimedEvent> {
+        let mut out = Vec::new();
+        while let Some(te) = self.trace.events.get(self.next_event) {
+            if te.epoch == epoch && te.frac > 0.0 {
+                out.push(te.clone());
+                self.next_event += 1;
+            } else {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Apply one mid-epoch event (from [`Self::take_mid_epoch`]).  Same
+    /// counting as the boundary path; the returned effect tells the epoch
+    /// loop how to re-dispatch the in-flight work.
+    pub fn apply_mid_epoch(
+        &mut self,
+        epoch: usize,
+        te: &TimedEvent,
+        system: &mut dyn TrainingSystem,
+    ) -> MidEpochEffect {
+        match self.apply_one(epoch, &te.event, true, system) {
+            Applied::Skipped => {
+                self.events_skipped += 1;
+                MidEpochEffect::inert()
+            }
+            Applied::Noop => {
+                self.events_noop += 1;
+                MidEpochEffect::inert()
+            }
+            Applied::Changed { hidden, removed, ghosted, added, abrupt, new_sim } => {
+                self.events_applied += 1;
+                if hidden {
+                    self.events_hidden += 1;
+                }
+                MidEpochEffect { effective: true, removed, ghosted, added, abrupt, new_sim }
+            }
         }
     }
 
-    /// Close the epoch: let the detector judge it and route any
-    /// synthesized `SlowDown`/`Recover` events to the system as degraded
-    /// deltas (the physical cluster is *not* touched — the events are
-    /// belief updates, the truth already changed at the hidden boundary).
-    /// Returns the number of synthesized events.
+    /// Advance the timing simulator one batch under the system's plan
+    /// (announced-view batch sizes; width must equal [`Self::n`]).  Ghost
+    /// slots produce no work: the elastic runtime re-forms the ring
+    /// without the dead ranks and re-dispatches their allocation to the
+    /// live nodes pro rata — the planner is none the wiser — and the ghost
+    /// slot reports a silent zero observation, exactly the signal the
+    /// missing-heartbeat rule keys on.  With no ghosts this is the legacy
+    /// direct `sim.step`, bit for bit.
+    pub fn step(&mut self, sim: &mut ClusterSim, local: &[f64]) -> (f64, Vec<NodeBatchObs>) {
+        assert_eq!(local.len(), self.view.len(), "plan width must match the system view");
+        if self.view.iter().all(|s| s.phys.is_some()) {
+            let out = sim.step(local);
+            return (out.t_batch, out.per_node);
+        }
+        let orphaned: f64 = self
+            .view
+            .iter()
+            .zip(local)
+            .filter_map(|(s, &b)| s.phys.is_none().then_some(b))
+            .sum();
+        let live: f64 = self
+            .view
+            .iter()
+            .zip(local)
+            .filter_map(|(s, &b)| s.phys.is_some().then_some(b))
+            .sum();
+        let n_phys = self.elastic.n();
+        let mut phys_b = vec![0.0; n_phys];
+        for (s, &b) in self.view.iter().zip(local) {
+            if let Some(p) = s.phys {
+                phys_b[p] =
+                    if live > 0.0 { b * (1.0 + orphaned / live) } else { orphaned / n_phys as f64 };
+            }
+        }
+        let out = sim.step(&phys_b);
+        let silent = NodeBatchObs {
+            b: 0.0,
+            a_time: 0.0,
+            p_time: 0.0,
+            gamma_obs: 0.0,
+            t_comm_obs: 0.0,
+            finish: 0.0,
+        };
+        let obs = self
+            .view
+            .iter()
+            .map(|s| match s.phys {
+                Some(p) => out.per_node[p],
+                None => silent,
+            })
+            .collect();
+        (out.t_batch, obs)
+    }
+
+    /// Feed one batch worth of per-node timing observations to the
+    /// detector (no-op outside [`DetectionMode::Observed`]).  Ghost slots
+    /// are reported absent — transport-level silence, not an idle
+    /// heartbeat.
+    pub fn observe(&mut self, obs: &[NodeBatchObs]) {
+        if let Some(d) = &mut self.detector {
+            if self.view.iter().all(|s| s.phys.is_some()) {
+                d.observe(obs);
+            } else {
+                let present: Vec<bool> = self.view.iter().map(|s| s.phys.is_some()).collect();
+                d.observe_present(obs, &present);
+            }
+        }
+    }
+
+    /// Close the epoch: let the detector judge it and route its
+    /// synthesized events to the system.  `SlowDown`/`Recover` become
+    /// degraded deltas (belief updates — the physical truth already
+    /// changed at the hidden event).  A synthesized `Preempt` is the
+    /// missing-heartbeat rule firing: if the slot really is a ghost, the
+    /// departure *materializes* — the announced view shrinks and the
+    /// system warm-replans exactly as it would for a trace event (the
+    /// physical side needs no change; it shrank when the node died).
+    /// Returns the number of synthesized events delivered.
     pub fn end_epoch(&mut self, epoch: usize, system: &mut dyn TrainingSystem) -> usize {
         let Some(det) = &mut self.detector else {
             return 0;
         };
         let events = det.end_epoch(epoch);
         let mut n_events = 0;
+        // slots materialized out of the view *this* epoch, in the
+        // detector's (pre-removal) index space: later events in the same
+        // batch carry pre-removal indices and must shift down
+        let mut removed_this_epoch: Vec<usize> = Vec::new();
         for ev in events {
-            let node = match ev {
-                ClusterEvent::SlowDown { node, .. } | ClusterEvent::Recover { node } => node,
+            let raw = match ev {
+                ClusterEvent::SlowDown { node, .. }
+                | ClusterEvent::Recover { node }
+                | ClusterEvent::Preempt { node } => node,
                 _ => continue,
             };
-            if node >= self.elastic.n() {
+            let node = raw - removed_this_epoch.iter().filter(|&&r| r < raw).count();
+            if node >= self.view.len() {
                 continue;
             }
-            let truly_slow = self.elastic.slow_factor(node) < 1.0 - 1e-9;
+            if let ClusterEvent::Preempt { .. } = ev {
+                match self.view[node].ghost.clone() {
+                    Some((_dev, since)) => {
+                        self.stats.inferred_preempts += 1;
+                        self.stats.preempt_latencies.push(epoch.saturating_sub(since));
+                        let announced =
+                            MembershipDelta { removed: vec![node], added: 0, degraded: vec![] };
+                        self.view.remove(node);
+                        self.notify(&announced, system);
+                        removed_this_epoch.push(raw);
+                        n_events += 1;
+                    }
+                    None => {
+                        // the node is alive — a false membership alarm
+                        // (counted; never acted on)
+                        self.stats.false_preempts += 1;
+                    }
+                }
+                continue;
+            }
+            let truly_slow = match self.view[node].phys {
+                Some(p) => !self.elastic.is_healthy(p),
+                None => false, // a ghost produces no obs to be judged on
+            };
             match ev {
                 ClusterEvent::SlowDown { .. } => {
                     self.stats.emitted_slowdowns += 1;
@@ -339,7 +737,7 @@ impl<'a> ElasticDriver<'a> {
                 _ => {}
             }
             let delta = MembershipDelta { removed: vec![], added: 0, degraded: vec![node] };
-            let spec = self.elastic.spec();
+            let spec = self.spec();
             let caps = self.caps(&spec);
             system.on_cluster_change(&delta, &spec, &caps);
             n_events += 1;
@@ -348,10 +746,12 @@ impl<'a> ElasticDriver<'a> {
     }
 
     /// Final detection accounting (Some iff a detector ran): undetected
-    /// transitions still pending at run end count as missed.
+    /// transitions still pending at run end count as missed; ghosts never
+    /// inferred count as missed preemptions.
     pub fn finish(mut self) -> Option<DetectionStats> {
         self.detector.as_ref()?;
         self.stats.missed += self.pending.iter().filter(|p| p.is_some()).count();
+        self.stats.missed_preempts += self.view.iter().filter(|s| s.phys.is_none()).count();
         Some(self.stats)
     }
 }
@@ -382,6 +782,45 @@ impl Default for ScenarioConfig {
     }
 }
 
+/// Measure one segment's mean batch time under `local`, feeding every
+/// observation to the system and the detector (the shared per-epoch
+/// measure/observe loop of both the segmented and the static path).
+fn measure(
+    driver: &mut ElasticDriver<'_>,
+    sim: &mut ClusterSim,
+    system: &mut dyn TrainingSystem,
+    local: &[f64],
+    reps: usize,
+) -> f64 {
+    let reps = reps.max(1);
+    let mut t_mean = 0.0;
+    for _ in 0..reps {
+        let (t, obs) = driver.step(sim, local);
+        t_mean += t;
+        system.observe_epoch(&obs, t);
+        driver.observe(&obs);
+    }
+    t_mean / reps as f64
+}
+
+/// Spread a departed node's allocation over the surviving plan slots pro
+/// rata (the runtime-level re-dispatch that bridges to the next boundary,
+/// where the system re-plans properly).
+fn redispatch(local: &mut [f64], gone: f64) {
+    let live: f64 = local.iter().sum();
+    if live > 0.0 {
+        let scale = 1.0 + gone / live;
+        for b in local.iter_mut() {
+            *b *= scale;
+        }
+    } else if !local.is_empty() {
+        let each = gone / local.len() as f64;
+        for b in local.iter_mut() {
+            *b = each;
+        }
+    }
+}
+
 /// Run one system through `trace` on top of `base`, to the workload's
 /// target metric or `cfg.max_epochs`.  Deterministic in `cfg.seed`.  This
 /// is the unified execution path behind [`crate::api::run`] /
@@ -395,43 +834,99 @@ pub fn run_scenario(
     cfg: &ScenarioConfig,
 ) -> RunReport {
     let mut driver = ElasticDriver::new(base, w, trace, cfg.detect, cfg.detector, cfg.seed);
-    let mut sim = ClusterSim::new(&driver.spec(), w, cfg.seed);
-    // (n_nodes, boundary events, detected events) per epoch
-    let mut side: Vec<(usize, usize, usize)> = Vec::new();
+    let mut sim = ClusterSim::new(&driver.phys_spec(), w, cfg.seed);
+    // (n_nodes, boundary events, mid-epoch events, detected) per epoch
+    let mut side: Vec<(usize, usize, usize, usize)> = Vec::new();
 
-    let result = convergence::run(w, target_value(w), cfg.max_epochs, |epoch, phi| {
+    let result = convergence::run_segmented(w, target_value(w), cfg.max_epochs, |epoch, phi| {
         // ---- epoch boundary: apply every event that is now due
         let out = driver.boundary(epoch, system);
-        let events_here = out.applied();
+        let boundary_events = out.effective();
         if let Some(s) = out.new_sim {
             sim = s;
         }
 
-        // ---- plan / measure / observe
+        // ---- plan, then split the epoch around any mid-epoch events.
+        // Redistribution conserves the dispatched total, so every segment
+        // runs the plan's total batch.
         let plan = system.plan_epoch(epoch, phi);
-        let mut t_mean = 0.0;
-        for _ in 0..cfg.reps.max(1) {
-            let out = sim.step(&plan.local_f64());
-            t_mean += out.t_batch;
-            system.observe_epoch(&out.per_node, out.t_batch);
-            driver.observe(&out.per_node);
+        let mut local = plan.local_f64();
+        let mut segments: Vec<Segment> = Vec::new();
+        let mut cursor = 0.0;
+        // samples that must be re-processed with no progress: an abrupt
+        // departure takes its sampler cursor with it, so the consumed
+        // `frac` of its shard is conservatively re-dispatched
+        let mut redundant = 0.0;
+        let mut mid_events = 0usize;
+        for te in driver.take_mid_epoch(epoch) {
+            // an inert event (no-op replay, stale index) must not split
+            // the epoch: it is counted by apply_mid_epoch below, but the
+            // run stays bit-identical to one without it
+            if driver.peek_effective(&te) && te.frac > cursor {
+                let t = measure(&mut driver, &mut sim, system, &local, cfg.reps);
+                segments.push(Segment {
+                    batch: plan.total,
+                    t_batch: t,
+                    weight: te.frac - cursor,
+                    wasted_secs: 0.0,
+                });
+                cursor = te.frac;
+            }
+            let eff = driver.apply_mid_epoch(epoch, &te, system);
+            if let Some(s) = eff.new_sim {
+                sim = s;
+            }
+            if !eff.effective {
+                continue;
+            }
+            mid_events += 1;
+            let total: f64 = local.iter().sum();
+            if let Some(a) = eff.removed {
+                // visible departure: the slot leaves the plan; its
+                // allocation re-dispatches to the survivors
+                let gone = local.remove(a);
+                redispatch(&mut local, gone);
+                if eff.abrupt && total > 0.0 {
+                    redundant += te.frac * w.epoch_samples as f64 * gone / total;
+                }
+            }
+            if let Some(a) = eff.ghosted {
+                // silent death: the slot stays (the system doesn't know);
+                // the runtime re-dispatches at step time (driver.step)
+                if total > 0.0 {
+                    redundant += te.frac * w.epoch_samples as f64 * local[a] / total;
+                }
+            }
+            for _ in 0..eff.added {
+                local.push(0.0);
+            }
         }
-        let t = t_mean / cfg.reps.max(1) as f64;
+
+        // ---- the remainder of the epoch under the (re-dispatched) plan
+        let t = measure(&mut driver, &mut sim, system, &local, cfg.reps);
+        let wasted =
+            if plan.total > 0 { redundant / plan.total as f64 * t } else { 0.0 };
+        segments.push(Segment {
+            batch: plan.total,
+            t_batch: t,
+            weight: 1.0 - cursor,
+            wasted_secs: wasted,
+        });
 
         // ---- observation-driven detection closes the epoch
         let detected = driver.end_epoch(epoch, system);
-        side.push((driver.n(), events_here, detected));
+        side.push((driver.n(), boundary_events, mid_events, detected));
         // overhead is charged as 0 so the simulated clock — and therefore
         // the whole run output — is bit-identical across invocations
         // (planner wall-time is still accumulated planner-side)
-        (plan.total, t, 0.0)
+        EpochExec { segments, overhead: 0.0 }
     });
 
     let rows: Vec<EpochRow> = result
         .epochs
         .iter()
         .zip(&side)
-        .map(|(e, &(n_nodes, events, detected))| EpochRow {
+        .map(|(e, &(n_nodes, events, mid_epoch_events, detected))| EpochRow {
             epoch: e.epoch,
             n_nodes,
             total_batch: e.total_batch,
@@ -440,6 +935,7 @@ pub fn run_scenario(
             progress: e.progress,
             metric: e.metric,
             events,
+            mid_epoch_events,
             detected,
         })
         .collect();
@@ -456,8 +952,10 @@ pub fn run_scenario(
         rows,
         time_to_target: result.time_to_target,
         events_applied: driver.events_applied,
+        events_noop: driver.events_noop,
         events_hidden: driver.events_hidden,
         events_skipped: driver.events_skipped,
+        wasted_work_secs: result.epochs.iter().map(|e| e.wasted_secs).sum(),
         bootstrap_epochs: system.bootstrap_epochs(),
         final_n,
         detection: driver.finish(),
@@ -555,6 +1053,110 @@ mod tests {
         assert!(r.reached(), "loss/metric target must still be reached");
         // after the leave every epoch plans for 2 nodes
         assert!(r.rows.iter().skip(13).all(|row| row.n_nodes == 2));
+    }
+
+    #[test]
+    fn noop_events_are_counted_apart_from_effective_ones() {
+        // regression: a trace replaying the current slowdown factor used
+        // to inflate events_applied and the per-epoch row counts
+        let c = cluster::cluster_a();
+        let w = workload::cifar10();
+        let mut trace = ChurnTrace::new("replayed-slowdown");
+        trace.push(2, ClusterEvent::SlowDown { node: 0, factor: 0.5 });
+        trace.push(5, ClusterEvent::SlowDown { node: 0, factor: 0.5 }); // replay
+        trace.push(9, ClusterEvent::SlowDown { node: 0, factor: 0.5 }); // replay
+        let cfg = ScenarioConfig { max_epochs: 40, ..Default::default() };
+        let mut sys =
+            CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+        let r = run_scenario(&c, &w, &trace, &mut sys, &cfg);
+        assert_eq!(r.events_applied, 1, "only the first SlowDown changes the cluster");
+        assert_eq!(r.events_noop, 2, "replays are accounted, separately");
+        assert_eq!(r.events_skipped, 0);
+        assert_eq!(r.rows[2].events, 1);
+        assert_eq!(r.rows[5].events, 0, "a replayed event must not inflate the row");
+        assert_eq!(r.rows[9].events, 0);
+        assert_eq!(r.rows.iter().map(|row| row.events).sum::<usize>(), 1);
+    }
+
+    #[test]
+    fn inert_mid_epoch_events_do_not_perturb_the_run() {
+        // an accepted no-op (replayed SlowDown) and a rejected event
+        // (stale index) landing mid-epoch are counted, but the run must
+        // stay bit-identical to the same trace without them — an inert
+        // event must not split the epoch or consume simulator randomness
+        let c = cluster::cluster_a();
+        let w = workload::cifar10();
+        let mut clean = ChurnTrace::new("one-slowdown");
+        clean.push(2, ClusterEvent::SlowDown { node: 0, factor: 0.5 });
+        let mut noisy = clean.clone();
+        noisy.push_at(5, 0.5, ClusterEvent::SlowDown { node: 0, factor: 0.5 }); // no-op
+        noisy.push_at(7, 0.25, ClusterEvent::Preempt { node: 9 }); // stale index
+        let cfg = ScenarioConfig { max_epochs: 40, ..Default::default() };
+        let run = |trace: &ChurnTrace| {
+            let mut sys =
+                CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+            run_scenario(&c, &w, trace, &mut sys, &cfg)
+        };
+        let a = run(&clean);
+        let b = run(&noisy);
+        assert_eq!(b.events_applied, 1);
+        assert_eq!(b.events_noop, 1);
+        assert_eq!(b.events_skipped, 1);
+        assert_eq!(b.wasted_work_secs, 0.0);
+        assert_eq!(a.rows.len(), b.rows.len());
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(x.total_batch, y.total_batch, "epoch {}", x.epoch);
+            assert_eq!(x.t_batch.to_bits(), y.t_batch.to_bits(), "epoch {}", x.epoch);
+            assert_eq!(x.wall_secs.to_bits(), y.wall_secs.to_bits(), "epoch {}", x.epoch);
+            assert_eq!(x.mid_epoch_events, y.mid_epoch_events);
+        }
+    }
+
+    #[test]
+    fn mid_epoch_preempt_splits_the_epoch_and_charges_wasted_work() {
+        let c = cluster::cluster_a();
+        let w = workload::cifar10();
+        let mut trace = ChurnTrace::new("mid-preempt");
+        trace.push_at(10, 0.5, ClusterEvent::Preempt { node: 2 });
+        let cfg = ScenarioConfig { max_epochs: 20_000, seed: 3, ..Default::default() };
+        let mut sys =
+            CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+        let r = run_scenario(&c, &w, &trace, &mut sys, &cfg);
+        assert_eq!(r.final_n, 2);
+        assert_eq!(r.events_applied, 1);
+        assert_eq!(r.rows[10].mid_epoch_events, 1, "the preempt lands inside epoch 10");
+        assert_eq!(r.rows[10].events, 0, "…not at its boundary");
+        assert_eq!(r.rows[10].n_nodes, 2, "oracle mid-epoch departure is visible at once");
+        // the in-flight shard work is lost and re-processed: wasted
+        // seconds are positive but well below the epoch itself
+        let epoch10_secs = r.rows[10].wall_secs - r.rows[9].wall_secs;
+        assert!(r.wasted_work_secs > 0.0);
+        assert!(
+            r.wasted_work_secs < epoch10_secs,
+            "only the in-flight fraction may be lost: {} vs epoch {}",
+            r.wasted_work_secs,
+            epoch10_secs
+        );
+        assert!(r.reached(), "the run must still converge");
+        assert!(r.rows.iter().skip(11).all(|row| row.n_nodes == 2));
+    }
+
+    #[test]
+    fn graceful_mid_epoch_leave_wastes_nothing() {
+        // NodeLeave drains: same membership effect as a preempt, but no
+        // in-flight work is lost — Preempt vs NodeLeave are now distinct
+        let c = cluster::cluster_a();
+        let w = workload::cifar10();
+        let mut trace = ChurnTrace::new("mid-leave");
+        trace.push_at(10, 0.5, ClusterEvent::NodeLeave { node: 2 });
+        let cfg = ScenarioConfig { max_epochs: 20_000, seed: 3, ..Default::default() };
+        let mut sys =
+            CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+        let r = run_scenario(&c, &w, &trace, &mut sys, &cfg);
+        assert_eq!(r.final_n, 2);
+        assert_eq!(r.rows[10].mid_epoch_events, 1);
+        assert_eq!(r.wasted_work_secs, 0.0, "a drained departure loses nothing");
+        assert!(r.reached());
     }
 
     #[test]

@@ -318,6 +318,17 @@ fn print_detection(d: &DetectionStats) {
         }
         _ => println!("detector: no hidden slowdown was detectable this run"),
     }
+    if d.inferred_preempts + d.false_preempts + d.missed_preempts > 0 {
+        let lat = d
+            .mean_preempt_latency()
+            .map(|l| format!("{l:.1}"))
+            .unwrap_or_else(|| "-".to_string());
+        println!(
+            "detector: {} unannounced preemption(s) inferred ({} false alarms, {} missed), \
+             mean inference lag {lat} epochs",
+            d.inferred_preempts, d.false_preempts, d.missed_preempts
+        );
+    }
 }
 
 /// Human rendering of a report: ~25 sampled epoch rows + the footer.
@@ -326,6 +337,9 @@ fn print_report(r: &RunReport, target_label: &str) {
         let mut flag = String::new();
         if row.events > 0 {
             flag.push_str(&format!("  [{} event(s)]", row.events));
+        }
+        if row.mid_epoch_events > 0 {
+            flag.push_str(&format!("  [{} mid-epoch]", row.mid_epoch_events));
         }
         if row.detected > 0 {
             flag.push_str(&format!("  [{} detected]", row.detected));
@@ -337,10 +351,10 @@ fn print_report(r: &RunReport, target_label: &str) {
         );
     }
     println!(
-        "\n{}: applied {} events ({} hidden, skipped {}), final cluster size {}, \
-         bootstrap epochs {}",
-        r.system, r.events_applied, r.events_hidden, r.events_skipped, r.final_n,
-        r.bootstrap_epochs
+        "\n{}: applied {} events ({} no-op, {} hidden, skipped {}), wasted {:.1}s, \
+         final cluster size {}, bootstrap epochs {}",
+        r.system, r.events_applied, r.events_noop, r.events_hidden, r.events_skipped,
+        r.wasted_work_secs, r.final_n, r.bootstrap_epochs
     );
     if let Some(d) = &r.detection {
         print_detection(d);

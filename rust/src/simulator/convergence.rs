@@ -8,6 +8,14 @@
 //! or the closed form), this reproduces the *convergence-time* experiments
 //! (Fig. 5, 7, 8) without the actual datasets — the quantity under test is
 //! the systems' throughput × efficiency trade-off, which this preserves.
+//!
+//! An epoch is a sequence of ≥1 **segments** ([`run_segmented`]): a
+//! mid-epoch cluster event splits the epoch, and each segment carries its
+//! own plan (total batch, measured batch time), its share of the epoch's
+//! samples, and any *wasted* seconds — clock time charged with zero
+//! progress (re-processed shards after an abrupt departure).  The classic
+//! single-`(B, t, overhead)`-per-epoch interface ([`run`]) is the
+//! one-segment special case and integrates to bit-identical results.
 
 use crate::goodput::step_progress;
 use crate::simulator::workload::Workload;
@@ -16,9 +24,12 @@ use crate::simulator::workload::Workload;
 #[derive(Clone, Copy, Debug)]
 pub struct EpochStat {
     pub epoch: usize,
+    /// total batch of the epoch's opening plan (segment 0)
     pub total_batch: u64,
+    /// batch time measured for the epoch's opening plan (segment 0)
     pub t_batch: f64,
-    /// wall-clock seconds spent this epoch (incl. scheduler overhead)
+    /// wall-clock seconds spent this epoch (incl. scheduler overhead and
+    /// wasted seconds)
     pub epoch_secs: f64,
     /// cumulative wall-clock
     pub wall_secs: f64,
@@ -28,6 +39,32 @@ pub struct EpochStat {
     pub metric: f64,
     /// GNS at end of epoch
     pub phi: f64,
+    /// seconds of this epoch charged with zero progress (mid-epoch
+    /// preemption re-dispatch)
+    pub wasted_secs: f64,
+}
+
+/// One contiguous slice of an epoch executed under a fixed plan.
+#[derive(Clone, Copy, Debug)]
+pub struct Segment {
+    /// total batch size dispatched per step in this segment
+    pub batch: u64,
+    /// mean batch-processing time measured for this segment's plan
+    pub t_batch: f64,
+    /// fraction of the epoch's samples dispatched in this segment (an
+    /// epoch's segment weights sum to 1)
+    pub weight: f64,
+    /// seconds charged to the clock with **no** progress (work lost to an
+    /// abrupt mid-epoch departure and re-processed)
+    pub wasted_secs: f64,
+}
+
+/// One epoch's execution: ≥1 segments (a static epoch is a single
+/// weight-1 segment) plus scheduler overhead.
+#[derive(Clone, Debug)]
+pub struct EpochExec {
+    pub segments: Vec<Segment>,
+    pub overhead: f64,
 }
 
 /// Full simulated run.
@@ -41,11 +78,34 @@ pub struct RunResult {
 /// Drive a convergence run.  The *system under test* supplies, per epoch,
 /// its chosen total batch size and the resulting mean batch time plus any
 /// per-epoch overhead, via `policy(epoch, phi) -> (B, t_batch, overhead)`.
+/// The one-segment special case of [`run_segmented`] (bit-identical to
+/// the pre-segmentation integrator).
 pub fn run(
     workload: &Workload,
     target_value: f64,
     max_epochs: usize,
     mut policy: impl FnMut(usize, f64) -> (u64, f64, f64),
+) -> RunResult {
+    run_segmented(workload, target_value, max_epochs, |epoch, phi| {
+        let (batch, t_batch, overhead) = policy(epoch, phi);
+        EpochExec {
+            segments: vec![Segment { batch, t_batch, weight: 1.0, wasted_secs: 0.0 }],
+            overhead,
+        }
+    })
+}
+
+/// Drive a convergence run whose epochs may be split into segments by
+/// mid-epoch cluster events.  Per segment: its share of the epoch's
+/// samples runs at its plan's total batch and measured batch time
+/// (midpoint-φ progress integration, sequential across segments);
+/// `wasted_secs` is added to the clock with no progress.  Target crossing
+/// interpolates linearly across the epoch, as before.
+pub fn run_segmented(
+    workload: &Workload,
+    target_value: f64,
+    max_epochs: usize,
+    mut policy: impl FnMut(usize, f64) -> EpochExec,
 ) -> RunResult {
     let mut progress = 0.0;
     let mut wall = 0.0;
@@ -54,15 +114,30 @@ pub fn run(
 
     for epoch in 0..max_epochs {
         let phi = workload.phi_at(progress);
-        let (batch, t_batch, overhead) = policy(epoch, phi);
-        let batch = batch.max(1);
-        let steps_per_epoch =
-            (workload.epoch_samples as f64 / batch as f64).ceil().max(1.0);
-        // progress integrates φ along the epoch (φ moves slowly; midpoint
-        // evaluation is plenty)
-        let phi_mid = workload.phi_at(progress + 0.5 * steps_per_epoch * step_progress(phi, batch as f64));
-        let dp = steps_per_epoch * step_progress(phi_mid, batch as f64);
-        let epoch_secs = steps_per_epoch * t_batch + overhead;
+        let exec = policy(epoch, phi);
+        debug_assert!(!exec.segments.is_empty(), "an epoch needs at least one segment");
+
+        let mut dp = 0.0;
+        let mut active_secs = 0.0;
+        let mut wasted_secs = 0.0;
+        let mut p_run = progress;
+        for seg in &exec.segments {
+            let batch = seg.batch.max(1);
+            let steps =
+                (workload.epoch_samples as f64 * seg.weight / batch as f64).ceil().max(1.0);
+            // progress integrates φ along the segment (φ moves slowly;
+            // midpoint evaluation is plenty)
+            let phi_seg = workload.phi_at(p_run);
+            let phi_mid = workload
+                .phi_at(p_run + 0.5 * steps * step_progress(phi_seg, batch as f64));
+            let dp_seg = steps * step_progress(phi_mid, batch as f64);
+            dp += dp_seg;
+            p_run += dp_seg;
+            active_secs += steps * seg.t_batch;
+            wasted_secs += seg.wasted_secs;
+        }
+        let epoch_secs = active_secs + wasted_secs + exec.overhead;
+        let first = exec.segments[0];
 
         // did we cross the target inside this epoch?  linear interpolation
         if time_to_target.is_none() && progress + dp >= workload.s_target {
@@ -73,13 +148,14 @@ pub fn run(
         wall += epoch_secs;
         epochs.push(EpochStat {
             epoch,
-            total_batch: batch,
-            t_batch,
+            total_batch: first.batch.max(1),
+            t_batch: first.t_batch,
             epoch_secs,
             wall_secs: wall,
             progress,
             metric: workload.metric_at(progress, target_value),
             phi: workload.phi_at(progress),
+            wasted_secs,
         });
         if time_to_target.is_some() && progress > workload.s_target * 1.02 {
             break;
@@ -134,6 +210,72 @@ mod tests {
         let clean = run(&w, 94.0, 10_000, |_, _| (512, 0.05, 0.0));
         let heavy = run(&w, 94.0, 10_000, |_, _| (512, 0.05, 30.0));
         assert!(heavy.time_to_target.unwrap() > clean.time_to_target.unwrap());
+    }
+
+    #[test]
+    fn single_weight1_segment_is_bit_identical_to_the_classic_interface() {
+        let w = workload::cifar10();
+        let a = run(&w, 94.0, 3000, |_, _| (256, 0.05, 0.1));
+        let b = run_segmented(&w, 94.0, 3000, |_, _| EpochExec {
+            segments: vec![Segment { batch: 256, t_batch: 0.05, weight: 1.0, wasted_secs: 0.0 }],
+            overhead: 0.1,
+        });
+        assert_eq!(a.epochs.len(), b.epochs.len());
+        for (x, y) in a.epochs.iter().zip(&b.epochs) {
+            assert_eq!(x.progress.to_bits(), y.progress.to_bits(), "epoch {}", x.epoch);
+            assert_eq!(x.wall_secs.to_bits(), y.wall_secs.to_bits(), "epoch {}", x.epoch);
+        }
+        assert_eq!(
+            a.time_to_target.map(f64::to_bits),
+            b.time_to_target.map(f64::to_bits)
+        );
+    }
+
+    #[test]
+    fn wasted_seconds_cost_wall_time_but_no_progress() {
+        let w = workload::cifar10();
+        let seg = |wasted: f64| {
+            move |_: usize, _: f64| EpochExec {
+                segments: vec![Segment {
+                    batch: 256,
+                    t_batch: 0.05,
+                    weight: 1.0,
+                    wasted_secs: wasted,
+                }],
+                overhead: 0.0,
+            }
+        };
+        let clean = run_segmented(&w, 94.0, 20_000, seg(0.0));
+        let lossy = run_segmented(&w, 94.0, 20_000, seg(5.0));
+        // same progress trajectory, strictly more wall time
+        assert_eq!(clean.epochs.len(), lossy.epochs.len());
+        for (c, l) in clean.epochs.iter().zip(&lossy.epochs) {
+            assert_eq!(c.progress.to_bits(), l.progress.to_bits());
+            assert!(l.wall_secs > c.wall_secs);
+            assert_eq!(l.wasted_secs, 5.0);
+        }
+        assert!(lossy.time_to_target.unwrap() > clean.time_to_target.unwrap());
+    }
+
+    #[test]
+    fn split_epoch_with_equal_plans_matches_the_unsplit_epoch_closely() {
+        // two half-segments under the same plan ≈ one full segment (only
+        // the per-segment step-count ceil differs)
+        let w = workload::cifar10();
+        let whole = run_segmented(&w, 94.0, 20_000, |_, _| EpochExec {
+            segments: vec![Segment { batch: 512, t_batch: 0.04, weight: 1.0, wasted_secs: 0.0 }],
+            overhead: 0.0,
+        });
+        let split = run_segmented(&w, 94.0, 20_000, |_, _| EpochExec {
+            segments: vec![
+                Segment { batch: 512, t_batch: 0.04, weight: 0.5, wasted_secs: 0.0 },
+                Segment { batch: 512, t_batch: 0.04, weight: 0.5, wasted_secs: 0.0 },
+            ],
+            overhead: 0.0,
+        });
+        let (tw, ts) =
+            (whole.time_to_target.unwrap(), split.time_to_target.unwrap());
+        assert!((tw - ts).abs() / tw < 0.02, "whole {tw} vs split {ts}");
     }
 
     #[test]

@@ -87,6 +87,7 @@ fn rand_report(rng: &mut Rng) -> RunReport {
             progress: rand_f64(rng),
             metric: rand_f64(rng),
             events: rng.below(4) as usize,
+            mid_epoch_events: rng.below(3) as usize,
             detected: rng.below(3) as usize,
         })
         .collect();
@@ -97,6 +98,10 @@ fn rand_report(rng: &mut Rng) -> RunReport {
         false_recovers: rng.below(4) as usize,
         latencies: (0..rng.below(6)).map(|_| rng.below(100) as usize).collect(),
         missed: rng.below(4) as usize,
+        inferred_preempts: rng.below(4) as usize,
+        false_preempts: rng.below(3) as usize,
+        preempt_latencies: (0..rng.below(4)).map(|_| rng.below(20) as usize).collect(),
+        missed_preempts: rng.below(3) as usize,
     });
     RunReport {
         system: rand_name(rng, 16),
@@ -110,8 +115,10 @@ fn rand_report(rng: &mut Rng) -> RunReport {
         rows,
         time_to_target: (rng.below(2) == 0).then(|| rand_f64(rng)),
         events_applied: rng.below(20) as usize,
+        events_noop: rng.below(8) as usize,
         events_hidden: rng.below(10) as usize,
         events_skipped: rng.below(5) as usize,
+        wasted_work_secs: rand_f64(rng).abs(),
         bootstrap_epochs: rng.below(10) as usize,
         final_n: 1 + rng.below(64) as usize,
         detection,
@@ -191,19 +198,28 @@ fn spec_file_roundtrip() {
     assert_eq!(spec, back);
 }
 
-/// The committed CI smoke spec must stay loadable, resolvable and
-/// runnable, and its report must survive the round trip the smoke job
-/// exercises (`run specs/smoke.json --json | report -`).
+/// Every committed CI smoke spec (one per trace preset — the spec-smoke
+/// matrix) must stay loadable, resolvable and runnable, and its report
+/// must survive the round trip the smoke job exercises
+/// (`run specs/smoke-<preset>.json --json | report -`).
 #[test]
-fn committed_smoke_spec_runs_and_roundtrips() {
-    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("specs/smoke.json");
-    let spec = ExperimentSpec::load(&path).unwrap();
-    let reg = SystemRegistry::builtin();
-    let report = run_spec(&spec, &reg).unwrap();
-    assert_eq!(report.rows.len(), spec.max_epochs, "smoke horizon must not reach the target");
-    assert!(report.events_applied >= 1, "smoke spec must exercise the elastic path");
-    let back = RunReport::from_json(&report.to_json()).unwrap();
-    assert_eq!(report, back);
+fn committed_smoke_specs_run_and_roundtrip() {
+    for name in ["smoke.json", "smoke-spot.json", "smoke-maintenance.json", "smoke-straggler.json"]
+    {
+        let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("specs").join(name);
+        let spec = ExperimentSpec::load(&path).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        let reg = SystemRegistry::builtin();
+        let report = run_spec(&spec, &reg).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert!(
+            !report.rows.is_empty() && report.rows.len() <= spec.max_epochs,
+            "{name}: {} rows vs horizon {}",
+            report.rows.len(),
+            spec.max_epochs
+        );
+        assert!(report.events_applied >= 1, "{name}: must exercise the elastic path");
+        let back = RunReport::from_json(&report.to_json()).unwrap();
+        assert_eq!(report, back, "{name}");
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -7,8 +7,9 @@
 
 use cannikin::api::{self, BuildOptions, RunReport, SystemRegistry, TrainingSystem};
 use cannikin::cluster::{self, ClusterSpec};
-use cannikin::elastic::{self, ChurnTrace, DetectionMode, ScenarioConfig};
+use cannikin::elastic::{self, ChurnTrace, ClusterEvent, DetectionMode, ScenarioConfig};
 use cannikin::simulator::{workload, Workload};
+use cannikin::util::json::Json;
 
 fn build(name: &str, c: &ClusterSpec, w: &Workload) -> Box<dyn TrainingSystem> {
     SystemRegistry::builtin()
@@ -124,6 +125,118 @@ fn straggler_drift_reaches_target_with_degraded_nodes() {
     let r = api::run(&c, &w, &trace, sys.as_mut(), &cfg(9));
     assert_eq!(r.final_n, 3, "drift never changes membership");
     assert!(r.reached(), "target must be reached despite stragglers");
+}
+
+// ---------------------------------------------------------------------------
+// mid-epoch preemption semantics (the segmented timeline)
+// ---------------------------------------------------------------------------
+
+fn preempt_at(frac: f64) -> ChurnTrace {
+    let mut t = ChurnTrace::new("one-mid-preempt");
+    t.push_at(10, frac, ClusterEvent::Preempt { node: 2 });
+    t
+}
+
+fn run_trace(trace: &ChurnTrace, seed: u64, detect: DetectionMode) -> RunReport {
+    let c = cluster::cluster_a();
+    let w = workload::cifar10();
+    let mut sys = build("cannikin", &c, &w);
+    api::run(&c, &w, trace, sys.as_mut(), &cfg_mode(seed, detect))
+}
+
+/// Acceptance: a Preempt at frac=0.5 loses only the in-flight fraction —
+/// wasted seconds are positive, bounded by the epoch, and the report (new
+/// fields included) still round-trips JSON losslessly.
+#[test]
+fn mid_epoch_preempt_wastes_the_in_flight_fraction_and_report_roundtrips() {
+    let r = run_trace(&preempt_at(0.5), 3, DetectionMode::Oracle);
+    assert!(r.reached(), "the run must still converge");
+    assert_eq!(r.final_n, 2);
+    assert_eq!(r.events_applied, 1);
+    assert_eq!(r.rows[10].mid_epoch_events, 1);
+    assert!(r.wasted_work_secs > 0.0, "{}", r.wasted_work_secs);
+    let epoch10 = r.rows[10].wall_secs - r.rows[9].wall_secs;
+    assert!(
+        r.wasted_work_secs < epoch10,
+        "only the in-flight fraction may be lost: {} vs epoch {epoch10}",
+        r.wasted_work_secs
+    );
+    // lossless JSON round trip with the segmented-timeline fields
+    let back = RunReport::from_json(&Json::parse(&r.to_json().to_string_pretty()).unwrap())
+        .unwrap();
+    assert_eq!(r, back);
+}
+
+/// Acceptance: wasted work is monotone in how late in the epoch the
+/// preemption lands (the later the kill, the more consumed shard is lost).
+#[test]
+fn wasted_work_is_monotone_in_preemption_lateness() {
+    let mut prev = 0.0;
+    for frac in [0.125, 0.375, 0.625, 0.875] {
+        let r = run_trace(&preempt_at(frac), 3, DetectionMode::Oracle);
+        assert!(
+            r.wasted_work_secs > prev,
+            "wasted({frac}) = {} must exceed wasted(prev) = {prev}",
+            r.wasted_work_secs
+        );
+        prev = r.wasted_work_secs;
+    }
+}
+
+/// Acceptance: the segmented timeline keeps the determinism contract —
+/// the same seed yields bit-identical runs, fractional events included,
+/// in both Oracle and Observed modes.
+#[test]
+fn fractional_event_runs_are_bit_identical_under_a_fixed_seed() {
+    let mut trace = preempt_at(0.5);
+    trace.push_at(14, 0.25, ClusterEvent::SlowDown { node: 0, factor: 0.7 });
+    trace.push(30, ClusterEvent::Recover { node: 0 });
+    for mode in [DetectionMode::Oracle, DetectionMode::Observed] {
+        let a = run_trace(&trace, 17, mode);
+        let b = run_trace(&trace, 17, mode);
+        assert_eq!(a.rows.len(), b.rows.len());
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(x.total_batch, y.total_batch, "{mode:?} epoch {}", x.epoch);
+            assert_eq!(x.n_nodes, y.n_nodes);
+            assert_eq!(x.mid_epoch_events, y.mid_epoch_events);
+            assert_eq!(x.t_batch.to_bits(), y.t_batch.to_bits(), "{mode:?} epoch {}", x.epoch);
+            assert_eq!(x.wall_secs.to_bits(), y.wall_secs.to_bits());
+        }
+        assert_eq!(
+            a.wasted_work_secs.to_bits(),
+            b.wasted_work_secs.to_bits(),
+            "{mode:?}"
+        );
+        assert_eq!(a.time_to_target.map(f64::to_bits), b.time_to_target.map(f64::to_bits));
+        assert_eq!(a.detection, b.detection, "{mode:?}");
+    }
+}
+
+/// Acceptance: under Observed, an unannounced mid-epoch Preempt is
+/// *inferred* from missing observations — no oracle membership
+/// notification — within ≤ 2 epochs, with zero false membership alarms,
+/// and the run still reaches the workload target.
+#[test]
+fn observed_mid_epoch_preempt_is_inferred_from_missing_heartbeats() {
+    let r = run_trace(&preempt_at(0.5), 9, DetectionMode::Observed);
+    assert!(r.reached(), "the run must still converge");
+    assert_eq!(r.final_n, 2, "the inferred departure must shrink the view");
+    assert_eq!(r.events_hidden, 1, "the preemption is never announced");
+    let d = r.detection.clone().expect("observed mode must report detection stats");
+    assert_eq!(d.inferred_preempts, 1, "{d:?}");
+    assert_eq!(d.false_preempts, 0, "zero false membership alarms: {d:?}");
+    assert_eq!(d.missed_preempts, 0, "{d:?}");
+    assert!(
+        d.preempt_latencies.iter().all(|&l| l <= 2),
+        "inference must land within 2 epochs: {d:?}"
+    );
+    // the system keeps planning for 3 nodes until the inference lands…
+    assert_eq!(r.rows[10].n_nodes, 3, "the death itself is silent");
+    // …and for 2 from then on
+    let inferred_epoch = 10 + d.preempt_latencies[0];
+    assert!(r.rows[inferred_epoch + 1..].iter().all(|row| row.n_nodes == 2));
+    // the lost in-flight work is charged either way
+    assert!(r.wasted_work_secs > 0.0);
 }
 
 // ---------------------------------------------------------------------------

@@ -238,6 +238,18 @@ fn random_factor(rng: &mut Rng) -> f64 {
     }
 }
 
+/// In-epoch offsets across the whole domain, with heavy weight on the
+/// boundary (the common case) and awkward shapes near the edges.
+fn random_frac(rng: &mut Rng) -> f64 {
+    match rng.below(6) {
+        0 | 1 => 0.0,
+        2 => 0.5,
+        3 => f64::EPSILON,
+        4 => 1.0 - f64::EPSILON,
+        _ => rng.f64() * 0.999,
+    }
+}
+
 fn random_trace(rng: &mut Rng) -> ChurnTrace {
     let n_ev = rng.below(14) as usize;
     let mut events = Vec::new();
@@ -255,9 +267,16 @@ fn random_trace(rng: &mut Rng) -> ChurnTrace {
             3 => ClusterEvent::SlowDown { node, factor: random_factor(rng) },
             _ => ClusterEvent::Recover { node },
         };
-        events.push(TimedEvent { epoch, event });
+        events.push(TimedEvent { epoch, frac: random_frac(rng), event });
     }
     ChurnTrace { name: format!("fuzz-{}", rng.below(1000)), events }
+}
+
+/// Stable `(epoch, frac)` sort — the order `from_json` promises.
+fn sort_by_position(events: &mut [TimedEvent]) {
+    events.sort_by(|a, b| {
+        a.epoch.cmp(&b.epoch).then(a.frac.partial_cmp(&b.frac).expect("frac is finite"))
+    });
 }
 
 #[test]
@@ -270,10 +289,10 @@ fn prop_churn_trace_json_roundtrips_across_all_event_kinds() {
             let pretty = t.to_json().to_string_pretty();
             let back = ChurnTrace::from_json(&Json::parse(&pretty).map_err(|e| e.to_string())?)
                 .map_err(|e| e.to_string())?;
-            // from_json stably sorts by epoch; compare against the stably
-            // sorted original (same-epoch order is preserved)
+            // from_json stably sorts by (epoch, frac); compare against the
+            // stably sorted original (same-position order is preserved)
             let mut want = t.clone();
-            want.events.sort_by_key(|e| e.epoch);
+            sort_by_position(&mut want.events);
             ensure(back == want, format!("roundtrip mismatch:\n{want:?}\nvs\n{back:?}"))?;
             ensure(back.counts() == t.counts(), "per-kind counts must survive")?;
             // serialization is deterministic and idempotent
@@ -283,6 +302,50 @@ fn prop_churn_trace_json_roundtrips_across_all_event_kinds() {
                 ChurnTrace::from_json(&again).map_err(|e| e.to_string())? == want,
                 "second roundtrip must be a fixed point",
             )
+        },
+    );
+}
+
+#[test]
+fn prop_push_order_at_same_position_survives_build_and_json_roundtrip() {
+    // the binary-search insertion in ChurnTrace::push_at must preserve
+    // the relative push order of events sharing an (epoch, frac) position
+    // — and a JSON round trip must not reshuffle them either.  Recover
+    // events carry a unique node id as a sequence tag.
+    check(
+        "trace-push-order",
+        150,
+        |rng| {
+            let n_ev = 2 + rng.below(20) as usize;
+            // few distinct positions → many same-position collisions
+            let pushes: Vec<(usize, f64, usize)> = (0..n_ev)
+                .map(|tag| (rng.below(3) as usize, [0.0, 0.5][rng.below(2) as usize], tag))
+                .collect();
+            pushes
+        },
+        |pushes| {
+            let mut t = ChurnTrace::new("order");
+            for &(epoch, frac, tag) in pushes {
+                t.push_at(epoch, frac, ClusterEvent::Recover { node: tag });
+            }
+            // the built timeline equals the stable sort of the push list
+            let mut want = ChurnTrace::new("order");
+            want.events = pushes
+                .iter()
+                .map(|&(epoch, frac, tag)| TimedEvent {
+                    epoch,
+                    frac,
+                    event: ClusterEvent::Recover { node: tag },
+                })
+                .collect();
+            sort_by_position(&mut want.events);
+            ensure(t.events == want.events, format!("push order broken:\n{t:?}\nvs\n{want:?}"))?;
+            // …and survives serialization byte-exactly
+            let back = ChurnTrace::from_json(
+                &Json::parse(&t.to_json().to_string_pretty()).map_err(|e| e.to_string())?,
+            )
+            .map_err(|e| e.to_string())?;
+            ensure(back.events == t.events, "JSON round trip reshuffled same-position events")
         },
     );
 }
