@@ -8,7 +8,7 @@
 //!     cargo run --release --example experiment_spec
 
 use cannikin::api::{compare, run_spec, ExperimentSpec, RunReport, SystemRegistry};
-use cannikin::elastic::{ChurnTrace, ClusterEvent, DetectionMode};
+use cannikin::elastic::{ChurnTrace, ClusterEvent, DetectionMode, ReplanTiming};
 use cannikin::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
@@ -92,5 +92,38 @@ fn main() -> anyhow::Result<()> {
             r.wasted_work_secs
         );
     }
+
+    // 6. checkpointed spot churn: a finite checkpoint period replaces the
+    // free implicit boundary checkpoints — writes cost wall time, an
+    // abrupt preemption rolls back to the last checkpoint (wasted work
+    // grows with time-since-checkpoint), and `replan: "immediate"` lets
+    // Cannikin re-solve §4.5 at the event's offset instead of bridging
+    // pro rata to the boundary.  The legacy run is the ckpt_period = 0
+    // default of the very same spec.
+    let legacy_spot = ExperimentSpec {
+        name: "spot-legacy".to_string(),
+        trace: Some("spot".to_string()),
+        max_epochs: 20_000,
+        ..ExperimentSpec::default()
+    };
+    let r_legacy = run_spec(&legacy_spot, &reg)?;
+    let ckpt_spot = ExperimentSpec {
+        name: "spot-checkpointed".to_string(),
+        ckpt_period: r_legacy.rows.last().map(|row| row.wall_secs / 25.0).unwrap_or(0.0),
+        ckpt_cost: 3.0,
+        replan: ReplanTiming::Immediate,
+        ..legacy_spot.clone()
+    };
+    let r_ckpt = run_spec(&ckpt_spot, &reg)?;
+    println!("\ncheckpointed spot (period {:.0}s, 3s/write):", ckpt_spot.ckpt_period);
+    println!(
+        "  legacy: wasted {:.1}s (in-flight shards only), 0 checkpoints\n  ckpt:   wasted \
+         {:.1}s (rollbacks), {} checkpoints ({:.1}s writes), {} immediate replan(s)",
+        r_legacy.wasted_work_secs,
+        r_ckpt.wasted_work_secs,
+        r_ckpt.checkpoints_taken,
+        r_ckpt.checkpoint_overhead_secs,
+        r_ckpt.replans_immediate,
+    );
     Ok(())
 }

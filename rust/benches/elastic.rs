@@ -8,7 +8,9 @@
 use cannikin::api::{self, BuildOptions, RunReport, SystemRegistry};
 use cannikin::benchkit::{report, Bencher, Table};
 use cannikin::cluster;
-use cannikin::elastic::{self, DetectionMode, ScenarioConfig};
+use cannikin::elastic::{
+    self, CheckpointPolicy, DetectionMode, ReplanTiming, ScenarioConfig,
+};
 use cannikin::simulator::workload;
 
 fn main() {
@@ -72,8 +74,16 @@ fn main() {
     }
 
     // ---- straggler detection: oracle replay vs observation-driven
-    // (hidden events + StragglerDetector) vs fully hidden (ablation floor)
+    // (hidden events + StragglerDetector) vs fully hidden (ablation
+    // floor), run under a finite checkpoint period so the wasted-work /
+    // checkpoint-overhead trade-off shows up next to the detection stats
     let s_trace = elastic::straggler_drift(&c, cfg.max_epochs, cfg.seed);
+    let ckpt_period = r_warm
+        .rows
+        .last()
+        .map(|row| row.wall_secs / 50.0)
+        .unwrap_or(0.0);
+    let ckpt = CheckpointPolicy { period_secs: ckpt_period, write_cost_secs: 2.0 };
     let mut dtbl = Table::new(&[
         "detection mode",
         "epochs-to-target",
@@ -81,10 +91,12 @@ fn main() {
         "slowdowns (false)",
         "mean lat (epochs)",
         "missed",
+        "wasted (s)",
+        "ckpt ovh (s)",
     ]);
     for mode in [DetectionMode::Oracle, DetectionMode::Observed, DetectionMode::Off] {
         let mut sys = reg.build("cannikin", &c, &w, &BuildOptions::default()).unwrap();
-        let cfg2 = ScenarioConfig { detect: mode, ..cfg };
+        let cfg2 = ScenarioConfig { detect: mode, ckpt, ..cfg };
         let r = api::run(&c, &w, &s_trace, sys.as_mut(), &cfg2);
         let (slow, lat, missed) = match &r.detection {
             Some(d) => (
@@ -101,9 +113,40 @@ fn main() {
             slow,
             lat,
             missed,
+            format!("{:.1}", r.wasted_work_secs),
+            format!("{:.1}", r.checkpoint_overhead_secs),
         ]);
     }
     dtbl.print("Straggler drift: oracle vs observation-driven detection (cifar10, cluster A)");
+
+    // ---- checkpoint-interval × replan-timing: the spot preset's abrupt
+    // mid-epoch preemptions under a finite checkpoint period, bridged to
+    // the boundary (legacy) vs re-solved immediately at the event offset
+    let mut ctbl = Table::new(&[
+        "replan timing",
+        "epochs-to-target",
+        "time-to-target (sim s)",
+        "wasted (s)",
+        "ckpt ovh (s)",
+        "immediate replans",
+    ]);
+    for timing in [ReplanTiming::Boundary, ReplanTiming::Immediate] {
+        let mut sys = reg.build("cannikin", &c, &w, &BuildOptions::default()).unwrap();
+        let cfg2 = ScenarioConfig { ckpt, replan: timing, ..cfg };
+        let r = api::run(&c, &w, &trace, sys.as_mut(), &cfg2);
+        ctbl.row(vec![
+            timing.name().to_string(),
+            r.epochs_to_target().map(|e| e.to_string()).unwrap_or_else(|| "-".into()),
+            r.time_to_target.map(|t| format!("{t:.0}")).unwrap_or_else(|| "-".into()),
+            format!("{:.1}", r.wasted_work_secs),
+            format!("{:.1}", r.checkpoint_overhead_secs),
+            r.replans_immediate.to_string(),
+        ]);
+    }
+    ctbl.print(&format!(
+        "Spot churn under checkpoint period {ckpt_period:.0}s (write cost 2s): \
+         boundary vs immediate re-planning"
+    ));
 
     // ---- membership inference: the spot preset's mid-epoch preemptions
     // under Observed are never announced — the missing-heartbeat rule

@@ -22,14 +22,16 @@
 //!   in once and every driver picks it up.
 //! * [`ExperimentSpec`] — a declarative description of one run (cluster +
 //!   workload + system + trace + detection mode + policy + seed +
-//!   horizon) that round-trips JSON via `util::json`.  `cannikin run
-//!   spec.json` executes one, `cannikin compare spec.json --systems …`
-//!   executes a batch of them over a system list.
+//!   horizon + checkpoint period/cost + replan timing) that round-trips
+//!   JSON via `util::json`.  `cannikin run spec.json` executes one,
+//!   `cannikin compare spec.json --systems …` executes a batch of them
+//!   over a system list.
 //! * [`RunReport`] — the one machine-readable result (epoch rows, time to
 //!   target, event/detection accounting — effective and no-op events
-//!   counted apart, mid-epoch events per row, wasted re-dispatch seconds)
-//!   with lossless JSON serialization; `--json` on `sim` / `elastic` /
-//!   `run` emits it, and `cannikin report` parses it back.
+//!   counted apart, mid-epoch events per row, wasted re-dispatch /
+//!   rollback seconds, checkpoint writes and their cost, replans
+//!   delivered) with lossless JSON serialization; `--json` on `sim` /
+//!   `elastic` / `run` emits it, and `cannikin report` parses it back.
 //!
 //! Execution itself is a single path: [`run`] (=
 //! [`crate::elastic::run_scenario`]) drives any [`TrainingSystem`]
@@ -74,6 +76,18 @@ pub trait TrainingSystem {
 
     /// Decide the next epoch's configuration.  `phi` is the current
     /// gradient noise scale (systems that don't adapt ignore it).
+    ///
+    /// Under [`crate::elastic::ReplanTiming::Immediate`] the driver may
+    /// call this a **second time within the same epoch** — right after a
+    /// mid-epoch membership change was delivered through
+    /// [`on_cluster_change`](TrainingSystem::on_cluster_change) — to
+    /// obtain a fresh plan for the remainder of the epoch.  Systems that
+    /// key internal schedules on *call counts* rather than the `epoch`
+    /// argument (e.g. a bootstrap ramp) will see that extra call advance
+    /// their schedule; that is the intended semantics of an immediate
+    /// re-solve (the system is genuinely asked for a new configuration),
+    /// but it means epoch-indexed trajectories are not comparable
+    /// call-for-call across the two replan timings.
     fn plan_epoch(&mut self, epoch: usize, phi: f64) -> Plan;
 
     /// Feed back per-node measurements and the observed batch time.

@@ -67,8 +67,24 @@ pub struct RunReport {
     /// cluster) — skipped, never fatal
     pub events_skipped: usize,
     /// seconds charged to the simulated clock with zero progress: work
-    /// lost to abrupt mid-epoch departures and re-processed by survivors
+    /// lost to abrupt departures and re-processed by survivors.  Under
+    /// the legacy (implicit boundary checkpoint) model this is the
+    /// victim's in-flight shard only; under a finite checkpoint period
+    /// it is everything since the last checkpoint, across epoch segments
     pub wasted_work_secs: f64,
+    /// total checkpoint write cost charged to the clock (zero when the
+    /// checkpoint period is 0 — the legacy free-boundary-checkpoint mode)
+    pub checkpoint_overhead_secs: f64,
+    /// checkpoints written during the run
+    pub checkpoints_taken: usize,
+    /// membership-change warm-replans delivered to the system (each
+    /// visible removal/join notification; a detector-materialized
+    /// preemption counts exactly once — the next boundary never
+    /// re-delivers it)
+    pub replans: usize,
+    /// mid-epoch fresh plans requested under `ReplanTiming::Immediate`
+    /// (always zero under the legacy `Boundary` bridging)
+    pub replans_immediate: usize,
     pub bootstrap_epochs: usize,
     pub final_n: usize,
     /// detection accounting (Some iff a detector ran)
@@ -95,7 +111,8 @@ impl RunReport {
         format!(
             "{} on {}/{} trace {:?} [detect={}]: {} epochs, {outcome}; \
              {} events applied ({} no-op, {} hidden, {} skipped), \
-             {:.1}s wasted, final n={}, bootstrap epochs {}",
+             {:.1}s wasted, {} checkpoint(s) ({:.1}s writes), \
+             {} replan(s) ({} immediate), final n={}, bootstrap epochs {}",
             self.system,
             self.cluster,
             self.workload,
@@ -107,6 +124,10 @@ impl RunReport {
             self.events_hidden,
             self.events_skipped,
             self.wasted_work_secs,
+            self.checkpoints_taken,
+            self.checkpoint_overhead_secs,
+            self.replans,
+            self.replans_immediate,
             self.final_n,
             self.bootstrap_epochs,
         )
@@ -133,6 +154,10 @@ impl RunReport {
             ("events_hidden", Json::Num(self.events_hidden as f64)),
             ("events_skipped", Json::Num(self.events_skipped as f64)),
             ("wasted_work_secs", Json::Num(self.wasted_work_secs)),
+            ("checkpoint_overhead_secs", Json::Num(self.checkpoint_overhead_secs)),
+            ("checkpoints_taken", Json::Num(self.checkpoints_taken as f64)),
+            ("replans", Json::Num(self.replans as f64)),
+            ("replans_immediate", Json::Num(self.replans_immediate as f64)),
             ("bootstrap_epochs", Json::Num(self.bootstrap_epochs as f64)),
             ("final_n", Json::Num(self.final_n as f64)),
             (
@@ -188,6 +213,15 @@ impl RunReport {
                 None | Some(Json::Null) => 0.0,
                 Some(v) => v.as_f64()?,
             },
+            // checkpoint + replan-timing fields arrived with the
+            // checkpoint-interval release: absent in older report files
+            checkpoint_overhead_secs: match j.get("checkpoint_overhead_secs") {
+                None | Some(Json::Null) => 0.0,
+                Some(v) => v.as_f64()?,
+            },
+            checkpoints_taken: opt_usize("checkpoints_taken")?,
+            replans: opt_usize("replans")?,
+            replans_immediate: opt_usize("replans_immediate")?,
             bootstrap_epochs: j.req("bootstrap_epochs")?.as_usize()?,
             final_n: j.req("final_n")?.as_usize()?,
             detection,
@@ -329,6 +363,10 @@ mod tests {
             events_hidden: 1,
             events_skipped: 0,
             wasted_work_secs: 17.25000000000125,
+            checkpoint_overhead_secs: 12.5,
+            checkpoints_taken: 5,
+            replans: 3,
+            replans_immediate: 2,
             bootstrap_epochs: 2,
             final_n: 2,
             detection: Some(DetectionStats {
@@ -394,6 +432,11 @@ mod tests {
         assert_eq!(r.events_noop, 0);
         assert_eq!(r.wasted_work_secs, 0.0);
         assert_eq!(r.rows[0].mid_epoch_events, 0);
+        // checkpoint-era fields default to the legacy semantics too
+        assert_eq!(r.checkpoint_overhead_secs, 0.0);
+        assert_eq!(r.checkpoints_taken, 0);
+        assert_eq!(r.replans, 0);
+        assert_eq!(r.replans_immediate, 0);
         let d = r.detection.unwrap();
         assert_eq!(d.inferred_preempts, 0);
         assert_eq!(d.false_preempts, 0);

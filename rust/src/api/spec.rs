@@ -13,8 +13,13 @@
 //! ```json
 //! { "name": "smoke", "cluster": "a", "workload": "cifar10",
 //!   "system": "cannikin", "trace": "spot", "detect": "observed",
-//!   "policy": "adaptive", "seed": 7, "max_epochs": 400, "reps": 3 }
+//!   "policy": "adaptive", "seed": 7, "max_epochs": 400, "reps": 3,
+//!   "ckpt_period": 120, "ckpt_cost": 5, "replan": "immediate" }
 //! ```
+//!
+//! The checkpoint block (`ckpt_period` / `ckpt_cost` / `replan`) is
+//! optional; a spec without it keeps the legacy semantics (free implicit
+//! boundary checkpoints, pro-rata bridging to the next boundary).
 
 use anyhow::{anyhow, bail, Result};
 
@@ -22,7 +27,9 @@ use crate::api::registry::{BuildOptions, SystemRegistry};
 use crate::api::report::RunReport;
 use crate::cluster::{self, ClusterSpec};
 use crate::coordinator::planner::BatchPolicy;
-use crate::elastic::{self, ChurnTrace, DetectionMode, ScenarioConfig};
+use crate::elastic::{
+    self, CheckpointPolicy, ChurnTrace, DetectionMode, ReplanTiming, ScenarioConfig,
+};
 use crate::simulator::{workload, Workload};
 use crate::util::json::Json;
 use crate::util::text::suggest;
@@ -51,6 +58,14 @@ pub struct ExperimentSpec {
     pub max_epochs: usize,
     /// simulated batches averaged per epoch
     pub reps: usize,
+    /// checkpoint period in active-training seconds (`0` = legacy free
+    /// implicit boundary checkpoints; see `elastic::checkpoint`)
+    pub ckpt_period: f64,
+    /// simulated seconds one checkpoint write costs
+    pub ckpt_cost: f64,
+    /// when a mid-epoch membership change re-solves §4.5
+    /// (`"boundary"` — legacy pro-rata bridging — or `"immediate"`)
+    pub replan: ReplanTiming,
 }
 
 impl Default for ExperimentSpec {
@@ -66,6 +81,9 @@ impl Default for ExperimentSpec {
             seed: 7,
             max_epochs: 4000,
             reps: 3,
+            ckpt_period: 0.0,
+            ckpt_cost: 0.0,
+            replan: ReplanTiming::Boundary,
         }
     }
 }
@@ -92,6 +110,9 @@ impl ExperimentSpec {
             ("seed", Json::Num(self.seed as f64)),
             ("max_epochs", Json::Num(self.max_epochs as f64)),
             ("reps", Json::Num(self.reps as f64)),
+            ("ckpt_period", Json::Num(self.ckpt_period)),
+            ("ckpt_cost", Json::Num(self.ckpt_cost)),
+            ("replan", Json::Str(self.replan.name().to_string())),
         ])
     }
 
@@ -101,9 +122,9 @@ impl ExperimentSpec {
     /// `"max_epoch"` must not silently run the default horizon (the same
     /// failure mode the CLI's flag validation exists to prevent).
     pub fn from_json(j: &Json) -> Result<ExperimentSpec> {
-        const KEYS: [&str; 10] = [
+        const KEYS: [&str; 13] = [
             "name", "cluster", "workload", "system", "trace", "detect", "policy", "seed",
-            "max_epochs", "reps",
+            "max_epochs", "reps", "ckpt_period", "ckpt_cost", "replan",
         ];
         for key in j.as_obj()?.keys() {
             if !KEYS.contains(&key.as_str()) {
@@ -131,6 +152,11 @@ impl ExperimentSpec {
             Some(Json::Num(_)) => BatchPolicy::Fixed(j.req("policy")?.as_u64()?),
             Some(other) => bail!("bad policy {other:?} (\"adaptive\" or a fixed total batch)"),
         };
+        let replan = match opt_str("replan")? {
+            Some(name) => ReplanTiming::by_name(&name)
+                .ok_or_else(|| anyhow!("unknown replan timing {name:?} (boundary|immediate)"))?,
+            None => d.replan,
+        };
         let spec = ExperimentSpec {
             name: opt_str("name")?.unwrap_or(d.name),
             cluster: j.req("cluster")?.as_str()?.to_string(),
@@ -146,6 +172,17 @@ impl ExperimentSpec {
                 .transpose()?
                 .unwrap_or(d.max_epochs),
             reps: j.get("reps").map(|s| s.as_usize()).transpose()?.unwrap_or(d.reps),
+            ckpt_period: j
+                .get("ckpt_period")
+                .map(|v| v.as_f64())
+                .transpose()?
+                .unwrap_or(d.ckpt_period),
+            ckpt_cost: j
+                .get("ckpt_cost")
+                .map(|v| v.as_f64())
+                .transpose()?
+                .unwrap_or(d.ckpt_cost),
+            replan,
         };
         if spec.max_epochs == 0 {
             bail!("max_epochs must be >= 1");
@@ -156,6 +193,9 @@ impl ExperimentSpec {
         if spec.policy == BatchPolicy::Fixed(0) {
             bail!("policy: a fixed total batch must be >= 1");
         }
+        // domain-check the checkpoint knobs through the one validating
+        // constructor (the CLI path uses the same one)
+        CheckpointPolicy::new(spec.ckpt_period, spec.ckpt_cost)?;
         Ok(spec)
     }
 
@@ -200,6 +240,11 @@ impl ExperimentSpec {
             seed: self.seed,
             reps: self.reps,
             detect: self.detect,
+            ckpt: CheckpointPolicy {
+                period_secs: self.ckpt_period,
+                write_cost_secs: self.ckpt_cost,
+            },
+            replan: self.replan,
             ..Default::default()
         }
     }
@@ -265,6 +310,9 @@ mod tests {
             seed: 123_456_789,
             max_epochs: 777,
             reps: 5,
+            ckpt_period: 123.456,
+            ckpt_cost: 7.5,
+            replan: ReplanTiming::Immediate,
         };
         let back = ExperimentSpec::from_json(&Json::parse(
             &spec.to_json().to_string_pretty(),
@@ -284,6 +332,10 @@ mod tests {
         assert_eq!(spec.policy, d.policy);
         assert_eq!(spec.seed, d.seed);
         assert_eq!(spec.max_epochs, d.max_epochs);
+        // a spec without a checkpoint block keeps the legacy semantics
+        assert_eq!(spec.ckpt_period, 0.0);
+        assert_eq!(spec.ckpt_cost, 0.0);
+        assert_eq!(spec.replan, ReplanTiming::Boundary);
     }
 
     #[test]
@@ -294,6 +346,9 @@ mod tests {
             r#"{"cluster":"a","workload":"cifar10","system":"ddp","policy":true}"#,
             r#"{"cluster":"a","workload":"cifar10","system":"ddp","policy":0}"#,
             r#"{"cluster":"a","workload":"cifar10","system":"ddp","max_epochs":0}"#,
+            r#"{"cluster":"a","workload":"cifar10","system":"ddp","ckpt_period":-5}"#,
+            r#"{"cluster":"a","workload":"cifar10","system":"ddp","ckpt_cost":-1}"#,
+            r#"{"cluster":"a","workload":"cifar10","system":"ddp","replan":"eventually"}"#,
         ] {
             assert!(ExperimentSpec::from_json(&Json::parse(src).unwrap()).is_err(), "{src}");
         }

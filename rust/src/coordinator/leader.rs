@@ -24,7 +24,8 @@ use crate::coordinator::dataloader::HeteroDataLoader;
 use crate::coordinator::planner::BatchPolicy;
 use crate::data::{synth_corpus, Sampler};
 use crate::elastic::{
-    ChurnTrace, DetectionMode, DetectionStats, DetectorConfig, ElasticDriver, TimedEvent,
+    CheckpointClock, CheckpointPolicy, ChurnTrace, DetectionMode, DetectionStats, DetectorConfig,
+    ElasticDriver, ReplanTiming, TimedEvent,
 };
 use crate::gns::{estimate_round, GnsTracker};
 use crate::gradsync::{ring_all_reduce, sq_norm, Buckets};
@@ -57,6 +58,13 @@ pub struct TrainConfig {
     /// (`Oracle`), recovered from the simulated-clock timings by the
     /// straggler detector (`Observed`), or concealed (`Off`)
     pub detect: DetectionMode,
+    /// checkpoint-interval model on the simulated cluster clock (period 0
+    /// = legacy free boundary checkpoints) — shared bookkeeping with the
+    /// scenario runner via [`CheckpointClock`]
+    pub ckpt: CheckpointPolicy,
+    /// when a mid-epoch membership change re-solves the plan (legacy:
+    /// bridged to the next boundary at step granularity)
+    pub replan: ReplanTiming,
     /// JSONL step/epoch log (optional)
     pub log_path: Option<PathBuf>,
     /// print per-epoch lines
@@ -78,6 +86,8 @@ impl TrainConfig {
             system: "cannikin".to_string(),
             trace: None,
             detect: DetectionMode::Oracle,
+            ckpt: CheckpointPolicy::default(),
+            replan: ReplanTiming::Boundary,
             log_path: None,
             verbose: false,
         }
@@ -126,6 +136,12 @@ pub struct TrainReport {
     pub real_secs: f64,
     /// straggler-detection accounting (Some iff `detect` was `Observed`)
     pub detection: Option<DetectionStats>,
+    /// simulated seconds lost to abrupt-preemption rollbacks (only
+    /// nonzero under a finite checkpoint period)
+    pub wasted_work_secs: f64,
+    /// simulated seconds spent writing checkpoints
+    pub checkpoint_overhead_secs: f64,
+    pub checkpoints_taken: usize,
 }
 
 /// Run the full training loop.
@@ -185,6 +201,11 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let mut epochs = Vec::new();
     let mut loss_curve = Vec::new();
     let mut sim_wall = 0.0;
+    // checkpoint schedule on the active (batch-processing) portion of the
+    // simulated clock — same bookkeeping core as the scenario runner
+    let mut ckpt = CheckpointClock::new(cfg.ckpt);
+    let mut ckpt_active = 0.0f64;
+    let mut wasted_total = 0.0f64;
 
     for epoch in 0..cfg.epochs {
         // ---- elastic: the leader rescales at the epoch boundary — apply
@@ -194,7 +215,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         // ratios re-weight below simply because the plan's worker count
         // changed).  Hidden degradation events mutate the simulated clock
         // but not the planner; the detector recovers them below.
-        {
+        let boundary_preempted = {
             let out = driver.boundary(epoch, planner.as_mut());
             if let Some(s) = out.new_sim {
                 sim = s;
@@ -208,7 +229,8 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                     println!("elastic: skipped {} invalid event(s) at epoch {epoch}", out.skipped);
                 }
             }
-        }
+            out.changed.iter().any(|&(kind, _, _)| kind == "preempt")
+        };
         let phi = gns.b_noise().unwrap_or(cfg.workload.phi0);
         let mut plan = planner.plan_epoch(epoch, phi);
         // mid-epoch events land at step granularity on this path: an event
@@ -224,6 +246,18 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
 
         let mut epoch_loss = 0.0f64;
         let mut epoch_sim_t = 0.0f64;
+        // checkpoint write cost + rollback charges landing in this epoch
+        // (added to the simulated wall clock, not to the batch times);
+        // rollback_once dedups simultaneous restores, exactly like the
+        // scenario runner — the rule lives on the shared clock
+        let mut epoch_extra = 0.0f64;
+        if boundary_preempted {
+            // a boundary is not a free checkpoint either: an abrupt
+            // boundary Preempt rolls back to the last checkpoint
+            let rollback = ckpt.rollback_once(ckpt_active);
+            wasted_total += rollback;
+            epoch_extra += rollback;
+        }
         for step in 0..cfg.steps_per_epoch {
             while next_mid < mid.len() && mid[next_mid].0 <= step {
                 let te = &mid[next_mid].1;
@@ -235,19 +269,58 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 if !eff.effective {
                     continue;
                 }
+                if eff.abrupt {
+                    // finite checkpoint period: the job rolls back to the
+                    // last checkpoint and redoes the interval (zero under
+                    // the legacy free-boundary-checkpoint semantics)
+                    let rollback = ckpt.rollback_once(ckpt_active);
+                    wasted_total += rollback;
+                    epoch_extra += rollback;
+                }
+                let mut want_replan = false;
                 if let Some(a) = eff.removed {
-                    // visible departure: drop the slot, survivors absorb
-                    // its allocation until the next boundary re-plan
+                    // visible departure: drop the slot, then either let
+                    // the survivors absorb its allocation until the next
+                    // boundary (legacy) or re-solve the plan right here
                     let gone = plan.local.remove(a);
-                    redispatch_units(&mut plan.local, gone, |i| !driver.is_ghost(i));
+                    if cfg.replan == ReplanTiming::Immediate {
+                        want_replan = true;
+                    } else {
+                        redispatch_units(&mut plan.local, gone, |i| !driver.is_ghost(i));
+                    }
                 } else if let Some(a) = eff.ghosted {
                     // silent death (Observed): the slot stays but computes
                     // nothing; its in-flight micro-batches re-dispatch
+                    // (not even Immediate timing can replan — the planner
+                    // does not know yet)
                     let gone = std::mem::take(&mut plan.local[a]);
                     redispatch_units(&mut plan.local, gone, |i| i != a && !driver.is_ghost(i));
                 }
-                for _ in 0..eff.added {
-                    plan.local.push(0);
+                if eff.added > 0 {
+                    if cfg.replan == ReplanTiming::Immediate {
+                        want_replan = true;
+                    } else {
+                        for _ in 0..eff.added {
+                            plan.local.push(0);
+                        }
+                    }
+                }
+                if want_replan {
+                    // the planner already warm-replanned its models in
+                    // on_cluster_change; ask it for a fresh plan for the
+                    // remaining steps instead of bridging pro rata
+                    let phi_now = gns.b_noise().unwrap_or(cfg.workload.phi0);
+                    plan = planner.plan_epoch(epoch, phi_now);
+                    // the planner cannot know about ghosts: their shares
+                    // re-dispatch at the runtime level
+                    for i in 0..plan.local.len() {
+                        if driver.is_ghost(i) {
+                            let orphaned = std::mem::take(&mut plan.local[i]);
+                            redispatch_units(&mut plan.local, orphaned, |j| {
+                                j != i && !driver.is_ghost(j)
+                            });
+                        }
+                    }
                 }
                 if cfg.verbose {
                     println!(
@@ -353,6 +426,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             planner.observe_epoch(&obs, sim_t_batch);
             driver.observe(&obs);
             epoch_sim_t += sim_t_batch;
+            // the checkpoint schedule advances with the active clock;
+            // fired writes charge the wall clock, not the batch times
+            epoch_extra += ckpt.advance(ckpt_active, ckpt_active + sim_t_batch);
+            ckpt_active += sim_t_batch;
 
             loss_curve.push(step_loss as f32);
             epoch_loss += step_loss;
@@ -369,13 +446,24 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         }
 
         // events mapped past the last step land at the epoch's end; the
-        // steps are done, so there is nothing left to re-dispatch
+        // steps are done, so there is nothing left to re-dispatch (and
+        // nothing for Immediate timing to re-solve — the next boundary
+        // plan is the immediate re-solve), but an abrupt departure still
+        // rolls back to the last checkpoint
         while next_mid < mid.len() {
             let te = &mid[next_mid].1;
             next_mid += 1;
             let eff = driver.apply_mid_epoch(epoch, te, planner.as_mut());
             if let Some(s) = eff.new_sim {
                 sim = s;
+            }
+            if !eff.effective {
+                continue;
+            }
+            if eff.abrupt {
+                let rollback = ckpt.rollback_once(ckpt_active);
+                wasted_total += rollback;
+                epoch_extra += rollback;
             }
             if let Some(a) = eff.removed {
                 plan.local.remove(a);
@@ -400,7 +488,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         let (etoks, ewts) = loader.eval_batch(biggest_bucket);
         let eval_loss = rt.eval_step(biggest_bucket, &params, &etoks, &ewts)?;
 
-        sim_wall += epoch_sim_t;
+        sim_wall += epoch_sim_t + epoch_extra;
         let total: u64 = plan.local.iter().sum();
         let report = EpochReport {
             epoch,
@@ -446,6 +534,9 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         loss_curve,
         real_secs: t_start.elapsed().as_secs_f64(),
         detection: driver.finish(),
+        wasted_work_secs: wasted_total,
+        checkpoint_overhead_secs: ckpt.overhead_secs,
+        checkpoints_taken: ckpt.taken,
     })
 }
 

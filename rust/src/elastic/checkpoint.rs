@@ -1,0 +1,276 @@
+//! Checkpoint-interval modeling (Varuna-style checkpoint-period
+//! accounting): a configurable checkpoint period makes wasted work grow
+//! with *time since the last checkpoint* instead of treating every epoch
+//! boundary as a free implicit checkpoint.
+//!
+//! **Semantics.**  A [`CheckpointPolicy`] with `period_secs > 0` schedules
+//! a checkpoint at every multiple of the period on the **active-training
+//! clock** — the cumulative simulated seconds spent on productive batch
+//! processing, excluding checkpoint writes themselves and rollback/redo
+//! time (so a checkpoint is never scheduled *inside* a write or a
+//! rollback; this is the Varuna convention of checkpointing every N
+//! units of work, not of wall time).  Each checkpoint charges
+//! `write_cost_secs` to the epoch's wall clock with zero convergence
+//! progress.  Epoch boundaries are **not** checkpoints under a finite
+//! period: gradient syncs make the *model replicas* agree, but nothing
+//! was made durable — an abrupt [`Preempt`](super::ClusterEvent::Preempt)
+//! therefore loses **all** work since the last checkpoint, across epoch
+//! segments, and the rollback is charged as
+//! [`RunReport::wasted_work_secs`](crate::api::RunReport::wasted_work_secs)
+//! (conservatively at the pre-event processing rate: the survivors redo
+//! the lost interval).
+//!
+//! `period_secs == 0` (the default) is the **legacy mode**: checkpointing
+//! is free and implicit at every epoch boundary, a mid-epoch preempt
+//! loses only the victim's in-flight shard, and every run is bit-for-bit
+//! identical to the pre-checkpoint-modeling driver — the property tests
+//! in `rust/tests/prop_invariants.rs` lock that down.
+//!
+//! The [`CheckpointClock`] below is the one bookkeeping core shared by
+//! the scenario runner and the real-numerics leader, so the two paths'
+//! checkpoint timelines can never drift.  The period/waste trade-off it
+//! makes measurable: a short period pays
+//! [`RunReport::checkpoint_overhead_secs`](crate::api::RunReport::checkpoint_overhead_secs)
+//! often, a long period pays a large rollback on every preemption —
+//! `benches/elastic.rs` prints both columns side by side.
+
+use anyhow::{bail, Result};
+
+/// When (and at what cost) training state is made durable.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CheckpointPolicy {
+    /// active-training seconds between checkpoints; `0.0` disables the
+    /// model entirely (legacy semantics: every epoch boundary is a free
+    /// implicit checkpoint)
+    pub period_secs: f64,
+    /// simulated seconds one checkpoint write costs (charged to the epoch
+    /// wall clock with zero progress)
+    pub write_cost_secs: f64,
+}
+
+impl Default for CheckpointPolicy {
+    fn default() -> Self {
+        CheckpointPolicy { period_secs: 0.0, write_cost_secs: 0.0 }
+    }
+}
+
+impl CheckpointPolicy {
+    /// Validating constructor (the CLI / spec entry point): both knobs
+    /// must be finite and non-negative.
+    pub fn new(period_secs: f64, write_cost_secs: f64) -> Result<Self> {
+        if !period_secs.is_finite() || period_secs < 0.0 {
+            bail!("checkpoint period {period_secs} must be a finite non-negative number");
+        }
+        if !write_cost_secs.is_finite() || write_cost_secs < 0.0 {
+            bail!("checkpoint write cost {write_cost_secs} must be a finite non-negative number");
+        }
+        Ok(CheckpointPolicy { period_secs, write_cost_secs })
+    }
+
+    /// Is checkpoint-interval modeling active (finite period)?
+    pub fn enabled(&self) -> bool {
+        self.period_secs > 0.0
+    }
+}
+
+/// The checkpoint timeline of one run: advances along the active-training
+/// clock, fires checkpoints at multiples of the period, and answers "how
+/// much work would a rollback lose right now?".
+#[derive(Clone, Copy, Debug)]
+pub struct CheckpointClock {
+    policy: CheckpointPolicy,
+    /// active-clock time of the last checkpoint (the run's initial state
+    /// is durable by definition: time 0 is a checkpoint)
+    last: f64,
+    /// active-clock instant of the last rollback charged (simultaneous
+    /// abrupt departures restore once; the active clock is monotone, so
+    /// no reset is ever needed)
+    rolled_back_at: Option<f64>,
+    /// checkpoints written so far
+    pub taken: usize,
+    /// total write cost charged so far
+    pub overhead_secs: f64,
+}
+
+impl CheckpointClock {
+    pub fn new(policy: CheckpointPolicy) -> Self {
+        CheckpointClock { policy, last: 0.0, rolled_back_at: None, taken: 0, overhead_secs: 0.0 }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.policy.enabled()
+    }
+
+    /// Advance the active-training clock from `t0` to `t1`, firing every
+    /// checkpoint scheduled in `(t0, t1]` (multiples of the period).
+    /// Returns the write-cost seconds the caller must charge to the
+    /// current epoch's wall clock.  A no-op when disabled.
+    pub fn advance(&mut self, t0: f64, t1: f64) -> f64 {
+        if !self.enabled() || t1 <= t0 {
+            return 0.0;
+        }
+        let p = self.policy.period_secs;
+        let k0 = (t0 / p).floor();
+        let k1 = (t1 / p).floor();
+        if k1 <= k0 {
+            return 0.0;
+        }
+        let fires = (k1 - k0) as usize;
+        self.last = k1 * p;
+        self.taken += fires;
+        let cost = fires as f64 * self.policy.write_cost_secs;
+        self.overhead_secs += cost;
+        cost
+    }
+
+    /// Seconds of work an abrupt departure at active-clock time `t` loses
+    /// (everything since the last checkpoint — the rollback+redo charge).
+    /// Zero when disabled: the legacy in-flight-shard accounting applies
+    /// instead.
+    pub fn rollback_charge(&self, t: f64) -> f64 {
+        if self.enabled() {
+            (t - self.last).max(0.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// [`Self::rollback_charge`], charged **at most once per instant**:
+    /// simultaneous abrupt departures restore from the same checkpoint
+    /// with one restore, so a repeat call at the same active-clock `t`
+    /// charges nothing.  The dedup state lives here — the one rule both
+    /// driver paths share, so their rollback bookkeeping cannot drift.
+    pub fn rollback_once(&mut self, t: f64) -> f64 {
+        if self.rolled_back_at == Some(t) {
+            return 0.0;
+        }
+        self.rolled_back_at = Some(t);
+        self.rollback_charge(t)
+    }
+}
+
+/// When the driver lets the system re-solve §4.5 after a mid-epoch
+/// membership change.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplanTiming {
+    /// legacy: bridge to the next epoch boundary with a pro-rata
+    /// re-dispatch of the departed allocation; the system re-plans
+    /// properly only at its next `plan_epoch`
+    Boundary,
+    /// re-solve immediately at the event's in-epoch offset: the driver
+    /// requests a fresh plan (a second `plan_epoch` call within the same
+    /// epoch — systems with call-count-keyed schedules see it advance
+    /// them; see
+    /// [`TrainingSystem::plan_epoch`](crate::api::TrainingSystem::plan_epoch))
+    /// for the remainder of the epoch, closing the stale-plan window the
+    /// wasted-work accounting exposes.  An *unannounced* death (an
+    /// Observed-mode ghost) can never replan early — nobody knows yet;
+    /// it re-plans when the missing-heartbeat rule materializes the
+    /// departure
+    Immediate,
+}
+
+impl Default for ReplanTiming {
+    fn default() -> Self {
+        ReplanTiming::Boundary
+    }
+}
+
+impl ReplanTiming {
+    pub fn by_name(name: &str) -> Option<ReplanTiming> {
+        match name {
+            "boundary" => Some(ReplanTiming::Boundary),
+            "immediate" => Some(ReplanTiming::Immediate),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplanTiming::Boundary => "boundary",
+            ReplanTiming::Immediate => "immediate",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_validates_its_domain() {
+        assert!(CheckpointPolicy::new(0.0, 0.0).is_ok());
+        assert!(CheckpointPolicy::new(120.0, 3.5).is_ok());
+        assert!(CheckpointPolicy::new(-1.0, 0.0).is_err());
+        assert!(CheckpointPolicy::new(10.0, -0.5).is_err());
+        assert!(CheckpointPolicy::new(f64::NAN, 0.0).is_err());
+        assert!(CheckpointPolicy::new(10.0, f64::INFINITY).is_err());
+        assert!(!CheckpointPolicy::default().enabled());
+        assert!(CheckpointPolicy::new(1.0, 0.0).unwrap().enabled());
+    }
+
+    #[test]
+    fn disabled_clock_never_fires_and_never_charges() {
+        let mut c = CheckpointClock::new(CheckpointPolicy::default());
+        assert_eq!(c.advance(0.0, 1e9), 0.0);
+        assert_eq!(c.taken, 0);
+        assert_eq!(c.overhead_secs, 0.0);
+        assert_eq!(c.rollback_charge(1e9), 0.0, "legacy mode charges via the in-flight shard");
+    }
+
+    #[test]
+    fn checkpoints_fire_at_multiples_of_the_period() {
+        let mut c = CheckpointClock::new(CheckpointPolicy::new(10.0, 2.0).unwrap());
+        // no multiple in (0, 9.5]
+        assert_eq!(c.advance(0.0, 9.5), 0.0);
+        assert_eq!(c.taken, 0);
+        // 10 falls in (9.5, 12.0]
+        assert_eq!(c.advance(9.5, 12.0), 2.0);
+        assert_eq!(c.taken, 1);
+        // a long segment crosses several multiples at once
+        assert_eq!(c.advance(12.0, 45.0), 3.0 * 2.0);
+        assert_eq!(c.taken, 4);
+        assert_eq!(c.overhead_secs, 4.0 * 2.0);
+        // an endpoint exactly on a multiple fires it once, not twice
+        assert_eq!(c.advance(45.0, 50.0), 2.0);
+        assert_eq!(c.advance(50.0, 51.0), 0.0);
+        assert_eq!(c.taken, 5);
+    }
+
+    #[test]
+    fn rollback_charge_is_time_since_last_checkpoint_and_stays_below_one_period() {
+        let mut c = CheckpointClock::new(CheckpointPolicy::new(10.0, 0.0).unwrap());
+        // before the first checkpoint the initial state is the restore point
+        assert_eq!(c.rollback_charge(7.0), 7.0);
+        c.advance(0.0, 33.0); // last checkpoint at t=30
+        assert_eq!(c.taken, 3);
+        assert!((c.rollback_charge(33.0) - 3.0).abs() < 1e-12);
+        // the charge can never reach a full period: a multiple would have
+        // fired first
+        for t in [30.0, 34.0, 39.999] {
+            assert!(c.rollback_charge(t) < 10.0, "{t}");
+        }
+        // negative elapsed (rollback exactly at the checkpoint) clamps to 0
+        assert_eq!(c.rollback_charge(29.0), 0.0);
+    }
+
+    #[test]
+    fn rollback_once_charges_a_single_restore_per_instant() {
+        let mut c = CheckpointClock::new(CheckpointPolicy::new(10.0, 0.0).unwrap());
+        assert_eq!(c.rollback_once(7.0), 7.0);
+        assert_eq!(c.rollback_once(7.0), 0.0, "same instant restores once");
+        assert_eq!(c.rollback_once(8.5), 8.5, "a later instant charges again");
+        // disabled clock: never charges
+        let mut off = CheckpointClock::new(CheckpointPolicy::default());
+        assert_eq!(off.rollback_once(1e6), 0.0);
+    }
+
+    #[test]
+    fn replan_timing_names_roundtrip() {
+        for t in [ReplanTiming::Boundary, ReplanTiming::Immediate] {
+            assert_eq!(ReplanTiming::by_name(t.name()), Some(t));
+        }
+        assert_eq!(ReplanTiming::by_name("eventually"), None);
+        assert_eq!(ReplanTiming::default(), ReplanTiming::Boundary);
+    }
+}

@@ -38,6 +38,18 @@
 //!   never announced.  Detection quality (latency per hidden event, false
 //!   positives/alarms, misses, inferred preemptions) is reported in
 //!   [`crate::api::RunReport::detection`].
+//! * [`checkpoint`] — checkpoint-interval modeling.  A
+//!   [`CheckpointPolicy`] with a finite `period_secs` schedules
+//!   checkpoints at multiples of the period on the active-training clock
+//!   (epoch boundaries are **not** free checkpoints any more), charges
+//!   `write_cost_secs` per write, and makes an abrupt `Preempt` lose all
+//!   work since the last checkpoint — across epoch segments — so
+//!   `wasted_work_secs` grows Varuna-style with time-since-checkpoint.
+//!   `period_secs = 0` (the default) reproduces the legacy
+//!   boundary-checkpoint semantics bit-for-bit.  [`ReplanTiming`] selects
+//!   whether a mid-epoch membership change bridges to the boundary with a
+//!   pro-rata re-dispatch (`Boundary`, legacy) or triggers an immediate
+//!   §4.5 re-solve for the remainder of the epoch (`Immediate`).
 //! * [`scenario`] — the [`ElasticDriver`] (event + detection plumbing
 //!   shared by [`run_scenario`] and the real-numerics leader),
 //!   [`run_scenario`] itself (a convergence run over the **segmented
@@ -63,11 +75,13 @@
 //! join that raises the cluster's total memory capacity grows the
 //! goodput candidate grid past the job-start `b_max`.
 
+pub mod checkpoint;
 pub mod detect;
 pub mod events;
 pub mod membership;
 pub mod scenario;
 
+pub use checkpoint::{CheckpointClock, CheckpointPolicy, ReplanTiming};
 pub use detect::{DetectionMode, DetectionStats, DetectorConfig, StragglerDetector};
 pub use events::{
     maintenance_window, preset, spot_instance, straggler_drift, ChurnTrace, ClusterEvent,

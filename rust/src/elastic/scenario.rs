@@ -30,6 +30,38 @@
 //! progress, reported as [`crate::api::RunReport::wasted_work_secs`]
 //! (monotone in how late in the epoch the preemption hits).
 //!
+//! **Checkpoint timeline.**  By default every epoch boundary is a free
+//! implicit checkpoint (the legacy semantics above: only the in-flight
+//! shard of an abrupt departure is ever lost).  A
+//! [`ScenarioConfig::ckpt`] policy with a finite period replaces that
+//! fiction with Varuna-style checkpoint-interval accounting: checkpoints
+//! land at multiples of the period on the **active-training clock** (see
+//! [`super::checkpoint`]), each write charges its cost to the epoch wall
+//! clock with zero progress
+//! ([`crate::api::RunReport::checkpoint_overhead_secs`] /
+//! [`crate::api::RunReport::checkpoints_taken`]), and an abrupt
+//! `Preempt` — mid-epoch *or* at a boundary — rolls the job back to the
+//! last checkpoint: everything since it, across epoch segments, is
+//! re-processed and charged as `wasted_work_secs` (conservatively at the
+//! pre-event rate).  The period/waste trade-off is thereby measurable:
+//! short periods pay write overhead, long periods pay rollbacks.
+//!
+//! **Replan timing.**  [`ScenarioConfig::replan`] selects what happens to
+//! the rest of the epoch after a mid-epoch membership change:
+//! [`ReplanTiming::Boundary`] (legacy) bridges with the pro-rata
+//! re-dispatch described above, leaving the system's stale plan in place
+//! until its next `plan_epoch`; [`ReplanTiming::Immediate`] lets the
+//! system re-solve §4.5 right at the event's `frac` — the driver requests
+//! a fresh plan (the warm-replanned planner solves for the post-event
+//! membership) and runs the remainder of the epoch under it, closing the
+//! stale-plan window.  An *unannounced* death (Observed-mode ghost, below)
+//! can never replan early — nobody knows yet; when the missing-heartbeat
+//! rule materializes the departure at an epoch's end, the very next
+//! boundary plan **is** the immediate re-solve, so exactly one replan is
+//! issued either way ([`crate::api::RunReport::replans`] counts the
+//! membership replans delivered to the system,
+//! [`crate::api::RunReport::replans_immediate`] the mid-epoch fresh plans).
+//!
 //! The [`ElasticDriver`] owns the event/detection plumbing and is shared
 //! with the real-numerics leader, so event semantics and counting can never
 //! drift between the two paths.  Under [`DetectionMode::Observed`] the
@@ -55,6 +87,7 @@ use crate::api::{EpochRow, RunReport, TrainingSystem};
 use crate::baselines::Plan;
 use crate::cluster::{ClusterSpec, DeviceProfile};
 use crate::coordinator::planner::{BatchPolicy, CannikinPlanner};
+use crate::elastic::checkpoint::{CheckpointClock, CheckpointPolicy, ReplanTiming};
 use crate::elastic::detect::{
     DetectionMode, DetectionStats, DetectorConfig, StragglerDetector,
 };
@@ -245,6 +278,11 @@ pub struct ElasticDriver<'a> {
     /// per announced slot: epoch of the not-yet-detected healthy→slowed
     /// transition
     pending: Vec<Option<usize>>,
+    /// membership-change warm-replans delivered to the system (each
+    /// visible removal/join notification — the `on_cluster_change` calls
+    /// whose delta changed the node set; a materialized inferred preempt
+    /// counts once here, and the following boundary never re-delivers it)
+    pub replans: usize,
     /// effective events applied to the cluster (no-ops counted apart)
     pub events_applied: usize,
     /// accepted events that changed nothing (e.g. a replayed `SlowDown`
@@ -277,6 +315,7 @@ impl<'a> ElasticDriver<'a> {
             detector,
             stats: DetectionStats::default(),
             pending: vec![None; base.n()],
+            replans: 0,
             events_applied: 0,
             events_noop: 0,
             events_hidden: 0,
@@ -385,6 +424,7 @@ impl<'a> ElasticDriver<'a> {
         let caps = self.caps(&spec);
         system.on_cluster_change(announced, &spec, &caps);
         if announced.membership_changed() {
+            self.replans += 1;
             // a pending (undetected) slowdown departing with its node can
             // never be detected now: that is a miss, per DetectionStats'
             // contract
@@ -768,6 +808,12 @@ pub struct ScenarioConfig {
     pub detect: DetectionMode,
     /// detector knobs (only read under [`DetectionMode::Observed`])
     pub detector: DetectorConfig,
+    /// checkpoint-interval model (`period_secs = 0` = legacy free
+    /// boundary checkpoints; see [`super::checkpoint`])
+    pub ckpt: CheckpointPolicy,
+    /// when a mid-epoch membership change lets the system re-solve §4.5
+    /// (legacy: at the next boundary, bridged pro rata)
+    pub replan: ReplanTiming,
 }
 
 impl Default for ScenarioConfig {
@@ -778,6 +824,8 @@ impl Default for ScenarioConfig {
             reps: 3,
             detect: DetectionMode::Oracle,
             detector: DetectorConfig::default(),
+            ckpt: CheckpointPolicy::default(),
+            replan: ReplanTiming::Boundary,
         }
     }
 }
@@ -835,6 +883,12 @@ pub fn run_scenario(
 ) -> RunReport {
     let mut driver = ElasticDriver::new(base, w, trace, cfg.detect, cfg.detector, cfg.seed);
     let mut sim = ClusterSim::new(&driver.phys_spec(), w, cfg.seed);
+    // the checkpoint schedule rides on the active-training clock: the
+    // cumulative productive batch-processing seconds, advanced below in
+    // exact agreement with the integrator (convergence::segment_steps)
+    let mut ckpt = CheckpointClock::new(cfg.ckpt);
+    let mut active_clock = 0.0f64;
+    let mut replans_immediate = 0usize;
     // (n_nodes, boundary events, mid-epoch events, detected) per epoch
     let mut side: Vec<(usize, usize, usize, usize)> = Vec::new();
 
@@ -845,18 +899,38 @@ pub fn run_scenario(
         if let Some(s) = out.new_sim {
             sim = s;
         }
+        // under a finite checkpoint period the boundary is NOT a free
+        // checkpoint: an abrupt boundary Preempt rolls the job back to
+        // the last checkpoint (CheckpointClock::rollback_once — one
+        // restore covers every simultaneous departure at an instant)
+        let mut ckpt_wasted = 0.0;
+        if out.changed.iter().any(|&(kind, _, _)| kind == "preempt") {
+            ckpt_wasted += ckpt.rollback_once(active_clock);
+        }
 
         // ---- plan, then split the epoch around any mid-epoch events.
-        // Redistribution conserves the dispatched total, so every segment
-        // runs the plan's total batch.
+        // Under ReplanTiming::Boundary redistribution conserves the
+        // dispatched total, so every segment runs the plan's total batch;
+        // an Immediate re-solve may change the total mid-epoch, and the
+        // post-replan segments carry the fresh plan's total.
         let plan = system.plan_epoch(epoch, phi);
         let mut local = plan.local_f64();
+        let mut cur_batch = plan.total;
         let mut segments: Vec<Segment> = Vec::new();
         let mut cursor = 0.0;
         // samples that must be re-processed with no progress: an abrupt
         // departure takes its sampler cursor with it, so the consumed
-        // `frac` of its shard is conservatively re-dispatched
+        // `frac` of its shard is re-dispatched (the legacy
+        // boundary-checkpoint accounting; a finite checkpoint period
+        // charges the full rollback in seconds via ckpt_wasted instead).
+        // The samples are converted to seconds at the epoch's CLOSING
+        // rate (the final segment's batch/time — i.e. the post-event
+        // configuration that actually re-processes them): the pre-PR
+        // convention under Boundary bridging, and under an Immediate
+        // re-solve the fresh plan's rate, so wasted seconds always price
+        // the redo at the configuration that performs it
         let mut redundant = 0.0;
+        let mut ckpt_cost = 0.0;
         let mut mid_events = 0usize;
         for te in driver.take_mid_epoch(epoch) {
             // an inert event (no-op replay, stale index) must not split
@@ -864,12 +938,16 @@ pub fn run_scenario(
             // run stays bit-identical to one without it
             if driver.peek_effective(&te) && te.frac > cursor {
                 let t = measure(&mut driver, &mut sim, system, &local, cfg.reps);
-                segments.push(Segment {
-                    batch: plan.total,
+                let seg = Segment {
+                    batch: cur_batch,
                     t_batch: t,
                     weight: te.frac - cursor,
                     wasted_secs: 0.0,
-                });
+                };
+                let dur = convergence::segment_steps(w, &seg) * t;
+                ckpt_cost += ckpt.advance(active_clock, active_clock + dur);
+                active_clock += dur;
+                segments.push(seg);
                 cursor = te.frac;
             }
             let eff = driver.apply_mid_epoch(epoch, &te, system);
@@ -881,45 +959,75 @@ pub fn run_scenario(
             }
             mid_events += 1;
             let total: f64 = local.iter().sum();
+            let mut want_replan = false;
             if let Some(a) = eff.removed {
                 // visible departure: the slot leaves the plan; its
-                // allocation re-dispatches to the survivors
+                // allocation re-dispatches to the survivors (Boundary) or
+                // a fresh §4.5 solve replaces the plan outright (Immediate)
                 let gone = local.remove(a);
-                redispatch(&mut local, gone);
-                if eff.abrupt && total > 0.0 {
-                    redundant += te.frac * w.epoch_samples as f64 * gone / total;
+                if eff.abrupt {
+                    if ckpt.enabled() {
+                        ckpt_wasted += ckpt.rollback_once(active_clock);
+                    } else if total > 0.0 {
+                        redundant += te.frac * w.epoch_samples as f64 * gone / total;
+                    }
+                }
+                if cfg.replan == ReplanTiming::Immediate {
+                    want_replan = true;
+                } else {
+                    redispatch(&mut local, gone);
                 }
             }
             if let Some(a) = eff.ghosted {
-                // silent death: the slot stays (the system doesn't know);
-                // the runtime re-dispatches at step time (driver.step)
-                if total > 0.0 {
+                // silent death: the slot stays (the system doesn't know,
+                // so not even Immediate timing can replan yet); the
+                // runtime re-dispatches at step time (driver.step)
+                if ckpt.enabled() {
+                    ckpt_wasted += ckpt.rollback_once(active_clock);
+                } else if total > 0.0 {
                     redundant += te.frac * w.epoch_samples as f64 * local[a] / total;
                 }
             }
-            for _ in 0..eff.added {
-                local.push(0.0);
+            if eff.added > 0 {
+                if cfg.replan == ReplanTiming::Immediate {
+                    want_replan = true;
+                } else {
+                    for _ in 0..eff.added {
+                        local.push(0.0);
+                    }
+                }
+            }
+            if want_replan {
+                // the system already warm-replanned its models in
+                // on_cluster_change; this requests the §4.5 re-solve at
+                // the event's frac (φ moves slowly — the epoch's value is
+                // current enough) and runs the rest of the epoch under it
+                let fresh = system.plan_epoch(epoch, phi);
+                local = fresh.local_f64();
+                cur_batch = fresh.total;
+                replans_immediate += 1;
             }
         }
 
-        // ---- the remainder of the epoch under the (re-dispatched) plan
+        // ---- the remainder of the epoch under the (re-dispatched or
+        // re-solved) plan
         let t = measure(&mut driver, &mut sim, system, &local, cfg.reps);
+        let seg = Segment { batch: cur_batch, t_batch: t, weight: 1.0 - cursor, wasted_secs: 0.0 };
+        let dur = convergence::segment_steps(w, &seg) * t;
+        ckpt_cost += ckpt.advance(active_clock, active_clock + dur);
+        active_clock += dur;
         let wasted =
-            if plan.total > 0 { redundant / plan.total as f64 * t } else { 0.0 };
-        segments.push(Segment {
-            batch: plan.total,
-            t_batch: t,
-            weight: 1.0 - cursor,
-            wasted_secs: wasted,
-        });
+            if cur_batch > 0 { redundant / cur_batch as f64 * t } else { 0.0 };
+        segments.push(Segment { wasted_secs: wasted + ckpt_wasted, ..seg });
 
         // ---- observation-driven detection closes the epoch
         let detected = driver.end_epoch(epoch, system);
         side.push((driver.n(), boundary_events, mid_events, detected));
-        // overhead is charged as 0 so the simulated clock — and therefore
-        // the whole run output — is bit-identical across invocations
-        // (planner wall-time is still accumulated planner-side)
-        EpochExec { segments, overhead: 0.0 }
+        // the only overhead charged to the clock is the (deterministic)
+        // checkpoint write cost, so the run output stays bit-identical
+        // across invocations (planner wall-time is still accumulated
+        // planner-side)
+        EpochExec { segments, overhead: ckpt_cost }
     });
 
     let rows: Vec<EpochRow> = result
@@ -941,6 +1049,7 @@ pub fn run_scenario(
         .collect();
 
     let final_n = driver.n();
+    let replans = driver.replans;
     RunReport {
         system: system.name().to_string(),
         cluster: base.name.clone(),
@@ -956,6 +1065,10 @@ pub fn run_scenario(
         events_hidden: driver.events_hidden,
         events_skipped: driver.events_skipped,
         wasted_work_secs: result.epochs.iter().map(|e| e.wasted_secs).sum(),
+        checkpoint_overhead_secs: ckpt.overhead_secs,
+        checkpoints_taken: ckpt.taken,
+        replans,
+        replans_immediate,
         bootstrap_epochs: system.bootstrap_epochs(),
         final_n,
         detection: driver.finish(),
@@ -1209,6 +1322,134 @@ mod tests {
         assert!(sys.restarts >= 1, "synthesized events must reach the system");
         // detected events show up in the rows
         assert!(r.rows.iter().map(|row| row.detected).sum::<usize>() >= 1);
+    }
+
+    #[test]
+    fn zero_period_checkpoint_policy_is_bit_identical_to_the_default() {
+        // period 0 disables the checkpoint model entirely — even with a
+        // nonzero (inert) write cost the run must equal the legacy one in
+        // every field, and the checkpoint counters must stay at zero
+        let (c, w, trace) = spot_setup();
+        let run = |cfg: &ScenarioConfig| {
+            let mut sys =
+                CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+            run_scenario(&c, &w, &trace, &mut sys, cfg)
+        };
+        let legacy = ScenarioConfig { max_epochs: 20_000, seed: 5, ..Default::default() };
+        let zeroed = ScenarioConfig {
+            ckpt: CheckpointPolicy { period_secs: 0.0, write_cost_secs: 9.0 },
+            ..legacy
+        };
+        let a = run(&legacy);
+        let b = run(&zeroed);
+        assert_eq!(a, b, "period 0 must reproduce the legacy run bit-for-bit");
+        assert_eq!(b.checkpoints_taken, 0);
+        assert_eq!(b.checkpoint_overhead_secs, 0.0);
+    }
+
+    #[test]
+    fn finite_period_charges_writes_and_a_boundary_preempt_rolls_back() {
+        // legacy: a boundary Preempt drains at an implicit free checkpoint
+        // and wastes nothing; under a finite period the boundary is not
+        // durable — everything since the last checkpoint is re-processed
+        let c = cluster::cluster_a();
+        let w = workload::cifar10();
+        let mut trace = ChurnTrace::new("boundary-preempt");
+        trace.push(10, ClusterEvent::Preempt { node: 2 });
+        let run = |cfg: &ScenarioConfig| {
+            let mut sys =
+                CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+            run_scenario(&c, &w, &trace, &mut sys, cfg)
+        };
+        let legacy_cfg = ScenarioConfig { max_epochs: 20_000, seed: 3, ..Default::default() };
+        let legacy = run(&legacy_cfg);
+        assert_eq!(legacy.wasted_work_secs, 0.0, "a boundary preempt is free in legacy mode");
+        let wall = legacy.rows.last().unwrap().wall_secs;
+        let ckpt_cfg = ScenarioConfig {
+            ckpt: CheckpointPolicy { period_secs: wall / 20.0, write_cost_secs: 2.0 },
+            ..legacy_cfg
+        };
+        let r = run(&ckpt_cfg);
+        assert!(r.checkpoints_taken >= 1, "{}", r.checkpoints_taken);
+        assert_eq!(r.checkpoint_overhead_secs, r.checkpoints_taken as f64 * 2.0);
+        assert!(r.wasted_work_secs > 0.0, "the rollback must be charged");
+        assert!(
+            r.wasted_work_secs <= wall / 20.0 + 1e-9,
+            "one preempt loses at most one period: {} vs {}",
+            r.wasted_work_secs,
+            wall / 20.0
+        );
+        assert!(r.reached());
+        // write costs + rollback push the wall clock past the legacy run
+        let t_legacy = legacy.time_to_target.unwrap();
+        let t_ckpt = r.time_to_target.unwrap();
+        assert!(t_ckpt > t_legacy, "checkpointing must cost wall time: {t_ckpt} vs {t_legacy}");
+    }
+
+    #[test]
+    fn simultaneous_mid_epoch_preempts_charge_one_rollback() {
+        // two abrupt departures at the same instant restore from the same
+        // checkpoint once — the charge must equal the single-preempt one,
+        // not double it
+        let c = cluster::cluster_a();
+        let w = workload::cifar10();
+        let mut single = ChurnTrace::new("one-preempt");
+        single.push_at(10, 0.5, ClusterEvent::Preempt { node: 2 });
+        let mut double = ChurnTrace::new("two-preempts");
+        double.push_at(10, 0.5, ClusterEvent::Preempt { node: 2 });
+        double.push_at(10, 0.5, ClusterEvent::Preempt { node: 1 });
+        let run = |trace: &ChurnTrace| {
+            let mut sys =
+                CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+            let cfg = ScenarioConfig {
+                max_epochs: 40,
+                seed: 3,
+                ckpt: CheckpointPolicy { period_secs: 1e15, write_cost_secs: 0.0 },
+                ..Default::default()
+            };
+            run_scenario(&c, &w, trace, &mut sys, &cfg)
+        };
+        let one = run(&single);
+        let two = run(&double);
+        assert_eq!(two.events_applied, 2, "both preempts must apply");
+        assert_eq!(two.final_n, 1);
+        assert!(one.wasted_work_secs > 0.0);
+        assert_eq!(
+            two.wasted_work_secs.to_bits(),
+            one.wasted_work_secs.to_bits(),
+            "simultaneous departures restore once: {} vs {}",
+            two.wasted_work_secs,
+            one.wasted_work_secs
+        );
+    }
+
+    #[test]
+    fn immediate_replan_requests_a_fresh_plan_mid_epoch() {
+        // a graceful mid-epoch leave under Immediate timing: the driver
+        // asks the (already warm-replanned) system for a fresh §4.5 plan
+        // instead of bridging pro rata; nothing is wasted either way
+        let c = cluster::cluster_a();
+        let w = workload::cifar10();
+        let mut trace = ChurnTrace::new("mid-leave");
+        trace.push_at(10, 0.5, ClusterEvent::NodeLeave { node: 2 });
+        let run = |replan: ReplanTiming| {
+            let mut sys =
+                CannikinPlanner::new(c.n(), w.b0, w.b_max, w.n_buckets, BatchPolicy::Adaptive);
+            let cfg =
+                ScenarioConfig { max_epochs: 20_000, seed: 3, replan, ..Default::default() };
+            run_scenario(&c, &w, &trace, &mut sys, &cfg)
+        };
+        let boundary = run(ReplanTiming::Boundary);
+        let immediate = run(ReplanTiming::Immediate);
+        assert_eq!(boundary.replans_immediate, 0);
+        assert_eq!(immediate.replans_immediate, 1, "one mid-epoch fresh plan");
+        assert_eq!(boundary.replans, 1, "one membership notification either way");
+        assert_eq!(immediate.replans, 1);
+        for r in [&boundary, &immediate] {
+            assert_eq!(r.final_n, 2);
+            assert_eq!(r.wasted_work_secs, 0.0, "a drained departure loses nothing");
+            assert!(r.reached());
+        }
     }
 
     #[test]

@@ -30,7 +30,7 @@ use anyhow::{anyhow, bail, Result};
 use cannikin::api::{self, BuildOptions, ExperimentSpec, RunReport, SystemRegistry};
 use cannikin::benchkit::Table;
 use cannikin::coordinator::{train, BatchPolicy, TrainConfig};
-use cannikin::elastic::{self, DetectionMode, DetectionStats};
+use cannikin::elastic::{self, CheckpointPolicy, DetectionMode, DetectionStats, ReplanTiming};
 use cannikin::figures;
 use cannikin::optperf;
 use cannikin::runtime::Manifest;
@@ -46,10 +46,12 @@ USAGE:
   cannikin train   [--artifacts DIR] [--cluster a|b|c | --cluster-file F.json] [--workload W]
                    [--system S] [--epochs N] [--steps N] [--lr F] [--fixed-batch B]
                    [--corpus-kb N] [--seed N] [--log FILE] [--trace T] [--detect D]
+                   [--ckpt-period S] [--ckpt-cost S] [--replan R]
   cannikin sim     [--cluster a|b|c] [--workload W] [--system S] [--epochs N] [--seed N]
                    [--json]
   cannikin elastic [--cluster a|b|c] [--workload W] [--system S] [--trace T]
-                   [--epochs N] [--seed N] [--save-trace FILE] [--detect D] [--json]
+                   [--epochs N] [--seed N] [--save-trace FILE] [--detect D]
+                   [--ckpt-period S] [--ckpt-cost S] [--replan R] [--json]
   cannikin run     SPEC.json [--json]
   cannikin compare SPEC.json [--systems S1,S2,…] [--json]
   cannikin report  FILE.json|-
@@ -65,6 +67,15 @@ detection (D): oracle   — replay the trace's SlowDown/Recover events (default)
                           from timing observations (latency/false-positive
                           accounting is reported)
                off      — hide them entirely (ablation floor)
+checkpoints: --ckpt-period S — write a checkpoint every S active-training
+             seconds (0 = legacy: every epoch boundary is a free implicit
+             checkpoint); --ckpt-cost S — simulated seconds per write.
+             With a finite period an abrupt preemption loses ALL work
+             since the last checkpoint (wasted_work_secs), not just the
+             in-flight shard
+replan (R):  boundary  — bridge a mid-epoch departure to the next epoch
+                         boundary with a pro-rata re-dispatch (default)
+             immediate — re-solve the §4.5 plan at the event's offset
 SPEC.json:   a declarative ExperimentSpec — see `rust/src/api/spec.rs` and
              specs/smoke.json; `run --json | cannikin report -` round-trips";
 
@@ -86,6 +97,9 @@ const TRAIN_FLAGS: FlagSpec = &[
     ("log", true),
     ("trace", true),
     ("detect", true),
+    ("ckpt-period", true),
+    ("ckpt-cost", true),
+    ("replan", true),
 ];
 const SIM_FLAGS: FlagSpec = &[
     ("cluster", true),
@@ -106,6 +120,9 @@ const ELASTIC_FLAGS: FlagSpec = &[
     ("seed", true),
     ("save-trace", true),
     ("detect", true),
+    ("ckpt-period", true),
+    ("ckpt-cost", true),
+    ("replan", true),
     ("json", false),
 ];
 const RUN_FLAGS: FlagSpec = &[("json", false)];
@@ -295,6 +312,21 @@ fn detect_arg(flags: &HashMap<String, String>) -> Result<DetectionMode> {
         .ok_or_else(|| anyhow!("unknown detection mode {name:?} (oracle|observed|off)"))
 }
 
+/// `--ckpt-period` / `--ckpt-cost` (both default 0 = the legacy free
+/// implicit boundary checkpoints), validated by the one constructor the
+/// spec path uses too.
+fn ckpt_arg(flags: &HashMap<String, String>) -> Result<CheckpointPolicy> {
+    let period: f64 = get(flags, "ckpt-period", "0").parse()?;
+    let cost: f64 = get(flags, "ckpt-cost", "0").parse()?;
+    CheckpointPolicy::new(period, cost)
+}
+
+fn replan_arg(flags: &HashMap<String, String>) -> Result<ReplanTiming> {
+    let name = get(flags, "replan", "boundary");
+    ReplanTiming::by_name(name)
+        .ok_or_else(|| anyhow!("unknown replan timing {name:?} (boundary|immediate)"))
+}
+
 /// `--system` helper shared by `sim`/`elastic`: `help` prints the registry
 /// enumeration and returns None.
 fn system_arg<'a>(flags: &'a HashMap<String, String>, reg: &SystemRegistry) -> Option<&'a str> {
@@ -356,6 +388,13 @@ fn print_report(r: &RunReport, target_label: &str) {
         r.system, r.events_applied, r.events_noop, r.events_hidden, r.events_skipped,
         r.wasted_work_secs, r.final_n, r.bootstrap_epochs
     );
+    if r.checkpoints_taken > 0 || r.replans_immediate > 0 {
+        println!(
+            "checkpoints: {} written ({:.1}s of writes); replans: {} delivered \
+             ({} immediate mid-epoch)",
+            r.checkpoints_taken, r.checkpoint_overhead_secs, r.replans, r.replans_immediate
+        );
+    }
     if let Some(d) = &r.detection {
         print_detection(d);
     }
@@ -423,7 +462,14 @@ fn cmd_elastic(flags: &HashMap<String, String>) -> Result<()> {
             counts.recovers
         );
     }
-    let cfg = elastic::ScenarioConfig { max_epochs: epochs, seed, detect, ..Default::default() };
+    let cfg = elastic::ScenarioConfig {
+        max_epochs: epochs,
+        seed,
+        detect,
+        ckpt: ckpt_arg(flags)?,
+        replan: replan_arg(flags)?,
+        ..Default::default()
+    };
     let r = api::run(&c, &w, &trace, system.as_mut(), &cfg);
     if json {
         println!("{}", r.to_json().to_string_pretty());
@@ -566,6 +612,8 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     }
     cfg.trace = trace_arg(flags, &cfg.cluster, cfg.epochs, cfg.seed)?;
     cfg.detect = detect_arg(flags)?;
+    cfg.ckpt = ckpt_arg(flags)?;
+    cfg.replan = replan_arg(flags)?;
     let report = train(&cfg)?;
     println!(
         "\ntrained {} epochs in {:.1}s real; final eval loss {:.4}",
@@ -573,6 +621,12 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
         report.real_secs,
         report.epochs.last().map(|e| e.eval_loss).unwrap_or(f32::NAN),
     );
+    if report.checkpoints_taken > 0 {
+        println!(
+            "checkpoints: {} written ({:.1}s sim writes), {:.1}s sim rolled back",
+            report.checkpoints_taken, report.checkpoint_overhead_secs, report.wasted_work_secs
+        );
+    }
     if let Some(d) = &report.detection {
         print_detection(d);
     }

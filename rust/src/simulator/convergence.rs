@@ -95,6 +95,15 @@ pub fn run(
     })
 }
 
+/// Steps dispatched for one segment — the integrator's own step-count
+/// rule, exported so the elastic driver can advance a parallel clock
+/// (the checkpoint schedule) in exact agreement with the wall-time
+/// integration below.
+pub fn segment_steps(workload: &Workload, seg: &Segment) -> f64 {
+    let batch = seg.batch.max(1);
+    (workload.epoch_samples as f64 * seg.weight / batch as f64).ceil().max(1.0)
+}
+
 /// Drive a convergence run whose epochs may be split into segments by
 /// mid-epoch cluster events.  Per segment: its share of the epoch's
 /// samples runs at its plan's total batch and measured batch time
@@ -123,8 +132,7 @@ pub fn run_segmented(
         let mut p_run = progress;
         for seg in &exec.segments {
             let batch = seg.batch.max(1);
-            let steps =
-                (workload.epoch_samples as f64 * seg.weight / batch as f64).ceil().max(1.0);
+            let steps = segment_steps(workload, seg);
             // progress integrates φ along the segment (φ moves slowly;
             // midpoint evaluation is plenty)
             let phi_seg = workload.phi_at(p_run);

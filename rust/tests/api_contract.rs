@@ -19,7 +19,9 @@ use cannikin::api::{
 };
 use cannikin::cluster;
 use cannikin::coordinator::BatchPolicy;
-use cannikin::elastic::{ChurnTrace, DetectionMode, DetectionStats, ScenarioConfig};
+use cannikin::elastic::{
+    ChurnTrace, DetectionMode, DetectionStats, ReplanTiming, ScenarioConfig,
+};
 use cannikin::simulator::{workload, ClusterSim};
 use cannikin::util::json::Json;
 use cannikin::util::prop::{check, ensure};
@@ -72,6 +74,10 @@ fn rand_spec(rng: &mut Rng) -> ExperimentSpec {
         seed: rng.next_u64() >> 11,
         max_epochs: 1 + rng.below(1_000_000) as usize,
         reps: 1 + rng.below(16) as usize,
+        // the checkpoint block's domain: finite, non-negative
+        ckpt_period: if rng.below(2) == 0 { 0.0 } else { rng.f64() * 1e4 },
+        ckpt_cost: if rng.below(2) == 0 { 0.0 } else { rng.f64() * 60.0 },
+        replan: [ReplanTiming::Boundary, ReplanTiming::Immediate][rng.below(2) as usize],
     }
 }
 
@@ -119,6 +125,10 @@ fn rand_report(rng: &mut Rng) -> RunReport {
         events_hidden: rng.below(10) as usize,
         events_skipped: rng.below(5) as usize,
         wasted_work_secs: rand_f64(rng).abs(),
+        checkpoint_overhead_secs: rand_f64(rng).abs(),
+        checkpoints_taken: rng.below(500) as usize,
+        replans: rng.below(12) as usize,
+        replans_immediate: rng.below(6) as usize,
         bootstrap_epochs: rng.below(10) as usize,
         final_n: 1 + rng.below(64) as usize,
         detection,
@@ -198,14 +208,77 @@ fn spec_file_roundtrip() {
     assert_eq!(spec, back);
 }
 
+/// Backward compat: a golden pre-checkpoint-release (PR-5) `RunReport`
+/// JSON — it carries the mid-epoch-preemption-era fields but none of the
+/// `checkpoint_*` / `replans*` ones — must still parse through the same
+/// path `cannikin report` uses, with the new fields defaulting to the
+/// legacy semantics (zero), and must survive the re-serialization round
+/// trip the subcommand enforces.
+#[test]
+fn golden_pre_checkpoint_report_still_parses_and_roundtrips() {
+    let golden = r#"{
+      "system": "cannikin", "cluster": "cluster-a", "workload": "cifar10",
+      "trace": "spot", "seed": 7, "max_epochs": 3, "detect": "observed",
+      "rows": [
+        { "epoch": 0, "n_nodes": 3, "total_batch": 64, "t_batch": 0.1,
+          "wall_secs": 9.5, "progress": 1.5, "metric": 10.0,
+          "events": 1, "mid_epoch_events": 0, "detected": 0 },
+        { "epoch": 1, "n_nodes": 2, "total_batch": 128, "t_batch": 0.09,
+          "wall_secs": 19.25, "progress": 3.0, "metric": 20.0,
+          "events": 0, "mid_epoch_events": 1, "detected": 1 }
+      ],
+      "time_to_target": null, "events_applied": 2, "events_noop": 1,
+      "events_hidden": 1, "events_skipped": 0,
+      "wasted_work_secs": 4.25, "bootstrap_epochs": 2, "final_n": 2,
+      "detection": { "emitted_slowdowns": 1, "emitted_recovers": 0,
+                     "false_slowdowns": 0, "false_recovers": 0,
+                     "latencies": [4], "missed": 0,
+                     "inferred_preempts": 1, "false_preempts": 0,
+                     "preempt_latencies": [2], "missed_preempts": 0 }
+    }"#;
+    let r = RunReport::from_json(&Json::parse(golden).unwrap()).unwrap();
+    // pre-PR-5 fields survive verbatim…
+    assert_eq!(r.events_noop, 1);
+    assert_eq!(r.wasted_work_secs, 4.25);
+    assert_eq!(r.rows[1].mid_epoch_events, 1);
+    // …and the checkpoint-era fields default to the legacy semantics
+    assert_eq!(r.checkpoint_overhead_secs, 0.0);
+    assert_eq!(r.checkpoints_taken, 0);
+    assert_eq!(r.replans, 0);
+    assert_eq!(r.replans_immediate, 0);
+    // the `cannikin report` contract: our parse re-serializes losslessly
+    let again = RunReport::from_json(&r.to_json()).unwrap();
+    assert_eq!(r, again);
+}
+
+/// A spec without a checkpoint block must run with the legacy semantics
+/// (period 0, free boundary checkpoints, pro-rata boundary bridging).
+#[test]
+fn spec_without_checkpoint_block_defaults_to_legacy_semantics() {
+    let j = Json::parse(r#"{"cluster":"a","workload":"cifar10","system":"cannikin"}"#).unwrap();
+    let spec = ExperimentSpec::from_json(&j).unwrap();
+    assert_eq!(spec.ckpt_period, 0.0);
+    assert_eq!(spec.ckpt_cost, 0.0);
+    assert_eq!(spec.replan, ReplanTiming::Boundary);
+    let cfg = spec.scenario_config();
+    assert!(!cfg.ckpt.enabled(), "legacy mode: no checkpoint schedule");
+    assert_eq!(cfg.replan, ReplanTiming::Boundary);
+}
+
 /// Every committed CI smoke spec (one per trace preset — the spec-smoke
-/// matrix) must stay loadable, resolvable and runnable, and its report
-/// must survive the round trip the smoke job exercises
+/// matrix — plus the checkpointed-spot one) must stay loadable,
+/// resolvable and runnable, and its report must survive the round trip
+/// the smoke job exercises
 /// (`run specs/smoke-<preset>.json --json | report -`).
 #[test]
 fn committed_smoke_specs_run_and_roundtrip() {
-    for name in ["smoke.json", "smoke-spot.json", "smoke-maintenance.json", "smoke-straggler.json"]
-    {
+    for name in [
+        "smoke.json",
+        "smoke-spot.json",
+        "smoke-maintenance.json",
+        "smoke-straggler.json",
+        "smoke-ckpt.json",
+    ] {
         let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("specs").join(name);
         let spec = ExperimentSpec::load(&path).unwrap_or_else(|e| panic!("{name}: {e:#}"));
         let reg = SystemRegistry::builtin();

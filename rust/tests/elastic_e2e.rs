@@ -7,7 +7,9 @@
 
 use cannikin::api::{self, BuildOptions, RunReport, SystemRegistry, TrainingSystem};
 use cannikin::cluster::{self, ClusterSpec};
-use cannikin::elastic::{self, ChurnTrace, ClusterEvent, DetectionMode, ScenarioConfig};
+use cannikin::elastic::{
+    self, CheckpointPolicy, ChurnTrace, ClusterEvent, DetectionMode, ReplanTiming, ScenarioConfig,
+};
 use cannikin::simulator::{workload, Workload};
 use cannikin::util::json::Json;
 
@@ -237,6 +239,164 @@ fn observed_mid_epoch_preempt_is_inferred_from_missing_heartbeats() {
     assert!(r.rows[inferred_epoch + 1..].iter().all(|row| row.n_nodes == 2));
     // the lost in-flight work is charged either way
     assert!(r.wasted_work_secs > 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// checkpoint-interval modeling + replan timing (the failure-recovery suite)
+// ---------------------------------------------------------------------------
+
+fn run_spot(seed: u64, detect: DetectionMode, cfg_extra: ScenarioConfig) -> RunReport {
+    let c = cluster::cluster_a();
+    let w = workload::cifar10();
+    let trace = elastic::spot_instance(&c, 20_000, seed);
+    let mut sys = build("cannikin", &c, &w);
+    let cfg = ScenarioConfig { max_epochs: 20_000, seed, detect, ..cfg_extra };
+    api::run(&c, &w, &trace, sys.as_mut(), &cfg)
+}
+
+/// Acceptance: with a finite checkpoint period on the spot preset the
+/// rollback accounting charges strictly more than the legacy
+/// in-flight-shard-only loss, and the write overhead is exactly
+/// checkpoints × cost.
+#[test]
+fn finite_checkpoint_period_charges_more_than_the_legacy_in_flight_loss() {
+    let legacy = run_spot(7, DetectionMode::Oracle, ScenarioConfig::default());
+    assert!(
+        legacy.wasted_work_secs > 0.0,
+        "spot preempts mid-epoch: the legacy in-flight charge is positive"
+    );
+    assert_eq!(legacy.checkpoints_taken, 0);
+    assert_eq!(legacy.checkpoint_overhead_secs, 0.0);
+
+    let wall = legacy.rows.last().unwrap().wall_secs;
+    let period = wall / 20.0;
+    let ckpt = run_spot(
+        7,
+        DetectionMode::Oracle,
+        ScenarioConfig {
+            ckpt: CheckpointPolicy { period_secs: period, write_cost_secs: 3.0 },
+            ..Default::default()
+        },
+    );
+    assert!(
+        ckpt.wasted_work_secs > legacy.wasted_work_secs,
+        "rollback-to-checkpoint ({:.1}s) must exceed the in-flight-only charge ({:.1}s)",
+        ckpt.wasted_work_secs,
+        legacy.wasted_work_secs
+    );
+    assert!(ckpt.checkpoints_taken >= 1);
+    assert_eq!(ckpt.checkpoint_overhead_secs, ckpt.checkpoints_taken as f64 * 3.0);
+    assert!(ckpt.reached(), "the checkpointed run must still converge");
+    assert!(
+        ckpt.time_to_target.unwrap() > legacy.time_to_target.unwrap(),
+        "rollbacks + writes must cost wall time"
+    );
+}
+
+/// Acceptance: Immediate re-planning reaches the target in no more epochs
+/// than the legacy Boundary bridging — on the spot preset under Oracle
+/// *and* Observed detection, and on the other two smoke presets (whose
+/// events are boundary-aligned, so the two timings coincide exactly).
+#[test]
+fn immediate_replanning_needs_no_more_epochs_than_boundary() {
+    let c = cluster::cluster_a();
+    let w = workload::cifar10();
+    for (preset, modes) in [
+        ("spot", &[DetectionMode::Oracle, DetectionMode::Observed][..]),
+        ("maintenance", &[DetectionMode::Oracle][..]),
+        ("straggler", &[DetectionMode::Oracle][..]),
+    ] {
+        let trace = elastic::preset(preset, &c, 20_000, 7).unwrap();
+        for &mode in modes {
+            let run = |replan: ReplanTiming| {
+                let mut sys = build("cannikin", &c, &w);
+                let cfg = ScenarioConfig {
+                    max_epochs: 20_000,
+                    seed: 7,
+                    detect: mode,
+                    replan,
+                    ..Default::default()
+                };
+                api::run(&c, &w, &trace, sys.as_mut(), &cfg)
+            };
+            let boundary = run(ReplanTiming::Boundary);
+            let immediate = run(ReplanTiming::Immediate);
+            let e_b = boundary
+                .epochs_to_target()
+                .unwrap_or_else(|| panic!("{preset}/{mode:?}: boundary run must reach"));
+            let e_i = immediate
+                .epochs_to_target()
+                .unwrap_or_else(|| panic!("{preset}/{mode:?}: immediate run must reach"));
+            assert!(
+                e_i <= e_b,
+                "{preset}/{mode:?}: immediate {e_i} epochs vs boundary {e_b}"
+            );
+        }
+    }
+}
+
+/// Acceptance: the segmented timeline with immediate re-planning keeps
+/// the determinism contract — same seed, bit-identical report.
+#[test]
+fn immediate_replanning_is_bit_identical_per_seed() {
+    let cfg = ScenarioConfig { replan: ReplanTiming::Immediate, ..Default::default() };
+    let a = run_spot(11, DetectionMode::Oracle, cfg);
+    let b = run_spot(11, DetectionMode::Oracle, cfg);
+    assert_eq!(a, b, "immediate replanning broke bit-identical determinism");
+    assert!(a.replans_immediate >= 1, "spot's mid-epoch preempts must trigger fresh plans");
+}
+
+/// Acceptance: an *inferred* preempt (Observed mode — never announced)
+/// triggers exactly one warm replan, delivered when the missing-heartbeat
+/// rule materializes the departure; the following epoch boundary must not
+/// re-deliver it (no double-solve), and — since nobody can re-plan a
+/// departure nobody knows about — Immediate timing issues no mid-epoch
+/// fresh plan and coincides with Boundary bit-for-bit.
+#[test]
+fn inferred_preempt_triggers_exactly_one_replan_no_boundary_double_solve() {
+    let run = |replan: ReplanTiming| {
+        let c = cluster::cluster_a();
+        let w = workload::cifar10();
+        let mut sys = build("cannikin", &c, &w);
+        let cfg = ScenarioConfig {
+            max_epochs: 20_000,
+            seed: 9,
+            detect: DetectionMode::Observed,
+            replan,
+            ..Default::default()
+        };
+        api::run(&c, &w, &preempt_at(0.5), sys.as_mut(), &cfg)
+    };
+    let immediate = run(ReplanTiming::Immediate);
+    let d = immediate.detection.clone().expect("observed mode reports detection stats");
+    assert_eq!(d.inferred_preempts, 1, "{d:?}");
+    assert_eq!(d.false_preempts, 0, "{d:?}");
+    assert_eq!(immediate.replans, 1, "exactly one membership replan may be delivered");
+    assert_eq!(
+        immediate.replans_immediate, 0,
+        "an unannounced death cannot be re-planned mid-epoch"
+    );
+    let boundary = run(ReplanTiming::Boundary);
+    assert_eq!(
+        immediate, boundary,
+        "with no announced mid-epoch membership change the two timings must coincide"
+    );
+
+    // the oracle counterpart IS announced mid-epoch: one immediate fresh
+    // plan, still exactly one membership replan
+    let c = cluster::cluster_a();
+    let w = workload::cifar10();
+    let mut sys = build("cannikin", &c, &w);
+    let cfg = ScenarioConfig {
+        max_epochs: 20_000,
+        seed: 9,
+        replan: ReplanTiming::Immediate,
+        ..Default::default()
+    };
+    let oracle = api::run(&c, &w, &preempt_at(0.5), sys.as_mut(), &cfg);
+    assert_eq!(oracle.replans, 1);
+    assert_eq!(oracle.replans_immediate, 1);
+    assert!(oracle.reached());
 }
 
 // ---------------------------------------------------------------------------

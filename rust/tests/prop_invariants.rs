@@ -2,10 +2,13 @@
 //! coordinator's routing / batching / state management — the offline
 //! substitute for proptest, see util::prop).
 
-use cannikin::api::{BuildOptions, SystemRegistry, TrainingSystem as _};
+use cannikin::api::{self, BuildOptions, RunReport, SystemRegistry, TrainingSystem as _};
 use cannikin::baselines::even_split;
 use cannikin::cluster::{random_cluster, DeviceProfile};
-use cannikin::elastic::{ChurnTrace, ClusterEvent, ElasticCluster, TimedEvent};
+use cannikin::elastic::{
+    CheckpointPolicy, ChurnTrace, ClusterEvent, ElasticCluster, ReplanTiming, ScenarioConfig,
+    TimedEvent,
+};
 use cannikin::gns;
 use cannikin::optperf;
 use cannikin::perfmodel::ClusterModel;
@@ -402,6 +405,143 @@ fn prop_elastic_membership_never_corrupts_state() {
                 }
             }
             Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// checkpoint-interval modeling: wasted-work invariants
+// ---------------------------------------------------------------------------
+
+/// Run cannikin on cluster A / cifar10 through `trace` with the given
+/// scenario knobs (registry-built, like every production caller).
+fn run_ckpt(trace: &ChurnTrace, cfg: &ScenarioConfig) -> RunReport {
+    let c = cannikin::cluster::cluster_a();
+    let w = workload::cifar10();
+    let mut sys = SystemRegistry::builtin()
+        .build("cannikin", &c, &w, &BuildOptions::default())
+        .expect("builtin system");
+    api::run(&c, &w, trace, sys.as_mut(), cfg)
+}
+
+fn one_preempt(epoch: usize, frac: f64, node: usize) -> ChurnTrace {
+    let mut t = ChurnTrace::new("one-preempt");
+    t.push_at(epoch, frac, ClusterEvent::Preempt { node });
+    t
+}
+
+#[test]
+fn prop_wasted_work_is_monotone_in_time_since_checkpoint() {
+    // with a period longer than the whole run the only restore point is
+    // the initial state, so the rollback charge is exactly the active
+    // training time at the event — later events must never waste less
+    check(
+        "ckpt-wasted-monotone",
+        8,
+        |rng| {
+            let seed = 1 + rng.below(1000);
+            let epoch = 5 + rng.below(20) as usize;
+            let f_lo = 0.05 + rng.f64() * 0.4;
+            let f_hi = f_lo + 0.05 + rng.f64() * (0.9 - f_lo - 0.05);
+            let node = rng.below(3) as usize;
+            (seed, epoch, f_lo, f_hi, node)
+        },
+        |&(seed, epoch, f_lo, f_hi, node)| {
+            let cfg = ScenarioConfig {
+                max_epochs: 40,
+                seed,
+                ckpt: CheckpointPolicy { period_secs: 1e15, write_cost_secs: 0.0 },
+                ..Default::default()
+            };
+            let lo = run_ckpt(&one_preempt(epoch, f_lo, node), &cfg);
+            let hi = run_ckpt(&one_preempt(epoch, f_hi, node), &cfg);
+            ensure(lo.events_applied == 1 && hi.events_applied == 1, "preempt must apply")?;
+            ensure(lo.wasted_work_secs > 0.0, "a rollback must be charged")?;
+            ensure(
+                hi.wasted_work_secs >= lo.wasted_work_secs,
+                format!(
+                    "wasted({f_hi}) = {} < wasted({f_lo}) = {}",
+                    hi.wasted_work_secs, lo.wasted_work_secs
+                ),
+            )?;
+            // a full epoch later must strictly dominate both
+            let later = run_ckpt(&one_preempt(epoch + 3, f_lo, node), &cfg);
+            ensure(
+                later.wasted_work_secs > hi.wasted_work_secs,
+                format!(
+                    "wasted(epoch {} ) = {} <= wasted(epoch {epoch}) = {}",
+                    epoch + 3,
+                    later.wasted_work_secs,
+                    hi.wasted_work_secs
+                ),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_single_preempt_rollback_is_bounded_by_one_checkpoint_period() {
+    // checkpoints fire at every period multiple the active clock crosses,
+    // so a single abrupt departure can never lose more than one period of
+    // work (the in-flight part is inside that bound by construction) —
+    // and the write overhead is exactly (checkpoints taken) × cost
+    check(
+        "ckpt-wasted-bounded",
+        8,
+        |rng| {
+            let seed = 1 + rng.below(1000);
+            let epoch = 5 + rng.below(20) as usize;
+            let frac = 0.1 + rng.f64() * 0.8;
+            let period = 1.0 + rng.f64() * 999.0;
+            (seed, epoch, frac, period)
+        },
+        |&(seed, epoch, frac, period)| {
+            let cfg = ScenarioConfig {
+                max_epochs: 40,
+                seed,
+                ckpt: CheckpointPolicy { period_secs: period, write_cost_secs: 2.0 },
+                ..Default::default()
+            };
+            let r = run_ckpt(&one_preempt(epoch, frac, 1), &cfg);
+            ensure(r.events_applied == 1, "preempt must apply")?;
+            ensure(
+                r.wasted_work_secs <= period + 1e-9,
+                format!("wasted {} exceeds the period {period}", r.wasted_work_secs),
+            )?;
+            ensure(
+                r.checkpoint_overhead_secs == r.checkpoints_taken as f64 * 2.0,
+                format!(
+                    "overhead {} != {} checkpoints x 2.0s",
+                    r.checkpoint_overhead_secs, r.checkpoints_taken
+                ),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_zero_period_reproduces_the_legacy_run_bit_for_bit() {
+    // period 0 must be indistinguishable from the pre-checkpoint driver:
+    // identical reports in every field (the write cost is inert), zero
+    // checkpoint accounting — under Boundary replanning, the legacy mode
+    check(
+        "ckpt-zero-period-legacy",
+        6,
+        |rng| 1 + rng.below(1000),
+        |&seed| {
+            let c = cannikin::cluster::cluster_a();
+            let trace = cannikin::elastic::spot_instance(&c, 60, seed);
+            let legacy = ScenarioConfig { max_epochs: 60, seed, ..Default::default() };
+            let zeroed = ScenarioConfig {
+                ckpt: CheckpointPolicy { period_secs: 0.0, write_cost_secs: 7.5 },
+                replan: ReplanTiming::Boundary,
+                ..legacy
+            };
+            let a = run_ckpt(&trace, &legacy);
+            let b = run_ckpt(&trace, &zeroed);
+            ensure(a == b, "period 0 diverged from the legacy run")?;
+            ensure(b.checkpoints_taken == 0, "no checkpoints may fire at period 0")?;
+            ensure(b.checkpoint_overhead_secs == 0.0, "no write cost at period 0")
         },
     );
 }
