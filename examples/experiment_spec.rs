@@ -7,8 +7,9 @@
 //!
 //!     cargo run --release --example experiment_spec
 
-use cannikin::api::{compare, run_spec, ExperimentSpec, RunReport, SystemRegistry};
+use cannikin::api::{compare, run_spec, run_spec_traced, ExperimentSpec, RunReport, SystemRegistry};
 use cannikin::elastic::{ChurnTrace, ClusterEvent, DetectionMode, ReplanTiming};
+use cannikin::obs::{tools, Tracer};
 use cannikin::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
@@ -124,6 +125,46 @@ fn main() -> anyhow::Result<()> {
         r_ckpt.checkpoints_taken,
         r_ckpt.checkpoint_overhead_secs,
         r_ckpt.replans_immediate,
+    );
+
+    // 7. deterministic tracing (see OBSERVABILITY.md): the same run with a
+    // tracer attached — `cannikin run spec.json --trace-out run.jsonl` on
+    // the CLI.  Tracing is observation only (the report is unchanged save
+    // for the embedded stats rollups); the trace reconciles exactly with
+    // the report's ledgers and is byte-identical per seed once the
+    // machine-dependent `wall_*` fields are stripped.
+    let (tracer, handle) = Tracer::ring(1_000_000);
+    let r_traced = run_spec_traced(&ckpt_spot, &reg, tracer)?;
+    let records = handle.records();
+    let s = tools::summarize(&records)?;
+    println!("\ntraced run: {} trace record(s)", s.records);
+    println!(
+        "  ledger reconciliation: wasted {:.1}s (report {:.1}s), {} ckpt write(s) \
+         (report {}), {} membership replan(s) (report {})",
+        s.wasted_work_secs,
+        r_traced.wasted_work_secs,
+        s.ckpt_writes,
+        r_traced.checkpoints_taken,
+        s.replans,
+        r_traced.replans,
+    );
+    assert_eq!(s.wasted_work_secs.to_bits(), r_traced.wasted_work_secs.to_bits());
+    assert_eq!(s.ckpt_writes, r_traced.checkpoints_taken);
+    if let Some(sv) = &r_traced.solver_stats {
+        println!(
+            "  solver: {} call(s), {} solve(s), {} hinted ({} hits), wall p50 {:.1}µs p99 {:.1}µs",
+            sv.calls,
+            sv.solves,
+            sv.hinted,
+            sv.hint_hits,
+            sv.wall_p50_secs * 1e6,
+            sv.wall_p99_secs * 1e6,
+        );
+    }
+    let chrome = tools::export_chrome(&records)?;
+    println!(
+        "  export-chrome: {} event(s) — load the JSON in chrome://tracing or Perfetto",
+        chrome.req("traceEvents")?.as_arr()?.len()
     );
     Ok(())
 }

@@ -6,7 +6,8 @@
 //! append to the table the EXPERIMENTS notes quote.
 
 use cannikin::api::{self, BuildOptions, RunReport, SystemRegistry};
-use cannikin::benchkit::{report, Bencher, Table};
+use cannikin::benchkit::{report, Bencher, Snapshot, Table};
+use cannikin::util::json::Json;
 use cannikin::cluster;
 use cannikin::elastic::{
     self, CheckpointPolicy, DetectionMode, ReplanTiming, ScenarioConfig,
@@ -171,12 +172,14 @@ fn main() {
 
     // wall time of the scenario runner itself (the churn overhead is the
     // quantity a production scheduler would pay per event)
+    let mut snap = Snapshot::new("elastic");
     let b = Bencher::new(1, 5);
     let r = b.run("elastic/run/cannikin/spot/20k-epochs", || {
         let mut sys = reg.build("cannikin", &c, &w, &BuildOptions::default()).unwrap();
         api::run(&c, &w, &trace, sys.as_mut(), &cfg)
     });
     report(&r);
+    snap.push(&r);
 
     let r = b.run("elastic/run/cannikin/straggler-observed/20k-epochs", || {
         let mut sys = reg.build("cannikin", &c, &w, &BuildOptions::default()).unwrap();
@@ -184,4 +187,43 @@ fn main() {
         api::run(&c, &w, &s_trace, sys.as_mut(), &cfg2)
     });
     report(&r);
+    snap.push(&r);
+
+    // tracing overhead: the same spot run with a ring tracer attached —
+    // the delta against the untraced bench above is what --trace-out
+    // costs (minus file IO); the solver rollup rides along in the notes
+    let mut last_stats = None;
+    let r = b.run("elastic/run-traced/cannikin/spot/20k-epochs", || {
+        let mut sys = reg.build("cannikin", &c, &w, &BuildOptions::default()).unwrap();
+        let (mut tracer, _handle) = cannikin::obs::Tracer::ring(1_000_000);
+        let rep = api::run_traced(&c, &w, &trace, sys.as_mut(), &cfg, &mut tracer);
+        last_stats = rep.solver_stats.clone();
+        rep
+    });
+    report(&r);
+    snap.push(&r);
+
+    snap.note_str("trace", "spot");
+    snap.note_num("trace_events", trace.len() as f64);
+    snap.note_num(
+        "warm_time_to_target_sim_s",
+        r_warm.time_to_target.unwrap_or(f64::NAN),
+    );
+    snap.note_num("warm_bootstrap_epochs", r_warm.bootstrap_epochs as f64);
+    snap.note_num("cold_bootstrap_epochs", r_cold.bootstrap_epochs as f64);
+    if let Some(s) = &last_stats {
+        snap.note("solver_stats", s.to_json());
+    }
+    snap.note(
+        "even_time_to_target_sim_s",
+        r_even.time_to_target.map(Json::Num).unwrap_or(Json::Null),
+    );
+    snap.note(
+        "ddp_time_to_target_sim_s",
+        r_ddp.time_to_target.map(Json::Num).unwrap_or(Json::Null),
+    );
+    match snap.save_at_repo_root() {
+        Ok(p) => println!("\nbench snapshot written to {}", p.display()),
+        Err(e) => eprintln!("\nwarning: could not write bench snapshot: {e:#}"),
+    }
 }

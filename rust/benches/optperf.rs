@@ -2,7 +2,7 @@
 //! overhead claim's microscopic half.  A full candidate-table build
 //! (the §4.5 init epoch) is also measured.
 
-use cannikin::benchkit::{report, Bencher};
+use cannikin::benchkit::{report, Bencher, Snapshot};
 use cannikin::cluster;
 use cannikin::goodput;
 use cannikin::optperf;
@@ -10,6 +10,7 @@ use cannikin::simulator::workload;
 use cannikin::util::rng::Rng;
 
 fn main() {
+    let mut snap = Snapshot::new("optperf");
     let b = Bencher::new(5, 50);
     let w = workload::imagenet();
     println!("Algorithm 1 (OptPerf solve):");
@@ -21,6 +22,7 @@ fn main() {
             optperf::solve(&model, 4096.0).unwrap()
         });
         report(&r);
+        snap.push(&r);
     }
     println!("\ncandidate-table build (§4.5 init epoch, 16 nodes):");
     let c = cluster::cluster_b();
@@ -32,4 +34,11 @@ fn main() {
         }
     });
     report(&r);
+    snap.push(&r);
+    snap.note_str("workload", "imagenet");
+    snap.note_num("table_candidates", cands.len() as f64);
+    match snap.save_at_repo_root() {
+        Ok(p) => println!("\nbench snapshot written to {}", p.display()),
+        Err(e) => eprintln!("\nwarning: could not write bench snapshot: {e:#}"),
+    }
 }

@@ -48,7 +48,7 @@ pub mod spec;
 
 pub use registry::{BuildOptions, SystemRegistry};
 pub use report::{EpochRow, RunReport};
-pub use spec::{compare, run_spec, ExperimentSpec};
+pub use spec::{compare, compare_traced, run_spec, run_spec_traced, ExperimentSpec};
 
 use crate::baselines::Plan;
 use crate::cluster::ClusterSpec;
@@ -60,6 +60,11 @@ use crate::simulator::{NodeBatchObs, Workload};
 /// [`crate::elastic::scenario`]).  A static sim is the same call with an
 /// empty trace — use [`run_static`] for that.
 pub use crate::elastic::scenario::run_scenario as run;
+
+/// The same execution path with an [`crate::obs::Tracer`] threaded
+/// through: [`run`] is this call with a disabled tracer, so tracing can
+/// never fork the semantics (see `OBSERVABILITY.md`).
+pub use crate::elastic::scenario::run_scenario_traced as run_traced;
 
 /// A data-parallel training system under evaluation.
 ///

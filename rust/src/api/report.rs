@@ -19,6 +19,7 @@
 use anyhow::Result;
 
 use crate::elastic::{DetectionMode, DetectionStats};
+use crate::obs::{DriverStats, SolverStats};
 use crate::util::json::Json;
 
 /// One epoch of a run: the convergence stats plus the elastic view.
@@ -89,6 +90,12 @@ pub struct RunReport {
     pub final_n: usize,
     /// detection accounting (Some iff a detector ran)
     pub detection: Option<DetectionStats>,
+    /// solver call/latency rollup (Some iff the run was traced — the
+    /// untraced path never pays for the probe, and legacy reports stay
+    /// byte-identical because absent options are omitted from the JSON)
+    pub solver_stats: Option<SolverStats>,
+    /// driver-side structural counters (Some iff the run was traced)
+    pub driver_stats: Option<DriverStats>,
 }
 
 impl RunReport {
@@ -136,7 +143,7 @@ impl RunReport {
     // ------------------------------------------------------------- JSON
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("system", Json::Str(self.system.clone())),
             ("cluster", Json::Str(self.cluster.clone())),
             ("workload", Json::Str(self.workload.clone())),
@@ -164,7 +171,16 @@ impl RunReport {
                 "detection",
                 self.detection.as_ref().map(detection_to_json).unwrap_or(Json::Null),
             ),
-        ])
+        ];
+        // omitted (not null) when absent, so untraced runs keep emitting
+        // byte-identical legacy reports
+        if let Some(s) = &self.solver_stats {
+            pairs.push(("solver_stats", s.to_json()));
+        }
+        if let Some(d) = &self.driver_stats {
+            pairs.push(("driver_stats", d.to_json()));
+        }
+        Json::obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> Result<RunReport> {
@@ -194,6 +210,16 @@ impl RunReport {
         let detection = match j.req("detection")? {
             Json::Null => None,
             other => Some(detection_from_json(other)?),
+        };
+        // tracing-era rollups: absent (pre-observability reports and all
+        // untraced runs) means None, not an error
+        let solver_stats = match j.get("solver_stats") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(SolverStats::from_json(v)?),
+        };
+        let driver_stats = match j.get("driver_stats") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(DriverStats::from_json(v)?),
         };
         Ok(RunReport {
             system: j.req("system")?.as_str()?.to_string(),
@@ -225,6 +251,8 @@ impl RunReport {
             bootstrap_epochs: j.req("bootstrap_epochs")?.as_usize()?,
             final_n: j.req("final_n")?.as_usize()?,
             detection,
+            solver_stats,
+            driver_stats,
         })
     }
 
@@ -381,6 +409,26 @@ mod tests {
                 preempt_latencies: vec![2],
                 missed_preempts: 0,
             }),
+            solver_stats: Some(SolverStats {
+                calls: 12,
+                solves: 40,
+                hinted: 10,
+                hint_hits: 8,
+                wall_total_secs: 0.0123,
+                wall_p50_secs: 0.0008,
+                wall_p90_secs: 0.0021,
+                wall_p99_secs: 0.004,
+                wall_max_secs: 0.004,
+            }),
+            driver_stats: Some(DriverStats {
+                segments: 14,
+                mid_epoch_splits: 2,
+                redispatches: 1,
+                ghost_transitions: 1,
+                rollbacks: 1,
+                ckpt_writes: 5,
+                detect_verdicts: 3,
+            }),
         }
     }
 
@@ -400,7 +448,13 @@ mod tests {
         let mut r = sample();
         r.time_to_target = None;
         r.detection = None;
-        let back = RunReport::from_json(&r.to_json()).unwrap();
+        r.solver_stats = None;
+        r.driver_stats = None;
+        let json = r.to_json();
+        // the untraced shape omits the keys entirely (legacy byte-identity)
+        assert!(json.get("solver_stats").is_none());
+        assert!(json.get("driver_stats").is_none());
+        let back = RunReport::from_json(&json).unwrap();
         assert_eq!(r, back);
         assert!(!back.reached());
     }
@@ -442,5 +496,8 @@ mod tests {
         assert_eq!(d.false_preempts, 0);
         assert!(d.preempt_latencies.is_empty());
         assert_eq!(d.missed_preempts, 0);
+        // observability-era rollups are simply absent in older files
+        assert_eq!(r.solver_stats, None);
+        assert_eq!(r.driver_stats, None);
     }
 }

@@ -30,6 +30,7 @@ use crate::coordinator::planner::BatchPolicy;
 use crate::elastic::{
     self, CheckpointPolicy, ChurnTrace, DetectionMode, ReplanTiming, ScenarioConfig,
 };
+use crate::obs::Tracer;
 use crate::simulator::{workload, Workload};
 use crate::util::json::Json;
 use crate::util::text::suggest;
@@ -261,12 +262,26 @@ pub fn resolve_cluster_name(name: &str) -> Result<ClusterSpec> {
 /// Execute one spec through the registry: resolve, build, run the unified
 /// driver, return the report.
 pub fn run_spec(spec: &ExperimentSpec, registry: &SystemRegistry) -> Result<RunReport> {
+    run_spec_traced(spec, registry, Tracer::disabled())
+}
+
+/// [`run_spec`] with a [`Tracer`] threaded through the driver (finished —
+/// flushed/closed — before the report is returned).  `run_spec` is this
+/// call with a disabled tracer.
+pub fn run_spec_traced(
+    spec: &ExperimentSpec,
+    registry: &SystemRegistry,
+    mut tracer: Tracer,
+) -> Result<RunReport> {
     let c = spec.resolve_cluster()?;
     let w = spec.resolve_workload()?;
     let trace = spec.resolve_trace(&c)?;
     let opts = BuildOptions { policy: spec.policy, ..Default::default() };
     let mut system = registry.build(&spec.system, &c, &w, &opts)?;
-    Ok(crate::api::run(&c, &w, &trace, system.as_mut(), &spec.scenario_config()))
+    let report =
+        crate::api::run_traced(&c, &w, &trace, system.as_mut(), &spec.scenario_config(), &mut tracer);
+    tracer.finish()?;
+    Ok(report)
 }
 
 /// Batch execution: the same spec once per system in `systems` (every
@@ -276,6 +291,18 @@ pub fn compare(
     spec: &ExperimentSpec,
     systems: &[String],
     registry: &SystemRegistry,
+) -> Result<Vec<RunReport>> {
+    compare_traced(spec, systems, registry, |_| Ok(Tracer::disabled()))
+}
+
+/// [`compare`] with one [`Tracer`] per system run, built by `tracer_for`
+/// (called with the system name — e.g. to derive one trace file per
+/// system).  `compare` is this call with a disabled-tracer factory.
+pub fn compare_traced(
+    spec: &ExperimentSpec,
+    systems: &[String],
+    registry: &SystemRegistry,
+    mut tracer_for: impl FnMut(&str) -> Result<Tracer>,
 ) -> Result<Vec<RunReport>> {
     if systems.is_empty() {
         bail!("compare needs at least one system");
@@ -288,7 +315,7 @@ pub fn compare(
         .iter()
         .map(|s| {
             let one = ExperimentSpec { system: s.clone(), ..spec.clone() };
-            run_spec(&one, registry)
+            run_spec_traced(&one, registry, tracer_for(s)?)
         })
         .collect()
 }
@@ -389,6 +416,30 @@ mod tests {
         assert_eq!(r.system, "cannikin");
         assert_eq!(r.trace, "spot");
         assert!(r.events_applied >= 1);
+    }
+
+    #[test]
+    fn run_spec_traced_populates_stats_and_records() {
+        let spec = ExperimentSpec {
+            trace: Some("spot".to_string()),
+            max_epochs: 40,
+            ..Default::default()
+        };
+        let reg = SystemRegistry::builtin();
+        let (tracer, handle) = Tracer::ring(100_000);
+        let r = run_spec_traced(&spec, &reg, tracer).unwrap();
+        assert!(!handle.is_empty(), "a traced run emits records");
+        let s = r.solver_stats.clone().expect("traced runs carry the solver rollup");
+        assert!(s.calls >= 1 && s.solves >= s.calls);
+        let d = r.driver_stats.clone().expect("traced runs carry the driver rollup");
+        assert!(d.segments >= 40, "at least one segment per epoch");
+        // the untraced twin must agree on everything but the rollups
+        let mut untraced = run_spec(&spec, &reg).unwrap();
+        assert_eq!(untraced.solver_stats, None);
+        assert_eq!(untraced.driver_stats, None);
+        untraced.solver_stats = r.solver_stats.clone();
+        untraced.driver_stats = r.driver_stats.clone();
+        assert_eq!(untraced, r, "tracing must not perturb the run");
     }
 
     #[test]

@@ -3,8 +3,18 @@
 //! Criterion-style workflow: warmup, timed samples, mean/std/min reporting,
 //! and paper-table emitters used by `rust/benches/*.rs` (harness = false).
 //! Results append to `bench_results.jsonl` for the EXPERIMENTS.md tables.
+//!
+//! [`Snapshot`] is the machine-readable counterpart: each bench binary
+//! collects its [`BenchResult`]s and writes a committed `BENCH_<name>.json`
+//! at the repo root, so driver/solver overhead regressions (ROADMAP item 3)
+//! diff in review instead of hiding in terminal scrollback.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -19,6 +29,81 @@ pub struct BenchResult {
 impl BenchResult {
     pub fn mean_secs(&self) -> f64 {
         self.mean.as_secs_f64()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("samples", Json::Num(self.samples as f64)),
+            ("mean_secs", Json::Num(self.mean.as_secs_f64())),
+            ("std_secs", Json::Num(self.std.as_secs_f64())),
+            ("min_secs", Json::Num(self.min.as_secs_f64())),
+            ("max_secs", Json::Num(self.max.as_secs_f64())),
+        ])
+    }
+}
+
+/// Machine-readable bench snapshot: timing results plus free-form notes
+/// (trace event counts, time-to-target comparisons, …).  Bench binaries
+/// write one `BENCH_<name>.json` each at the repo root via
+/// [`Snapshot::save_at_repo_root`]; `measured` distinguishes a real run
+/// from a committed schema placeholder awaiting hardware.
+pub struct Snapshot {
+    name: String,
+    measured: bool,
+    results: Vec<BenchResult>,
+    notes: Vec<(String, Json)>,
+}
+
+impl Snapshot {
+    pub fn new(name: &str) -> Self {
+        Snapshot { name: name.to_string(), measured: true, results: vec![], notes: vec![] }
+    }
+
+    pub fn push(&mut self, r: &BenchResult) {
+        self.results.push(r.clone());
+    }
+
+    pub fn note(&mut self, key: &str, value: Json) {
+        self.notes.push((key.to_string(), value));
+    }
+
+    pub fn note_str(&mut self, key: &str, value: impl Into<String>) {
+        self.note(key, Json::Str(value.into()));
+    }
+
+    pub fn note_num(&mut self, key: &str, value: f64) {
+        self.note(key, Json::Num(value));
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::Str(self.name.clone())),
+            ("measured", Json::Bool(self.measured)),
+            (
+                "results",
+                Json::Arr(self.results.iter().map(BenchResult::to_json).collect()),
+            ),
+            (
+                "notes",
+                Json::Obj(self.notes.iter().map(|(k, v)| (k.clone(), v.clone())).collect()),
+            ),
+        ])
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .map_err(|e| anyhow::anyhow!("writing bench snapshot {}: {e}", path.display()))
+    }
+
+    /// Write `BENCH_<name>.json` at the repo root (the crate manifest dir —
+    /// the root `Cargo.toml` points into `rust/`) and return the path.
+    pub fn save_at_repo_root(&self) -> Result<PathBuf> {
+        let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join(format!("BENCH_{}.json", self.name));
+        self.save(&path)?;
+        Ok(path)
     }
 }
 
@@ -175,5 +260,40 @@ mod tests {
     fn fmt_dur_scales() {
         assert!(fmt_dur(Duration::from_secs(2)).contains("s"));
         assert!(fmt_dur(Duration::from_micros(5)).contains("µs"));
+    }
+
+    #[test]
+    fn snapshot_serializes_results_and_notes() {
+        let mut s = Snapshot::new("unit");
+        s.push(&summarize("x", &[Duration::from_millis(2), Duration::from_millis(3)]));
+        s.note_num("events", 42.0);
+        s.note_str("trace", "spot");
+        let j = s.to_json();
+        assert_eq!(j.req("bench").unwrap().as_str().unwrap(), "unit");
+        assert!(j.req("measured").unwrap().as_bool().unwrap());
+        let rs = j.req("results").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert!(rs[0].req("mean_secs").unwrap().as_f64().unwrap() > 0.0);
+        let notes = j.req("notes").unwrap();
+        assert_eq!(notes.req("events").unwrap().as_f64().unwrap(), 42.0);
+        assert_eq!(notes.req("trace").unwrap().as_str().unwrap(), "spot");
+    }
+
+    #[test]
+    fn committed_bench_snapshots_parse_and_follow_the_schema() {
+        // the repo commits one BENCH_<name>.json per bench binary; a
+        // placeholder awaiting hardware carries measured=false, but the
+        // schema must always hold so CI/tools can diff them
+        for name in ["elastic", "optperf"] {
+            let p = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+                .join(format!("BENCH_{name}.json"));
+            let j = Json::parse_file(&p).unwrap_or_else(|e| panic!("{}: {e:#}", p.display()));
+            assert_eq!(j.req("bench").unwrap().as_str().unwrap(), name);
+            j.req("measured").unwrap().as_bool().unwrap();
+            for r in j.req("results").unwrap().as_arr().unwrap() {
+                r.req("name").unwrap().as_str().unwrap();
+                assert!(r.req("mean_secs").unwrap().as_f64().unwrap() >= 0.0);
+            }
+        }
     }
 }

@@ -30,6 +30,7 @@ use crate::elastic::{
 use crate::gns::{estimate_round, GnsTracker};
 use crate::gradsync::{ring_all_reduce, sq_norm, Buckets};
 use crate::metrics::JsonlLog;
+use crate::obs::Tracer;
 use crate::runtime::Runtime;
 use crate::simulator::{ClusterSim, Workload};
 use crate::util::json::Json;
@@ -67,6 +68,10 @@ pub struct TrainConfig {
     pub replan: ReplanTiming,
     /// JSONL step/epoch log (optional)
     pub log_path: Option<PathBuf>,
+    /// deterministic trace output (`--trace-out`): step-granularity
+    /// records through the shared [`Tracer`], stamped with the simulated
+    /// clock like the scenario runner's (see `OBSERVABILITY.md`)
+    pub trace_out: Option<PathBuf>,
     /// print per-epoch lines
     pub verbose: bool,
 }
@@ -89,6 +94,7 @@ impl TrainConfig {
             ckpt: CheckpointPolicy::default(),
             replan: ReplanTiming::Boundary,
             log_path: None,
+            trace_out: None,
             verbose: false,
         }
     }
@@ -193,10 +199,27 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         cfg.seed,
     );
     let mut gns = GnsTracker::new(0.9);
-    let log = match &cfg.log_path {
+    let mut log = match &cfg.log_path {
         Some(p) => Some(JsonlLog::create(p)?),
         None => None,
     };
+    let mut tracer = match &cfg.trace_out {
+        Some(p) => Tracer::jsonl(p)?,
+        None => Tracer::disabled(),
+    };
+    if tracer.enabled() {
+        tracer.stamp(0, 0.0, 0.0);
+        tracer.rec(
+            "run",
+            "start",
+            vec![
+                ("system", Json::Str(cfg.system.clone())),
+                ("seed", Json::Num(cfg.seed as f64)),
+                ("epochs", Json::Num(cfg.epochs as f64)),
+                ("steps_per_epoch", Json::Num(cfg.steps_per_epoch as f64)),
+            ],
+        );
+    }
 
     let mut epochs = Vec::new();
     let mut loss_curve = Vec::new();
@@ -433,7 +456,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
 
             loss_curve.push(step_loss as f32);
             epoch_loss += step_loss;
-            if let Some(l) = &log {
+            if let Some(l) = &mut log {
                 l.log(&Json::obj(vec![
                     ("kind", Json::Str("step".into())),
                     ("epoch", Json::Num(epoch as f64)),
@@ -442,6 +465,23 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                     ("sim_t_batch", Json::Num(sim_t_batch)),
                     ("gsq_global", Json::Num(gsq_global)),
                 ]))?;
+            }
+            if tracer.enabled() {
+                // stamped with the simulated active clock, like the
+                // scenario runner — real-numerics losses are seeded, so
+                // the record stays deterministic
+                tracer.stamp(epoch, (step + 1) as f64 / cfg.steps_per_epoch as f64, ckpt_active);
+                tracer.rec(
+                    "step",
+                    "end",
+                    vec![
+                        ("step", Json::Num(step as f64)),
+                        ("n", Json::Num(n as f64)),
+                        ("loss", Json::Num(step_loss)),
+                        ("total_batch", Json::Num(total as f64)),
+                        ("sim_t_batch", Json::Num(sim_t_batch)),
+                    ],
+                );
             }
         }
 
@@ -515,7 +555,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 report.phi.map(|p| p.round()),
             );
         }
-        if let Some(l) = &log {
+        if let Some(l) = &mut log {
             l.log(&Json::obj(vec![
                 ("kind", Json::Str("epoch".into())),
                 ("epoch", Json::Num(epoch as f64)),
@@ -526,9 +566,36 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 ("phi", report.phi.map(Json::Num).unwrap_or(Json::Null)),
             ]))?;
         }
+        if tracer.enabled() {
+            tracer.stamp(epoch, 1.0, ckpt_active);
+            tracer.rec(
+                "epoch",
+                "end",
+                vec![
+                    ("n", Json::Num(report.n_nodes as f64)),
+                    ("total_batch", Json::Num(total as f64)),
+                    ("train_loss", Json::Num(report.train_loss as f64)),
+                    ("eval_loss", Json::Num(report.eval_loss as f64)),
+                    ("detected", Json::Num(detected as f64)),
+                ],
+            );
+        }
         epochs.push(report);
     }
 
+    if tracer.enabled() {
+        tracer.stamp(cfg.epochs, 0.0, ckpt_active);
+        tracer.rec(
+            "run",
+            "end",
+            vec![
+                ("epochs", Json::Num(cfg.epochs as f64)),
+                ("wasted_work_secs", Json::Num(wasted_total)),
+                ("checkpoints_taken", Json::Num(ckpt.taken as f64)),
+            ],
+        );
+    }
+    tracer.finish()?;
     Ok(TrainReport {
         epochs,
         loss_curve,

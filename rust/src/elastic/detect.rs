@@ -54,6 +54,7 @@ use crate::elastic::events::ClusterEvent;
 use crate::elastic::membership::MembershipDelta;
 use crate::linalg::fit_line;
 use crate::simulator::NodeBatchObs;
+use crate::util::json::Json;
 use crate::util::stats::{mad, median};
 
 /// How a run treats the trace's `SlowDown` / `Recover` events.  Membership
@@ -249,6 +250,9 @@ struct NodeState {
     /// a `Gone` verdict was emitted; the slot is inert until membership
     /// sync removes it
     gone: bool,
+    /// (ratio, drift, gate) of the last judged epoch — diagnostics for
+    /// the tracing layer, never fed back into detection
+    last_diag: Option<(f64, f64, f64)>,
 }
 
 impl NodeState {
@@ -268,6 +272,7 @@ impl NodeState {
             reported: false,
             silent_epochs: 0,
             gone: false,
+            last_diag: None,
         }
     }
 
@@ -327,6 +332,7 @@ impl NodeState {
     }
 
     fn end_epoch(&mut self, epoch: usize, cfg: &DetectorConfig) -> Option<Verdict> {
+        self.last_diag = None;
         if self.gone {
             // already declared gone: inert until membership sync drops it
             self.reported = false;
@@ -370,10 +376,11 @@ impl NodeState {
         let ratio = t / pred;
         let (center, spread) = self.baseline(cfg);
         let drift = ratio / center - 1.0;
+        let gate = cfg.threshold.max(cfg.z_gate * spread);
+        self.last_diag = Some((ratio, drift, gate));
 
         match self.status {
             Status::Healthy => {
-                let gate = cfg.threshold.max(cfg.z_gate * spread);
                 if drift > gate {
                     self.strikes += 1;
                     self.streak.push(ratio);
@@ -529,6 +536,70 @@ impl StragglerDetector {
             Status::Healthy => None,
         }
     }
+
+    /// Per-node diagnostics of the epoch just closed ([`Self::end_epoch`]
+    /// resets the per-epoch scratch, so call right after it).  Purely
+    /// observational — the tracing layer emits these as `detect/node`
+    /// records; nothing feeds back into detection.
+    pub fn diagnostics(&self) -> Vec<NodeDiag> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .map(|(i, st)| NodeDiag {
+                node: i,
+                ratio: st.last_diag.map(|d| d.0),
+                drift: st.last_diag.map(|d| d.1),
+                gate: st.last_diag.map(|d| d.2),
+                strikes: st.strikes,
+                calm: st.calm,
+                silent_epochs: st.silent_epochs,
+                flagged: matches!(st.status, Status::Flagged { .. }),
+                gone: st.gone,
+            })
+            .collect()
+    }
+}
+
+/// Snapshot of one node's detector state at an epoch close, for the
+/// tracing layer (`detect/node` records): the residual ratio judged
+/// against the healthy reference, the drift and the gate it must clear,
+/// and the confirmation counters behind emit/suppress decisions.
+/// `ratio`/`drift`/`gate` are `None` for an epoch the node was not
+/// judged (silent, idle, no reference yet, or already gone).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeDiag {
+    pub node: usize,
+    /// observed/predicted compute-time ratio of the closed epoch
+    pub ratio: Option<f64>,
+    /// relative drift of the ratio against the healthy center
+    pub drift: Option<f64>,
+    /// gate the drift must clear to count as a strike
+    pub gate: Option<f64>,
+    /// consecutive strike epochs so far (emission at `k_confirm`)
+    pub strikes: usize,
+    /// consecutive calm epochs while flagged (recovery at `k_recover`)
+    pub calm: usize,
+    /// consecutive epochs with no report at all (`Gone` at `k_missing`)
+    pub silent_epochs: usize,
+    pub flagged: bool,
+    pub gone: bool,
+}
+
+impl NodeDiag {
+    /// Trace-record payload for a `detect/node` record.
+    pub fn to_fields(&self) -> Vec<(&'static str, Json)> {
+        let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        vec![
+            ("ratio", opt(self.ratio)),
+            ("drift", opt(self.drift)),
+            ("gate", opt(self.gate)),
+            ("strikes", Json::Num(self.strikes as f64)),
+            ("calm", Json::Num(self.calm as f64)),
+            ("silent_epochs", Json::Num(self.silent_epochs as f64)),
+            ("flagged", Json::Bool(self.flagged)),
+            ("gone", Json::Bool(self.gone)),
+        ]
+    }
 }
 
 #[cfg(test)]
@@ -589,6 +660,36 @@ mod tests {
         for e in 0..300 {
             let ev = feed_epoch(&mut det, e, &m, &batches(e), &[1.0, 1.0, 1.0], &mut rng);
             assert!(ev.is_empty(), "false event(s) at epoch {e}: {ev:?}");
+        }
+    }
+
+    #[test]
+    fn diagnostics_snapshot_the_closed_epoch() {
+        let mut det = StragglerDetector::new(3, DetectorConfig::default());
+        let mut rng = Rng::new(11);
+        let m = models3();
+        // before any epoch closes, every node is unjudged
+        for d in det.diagnostics() {
+            assert_eq!(d.ratio, None);
+            assert!(!d.flagged && !d.gone);
+        }
+        for e in 0..40 {
+            feed_epoch(&mut det, e, &m, &batches(e), &[1.0, 1.0, 1.0], &mut rng);
+        }
+        let diags = det.diagnostics();
+        assert_eq!(diags.len(), 3);
+        for (i, d) in diags.iter().enumerate() {
+            assert_eq!(d.node, i);
+            // after 40 healthy epochs the reference exists: the node was judged
+            let ratio = d.ratio.expect("judged");
+            assert!(ratio > 0.5 && ratio < 2.0, "ratio {ratio}");
+            assert!(d.gate.unwrap() > 0.0);
+            assert!(!d.flagged && !d.gone);
+            assert_eq!(d.silent_epochs, 0);
+            // payload shape is stable: 8 fields, numbers where judged
+            let fields = d.to_fields();
+            assert_eq!(fields.len(), 8);
+            assert!(matches!(fields[0], ("ratio", Json::Num(_))));
         }
     }
 

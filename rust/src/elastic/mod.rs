@@ -82,13 +82,13 @@ pub mod membership;
 pub mod scenario;
 
 pub use checkpoint::{CheckpointClock, CheckpointPolicy, ReplanTiming};
-pub use detect::{DetectionMode, DetectionStats, DetectorConfig, StragglerDetector};
+pub use detect::{DetectionMode, DetectionStats, DetectorConfig, NodeDiag, StragglerDetector};
 pub use events::{
     maintenance_window, preset, spot_instance, straggler_drift, ChurnTrace, ClusterEvent,
     EventCounts, TimedEvent,
 };
 pub use membership::{ElasticCluster, MembershipDelta, HEALTHY_EPS};
 pub use scenario::{
-    run_scenario, BoundaryOutcome, ColdRestartCannikin, ElasticDriver, MidEpochEffect,
-    ScenarioConfig,
+    run_scenario, run_scenario_traced, BoundaryOutcome, ColdRestartCannikin, ElasticDriver,
+    MidEpochEffect, ScenarioConfig,
 };

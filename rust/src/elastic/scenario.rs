@@ -82,6 +82,16 @@
 //! and the *announced* view (what the system plans for); trace indices
 //! always refer to the physical view, so a trace means the same thing in
 //! every detection mode.
+//!
+//! **Tracing.**  [`run_scenario_traced`] is the same run with a
+//! [`Tracer`] threaded through: every boundary/mid-epoch event outcome,
+//! segment, checkpoint write/rollback, per-epoch waste contribution,
+//! replan, solver call (via the [`crate::obs::probe`] drained at
+//! deterministic points) and detector verdict is emitted as a typed
+//! record stamped with *simulated* time, and the per-run rollups land in
+//! `RunReport.solver_stats` / `RunReport.driver_stats`.  [`run_scenario`]
+//! is the disabled-tracer special case, so the untraced path stays
+//! bit-for-bit the legacy one (see `OBSERVABILITY.md`).
 
 use crate::api::{EpochRow, RunReport, TrainingSystem};
 use crate::baselines::Plan;
@@ -89,13 +99,16 @@ use crate::cluster::{ClusterSpec, DeviceProfile};
 use crate::coordinator::planner::{BatchPolicy, CannikinPlanner};
 use crate::elastic::checkpoint::{CheckpointClock, CheckpointPolicy, ReplanTiming};
 use crate::elastic::detect::{
-    DetectionMode, DetectionStats, DetectorConfig, StragglerDetector,
+    DetectionMode, DetectionStats, DetectorConfig, NodeDiag, StragglerDetector,
 };
 use crate::elastic::events::{ChurnTrace, ClusterEvent, TimedEvent};
 use crate::elastic::membership::{ElasticCluster, MembershipDelta};
 use crate::figures::target_value;
+use crate::obs::probe::{probe_drain, probe_start, probe_stop, SolveRecord};
+use crate::obs::{DriverStats, SolverStats, Tracer};
 use crate::simulator::convergence::{EpochExec, Segment};
 use crate::simulator::{convergence, ClusterSim, NodeBatchObs, Workload};
+use crate::util::json::Json;
 
 /// Ablation baseline for the warm-start claim: a Cannikin planner that
 /// **cold-restarts** (fresh learners, fresh table, Eq. 8 bootstrap from
@@ -785,6 +798,13 @@ impl<'a> ElasticDriver<'a> {
         n_events
     }
 
+    /// Per-node detector diagnostics for the epoch just closed (`None`
+    /// outside [`DetectionMode::Observed`]) — a traced run emits these
+    /// as `detect/node` records.
+    pub fn detector_diagnostics(&self) -> Option<Vec<NodeDiag>> {
+        self.detector.as_ref().map(|d| d.diagnostics())
+    }
+
     /// Final detection accounting (Some iff a detector ran): undetected
     /// transitions still pending at run end count as missed; ghosts never
     /// inferred count as missed preemptions.
@@ -881,6 +901,67 @@ pub fn run_scenario(
     system: &mut dyn TrainingSystem,
     cfg: &ScenarioConfig,
 ) -> RunReport {
+    run_scenario_traced(base, w, trace, system, cfg, &mut Tracer::disabled())
+}
+
+/// Drain the solver probe into the trace (one `solve` record per
+/// `optperf` entry-point call, wall latency under `wall_secs`) and into
+/// the run-wide accumulator behind `RunReport.solver_stats`.  Called at
+/// deterministic points only — right after each `plan_epoch` and at the
+/// epoch close — so the record order is part of the determinism
+/// contract.  Empty (and free) when the probe is inactive.
+fn drain_solves(tracer: &mut Tracer, acc: &mut Vec<SolveRecord>) {
+    for r in probe_drain() {
+        tracer.rec_wall(
+            "solve",
+            "call",
+            vec![
+                ("total_b", Json::Num(r.total_b)),
+                ("solves", Json::Num(r.solves as f64)),
+                ("state", Json::Str(r.state.clone())),
+                ("hinted", Json::Bool(r.hinted)),
+                ("hint_hit", Json::Bool(r.hint_hit)),
+            ],
+            vec![("secs", r.wall_secs)],
+        );
+        acc.push(r);
+    }
+}
+
+/// [`run_scenario`] with a [`Tracer`] threaded through the driver — the
+/// `--trace-out` path.  The tracer is a pure observer: the simulation is
+/// identical with or without it (a disabled tracer reproduces the
+/// untraced run bit-for-bit), and the report's `solver_stats` /
+/// `driver_stats` rollups are populated only when tracing is on, so
+/// untraced reports keep their exact legacy serialization.  The caller
+/// owns the tracer and should [`Tracer::finish`] it after the run to
+/// surface buffered IO errors.
+pub fn run_scenario_traced(
+    base: &ClusterSpec,
+    w: &Workload,
+    trace: &ChurnTrace,
+    system: &mut dyn TrainingSystem,
+    cfg: &ScenarioConfig,
+    tracer: &mut Tracer,
+) -> RunReport {
+    let traced = tracer.enabled();
+    if traced {
+        probe_start();
+        tracer.stamp(0, 0.0, 0.0);
+        tracer.rec(
+            "run",
+            "start",
+            vec![
+                ("system", Json::Str(system.name().to_string())),
+                ("cluster", Json::Str(base.name.clone())),
+                ("workload", Json::Str(w.name.to_string())),
+                ("trace", Json::Str(trace.name.clone())),
+                ("seed", Json::Num(cfg.seed as f64)),
+                ("detect", Json::Str(cfg.detect.name().to_string())),
+                ("max_epochs", Json::Num(cfg.max_epochs as f64)),
+            ],
+        );
+    }
     let mut driver = ElasticDriver::new(base, w, trace, cfg.detect, cfg.detector, cfg.seed);
     let mut sim = ClusterSim::new(&driver.phys_spec(), w, cfg.seed);
     // the checkpoint schedule rides on the active-training clock: the
@@ -889,15 +970,50 @@ pub fn run_scenario(
     let mut ckpt = CheckpointClock::new(cfg.ckpt);
     let mut active_clock = 0.0f64;
     let mut replans_immediate = 0usize;
+    let mut dstats = DriverStats::default();
+    let mut all_solves: Vec<SolveRecord> = Vec::new();
     // (n_nodes, boundary events, mid-epoch events, detected) per epoch
     let mut side: Vec<(usize, usize, usize, usize)> = Vec::new();
 
     let result = convergence::run_segmented(w, target_value(w), cfg.max_epochs, |epoch, phi| {
+        tracer.stamp(epoch, 0.0, active_clock);
         // ---- epoch boundary: apply every event that is now due
+        let replans_at_boundary = driver.replans;
         let out = driver.boundary(epoch, system);
         let boundary_events = out.effective();
         if let Some(s) = out.new_sim {
             sim = s;
+        }
+        if traced {
+            for &(kind, n_after, hidden) in &out.changed {
+                tracer.rec(
+                    "event",
+                    kind,
+                    vec![
+                        ("mid", Json::Bool(false)),
+                        ("n_after", Json::Num(n_after as f64)),
+                        ("hidden", Json::Bool(hidden)),
+                    ],
+                );
+            }
+            if out.noops + out.skipped > 0 {
+                tracer.rec(
+                    "event",
+                    "inert",
+                    vec![
+                        ("mid", Json::Bool(false)),
+                        ("noops", Json::Num(out.noops as f64)),
+                        ("skipped", Json::Num(out.skipped as f64)),
+                    ],
+                );
+            }
+            if driver.replans > replans_at_boundary {
+                tracer.rec(
+                    "replan",
+                    "membership",
+                    vec![("count", Json::Num((driver.replans - replans_at_boundary) as f64))],
+                );
+            }
         }
         // under a finite checkpoint period the boundary is NOT a free
         // checkpoint: an abrupt boundary Preempt rolls the job back to
@@ -905,7 +1021,14 @@ pub fn run_scenario(
         // restore covers every simultaneous departure at an instant)
         let mut ckpt_wasted = 0.0;
         if out.changed.iter().any(|&(kind, _, _)| kind == "preempt") {
-            ckpt_wasted += ckpt.rollback_once(active_clock);
+            let rb = ckpt.rollback_once(active_clock);
+            ckpt_wasted += rb;
+            if rb > 0.0 {
+                dstats.rollbacks += 1;
+                if traced {
+                    tracer.rec("ckpt", "rollback", vec![("secs", Json::Num(rb))]);
+                }
+            }
         }
 
         // ---- plan, then split the epoch around any mid-epoch events.
@@ -914,8 +1037,19 @@ pub fn run_scenario(
         // an Immediate re-solve may change the total mid-epoch, and the
         // post-replan segments carry the fresh plan's total.
         let plan = system.plan_epoch(epoch, phi);
+        drain_solves(tracer, &mut all_solves);
         let mut local = plan.local_f64();
         let mut cur_batch = plan.total;
+        if traced {
+            tracer.rec(
+                "plan",
+                "epoch",
+                vec![
+                    ("total", Json::Num(cur_batch as f64)),
+                    ("slots", Json::Num(local.len() as f64)),
+                ],
+            );
+        }
         let mut segments: Vec<Segment> = Vec::new();
         let mut cursor = 0.0;
         // samples that must be re-processed with no progress: an abrupt
@@ -945,14 +1079,69 @@ pub fn run_scenario(
                     wasted_secs: 0.0,
                 };
                 let dur = convergence::segment_steps(w, &seg) * t;
-                ckpt_cost += ckpt.advance(active_clock, active_clock + dur);
+                let taken_before = ckpt.taken;
+                let cost = ckpt.advance(active_clock, active_clock + dur);
+                ckpt_cost += cost;
+                dstats.segments += 1;
+                dstats.ckpt_writes += ckpt.taken - taken_before;
+                if traced {
+                    tracer.rec(
+                        "segment",
+                        "run",
+                        vec![
+                            ("t0", Json::Num(active_clock)),
+                            ("t1", Json::Num(active_clock + dur)),
+                            ("batch", Json::Num(cur_batch as f64)),
+                            ("t_batch", Json::Num(t)),
+                            ("weight", Json::Num(te.frac - cursor)),
+                        ],
+                    );
+                    if ckpt.taken > taken_before {
+                        tracer.rec(
+                            "ckpt",
+                            "write",
+                            vec![
+                                ("taken", Json::Num((ckpt.taken - taken_before) as f64)),
+                                ("cost_secs", Json::Num(cost)),
+                            ],
+                        );
+                    }
+                }
                 active_clock += dur;
                 segments.push(seg);
                 cursor = te.frac;
             }
+            tracer.stamp(epoch, te.frac, active_clock);
+            let replans_at_event = driver.replans;
             let eff = driver.apply_mid_epoch(epoch, &te, system);
             if let Some(s) = eff.new_sim {
                 sim = s;
+            }
+            if traced {
+                if eff.effective {
+                    let mut fields = vec![
+                        ("mid", Json::Bool(true)),
+                        ("n_after", Json::Num(driver.n() as f64)),
+                        ("abrupt", Json::Bool(eff.abrupt)),
+                        ("added", Json::Num(eff.added as f64)),
+                    ];
+                    if let Some(a) = eff.removed {
+                        fields.push(("removed_slot", Json::Num(a as f64)));
+                    }
+                    if let Some(a) = eff.ghosted {
+                        fields.push(("ghost_slot", Json::Num(a as f64)));
+                    }
+                    tracer.rec("event", te.event.kind(), fields);
+                } else {
+                    tracer.rec("event", "inert", vec![("mid", Json::Bool(true))]);
+                }
+                if driver.replans > replans_at_event {
+                    tracer.rec(
+                        "replan",
+                        "membership",
+                        vec![("count", Json::Num((driver.replans - replans_at_event) as f64))],
+                    );
+                }
             }
             if !eff.effective {
                 continue;
@@ -967,7 +1156,14 @@ pub fn run_scenario(
                 let gone = local.remove(a);
                 if eff.abrupt {
                     if ckpt.enabled() {
-                        ckpt_wasted += ckpt.rollback_once(active_clock);
+                        let rb = ckpt.rollback_once(active_clock);
+                        ckpt_wasted += rb;
+                        if rb > 0.0 {
+                            dstats.rollbacks += 1;
+                            if traced {
+                                tracer.rec("ckpt", "rollback", vec![("secs", Json::Num(rb))]);
+                            }
+                        }
                     } else if total > 0.0 {
                         redundant += te.frac * w.epoch_samples as f64 * gone / total;
                     }
@@ -976,14 +1172,36 @@ pub fn run_scenario(
                     want_replan = true;
                 } else {
                     redispatch(&mut local, gone);
+                    dstats.redispatches += 1;
+                    if traced {
+                        tracer.rec(
+                            "plan",
+                            "redispatch",
+                            vec![
+                                ("gone", Json::Num(gone)),
+                                ("slots", Json::Num(local.len() as f64)),
+                            ],
+                        );
+                    }
                 }
             }
             if let Some(a) = eff.ghosted {
                 // silent death: the slot stays (the system doesn't know,
                 // so not even Immediate timing can replan yet); the
                 // runtime re-dispatches at step time (driver.step)
+                dstats.ghost_transitions += 1;
+                if traced {
+                    tracer.rec_node("detect", "ghost", a, vec![]);
+                }
                 if ckpt.enabled() {
-                    ckpt_wasted += ckpt.rollback_once(active_clock);
+                    let rb = ckpt.rollback_once(active_clock);
+                    ckpt_wasted += rb;
+                    if rb > 0.0 {
+                        dstats.rollbacks += 1;
+                        if traced {
+                            tracer.rec("ckpt", "rollback", vec![("secs", Json::Num(rb))]);
+                        }
+                    }
                 } else if total > 0.0 {
                     redundant += te.frac * w.epoch_samples as f64 * local[a] / total;
                 }
@@ -1003,9 +1221,20 @@ pub fn run_scenario(
                 // the event's frac (φ moves slowly — the epoch's value is
                 // current enough) and runs the rest of the epoch under it
                 let fresh = system.plan_epoch(epoch, phi);
+                drain_solves(tracer, &mut all_solves);
                 local = fresh.local_f64();
                 cur_batch = fresh.total;
                 replans_immediate += 1;
+                if traced {
+                    tracer.rec(
+                        "replan",
+                        "immediate",
+                        vec![
+                            ("total", Json::Num(cur_batch as f64)),
+                            ("slots", Json::Num(local.len() as f64)),
+                        ],
+                    );
+                }
             }
         }
 
@@ -1014,14 +1243,82 @@ pub fn run_scenario(
         let t = measure(&mut driver, &mut sim, system, &local, cfg.reps);
         let seg = Segment { batch: cur_batch, t_batch: t, weight: 1.0 - cursor, wasted_secs: 0.0 };
         let dur = convergence::segment_steps(w, &seg) * t;
-        ckpt_cost += ckpt.advance(active_clock, active_clock + dur);
+        let taken_before = ckpt.taken;
+        let cost = ckpt.advance(active_clock, active_clock + dur);
+        ckpt_cost += cost;
+        dstats.segments += 1;
+        dstats.ckpt_writes += ckpt.taken - taken_before;
+        if traced {
+            tracer.rec(
+                "segment",
+                "run",
+                vec![
+                    ("t0", Json::Num(active_clock)),
+                    ("t1", Json::Num(active_clock + dur)),
+                    ("batch", Json::Num(cur_batch as f64)),
+                    ("t_batch", Json::Num(t)),
+                    ("weight", Json::Num(1.0 - cursor)),
+                ],
+            );
+            if ckpt.taken > taken_before {
+                tracer.rec(
+                    "ckpt",
+                    "write",
+                    vec![
+                        ("taken", Json::Num((ckpt.taken - taken_before) as f64)),
+                        ("cost_secs", Json::Num(cost)),
+                    ],
+                );
+            }
+        }
         active_clock += dur;
         let wasted =
             if cur_batch > 0 { redundant / cur_batch as f64 * t } else { 0.0 };
         segments.push(Segment { wasted_secs: wasted + ckpt_wasted, ..seg });
+        if segments.len() > 1 {
+            dstats.mid_epoch_splits += 1;
+        }
 
         // ---- observation-driven detection closes the epoch
+        tracer.stamp(epoch, 1.0, active_clock);
+        let replans_at_close = driver.replans;
         let detected = driver.end_epoch(epoch, system);
+        drain_solves(tracer, &mut all_solves);
+        dstats.detect_verdicts += detected;
+        if traced {
+            // the exact per-epoch waste contribution: summing these
+            // records in epoch order reproduces
+            // `RunReport.wasted_work_secs` bit-for-bit (the ledger the
+            // `trace summarize` reconciliation checks)
+            tracer.rec("waste", "epoch", vec![("secs", Json::Num(wasted + ckpt_wasted))]);
+            if detected > 0 {
+                tracer.rec("detect", "verdicts", vec![("count", Json::Num(detected as f64))]);
+            }
+            if let Some(diag) = driver.detector_diagnostics() {
+                for d in diag {
+                    let node = d.node;
+                    tracer.rec_node("detect", "node", node, d.to_fields());
+                }
+            }
+            if driver.replans > replans_at_close {
+                tracer.rec(
+                    "replan",
+                    "membership",
+                    vec![("count", Json::Num((driver.replans - replans_at_close) as f64))],
+                );
+            }
+            tracer.rec(
+                "epoch",
+                "end",
+                vec![
+                    ("n", Json::Num(driver.n() as f64)),
+                    ("events", Json::Num(boundary_events as f64)),
+                    ("mid_events", Json::Num(mid_events as f64)),
+                    ("detected", Json::Num(detected as f64)),
+                    ("ckpt_cost_secs", Json::Num(ckpt_cost)),
+                ],
+            );
+        }
         side.push((driver.n(), boundary_events, mid_events, detected));
         // the only overhead charged to the clock is the (deterministic)
         // checkpoint write cost, so the run output stays bit-identical
@@ -1050,7 +1347,15 @@ pub fn run_scenario(
 
     let final_n = driver.n();
     let replans = driver.replans;
-    RunReport {
+    let (solver_stats, driver_stats) = if traced {
+        // catch any solves after the last epoch close, then deactivate
+        drain_solves(tracer, &mut all_solves);
+        probe_stop();
+        (Some(SolverStats::from_records(&all_solves)), Some(dstats))
+    } else {
+        (None, None)
+    };
+    let report = RunReport {
         system: system.name().to_string(),
         cluster: base.name.clone(),
         workload: w.name.to_string(),
@@ -1072,7 +1377,28 @@ pub fn run_scenario(
         bootstrap_epochs: system.bootstrap_epochs(),
         final_n,
         detection: driver.finish(),
+        solver_stats,
+        driver_stats,
+    };
+    if traced {
+        tracer.rec(
+            "run",
+            "end",
+            vec![
+                ("epochs", Json::Num(report.rows.len() as f64)),
+                (
+                    "time_to_target",
+                    report.time_to_target.map(Json::Num).unwrap_or(Json::Null),
+                ),
+                ("wasted_work_secs", Json::Num(report.wasted_work_secs)),
+                ("checkpoints_taken", Json::Num(report.checkpoints_taken as f64)),
+                ("replans", Json::Num(report.replans as f64)),
+                ("replans_immediate", Json::Num(report.replans_immediate as f64)),
+                ("events_applied", Json::Num(report.events_applied as f64)),
+            ],
+        );
     }
+    report
 }
 
 #[cfg(test)]

@@ -30,6 +30,11 @@
 //!   systems are constructed), the declarative [`api::ExperimentSpec`]
 //!   (`cannikin run spec.json`), and the machine-readable
 //!   [`api::RunReport`] every execution path emits.
+//! * **Observability** — [`obs`] is the deterministic tracing layer
+//!   threaded through the one driver path (`--trace-out`, the
+//!   `cannikin trace` tooling, and the solver probe behind
+//!   `RunReport.solver_stats`); traces are bit-identical per seed once
+//!   `wall_*` fields are stripped (see `OBSERVABILITY.md`).
 
 pub mod api;
 pub mod baselines;
@@ -44,6 +49,7 @@ pub mod goodput;
 pub mod gradsync;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod optperf;
 pub mod perfmodel;
 pub mod runtime;

@@ -10,6 +10,7 @@
 //!   figures   regenerate the paper's tables & figures (results/*.csv)
 //!   predict   print the OptPerf allocation for a cluster + batch size
 //!   inspect   show an artifact directory's manifest
+//!   trace     tooling over --trace-out files: summarize / diff / export-chrome
 //!
 //! Every system is constructed through the `api::SystemRegistry` —
 //! `--system help` enumerates it — and `sim` / `elastic` / `run` /
@@ -32,6 +33,7 @@ use cannikin::benchkit::Table;
 use cannikin::coordinator::{train, BatchPolicy, TrainConfig};
 use cannikin::elastic::{self, CheckpointPolicy, DetectionMode, DetectionStats, ReplanTiming};
 use cannikin::figures;
+use cannikin::obs::{tools, Tracer};
 use cannikin::optperf;
 use cannikin::runtime::Manifest;
 use cannikin::simulator::workload;
@@ -46,15 +48,19 @@ USAGE:
   cannikin train   [--artifacts DIR] [--cluster a|b|c | --cluster-file F.json] [--workload W]
                    [--system S] [--epochs N] [--steps N] [--lr F] [--fixed-batch B]
                    [--corpus-kb N] [--seed N] [--log FILE] [--trace T] [--detect D]
-                   [--ckpt-period S] [--ckpt-cost S] [--replan R]
+                   [--ckpt-period S] [--ckpt-cost S] [--replan R] [--trace-out FILE]
   cannikin sim     [--cluster a|b|c] [--workload W] [--system S] [--epochs N] [--seed N]
                    [--json]
   cannikin elastic [--cluster a|b|c] [--workload W] [--system S] [--trace T]
                    [--epochs N] [--seed N] [--save-trace FILE] [--detect D]
-                   [--ckpt-period S] [--ckpt-cost S] [--replan R] [--json]
-  cannikin run     SPEC.json [--json]
-  cannikin compare SPEC.json [--systems S1,S2,…] [--json]
+                   [--ckpt-period S] [--ckpt-cost S] [--replan R] [--trace-out FILE]
+                   [--json]
+  cannikin run     SPEC.json [--trace-out FILE] [--json]
+  cannikin compare SPEC.json [--systems S1,S2,…] [--trace-out FILE] [--json]
   cannikin report  FILE.json|-
+  cannikin trace   summarize FILE.jsonl
+  cannikin trace   diff A.jsonl B.jsonl
+  cannikin trace   export-chrome FILE.jsonl [--out OUT.json]
   cannikin figures [--fig 5|6|7|8|9|10|t5|pred|overlap|c|all]
   cannikin predict [--cluster a|b|c] [--workload W] --batch B
   cannikin inspect [--artifacts DIR]
@@ -77,7 +83,14 @@ replan (R):  boundary  — bridge a mid-epoch departure to the next epoch
                          boundary with a pro-rata re-dispatch (default)
              immediate — re-solve the §4.5 plan at the event's offset
 SPEC.json:   a declarative ExperimentSpec — see `rust/src/api/spec.rs` and
-             specs/smoke.json; `run --json | cannikin report -` round-trips";
+             specs/smoke.json; `run --json | cannikin report -` round-trips
+tracing:     --trace-out FILE writes a deterministic JSONL trace of the run
+             (simulated-clock stamps; solver wall latencies in wall_* fields
+             only — see OBSERVABILITY.md).  `compare` derives one file per
+             system from FILE.  `trace summarize` prints per-category counts,
+             solver latency percentiles and the wasted-work ledger;
+             `trace diff` compares two traces ignoring wall_* fields;
+             `trace export-chrome` emits chrome://tracing / Perfetto JSON";
 
 /// (flag, takes-value) validation spec of one subcommand.
 type FlagSpec = &'static [(&'static str, bool)];
@@ -100,6 +113,7 @@ const TRAIN_FLAGS: FlagSpec = &[
     ("ckpt-period", true),
     ("ckpt-cost", true),
     ("replan", true),
+    ("trace-out", true),
 ];
 const SIM_FLAGS: FlagSpec = &[
     ("cluster", true),
@@ -123,11 +137,13 @@ const ELASTIC_FLAGS: FlagSpec = &[
     ("ckpt-period", true),
     ("ckpt-cost", true),
     ("replan", true),
+    ("trace-out", true),
     ("json", false),
 ];
-const RUN_FLAGS: FlagSpec = &[("json", false)];
-const COMPARE_FLAGS: FlagSpec = &[("systems", true), ("json", false)];
+const RUN_FLAGS: FlagSpec = &[("trace-out", true), ("json", false)];
+const COMPARE_FLAGS: FlagSpec = &[("systems", true), ("trace-out", true), ("json", false)];
 const REPORT_FLAGS: FlagSpec = &[];
+const TRACE_FLAGS: FlagSpec = &[("out", true)];
 const FIGURES_FLAGS: FlagSpec = &[("fig", true)];
 const PREDICT_FLAGS: FlagSpec = &[
     ("cluster", true),
@@ -232,6 +248,25 @@ fn run() -> Result<()> {
             let (pos, _) = parse_args("report", rest, REPORT_FLAGS, 1)?;
             cmd_report(&pos[0])
         }
+        "trace" => {
+            let actions = ["summarize", "diff", "export-chrome"];
+            let action = rest.first().map(|s| s.as_str()).unwrap_or("");
+            let n_positional = match action {
+                "diff" => 3,
+                "summarize" | "export-chrome" => 2,
+                other => {
+                    let hint = suggest(other, actions)
+                        .map(|s| format!(" (did you mean `{s}`?)"))
+                        .unwrap_or_default();
+                    bail!(
+                        "`trace` expects an action{hint}: summarize FILE.jsonl | \
+                         diff A.jsonl B.jsonl | export-chrome FILE.jsonl [--out OUT.json]"
+                    )
+                }
+            };
+            let (pos, flags) = parse_args("trace", rest, TRACE_FLAGS, n_positional)?;
+            cmd_trace(&pos, &flags)
+        }
         "figures" => {
             let (_, flags) = parse_args("figures", rest, FIGURES_FLAGS, 0)?;
             cmd_figures(&flags)
@@ -251,7 +286,7 @@ fn run() -> Result<()> {
         other => {
             let subs = [
                 "train", "sim", "elastic", "run", "compare", "report", "figures", "predict",
-                "inspect",
+                "inspect", "trace",
             ];
             let hint = suggest(other, subs)
                 .map(|s| format!(" (did you mean `{s}`?)"))
@@ -325,6 +360,24 @@ fn replan_arg(flags: &HashMap<String, String>) -> Result<ReplanTiming> {
     let name = get(flags, "replan", "boundary");
     ReplanTiming::by_name(name)
         .ok_or_else(|| anyhow!("unknown replan timing {name:?} (boundary|immediate)"))
+}
+
+/// `--trace-out FILE` → a JSONL tracer (disabled when the flag is absent;
+/// the untraced path stays bit-for-bit the legacy one).
+fn tracer_arg(flags: &HashMap<String, String>) -> Result<Tracer> {
+    match flags.get("trace-out") {
+        Some(p) => Tracer::jsonl(Path::new(p)),
+        None => Ok(Tracer::disabled()),
+    }
+}
+
+/// Per-system trace path for `compare --trace-out FILE`: `out/t.jsonl` +
+/// system `ddp` → `out/t.ddp.jsonl` (one file per run, no clobbering).
+fn per_system_trace_path(base: &str, system: &str) -> PathBuf {
+    let p = Path::new(base);
+    let stem = p.file_stem().and_then(|s| s.to_str()).unwrap_or("trace");
+    let ext = p.extension().and_then(|s| s.to_str()).unwrap_or("jsonl");
+    p.with_file_name(format!("{stem}.{system}.{ext}"))
 }
 
 /// `--system` helper shared by `sim`/`elastic`: `help` prints the registry
@@ -470,7 +523,9 @@ fn cmd_elastic(flags: &HashMap<String, String>) -> Result<()> {
         replan: replan_arg(flags)?,
         ..Default::default()
     };
-    let r = api::run(&c, &w, &trace, system.as_mut(), &cfg);
+    let mut tracer = tracer_arg(flags)?;
+    let r = api::run_traced(&c, &w, &trace, system.as_mut(), &cfg, &mut tracer);
+    tracer.finish()?;
     if json {
         println!("{}", r.to_json().to_string_pretty());
         return Ok(());
@@ -502,7 +557,7 @@ fn cmd_run(spec_path: &str, flags: &HashMap<String, String>) -> Result<()> {
         );
     }
     let w = spec.resolve_workload()?;
-    let r = api::run_spec(&spec, &reg)?;
+    let r = api::run_spec_traced(&spec, &reg, tracer_arg(flags)?)?;
     if json {
         println!("{}", r.to_json().to_string_pretty());
         return Ok(());
@@ -538,7 +593,14 @@ fn cmd_compare(spec_path: &str, flags: &HashMap<String, String>) -> Result<()> {
             spec.max_epochs
         );
     }
-    let reports = api::compare(&spec, &systems, &reg)?;
+    let reports = match flags.get("trace-out") {
+        Some(base) => api::compare_traced(&spec, &systems, &reg, |s| {
+            let path = per_system_trace_path(base, s);
+            eprintln!("trace for {s} -> {}", path.display());
+            Tracer::jsonl(&path)
+        })?,
+        None => api::compare(&spec, &systems, &reg)?,
+    };
     if json {
         println!(
             "{}",
@@ -591,6 +653,40 @@ fn cmd_report(path: &str) -> Result<()> {
     Ok(())
 }
 
+fn cmd_trace(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    match pos[0].as_str() {
+        "summarize" => {
+            let recs = tools::load_trace(Path::new(&pos[1]))?;
+            let s = tools::summarize(&recs)?;
+            println!("{}", s.render());
+            Ok(())
+        }
+        "diff" => {
+            tools::diff_files(Path::new(&pos[1]), Path::new(&pos[2]))?;
+            println!("traces are identical (wall_* fields ignored)");
+            Ok(())
+        }
+        "export-chrome" => {
+            let recs = tools::load_trace(Path::new(&pos[1]))?;
+            let chrome = tools::export_chrome(&recs)?;
+            let out = match flags.get("out") {
+                Some(o) => PathBuf::from(o),
+                None => Path::new(&pos[1]).with_extension("chrome.json"),
+            };
+            std::fs::write(&out, chrome.to_string_compact())
+                .map_err(|e| anyhow!("writing {}: {e}", out.display()))?;
+            println!(
+                "chrome trace written to {} ({} records) — load it in chrome://tracing \
+                 or https://ui.perfetto.dev",
+                out.display(),
+                recs.len()
+            );
+            Ok(())
+        }
+        other => bail!("unknown trace action {other:?}"),
+    }
+}
+
 fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     let mut cfg = TrainConfig::quick(
         PathBuf::from(get(flags, "artifacts", "artifacts/tiny")),
@@ -609,6 +705,9 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     }
     if let Some(log) = flags.get("log") {
         cfg.log_path = Some(PathBuf::from(log));
+    }
+    if let Some(t) = flags.get("trace-out") {
+        cfg.trace_out = Some(PathBuf::from(t));
     }
     cfg.trace = trace_arg(flags, &cfg.cluster, cfg.epochs, cfg.seed)?;
     cfg.detect = detect_arg(flags)?;
@@ -703,4 +802,76 @@ fn cmd_inspect(flags: &HashMap<String, String>) -> Result<()> {
         println!("  … {} more", m.params.len() - 8);
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn trace_out_is_accepted_on_all_four_traced_subcommands() {
+        for (sub, spec, n_pos, args) in [
+            ("train", TRAIN_FLAGS, 0usize, vec!["--trace-out", "t.jsonl"]),
+            ("elastic", ELASTIC_FLAGS, 0, vec!["--trace-out", "t.jsonl"]),
+            ("run", RUN_FLAGS, 1, vec!["spec.json", "--trace-out", "t.jsonl"]),
+            ("compare", COMPARE_FLAGS, 1, vec!["spec.json", "--trace-out", "t.jsonl"]),
+        ] {
+            let (_, flags) = parse_args(sub, &argv(&args), spec, n_pos).unwrap();
+            assert_eq!(flags.get("trace-out").map(|v| v.as_str()), Some("t.jsonl"), "{sub}");
+        }
+    }
+
+    #[test]
+    fn misspelled_trace_out_gets_a_suggestion() {
+        let err =
+            parse_args("elastic", &argv(&["--trace-uot", "t.jsonl"]), ELASTIC_FLAGS, 0)
+                .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("trace-out"), "{msg}");
+    }
+
+    #[test]
+    fn trace_out_requires_a_value() {
+        let err = parse_args("elastic", &argv(&["--trace-out"]), ELASTIC_FLAGS, 0).unwrap_err();
+        assert!(format!("{err:#}").contains("expects a value"));
+    }
+
+    #[test]
+    fn trace_subcommand_errors_clearly_on_a_missing_file() {
+        let no_flags = HashMap::new();
+        let err = cmd_trace(&argv(&["summarize", "/definitely/not/here.jsonl"]), &no_flags)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("here.jsonl"), "the error must name the file: {msg}");
+        let err =
+            cmd_trace(&argv(&["diff", "/nope/a.jsonl", "/nope/b.jsonl"]), &no_flags).unwrap_err();
+        assert!(format!("{err:#}").contains("a.jsonl"));
+        let err = cmd_trace(&argv(&["export-chrome", "/nope/c.jsonl"]), &no_flags).unwrap_err();
+        assert!(format!("{err:#}").contains("c.jsonl"));
+    }
+
+    #[test]
+    fn trace_subcommand_errors_on_an_unparseable_file() {
+        let p = std::env::temp_dir()
+            .join(format!("cannikin-cli-badtrace-{}.jsonl", std::process::id()));
+        std::fs::write(&p, "this is not json\n").unwrap();
+        let err = cmd_trace(&argv(&["summarize", p.to_str().unwrap()]), &HashMap::new())
+            .unwrap_err();
+        std::fs::remove_file(&p).unwrap();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("cannikin-cli-badtrace"), "{msg}");
+    }
+
+    #[test]
+    fn per_system_trace_paths_do_not_collide() {
+        let a = per_system_trace_path("out/trace.jsonl", "cannikin");
+        let b = per_system_trace_path("out/trace.jsonl", "ddp");
+        assert_ne!(a, b);
+        assert_eq!(a, PathBuf::from("out/trace.cannikin.jsonl"));
+        assert_eq!(per_system_trace_path("t", "ddp"), PathBuf::from("t.ddp.jsonl"));
+    }
 }

@@ -1,7 +1,7 @@
 //! Metrics emitters: CSV tables and JSONL event logs under `results/`.
 
-use std::fs;
-use std::io::Write as _;
+use std::fs::{self, File};
+use std::io::{BufWriter, Write as _};
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
@@ -9,8 +9,14 @@ use anyhow::{Context, Result};
 use crate::util::json::Json;
 
 /// Append-only JSONL event log.
+///
+/// Holds one buffered writer for the lifetime of the log (the file is
+/// opened exactly once — historically every `log()` re-opened it, which
+/// made high-frequency emitters like the trace sink pay a syscall pair
+/// per record).  Writes surface on [`JsonlLog::flush`] or drop.
 pub struct JsonlLog {
     path: PathBuf,
+    w: BufWriter<File>,
 }
 
 impl JsonlLog {
@@ -19,21 +25,31 @@ impl JsonlLog {
         if let Some(dir) = path.parent() {
             fs::create_dir_all(dir)?;
         }
-        fs::write(&path, "")?;
-        Ok(JsonlLog { path })
+        let f = File::create(&path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        Ok(JsonlLog { path, w: BufWriter::new(f) })
     }
 
-    pub fn log(&self, event: &Json) -> Result<()> {
-        let mut f = fs::OpenOptions::new()
-            .append(true)
-            .open(&self.path)
-            .with_context(|| format!("opening {}", self.path.display()))?;
-        writeln!(f, "{}", event.to_string_compact())?;
+    pub fn log(&mut self, event: &Json) -> Result<()> {
+        writeln!(self.w, "{}", event.to_string_compact())
+            .with_context(|| format!("writing {}", self.path.display()))?;
         Ok(())
+    }
+
+    /// Flush buffered records to disk.  Call at the end of a run;
+    /// readers of a live log must flush first.
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush().with_context(|| format!("flushing {}", self.path.display()))
     }
 
     pub fn path(&self) -> &Path {
         &self.path
+    }
+}
+
+impl Drop for JsonlLog {
+    fn drop(&mut self) {
+        let _ = self.w.flush();
     }
 }
 
@@ -51,11 +67,19 @@ pub fn write_csv(path: impl AsRef<Path>, header: &[&str], rows: &[Vec<String>]) 
     Ok(())
 }
 
-/// results/ directory helper (created on demand).
+/// results/ directory helper (created on demand).  Prefers the source
+/// tree's `results/`; when the crate directory baked in at compile time
+/// is not usable at run time (installed binary, different machine),
+/// falls back to `./results` under the current working directory
+/// instead of failing down a panic path.
 pub fn results_dir() -> PathBuf {
     let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
-    let _ = fs::create_dir_all(&d);
-    d
+    if fs::create_dir_all(&d).is_ok() {
+        return d;
+    }
+    let cwd = PathBuf::from("results");
+    let _ = fs::create_dir_all(&cwd);
+    cwd
 }
 
 #[cfg(test)]
@@ -69,9 +93,10 @@ mod tests {
     #[test]
     fn jsonl_appends_parseable_lines() {
         let p = tmp("log.jsonl");
-        let log = JsonlLog::create(&p).unwrap();
+        let mut log = JsonlLog::create(&p).unwrap();
         log.log(&Json::obj(vec![("epoch", Json::Num(1.0))])).unwrap();
         log.log(&Json::obj(vec![("epoch", Json::Num(2.0))])).unwrap();
+        log.flush().unwrap();
         let text = fs::read_to_string(&p).unwrap();
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines.len(), 2);
@@ -82,10 +107,31 @@ mod tests {
     }
 
     #[test]
+    fn jsonl_buffers_until_flush_and_flushes_on_drop() {
+        let p = tmp("buffered.jsonl");
+        {
+            let mut log = JsonlLog::create(&p).unwrap();
+            log.log(&Json::obj(vec![("k", Json::Num(1.0))])).unwrap();
+            // a single small record sits in the buffer until flush/drop
+            assert_eq!(fs::read_to_string(&p).unwrap(), "");
+        }
+        // dropped: the record must be on disk now
+        let text = fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 1);
+        fs::remove_file(p).unwrap();
+    }
+
+    #[test]
     fn csv_writes_header_and_rows() {
         let p = tmp("t.csv");
         write_csv(&p, &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
         assert_eq!(fs::read_to_string(&p).unwrap(), "a,b\n1,2\n");
         fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn results_dir_is_usable() {
+        let d = results_dir();
+        assert!(d.exists(), "{}", d.display());
     }
 }

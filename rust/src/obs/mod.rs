@@ -1,0 +1,359 @@
+//! Deterministic tracing + instrumentation layer (observability).
+//!
+//! Cannikin's premise is that *measurement* drives the §4 performance
+//! model; this module turns the same discipline on our own driver.  A
+//! [`Tracer`] threads through the one `ElasticDriver` execution path
+//! (`run_scenario` / the real-numerics leader) and emits typed
+//! [`TraceRecord`]s to a pluggable [`TraceSink`]:
+//!
+//! * [`NullSink`] — the default; a disabled tracer is a no-op and the
+//!   legacy (untraced) output stays bit-for-bit identical;
+//! * [`RingSink`] — capped in-memory buffer for tests and embedding;
+//! * [`JsonlSink`] — one JSON object per line via [`crate::metrics::JsonlLog`]
+//!   (the `--trace-out FILE` path).
+//!
+//! ## Determinism contract
+//!
+//! Records are stamped with **simulated** time only — `epoch`, `frac`
+//! and the active-training clock `t` — never wall-clock, so two runs of
+//! the same spec + seed produce byte-identical traces.  The single
+//! exception is solver wall latency (the ROADMAP item-3 baseline),
+//! which lives in clearly marked `wall_*` fields: strip those and the
+//! byte-identity contract holds (`cannikin trace diff` does exactly
+//! that).  See `OBSERVABILITY.md` for the record schema and the
+//! `chrome://tracing` / Perfetto workflow.
+//!
+//! Categories in the current schema: `run`, `plan`, `solve`, `event`,
+//! `segment`, `detect`, `ckpt`, `waste`, `replan`, `step`, `epoch`.
+//!
+//! The `optperf` solver is instrumented through a thread-local probe
+//! ([`probe`]) so the hot path pays nothing when no trace is active;
+//! per-run rollups land in `RunReport.solver_stats` /
+//! `RunReport.driver_stats` ([`stats`]).
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::metrics::JsonlLog;
+use crate::util::json::Json;
+
+pub mod probe;
+pub mod stats;
+pub mod tools;
+
+pub use probe::{probe_active, probe_drain, probe_start, probe_stop, SolveRecord};
+pub use stats::{DriverStats, SolverStats};
+
+/// One structured trace record.  Serializes to a flat JSON object:
+/// the position stamp (`cat`, `kind`, `epoch`, `frac`, `t`, optional
+/// `node`), the deterministic payload fields verbatim, and wall-clock
+/// fields under a `wall_` key prefix (the only non-deterministic part).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRecord {
+    pub cat: &'static str,
+    pub kind: &'static str,
+    pub epoch: usize,
+    pub frac: f64,
+    /// active-training clock (simulated seconds)
+    pub t: f64,
+    pub node: Option<usize>,
+    /// deterministic payload (keys must not start with `wall_`)
+    pub fields: Vec<(&'static str, Json)>,
+    /// wall-clock payload, serialized with a `wall_` prefix
+    pub wall: Vec<(&'static str, f64)>,
+}
+
+impl TraceRecord {
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("cat", Json::Str(self.cat.to_string())),
+            ("kind", Json::Str(self.kind.to_string())),
+            ("epoch", Json::Num(self.epoch as f64)),
+            ("frac", Json::Num(self.frac)),
+            ("t", Json::Num(self.t)),
+        ];
+        if let Some(n) = self.node {
+            pairs.push(("node", Json::Num(n as f64)));
+        }
+        for (k, v) in &self.fields {
+            debug_assert!(!k.starts_with("wall_"), "deterministic field {k:?} uses wall_ prefix");
+            pairs.push((k, v.clone()));
+        }
+        let mut obj = match Json::obj(pairs) {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        for (k, v) in &self.wall {
+            obj.insert(format!("wall_{k}"), Json::Num(*v));
+        }
+        Json::Obj(obj)
+    }
+}
+
+/// Destination for trace records.  Implementations must preserve the
+/// emission order (the order is part of the determinism contract).
+pub trait TraceSink {
+    fn emit(&mut self, rec: &TraceRecord);
+    fn flush(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Discards everything (the disabled-tracer backing).
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn emit(&mut self, _rec: &TraceRecord) {}
+}
+
+/// Shared handle onto a [`RingSink`]'s buffer: the test (or embedder)
+/// keeps the handle, the tracer owns the sink, and the records are read
+/// back after the run.  Single-threaded by design, like the driver.
+#[derive(Clone, Default)]
+pub struct RingHandle(Rc<RefCell<VecDeque<Json>>>);
+
+impl RingHandle {
+    pub fn records(&self) -> Vec<Json> {
+        self.0.borrow().iter().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.borrow().is_empty()
+    }
+}
+
+/// Capped in-memory ring buffer (oldest records evicted first).
+pub struct RingSink {
+    cap: usize,
+    buf: RingHandle,
+}
+
+impl RingSink {
+    pub fn new(cap: usize) -> (Self, RingHandle) {
+        let handle = RingHandle::default();
+        (RingSink { cap: cap.max(1), buf: handle.clone() }, handle)
+    }
+}
+
+impl TraceSink for RingSink {
+    fn emit(&mut self, rec: &TraceRecord) {
+        let mut buf = self.buf.0.borrow_mut();
+        if buf.len() == self.cap {
+            buf.pop_front();
+        }
+        buf.push_back(rec.to_json());
+    }
+}
+
+/// JSONL file sink: one compact JSON object per line, buffered writes
+/// via [`JsonlLog`], flushed explicitly at the end of the run.
+pub struct JsonlSink {
+    log: JsonlLog,
+}
+
+impl JsonlSink {
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        Ok(JsonlSink { log: JsonlLog::create(path)? })
+    }
+}
+
+impl TraceSink for JsonlSink {
+    fn emit(&mut self, rec: &TraceRecord) {
+        // buffered; IO errors surface at flush() where they are actionable
+        let _ = self.log.log(&rec.to_json());
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        self.log.flush()
+    }
+}
+
+/// The tracer the driver threads through the execution path.  Holds the
+/// current position stamp (epoch / frac / active clock) so emission
+/// sites state only their payload.  A disabled tracer ([`Tracer::disabled`])
+/// skips all work — the zero-overhead legacy path.
+pub struct Tracer {
+    sink: Option<Box<dyn TraceSink>>,
+    epoch: usize,
+    frac: f64,
+    t: f64,
+    emitted: usize,
+}
+
+impl Tracer {
+    /// The no-op tracer every untraced caller uses.
+    pub fn disabled() -> Self {
+        Tracer { sink: None, epoch: 0, frac: 0.0, t: 0.0, emitted: 0 }
+    }
+
+    pub fn to_sink(sink: Box<dyn TraceSink>) -> Self {
+        Tracer { sink: Some(sink), epoch: 0, frac: 0.0, t: 0.0, emitted: 0 }
+    }
+
+    /// JSONL tracer writing to `path` (the `--trace-out` path).
+    pub fn jsonl(path: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self::to_sink(Box::new(JsonlSink::create(path)?)))
+    }
+
+    /// In-memory tracer + handle to read the records back.
+    pub fn ring(cap: usize) -> (Self, RingHandle) {
+        let (sink, handle) = RingSink::new(cap);
+        (Self::to_sink(Box::new(sink)), handle)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Records emitted so far.
+    pub fn emitted(&self) -> usize {
+        self.emitted
+    }
+
+    /// Move the position stamp (the driver calls this as simulated time
+    /// advances; every subsequent record carries the new stamp).
+    pub fn stamp(&mut self, epoch: usize, frac: f64, t_active: f64) {
+        if self.sink.is_some() {
+            self.epoch = epoch;
+            self.frac = frac;
+            self.t = t_active;
+        }
+    }
+
+    /// Emit a record at the current stamp.
+    pub fn rec(&mut self, cat: &'static str, kind: &'static str, fields: Vec<(&'static str, Json)>) {
+        self.emit(cat, kind, None, fields, Vec::new());
+    }
+
+    /// Emit a node-scoped record at the current stamp.
+    pub fn rec_node(
+        &mut self,
+        cat: &'static str,
+        kind: &'static str,
+        node: usize,
+        fields: Vec<(&'static str, Json)>,
+    ) {
+        self.emit(cat, kind, Some(node), fields, Vec::new());
+    }
+
+    /// Emit a record carrying wall-clock fields (serialized under the
+    /// `wall_` prefix so `trace diff` can strip them).
+    pub fn rec_wall(
+        &mut self,
+        cat: &'static str,
+        kind: &'static str,
+        fields: Vec<(&'static str, Json)>,
+        wall: Vec<(&'static str, f64)>,
+    ) {
+        self.emit(cat, kind, None, fields, wall);
+    }
+
+    fn emit(
+        &mut self,
+        cat: &'static str,
+        kind: &'static str,
+        node: Option<usize>,
+        fields: Vec<(&'static str, Json)>,
+        wall: Vec<(&'static str, f64)>,
+    ) {
+        let Some(sink) = self.sink.as_mut() else { return };
+        let rec = TraceRecord {
+            cat,
+            kind,
+            epoch: self.epoch,
+            frac: self.frac,
+            t: self.t,
+            node,
+            fields,
+            wall,
+        };
+        sink.emit(&rec);
+        self.emitted += 1;
+    }
+
+    /// Flush the sink (call once at the end of the run; JSONL sinks
+    /// surface buffered IO errors here).
+    pub fn finish(&mut self) -> Result<()> {
+        match self.sink.as_mut() {
+            Some(s) => s.flush(),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_emits_nothing_and_flushes_ok() {
+        let mut t = Tracer::disabled();
+        assert!(!t.enabled());
+        t.stamp(3, 0.5, 12.0);
+        t.rec("event", "noop", vec![("x", Json::Num(1.0))]);
+        assert_eq!(t.emitted(), 0);
+        t.finish().unwrap();
+    }
+
+    #[test]
+    fn ring_sink_keeps_order_and_respects_cap() {
+        let (mut t, h) = Tracer::ring(3);
+        for i in 0..5 {
+            t.stamp(i, 0.0, i as f64);
+            t.rec("event", "tick", vec![("i", Json::Num(i as f64))]);
+        }
+        assert_eq!(t.emitted(), 5);
+        let recs = h.records();
+        assert_eq!(recs.len(), 3, "cap evicts the oldest");
+        let epochs: Vec<u64> =
+            recs.iter().map(|r| r.req("epoch").unwrap().as_u64().unwrap()).collect();
+        assert_eq!(epochs, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn record_serializes_stamp_payload_and_prefixed_wall_fields() {
+        let rec = TraceRecord {
+            cat: "solve",
+            kind: "warm",
+            epoch: 7,
+            frac: 0.25,
+            t: 99.5,
+            node: Some(2),
+            fields: vec![("solves", Json::Num(1.0))],
+            wall: vec![("secs", 0.0017)],
+        };
+        let j = rec.to_json();
+        assert_eq!(j.req("cat").unwrap().as_str().unwrap(), "solve");
+        assert_eq!(j.req("epoch").unwrap().as_u64().unwrap(), 7);
+        assert_eq!(j.req("node").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(j.req("solves").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(j.req("wall_secs").unwrap().as_f64().unwrap(), 0.0017);
+        assert!(j.get("secs").is_none(), "wall fields carry the prefix");
+    }
+
+    #[test]
+    fn jsonl_sink_writes_one_parseable_line_per_record() {
+        let p = std::env::temp_dir()
+            .join(format!("cannikin-obs-sink-{}.jsonl", std::process::id()));
+        let mut t = Tracer::jsonl(&p).unwrap();
+        t.stamp(0, 0.0, 0.0);
+        t.rec("run", "start", vec![("seed", Json::Num(7.0))]);
+        t.rec("run", "end", vec![]);
+        t.finish().unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        std::fs::remove_file(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in lines {
+            Json::parse(l).unwrap();
+        }
+    }
+}

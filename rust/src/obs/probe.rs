@@ -1,0 +1,111 @@
+//! Thread-local solver probe.
+//!
+//! The §4.5 OptPerf solver is a hot path (`ReplanTiming::Immediate`
+//! re-solves mid-epoch; the ROADMAP's multi-job scheduler would call it
+//! per decision), so its instrumentation must cost nothing when no
+//! trace is active.  Rather than threading a tracer through every
+//! `optperf::solve*` signature, the solver pushes [`SolveRecord`]s into
+//! a thread-local collector that is only installed while a traced run
+//! is in flight; the driver drains it at deterministic points (right
+//! after each `plan_epoch` call) and owns the trace emission order.
+//!
+//! When the probe is inactive — every legacy caller — `probe_push` is a
+//! single thread-local check and the solver never reads the wall clock.
+
+use std::cell::RefCell;
+
+/// One `optperf::solve` / `solve_with_hint` entry-point invocation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SolveRecord {
+    /// total batch size solved for
+    pub total_b: f64,
+    /// linear-system solves spent (the `Allocation.solves` count)
+    pub solves: usize,
+    /// final overlap state, e.g. `"mixed(3)"`
+    pub state: String,
+    /// a §4.5 warm-start hint was supplied
+    pub hinted: bool,
+    /// the hint validated (one-solve warm path)
+    pub hint_hit: bool,
+    /// wall-clock latency of the call — the ONLY non-deterministic
+    /// datum in the whole trace; serialized as `wall_secs`
+    pub wall_secs: f64,
+}
+
+thread_local! {
+    static PROBE: RefCell<Option<Vec<SolveRecord>>> = const { RefCell::new(None) };
+}
+
+/// Is a collector installed on this thread?  The solver gates its
+/// `Instant` reads on this, so untraced runs never touch the clock.
+pub fn probe_active() -> bool {
+    PROBE.with(|p| p.borrow().is_some())
+}
+
+/// Install a fresh collector (discarding any previous one).
+pub fn probe_start() {
+    PROBE.with(|p| *p.borrow_mut() = Some(Vec::new()));
+}
+
+/// Take the records accumulated since the last drain, leaving the
+/// probe active.  Returns empty when inactive.
+pub fn probe_drain() -> Vec<SolveRecord> {
+    PROBE.with(|p| match p.borrow_mut().as_mut() {
+        Some(v) => std::mem::take(v),
+        None => Vec::new(),
+    })
+}
+
+/// Deactivate the probe, returning any undrained records.
+pub fn probe_stop() -> Vec<SolveRecord> {
+    PROBE.with(|p| p.borrow_mut().take().unwrap_or_default())
+}
+
+/// Record one solve (no-op when the probe is inactive).
+pub fn probe_push(rec: SolveRecord) {
+    PROBE.with(|p| {
+        if let Some(v) = p.borrow_mut().as_mut() {
+            v.push(rec);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(b: f64) -> SolveRecord {
+        SolveRecord {
+            total_b: b,
+            solves: 1,
+            state: "all-compute".to_string(),
+            hinted: false,
+            hint_hit: false,
+            wall_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn inactive_probe_drops_records() {
+        assert!(!probe_active());
+        probe_push(rec(64.0));
+        assert!(probe_drain().is_empty());
+        assert!(probe_stop().is_empty());
+    }
+
+    #[test]
+    fn drain_keeps_the_probe_active_stop_deactivates() {
+        probe_start();
+        assert!(probe_active());
+        probe_push(rec(1.0));
+        probe_push(rec(2.0));
+        let first = probe_drain();
+        assert_eq!(first.len(), 2);
+        assert!(probe_active(), "drain must not deactivate");
+        probe_push(rec(3.0));
+        let rest = probe_stop();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].total_b, 3.0);
+        assert!(!probe_active());
+    }
+}

@@ -1,0 +1,201 @@
+//! Per-run instrumentation rollups embedded in `RunReport`.
+//!
+//! [`SolverStats`] aggregates the solver probe's [`SolveRecord`]s —
+//! solve-call counts, §4.5 hint effectiveness, and wall-latency
+//! percentiles (the committed ROADMAP item-3 baseline).  [`DriverStats`]
+//! counts the driver-side events a perf PR would want to attribute time
+//! to (segment splits, re-dispatches, ghost transitions, rollbacks,
+//! checkpoint writes, detector verdicts).  Both are `Option` fields on
+//! the report: absent (legacy / untraced) serializations omit the keys
+//! and parse back to `None`, so pre-PR6 report files keep round-tripping
+//! bit-for-bit.
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+use super::probe::SolveRecord;
+
+/// Rollup of every `optperf::solve*` call observed during a run.
+/// Counts are deterministic per seed; the `wall_*` latency fields are
+/// the only machine-dependent numbers in the report.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct SolverStats {
+    /// solver entry-point invocations
+    pub calls: usize,
+    /// linear-system solves spent across all calls
+    pub solves: usize,
+    /// calls that carried a §4.5 warm-start hint
+    pub hinted: usize,
+    /// hinted calls where the hint validated (one-solve warm path)
+    pub hint_hits: usize,
+    pub wall_total_secs: f64,
+    pub wall_p50_secs: f64,
+    pub wall_p90_secs: f64,
+    pub wall_p99_secs: f64,
+    pub wall_max_secs: f64,
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+impl SolverStats {
+    pub fn from_records(records: &[SolveRecord]) -> Self {
+        let mut walls: Vec<f64> = records.iter().map(|r| r.wall_secs).collect();
+        walls.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        SolverStats {
+            calls: records.len(),
+            solves: records.iter().map(|r| r.solves).sum(),
+            hinted: records.iter().filter(|r| r.hinted).count(),
+            hint_hits: records.iter().filter(|r| r.hint_hit).count(),
+            wall_total_secs: walls.iter().sum(),
+            wall_p50_secs: percentile(&walls, 50.0),
+            wall_p90_secs: percentile(&walls, 90.0),
+            wall_p99_secs: percentile(&walls, 99.0),
+            wall_max_secs: walls.last().copied().unwrap_or(0.0),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("calls", Json::Num(self.calls as f64)),
+            ("solves", Json::Num(self.solves as f64)),
+            ("hinted", Json::Num(self.hinted as f64)),
+            ("hint_hits", Json::Num(self.hint_hits as f64)),
+            ("wall_total_secs", Json::Num(self.wall_total_secs)),
+            ("wall_p50_secs", Json::Num(self.wall_p50_secs)),
+            ("wall_p90_secs", Json::Num(self.wall_p90_secs)),
+            ("wall_p99_secs", Json::Num(self.wall_p99_secs)),
+            ("wall_max_secs", Json::Num(self.wall_max_secs)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(SolverStats {
+            calls: j.req("calls")?.as_usize()?,
+            solves: j.req("solves")?.as_usize()?,
+            hinted: j.req("hinted")?.as_usize()?,
+            hint_hits: j.req("hint_hits")?.as_usize()?,
+            wall_total_secs: j.req("wall_total_secs")?.as_f64()?,
+            wall_p50_secs: j.req("wall_p50_secs")?.as_f64()?,
+            wall_p90_secs: j.req("wall_p90_secs")?.as_f64()?,
+            wall_p99_secs: j.req("wall_p99_secs")?.as_f64()?,
+            wall_max_secs: j.req("wall_max_secs")?.as_f64()?,
+        })
+    }
+}
+
+/// Driver-side event counters for a traced run.  Fully deterministic
+/// per seed (no wall-clock anywhere).
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct DriverStats {
+    /// timeline segments integrated (≥ 1 per epoch)
+    pub segments: usize,
+    /// epochs split by an effective mid-epoch event
+    pub mid_epoch_splits: usize,
+    /// pro-rata re-dispatches of a departed node's allocation
+    pub redispatches: usize,
+    /// physical↔announced view divergences (Observed-mode ghost slots)
+    pub ghost_transitions: usize,
+    /// rollbacks charged by the checkpoint clock
+    pub rollbacks: usize,
+    /// checkpoint writes taken
+    pub ckpt_writes: usize,
+    /// straggler-detector verdicts emitted (slowdown/recover/preempt)
+    pub detect_verdicts: usize,
+}
+
+impl DriverStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("segments", Json::Num(self.segments as f64)),
+            ("mid_epoch_splits", Json::Num(self.mid_epoch_splits as f64)),
+            ("redispatches", Json::Num(self.redispatches as f64)),
+            ("ghost_transitions", Json::Num(self.ghost_transitions as f64)),
+            ("rollbacks", Json::Num(self.rollbacks as f64)),
+            ("ckpt_writes", Json::Num(self.ckpt_writes as f64)),
+            ("detect_verdicts", Json::Num(self.detect_verdicts as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(DriverStats {
+            segments: j.req("segments")?.as_usize()?,
+            mid_epoch_splits: j.req("mid_epoch_splits")?.as_usize()?,
+            redispatches: j.req("redispatches")?.as_usize()?,
+            ghost_transitions: j.req("ghost_transitions")?.as_usize()?,
+            rollbacks: j.req("rollbacks")?.as_usize()?,
+            ckpt_writes: j.req("ckpt_writes")?.as_usize()?,
+            detect_verdicts: j.req("detect_verdicts")?.as_usize()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(solves: usize, hinted: bool, hit: bool, wall: f64) -> SolveRecord {
+        SolveRecord {
+            total_b: 128.0,
+            solves,
+            state: "mixed(2)".to_string(),
+            hinted,
+            hint_hit: hit,
+            wall_secs: wall,
+        }
+    }
+
+    #[test]
+    fn rollup_counts_and_percentiles() {
+        let recs: Vec<SolveRecord> = (1..=100)
+            .map(|i| rec(2, i % 2 == 0, i % 4 == 0, i as f64 * 1e-6))
+            .collect();
+        let s = SolverStats::from_records(&recs);
+        assert_eq!(s.calls, 100);
+        assert_eq!(s.solves, 200);
+        assert_eq!(s.hinted, 50);
+        assert_eq!(s.hint_hits, 25);
+        assert!((s.wall_max_secs - 100e-6).abs() < 1e-12);
+        assert!(s.wall_p50_secs <= s.wall_p90_secs);
+        assert!(s.wall_p90_secs <= s.wall_p99_secs);
+        assert!(s.wall_p99_secs <= s.wall_max_secs);
+    }
+
+    #[test]
+    fn empty_rollup_is_all_zero() {
+        let s = SolverStats::from_records(&[]);
+        assert_eq!(s, SolverStats::default());
+    }
+
+    #[test]
+    fn solver_stats_json_roundtrip() {
+        let s = SolverStats::from_records(&[rec(3, true, true, 0.5), rec(1, false, false, 0.25)]);
+        let back = SolverStats::from_json(&Json::parse(&s.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn driver_stats_json_roundtrip() {
+        let d = DriverStats {
+            segments: 41,
+            mid_epoch_splits: 3,
+            redispatches: 2,
+            ghost_transitions: 1,
+            rollbacks: 2,
+            ckpt_writes: 9,
+            detect_verdicts: 4,
+        };
+        let back =
+            DriverStats::from_json(&Json::parse(&d.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(d, back);
+    }
+}

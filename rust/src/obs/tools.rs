@@ -1,0 +1,425 @@
+//! Trace tooling behind the `cannikin trace` subcommand:
+//! [`load_trace`] (JSONL → records), [`summarize`] (per-category counts,
+//! solver latency percentiles, wasted-work ledger), [`diff`] (first
+//! divergent record after stripping `wall_*` — the determinism-contract
+//! debugger), and [`export_chrome`] (Chrome trace-event JSON for
+//! `chrome://tracing` / Perfetto, one lane per node).
+//!
+//! Everything is a plain library function so tests can drive it without
+//! spawning the CLI.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::probe::SolveRecord;
+use super::stats::SolverStats;
+
+/// Load a JSONL trace file: one JSON object per non-empty line.
+/// Missing / unreadable / malformed files produce a clear error (the
+/// `cannikin trace` subcommand surfaces it instead of panicking).
+pub fn load_trace(path: impl AsRef<Path>) -> Result<Vec<Json>> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace file {}", path.display()))?;
+    let mut records = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let rec = Json::parse(line)
+            .with_context(|| format!("{}:{}: malformed trace record", path.display(), i + 1))?;
+        if rec.get("cat").is_none() {
+            bail!("{}:{}: not a trace record (no \"cat\" key)", path.display(), i + 1);
+        }
+        records.push(rec);
+    }
+    Ok(records)
+}
+
+/// A record with every `wall_*` key removed — the deterministic part.
+pub fn strip_wall(rec: &Json) -> Json {
+    match rec {
+        Json::Obj(m) => Json::Obj(
+            m.iter()
+                .filter(|(k, _)| !k.starts_with("wall_"))
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+        ),
+        other => other.clone(),
+    }
+}
+
+// ---------------------------------------------------------------- summarize
+
+/// What `cannikin trace summarize` reports.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceSummary {
+    pub records: usize,
+    /// per-category record counts
+    pub by_cat: BTreeMap<String, usize>,
+    /// per-`cat/kind` record counts
+    pub by_kind: BTreeMap<String, usize>,
+    /// the wasted-work ledger: per-epoch `waste` records summed in
+    /// order — reconciles exactly with `RunReport.wasted_work_secs`
+    pub wasted_work_secs: f64,
+    /// checkpoint writes (sum of `ckpt/write` taken-deltas) —
+    /// reconciles with `RunReport.checkpoints_taken`
+    pub ckpt_writes: usize,
+    /// rollback records
+    pub rollbacks: usize,
+    /// membership replans delivered (sum of `replan/membership` count
+    /// deltas — reconciles with `RunReport.replans`)
+    pub replans: usize,
+    /// mid-epoch fresh plans (`replan/immediate`)
+    pub replans_immediate: usize,
+    /// solver rollup rebuilt from the `solve` records
+    pub solver: SolverStats,
+}
+
+fn f64_field(rec: &Json, key: &str) -> f64 {
+    rec.get(key).and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
+}
+
+fn usize_field(rec: &Json, key: &str) -> usize {
+    rec.get(key).and_then(|v| v.as_usize().ok()).unwrap_or(0)
+}
+
+pub fn summarize(records: &[Json]) -> Result<TraceSummary> {
+    let mut by_cat: BTreeMap<String, usize> = BTreeMap::new();
+    let mut by_kind: BTreeMap<String, usize> = BTreeMap::new();
+    let mut wasted = 0.0;
+    let mut ckpt_writes = 0;
+    let mut rollbacks = 0;
+    let mut replans = 0;
+    let mut replans_immediate = 0;
+    let mut solves: Vec<SolveRecord> = Vec::new();
+    for rec in records {
+        let cat = rec.req("cat")?.as_str()?.to_string();
+        let kind = rec.get("kind").and_then(|k| k.as_str().ok()).unwrap_or("").to_string();
+        *by_cat.entry(cat.clone()).or_insert(0) += 1;
+        *by_kind.entry(format!("{cat}/{kind}")).or_insert(0) += 1;
+        match (cat.as_str(), kind.as_str()) {
+            ("waste", _) => wasted += f64_field(rec, "secs"),
+            ("ckpt", "write") => ckpt_writes += usize_field(rec, "taken"),
+            ("ckpt", "rollback") => rollbacks += 1,
+            // each record carries the delivered-replan delta at that point
+            ("replan", "membership") => replans += usize_field(rec, "count"),
+            ("replan", "immediate") => replans_immediate += 1,
+            ("solve", _) => solves.push(SolveRecord {
+                total_b: f64_field(rec, "total_b"),
+                solves: usize_field(rec, "solves"),
+                state: rec
+                    .get("state")
+                    .and_then(|s| s.as_str().ok())
+                    .unwrap_or("?")
+                    .to_string(),
+                hinted: rec.get("hinted").and_then(|b| b.as_bool().ok()).unwrap_or(false),
+                hint_hit: rec.get("hint_hit").and_then(|b| b.as_bool().ok()).unwrap_or(false),
+                wall_secs: f64_field(rec, "wall_secs"),
+            }),
+            _ => {}
+        }
+    }
+    Ok(TraceSummary {
+        records: records.len(),
+        by_cat,
+        by_kind,
+        wasted_work_secs: wasted,
+        ckpt_writes,
+        rollbacks,
+        replans,
+        replans_immediate,
+        solver: SolverStats::from_records(&solves),
+    })
+}
+
+impl TraceSummary {
+    /// Human-readable rendering for the CLI.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{} trace record(s)", self.records);
+        let _ = writeln!(out, "\nby category:");
+        for (cat, n) in &self.by_cat {
+            let _ = writeln!(out, "  {cat:<10} {n}");
+        }
+        let _ = writeln!(out, "\nby kind:");
+        for (kind, n) in &self.by_kind {
+            let _ = writeln!(out, "  {kind:<24} {n}");
+        }
+        let _ = writeln!(
+            out,
+            "\nledger: wasted work {:.3}s, {} checkpoint write(s), {} rollback(s), \
+             {} membership replan(s), {} immediate replan(s)",
+            self.wasted_work_secs,
+            self.ckpt_writes,
+            self.rollbacks,
+            self.replans,
+            self.replans_immediate,
+        );
+        if self.solver.calls > 0 {
+            let s = &self.solver;
+            let _ = writeln!(
+                out,
+                "solver: {} call(s), {} linear solve(s), hints {}/{} hit, wall \
+                 p50 {:.1}us p90 {:.1}us p99 {:.1}us max {:.1}us (total {:.3}ms)",
+                s.calls,
+                s.solves,
+                s.hint_hits,
+                s.hinted,
+                s.wall_p50_secs * 1e6,
+                s.wall_p90_secs * 1e6,
+                s.wall_p99_secs * 1e6,
+                s.wall_max_secs * 1e6,
+                s.wall_total_secs * 1e3,
+            );
+        }
+        out
+    }
+}
+
+// --------------------------------------------------------------------- diff
+
+/// First point where two traces diverge (after stripping `wall_*`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Divergence {
+    /// 0-based record index (== min(len_a, len_b) on a length mismatch)
+    pub index: usize,
+    pub a: Option<Json>,
+    pub b: Option<Json>,
+}
+
+impl Divergence {
+    pub fn render(&self) -> String {
+        let show = |r: &Option<Json>| match r {
+            Some(j) => j.to_string_compact(),
+            None => "<no record (trace ended)>".to_string(),
+        };
+        format!(
+            "traces diverge at record {} (wall_* fields ignored):\n  a: {}\n  b: {}",
+            self.index,
+            show(&self.a),
+            show(&self.b)
+        )
+    }
+}
+
+/// Compare two traces record-by-record, ignoring `wall_*` fields.
+/// `None` means the traces are identical under the determinism
+/// contract; `Some` pinpoints the first divergent record.
+pub fn diff(a: &[Json], b: &[Json]) -> Option<Divergence> {
+    for (i, (ra, rb)) in a.iter().zip(b.iter()).enumerate() {
+        if strip_wall(ra) != strip_wall(rb) {
+            return Some(Divergence { index: i, a: Some(ra.clone()), b: Some(rb.clone()) });
+        }
+    }
+    if a.len() != b.len() {
+        let i = a.len().min(b.len());
+        return Some(Divergence {
+            index: i,
+            a: a.get(i).cloned(),
+            b: b.get(i).cloned(),
+        });
+    }
+    None
+}
+
+// ------------------------------------------------------------- export-chrome
+
+/// Convert a trace to Chrome trace-event JSON (the `chrome://tracing` /
+/// Perfetto "JSON array" flavor): one lane (tid) per node plus a lane 0
+/// for the driver; `segment` records with `t0`/`t1` become complete
+/// (`ph: "X"`) spans, everything else an instant (`ph: "i"`).
+/// Timestamps are the simulated active clock in microseconds.
+pub fn export_chrome(records: &[Json]) -> Result<Json> {
+    let mut events: Vec<Json> = Vec::new();
+    // lane metadata: the driver lane plus one per node seen in the trace
+    let mut nodes: Vec<usize> = records
+        .iter()
+        .filter_map(|r| r.get("node").and_then(|n| n.as_usize().ok()))
+        .collect();
+    nodes.sort_unstable();
+    nodes.dedup();
+    let meta = |tid: usize, name: String| {
+        Json::obj(vec![
+            ("ph", Json::Str("M".to_string())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(tid as f64)),
+            ("name", Json::Str("thread_name".to_string())),
+            ("args", Json::obj(vec![("name", Json::Str(name))])),
+        ])
+    };
+    events.push(meta(0, "driver".to_string()));
+    for &n in &nodes {
+        events.push(meta(n + 1, format!("node {n}")));
+    }
+
+    for rec in records {
+        let cat = rec.req("cat")?.as_str()?.to_string();
+        let kind = rec.get("kind").and_then(|k| k.as_str().ok()).unwrap_or("").to_string();
+        let t = f64_field(rec, "t");
+        let tid = rec
+            .get("node")
+            .and_then(|n| n.as_usize().ok())
+            .map(|n| n + 1)
+            .unwrap_or(0);
+        let name = format!("{cat}:{kind}");
+        let args = strip_wall(rec);
+        let mut pairs = vec![
+            ("name", Json::Str(name)),
+            ("cat", Json::Str(cat)),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(tid as f64)),
+            ("args", args),
+        ];
+        let (t0, t1) = (rec.get("t0"), rec.get("t1"));
+        if let (Some(t0), Some(t1)) = (t0, t1) {
+            let (t0, t1) = (t0.as_f64()?, t1.as_f64()?);
+            pairs.push(("ph", Json::Str("X".to_string())));
+            pairs.push(("ts", Json::Num(t0 * 1e6)));
+            pairs.push(("dur", Json::Num((t1 - t0).max(0.0) * 1e6)));
+        } else {
+            pairs.push(("ph", Json::Str("i".to_string())));
+            pairs.push(("ts", Json::Num(t * 1e6)));
+            pairs.push(("s", Json::Str("t".to_string())));
+        }
+        events.push(Json::obj(pairs));
+    }
+    Ok(Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ]))
+}
+
+/// `trace diff` entry point over files (shared by CLI and tests).
+pub fn diff_files(a: impl AsRef<Path>, b: impl AsRef<Path>) -> Result<()> {
+    let ra = load_trace(a)?;
+    let rb = load_trace(b)?;
+    match diff(&ra, &rb) {
+        None => Ok(()),
+        Some(d) => Err(anyhow!("{}", d.render())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(cat: &str, kind: &str, extra: Vec<(&str, Json)>) -> Json {
+        let mut pairs = vec![
+            ("cat", Json::Str(cat.to_string())),
+            ("kind", Json::Str(kind.to_string())),
+            ("epoch", Json::Num(0.0)),
+            ("frac", Json::Num(0.0)),
+            ("t", Json::Num(1.5)),
+        ];
+        pairs.extend(extra);
+        Json::obj(pairs)
+    }
+
+    #[test]
+    fn load_trace_missing_file_is_a_clear_error() {
+        let err = load_trace("/nonexistent/cannikin-trace.jsonl").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("/nonexistent/cannikin-trace.jsonl"), "{msg}");
+    }
+
+    #[test]
+    fn load_trace_rejects_non_trace_jsonl() {
+        let p = std::env::temp_dir()
+            .join(format!("cannikin-tools-bad-{}.jsonl", std::process::id()));
+        std::fs::write(&p, "{\"epoch\":1}\n").unwrap();
+        let err = load_trace(&p).unwrap_err();
+        std::fs::remove_file(&p).unwrap();
+        assert!(format!("{err:#}").contains("no \"cat\" key"), "{err:#}");
+    }
+
+    #[test]
+    fn summarize_reconciles_the_ledgers() {
+        let records = vec![
+            rec("run", "start", vec![]),
+            rec("waste", "epoch", vec![("secs", Json::Num(1.25))]),
+            rec("waste", "epoch", vec![("secs", Json::Num(0.5))]),
+            rec("ckpt", "write", vec![("taken", Json::Num(2.0))]),
+            rec("ckpt", "rollback", vec![("secs", Json::Num(1.25))]),
+            rec("replan", "membership", vec![("count", Json::Num(1.0))]),
+            rec("replan", "membership", vec![("count", Json::Num(2.0))]),
+            rec("replan", "immediate", vec![]),
+            rec(
+                "solve",
+                "warm",
+                vec![
+                    ("solves", Json::Num(1.0)),
+                    ("hinted", Json::Bool(true)),
+                    ("hint_hit", Json::Bool(true)),
+                    ("wall_secs", Json::Num(2e-5)),
+                ],
+            ),
+        ];
+        let s = summarize(&records).unwrap();
+        assert_eq!(s.records, 9);
+        assert_eq!(s.wasted_work_secs, 1.75);
+        assert_eq!(s.ckpt_writes, 2);
+        assert_eq!(s.rollbacks, 1);
+        assert_eq!(s.replans, 3, "membership replans sum the count deltas");
+        assert_eq!(s.replans_immediate, 1);
+        assert_eq!(s.solver.calls, 1);
+        assert_eq!(s.solver.hint_hits, 1);
+        assert_eq!(s.by_cat["waste"], 2);
+        assert!(s.render().contains("wasted work 1.750s"), "{}", s.render());
+    }
+
+    #[test]
+    fn diff_ignores_wall_fields_and_pinpoints_divergence() {
+        let a = vec![
+            rec("solve", "warm", vec![("wall_secs", Json::Num(1.0))]),
+            rec("event", "apply", vec![("total", Json::Num(64.0))]),
+        ];
+        let b_same = vec![
+            rec("solve", "warm", vec![("wall_secs", Json::Num(99.0))]),
+            rec("event", "apply", vec![("total", Json::Num(64.0))]),
+        ];
+        assert_eq!(diff(&a, &b_same), None, "wall_* must be ignored");
+        let b_diff = vec![
+            rec("solve", "warm", vec![("wall_secs", Json::Num(1.0))]),
+            rec("event", "apply", vec![("total", Json::Num(128.0))]),
+        ];
+        let d = diff(&a, &b_diff).expect("payload divergence must be caught");
+        assert_eq!(d.index, 1);
+        // and a length mismatch points just past the common prefix
+        let d2 = diff(&a, &a[..1]).expect("length mismatch is a divergence");
+        assert_eq!(d2.index, 1);
+        assert!(d2.b.is_none());
+    }
+
+    #[test]
+    fn export_chrome_produces_lanes_and_spans() {
+        let records = vec![
+            rec(
+                "segment",
+                "work",
+                vec![("t0", Json::Num(1.0)), ("t1", Json::Num(2.5))],
+            ),
+            rec("detect", "verdict", vec![("node", Json::Num(2.0))]),
+        ];
+        let chrome = export_chrome(&records).unwrap();
+        let events = chrome.req("traceEvents").unwrap().as_arr().unwrap();
+        // 2 lane-metadata events (driver + node 2) + 2 payload events
+        assert_eq!(events.len(), 4);
+        let span = events
+            .iter()
+            .find(|e| e.get("ph").map(|p| p == &Json::Str("X".into())).unwrap_or(false))
+            .expect("segment becomes a complete span");
+        assert_eq!(span.req("ts").unwrap().as_f64().unwrap(), 1.0e6);
+        assert_eq!(span.req("dur").unwrap().as_f64().unwrap(), 1.5e6);
+        let instant = events
+            .iter()
+            .find(|e| e.get("ph").map(|p| p == &Json::Str("i".into())).unwrap_or(false))
+            .expect("non-segment becomes an instant");
+        assert_eq!(instant.req("tid").unwrap().as_u64().unwrap(), 3, "node 2 → lane 3");
+    }
+}

@@ -20,6 +20,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::obs::probe::{probe_active, probe_push, SolveRecord};
 use crate::perfmodel::{ClusterModel, ComputeModel};
 use crate::util::round_preserving_sum;
 
@@ -32,6 +33,17 @@ pub enum OverlapState {
     AllComm,
     /// `n_compute` compute-bottleneck nodes, the rest comm-bottleneck
     Mixed { n_compute: usize },
+}
+
+impl OverlapState {
+    /// Stable display name used by the trace records.
+    pub fn label(&self) -> String {
+        match self {
+            OverlapState::AllCompute => "all-compute".to_string(),
+            OverlapState::AllComm => "all-comm".to_string(),
+            OverlapState::Mixed { n_compute } => format!("mixed({n_compute})"),
+        }
+    }
 }
 
 /// Result of the OptPerf optimization.
@@ -130,7 +142,30 @@ fn crossover_mu(m: &ComputeModel, gamma: f64, t_o: f64) -> f64 {
 /// small total batch) gets pinned to b = 0 and the system re-solves over
 /// the remaining nodes; the pinned node's fixed time then floors the
 /// predicted batch time.
+///
+/// When the [`crate::obs`] solver probe is active (traced runs only),
+/// each entry-point call records its solve count, final overlap state
+/// and wall latency; the untraced path never reads the wall clock.
 pub fn solve(model: &ClusterModel, total_b: f64) -> Result<Allocation> {
+    let t0 = probe_active().then(std::time::Instant::now);
+    let out = solve_raw(model, total_b);
+    if let (Some(t0), Ok(a)) = (t0, &out) {
+        probe_push(SolveRecord {
+            total_b,
+            solves: a.solves,
+            state: a.state.label(),
+            hinted: false,
+            hint_hit: false,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        });
+    }
+    out
+}
+
+/// The uninstrumented Algorithm 1 body ([`solve`] and
+/// [`solve_with_hint`] both route here so a probed run records exactly
+/// one [`SolveRecord`] per entry-point call).
+fn solve_raw(model: &ClusterModel, total_b: f64) -> Result<Allocation> {
     let n = model.n();
     if n == 0 {
         bail!("empty cluster");
@@ -362,16 +397,40 @@ pub fn solve_with_hint(
     total_b: f64,
     hint: Option<OverlapState>,
 ) -> Result<Allocation> {
+    let t0 = probe_active().then(std::time::Instant::now);
+    let (out, hinted, hint_hit) = solve_with_hint_raw(model, total_b, hint);
+    if let (Some(t0), Ok(a)) = (t0, &out) {
+        probe_push(SolveRecord {
+            total_b,
+            solves: a.solves,
+            state: a.state.label(),
+            hinted,
+            hint_hit,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        });
+    }
+    out
+}
+
+/// Body of [`solve_with_hint`]; also reports whether a hint was
+/// supplied and whether it validated (the probe's hint-hit ledger).
+fn solve_with_hint_raw(
+    model: &ClusterModel,
+    total_b: f64,
+    hint: Option<OverlapState>,
+) -> (Result<Allocation>, bool, bool) {
     let Some(hint) = hint else {
-        return solve(model, total_b);
+        return (solve_raw(model, total_b), false, false);
     };
     let (attempt, spent) = try_state(model, total_b, hint);
     if let Some(a) = attempt {
-        return Ok(a);
+        return (Ok(a), true, true);
     }
-    let mut a = solve(model, total_b)?;
-    a.solves += spent;
-    Ok(a)
+    let out = solve_raw(model, total_b).map(|mut a| {
+        a.solves += spent;
+        a
+    });
+    (out, true, false)
 }
 
 /// Solve assuming `state` and verify the KKT validity conditions.  Returns
@@ -803,6 +862,30 @@ mod tests {
         // no hint behaves exactly like solve()
         let none = solve_with_hint(&model, 300.0, None).unwrap();
         assert_eq!(none.solves, cold.solves);
+    }
+
+    #[test]
+    fn probe_records_one_entry_per_call_with_hint_accounting() {
+        let model = hetero_model(0.12);
+        let cold = solve(&model, 300.0).unwrap();
+        crate::obs::probe::probe_start();
+        let _ = solve(&model, 300.0).unwrap();
+        let _ = solve_with_hint(&model, 300.0, Some(cold.state)).unwrap();
+        let _ = solve_with_hint(&model, 300.0, None).unwrap();
+        let recs = crate::obs::probe::probe_stop();
+        assert_eq!(recs.len(), 3, "one record per entry-point call");
+        assert!(!recs[0].hinted && !recs[0].hint_hit);
+        assert!(recs[1].hinted && recs[1].hint_hit, "valid hint must hit");
+        assert_eq!(recs[1].solves, 1, "hint hit costs one linear solve");
+        assert!(!recs[2].hinted);
+        for r in &recs {
+            assert_eq!(r.total_b, 300.0);
+            assert_eq!(r.state, cold.state.label());
+            assert!(r.wall_secs >= 0.0);
+        }
+        // probe off again: plain calls record nothing
+        let _ = solve(&model, 300.0).unwrap();
+        assert!(crate::obs::probe::probe_drain().is_empty());
     }
 
     #[test]

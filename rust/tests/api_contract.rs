@@ -22,6 +22,7 @@ use cannikin::coordinator::BatchPolicy;
 use cannikin::elastic::{
     ChurnTrace, DetectionMode, DetectionStats, ReplanTiming, ScenarioConfig,
 };
+use cannikin::obs::{DriverStats, SolverStats};
 use cannikin::simulator::{workload, ClusterSim};
 use cannikin::util::json::Json;
 use cannikin::util::prop::{check, ensure};
@@ -109,6 +110,28 @@ fn rand_report(rng: &mut Rng) -> RunReport {
         preempt_latencies: (0..rng.below(4)).map(|_| rng.below(20) as usize).collect(),
         missed_preempts: rng.below(3) as usize,
     });
+    // the PR-6 instrumentation rollups are Option: None (untraced) and
+    // Some (traced) must both survive the roundtrip
+    let solver_stats = (rng.below(2) == 0).then(|| SolverStats {
+        calls: rng.below(500) as usize,
+        solves: rng.below(2000) as usize,
+        hinted: rng.below(400) as usize,
+        hint_hits: rng.below(400) as usize,
+        wall_total_secs: rand_f64(rng).abs(),
+        wall_p50_secs: rand_f64(rng).abs(),
+        wall_p90_secs: rand_f64(rng).abs(),
+        wall_p99_secs: rand_f64(rng).abs(),
+        wall_max_secs: rand_f64(rng).abs(),
+    });
+    let driver_stats = (rng.below(2) == 0).then(|| DriverStats {
+        segments: rng.below(5000) as usize,
+        mid_epoch_splits: rng.below(50) as usize,
+        redispatches: rng.below(50) as usize,
+        ghost_transitions: rng.below(20) as usize,
+        rollbacks: rng.below(20) as usize,
+        ckpt_writes: rng.below(500) as usize,
+        detect_verdicts: rng.below(40) as usize,
+    });
     RunReport {
         system: rand_name(rng, 16),
         cluster: rand_name(rng, 16),
@@ -132,6 +155,8 @@ fn rand_report(rng: &mut Rng) -> RunReport {
         bootstrap_epochs: rng.below(10) as usize,
         final_n: 1 + rng.below(64) as usize,
         detection,
+        solver_stats,
+        driver_stats,
     }
 }
 
@@ -246,6 +271,15 @@ fn golden_pre_checkpoint_report_still_parses_and_roundtrips() {
     assert_eq!(r.checkpoints_taken, 0);
     assert_eq!(r.replans, 0);
     assert_eq!(r.replans_immediate, 0);
+    // …as do the PR-6 instrumentation rollups (absent keys ⇒ None, and
+    // re-serializing must keep omitting them)
+    assert_eq!(r.solver_stats, None);
+    assert_eq!(r.driver_stats, None);
+    let text = r.to_json().to_string_pretty();
+    assert!(
+        !text.contains("solver_stats") && !text.contains("driver_stats"),
+        "untraced reports must omit the stats keys for legacy byte-identity:\n{text}"
+    );
     // the `cannikin report` contract: our parse re-serializes losslessly
     let again = RunReport::from_json(&r.to_json()).unwrap();
     assert_eq!(r, again);

@@ -10,6 +10,7 @@ use cannikin::elastic::{
     TimedEvent,
 };
 use cannikin::gns;
+use cannikin::obs::{tools, Tracer};
 use cannikin::optperf;
 use cannikin::perfmodel::ClusterModel;
 use cannikin::simulator::{workload, ClusterSim};
@@ -542,6 +543,109 @@ fn prop_zero_period_reproduces_the_legacy_run_bit_for_bit() {
             ensure(a == b, "period 0 diverged from the legacy run")?;
             ensure(b.checkpoints_taken == 0, "no checkpoints may fire at period 0")?;
             ensure(b.checkpoint_overhead_secs == 0.0, "no write cost at period 0")
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// deterministic tracing: ledger + determinism invariants over random runs
+// ---------------------------------------------------------------------------
+
+/// `run_ckpt` with a ring tracer attached.
+fn run_ckpt_traced(trace: &ChurnTrace, cfg: &ScenarioConfig) -> (RunReport, Vec<Json>) {
+    let c = cannikin::cluster::cluster_a();
+    let w = workload::cifar10();
+    let mut sys = SystemRegistry::builtin()
+        .build("cannikin", &c, &w, &BuildOptions::default())
+        .expect("builtin system");
+    let (mut tracer, handle) = Tracer::ring(1_000_000);
+    let r = api::run_traced(&c, &w, trace, sys.as_mut(), cfg, &mut tracer);
+    tracer.finish().expect("ring sink cannot fail");
+    (r, handle.records())
+}
+
+/// Random short scenarios: any seed, any preemption position, any finite
+/// checkpoint period (including none) and either replan timing.
+fn random_traced_case(rng: &mut Rng) -> (ChurnTrace, ScenarioConfig) {
+    let seed = 1 + rng.below(1000);
+    let trace = match rng.below(3) {
+        0 => one_preempt(5 + rng.below(20) as usize, random_frac(rng).min(0.95), rng.below(3) as usize),
+        1 => cannikin::elastic::spot_instance(&cannikin::cluster::cluster_a(), 60, seed),
+        _ => ChurnTrace::new("quiet"),
+    };
+    let cfg = ScenarioConfig {
+        max_epochs: 60,
+        seed,
+        ckpt: if rng.below(2) == 0 {
+            CheckpointPolicy { period_secs: 1.0 + rng.f64() * 999.0, write_cost_secs: 2.0 }
+        } else {
+            CheckpointPolicy::default()
+        },
+        replan: [ReplanTiming::Boundary, ReplanTiming::Immediate][rng.below(2) as usize],
+        ..Default::default()
+    };
+    (trace, cfg)
+}
+
+#[test]
+fn prop_trace_ledgers_reconcile_with_the_report_bit_for_bit() {
+    // the trace IS the ledger: for any scenario shape, summing the waste
+    // records reproduces wasted_work_secs exactly (same f64 bits — the
+    // driver emits the per-epoch addends in summation order), and the
+    // ckpt/replan deltas reproduce their counters
+    check(
+        "trace-ledger-reconciles",
+        10,
+        |rng| random_traced_case(rng),
+        |(trace, cfg)| {
+            let (r, recs) = run_ckpt_traced(trace, cfg);
+            let s = tools::summarize(&recs).map_err(|e| e.to_string())?;
+            ensure(
+                s.wasted_work_secs.to_bits() == r.wasted_work_secs.to_bits(),
+                format!(
+                    "waste ledger {} != report {}",
+                    s.wasted_work_secs, r.wasted_work_secs
+                ),
+            )?;
+            ensure(
+                s.ckpt_writes == r.checkpoints_taken,
+                format!("ckpt ledger {} != report {}", s.ckpt_writes, r.checkpoints_taken),
+            )?;
+            ensure(
+                s.replans == r.replans,
+                format!("replan ledger {} != report {}", s.replans, r.replans),
+            )?;
+            ensure(
+                s.replans_immediate == r.replans_immediate,
+                format!("{} != {}", s.replans_immediate, r.replans_immediate),
+            )?;
+            // the embedded rollups agree with the same trace
+            let d = r.driver_stats.as_ref().ok_or("traced run must embed driver stats")?;
+            ensure(d.ckpt_writes == r.checkpoints_taken, "driver stats ckpt mismatch")?;
+            ensure(d.segments >= r.rows.len(), "at least one segment per epoch")?;
+            let sv = r.solver_stats.as_ref().ok_or("traced run must embed solver stats")?;
+            ensure(
+                (s.solver.calls, s.solver.solves) == (sv.calls, sv.solves),
+                format!("solver ledger {:?} != report {:?}", s.solver, sv),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_traces_are_deterministic_per_seed_once_wall_is_stripped() {
+    check(
+        "trace-deterministic",
+        8,
+        |rng| random_traced_case(rng),
+        |(trace, cfg)| {
+            let (ra, ta) = run_ckpt_traced(trace, cfg);
+            let (rb, tb) = run_ckpt_traced(trace, cfg);
+            ensure(ra == rb, "reports must be deterministic")?;
+            match tools::diff(&ta, &tb) {
+                None => Ok(()),
+                Some(d) => Err(format!("same-seed trace divergence:\n{}", d.render())),
+            }
         },
     );
 }
