@@ -1,42 +1,107 @@
 //! Bench: Algorithm 1 solve latency vs cluster size — the Table 5
-//! overhead claim's microscopic half.  A full candidate-table build
-//! (the §4.5 init epoch) is also measured.
+//! overhead claim's microscopic half, now split three ways per size:
+//! cold solve (fresh model, no state), hinted solve (packed workspace +
+//! converged §4.5 overlap-state hint — the per-epoch steady state), and
+//! delta solve (persistent candidate cache patched for a one-node
+//! removal — the elastic re-plan path).  A full candidate-table build
+//! (cold vs warm rebuild) rounds out the §4.5 init-epoch claim.
+//!
+//! `--quick` (CI bench-smoke) trims the sweep to n ∈ {16, 64} with few
+//! samples; the full sweep runs 16 → 4096 nodes.  Results land in
+//! `BENCH_optperf.json` with `measured: true` — see PERF_optperf.md.
 
 use cannikin::benchkit::{report, Bencher, Snapshot};
 use cannikin::cluster;
 use cannikin::goodput;
-use cannikin::optperf;
+use cannikin::optperf::{self, Allocation, SolveCache, SolverWorkspace};
 use cannikin::simulator::workload;
 use cannikin::util::rng::Rng;
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let sizes: &[usize] = if quick { &[16, 64] } else { &[16, 64, 256, 1024, 4096] };
+    let b = if quick { Bencher::new(1, 5) } else { Bencher::new(5, 50) };
+
     let mut snap = Snapshot::new("optperf");
-    let b = Bencher::new(5, 50);
     let w = workload::imagenet();
-    println!("Algorithm 1 (OptPerf solve):");
-    for n in [3usize, 16, 64, 256] {
+
+    println!("Algorithm 1 (cold / hinted / delta) vs cluster size:");
+    for &n in sizes {
         let mut rng = Rng::new(n as u64);
         let c = cluster::random_cluster(&mut rng, n);
         let model = w.cluster_model(&c);
-        let r = b.run(&format!("optperf/solve/n={n}/B=4096"), || {
-            optperf::solve(&model, 4096.0).unwrap()
+        // scale the total with n so the per-node average (and therefore
+        // the overlap regime mix) is comparable across sizes
+        let total = (n as f64) * 16.0;
+
+        let r = b.run(&format!("optperf/cold/n={n}"), || {
+            optperf::solve(&model, total).unwrap()
+        });
+        report(&r);
+        snap.push(&r);
+
+        // hinted: reuse one workspace and the converged overlap state —
+        // the planner's steady state once the §4.5 cache is warm
+        let mut ws = SolverWorkspace::new();
+        let mut out = Allocation::empty();
+        ws.solve_hint_into(&model, total, None, &mut out).unwrap();
+        let hint = out.state;
+        let r = b.run(&format!("optperf/hinted/n={n}"), || {
+            ws.solve_hint_into(&model, total, Some(hint), &mut out).unwrap();
+            out.t_pred
+        });
+        report(&r);
+        snap.push(&r);
+
+        // delta: candidate cache built on the full cluster, one node
+        // removed with exact sum-patching, then re-solved on the
+        // shrunken model — the elastic membership-change path
+        let cands: Vec<u64> = (0..4).map(|i| (total as u64 / 2) << i).collect();
+        let mut cache = SolveCache::new();
+        let mut scratch = Allocation::empty();
+        cache.rebuild(&mut ws, &model, &cands, &mut scratch);
+        let mut small = model.clone();
+        small.nodes.remove(n / 2);
+        let old_ws = ws;
+        cache.delta_remove(n / 2, Some(&old_ws));
+        let mut dws = SolverWorkspace::new();
+        let r = b.run(&format!("optperf/delta/n={n}"), || {
+            cache.delta_solve(&mut dws, &small, cands[1], &mut out).unwrap();
+            out.t_pred
         });
         report(&r);
         snap.push(&r);
     }
+
     println!("\ncandidate-table build (§4.5 init epoch, 16 nodes):");
     let c = cluster::cluster_b();
     let model = w.cluster_model(&c);
     let cands = goodput::candidates(w.b0, w.b_max, 6);
-    let r = b.run(&format!("optperf/table/{} candidates", cands.len()), || {
+    let r = b.run(&format!("optperf/table-cold/{} candidates", cands.len()), || {
         for &bb in &cands {
             optperf::solve(&model, bb as f64).unwrap();
         }
     });
     report(&r);
     snap.push(&r);
+
+    // warm rebuild: invalidate keeps the entries as hints, so each
+    // rebuild is mostly one linear solve per candidate — the
+    // fingerprint-drift re-plan path
+    let mut ws = SolverWorkspace::new();
+    let mut cache = SolveCache::new();
+    let mut scratch = Allocation::empty();
+    cache.rebuild(&mut ws, &model, &cands, &mut scratch);
+    let r = b.run(&format!("optperf/table-warm/{} candidates", cands.len()), || {
+        cache.invalidate();
+        cache.rebuild(&mut ws, &model, &cands, &mut scratch)
+    });
+    report(&r);
+    snap.push(&r);
+
     snap.note_str("workload", "imagenet");
     snap.note_num("table_candidates", cands.len() as f64);
+    snap.note_str("mode", if quick { "quick" } else { "full" });
     match snap.save_at_repo_root() {
         Ok(p) => println!("\nbench snapshot written to {}", p.display()),
         Err(e) => eprintln!("\nwarning: could not write bench snapshot: {e:#}"),

@@ -414,6 +414,8 @@ mod tests {
                 solves: 40,
                 hinted: 10,
                 hint_hits: 8,
+                delta: 3,
+                delta_hits: 2,
                 wall_total_secs: 0.0123,
                 wall_p50_secs: 0.0008,
                 wall_p90_secs: 0.0021,

@@ -921,6 +921,8 @@ fn drain_solves(tracer: &mut Tracer, acc: &mut Vec<SolveRecord>) {
                 ("state", Json::Str(r.state.clone())),
                 ("hinted", Json::Bool(r.hinted)),
                 ("hint_hit", Json::Bool(r.hint_hit)),
+                ("delta", Json::Bool(r.delta)),
+                ("delta_hit", Json::Bool(r.delta_hit)),
             ],
             vec![("secs", r.wall_secs)],
         );

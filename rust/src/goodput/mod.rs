@@ -72,9 +72,15 @@ pub fn select(
         let g = if t > 0.0 { b as f64 / t * e } else { 0.0 };
         all.push(Scored { batch: b, t_batch: t, efficiency: e, goodput: g });
     }
+    // Rank with a total order: a predictor that returns NaN/inf for some
+    // candidate (e.g. a degenerate model) must not panic the selection —
+    // such candidates sort below every finite goodput instead.
+    let rank = |s: &Scored| {
+        if s.goodput.is_finite() { s.goodput } else { f64::NEG_INFINITY }
+    };
     let best = *all
         .iter()
-        .max_by(|a, b| a.goodput.partial_cmp(&b.goodput).unwrap())
+        .max_by(|a, b| rank(a).total_cmp(&rank(b)))
         .unwrap();
     (best, all)
 }
@@ -120,6 +126,36 @@ mod tests {
         assert!(low_phi.batch < high_phi.batch, "{low_phi:?} {high_phi:?}");
         assert_eq!(high_phi.batch, 8192); // effectively throughput-bound
         assert!(low_phi.batch <= 512); // efficiency-bound regime stays small
+    }
+
+    #[test]
+    fn select_survives_nan_and_infinite_times() {
+        // A predictor hole: one candidate gets NaN time (NaN goodput), one
+        // gets +inf time (goodput 0 via b/t), the rest are finite.  select
+        // must not panic and must pick the finite-goodput winner.
+        let t = |b: u64| match b {
+            64 => f64::NAN,
+            128 => f64::INFINITY,
+            _ => 0.1 + 0.001 * b as f64,
+        };
+        let cands = [32u64, 64, 128, 256];
+        let (best, all) = select(500.0, 32, &cands, t);
+        assert_eq!(all.len(), 4);
+        assert!(best.goodput.is_finite());
+        assert!(best.batch == 32 || best.batch == 256, "{best:?}");
+        // Degenerate candidates are recorded with zero goodput, never win.
+        assert_eq!(all[1].goodput, 0.0);
+        assert_eq!(all[2].goodput, 0.0);
+    }
+
+    #[test]
+    fn select_all_nan_goodput_still_returns() {
+        // A NaN gradient-noise scale poisons every efficiency, so every
+        // goodput is NaN.  This used to panic inside partial_cmp().unwrap();
+        // now select returns (callers can detect the NaN downstream).
+        let (best, all) = select(f64::NAN, 32, &[32u64, 64], |b| 0.1 + 0.001 * b as f64);
+        assert_eq!(all.len(), 2);
+        assert!(best.goodput.is_nan());
     }
 
     #[test]

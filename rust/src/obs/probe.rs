@@ -27,6 +27,11 @@ pub struct SolveRecord {
     pub hinted: bool,
     /// the hint validated (one-solve warm path)
     pub hint_hit: bool,
+    /// the call went through the `SolveCache` delta path (a membership
+    /// patch was in effect)
+    pub delta: bool,
+    /// the patched-sums fast path validated (one-solve delta hit)
+    pub delta_hit: bool,
     /// wall-clock latency of the call — the ONLY non-deterministic
     /// datum in the whole trace; serialized as `wall_secs`
     pub wall_secs: f64,
@@ -81,6 +86,8 @@ mod tests {
             state: "all-compute".to_string(),
             hinted: false,
             hint_hit: false,
+            delta: false,
+            delta_hit: false,
             wall_secs: 0.0,
         }
     }

@@ -29,6 +29,11 @@ pub struct SolverStats {
     pub hinted: usize,
     /// hinted calls where the hint validated (one-solve warm path)
     pub hint_hits: usize,
+    /// calls routed through the `SolveCache` delta path (membership patch
+    /// in effect)
+    pub delta: usize,
+    /// delta calls where the patched-sums fast path validated (one solve)
+    pub delta_hits: usize,
     pub wall_total_secs: f64,
     pub wall_p50_secs: f64,
     pub wall_p90_secs: f64,
@@ -54,6 +59,8 @@ impl SolverStats {
             solves: records.iter().map(|r| r.solves).sum(),
             hinted: records.iter().filter(|r| r.hinted).count(),
             hint_hits: records.iter().filter(|r| r.hint_hit).count(),
+            delta: records.iter().filter(|r| r.delta).count(),
+            delta_hits: records.iter().filter(|r| r.delta_hit).count(),
             wall_total_secs: walls.iter().sum(),
             wall_p50_secs: percentile(&walls, 50.0),
             wall_p90_secs: percentile(&walls, 90.0),
@@ -68,6 +75,8 @@ impl SolverStats {
             ("solves", Json::Num(self.solves as f64)),
             ("hinted", Json::Num(self.hinted as f64)),
             ("hint_hits", Json::Num(self.hint_hits as f64)),
+            ("delta", Json::Num(self.delta as f64)),
+            ("delta_hits", Json::Num(self.delta_hits as f64)),
             ("wall_total_secs", Json::Num(self.wall_total_secs)),
             ("wall_p50_secs", Json::Num(self.wall_p50_secs)),
             ("wall_p90_secs", Json::Num(self.wall_p90_secs)),
@@ -82,6 +91,9 @@ impl SolverStats {
             solves: j.req("solves")?.as_usize()?,
             hinted: j.req("hinted")?.as_usize()?,
             hint_hits: j.req("hint_hits")?.as_usize()?,
+            // absent in pre-delta-cache reports; default 0 keeps them parsing
+            delta: j.get("delta").and_then(|v| v.as_usize().ok()).unwrap_or(0),
+            delta_hits: j.get("delta_hits").and_then(|v| v.as_usize().ok()).unwrap_or(0),
             wall_total_secs: j.req("wall_total_secs")?.as_f64()?,
             wall_p50_secs: j.req("wall_p50_secs")?.as_f64()?,
             wall_p90_secs: j.req("wall_p90_secs")?.as_f64()?,
@@ -148,6 +160,8 @@ mod tests {
             state: "mixed(2)".to_string(),
             hinted,
             hint_hit: hit,
+            delta: false,
+            delta_hit: false,
             wall_secs: wall,
         }
     }

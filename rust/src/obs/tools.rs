@@ -120,6 +120,8 @@ pub fn summarize(records: &[Json]) -> Result<TraceSummary> {
                     .to_string(),
                 hinted: rec.get("hinted").and_then(|b| b.as_bool().ok()).unwrap_or(false),
                 hint_hit: rec.get("hint_hit").and_then(|b| b.as_bool().ok()).unwrap_or(false),
+                delta: rec.get("delta").and_then(|b| b.as_bool().ok()).unwrap_or(false),
+                delta_hit: rec.get("delta_hit").and_then(|b| b.as_bool().ok()).unwrap_or(false),
                 wall_secs: f64_field(rec, "wall_secs"),
             }),
             _ => {}
@@ -165,12 +167,15 @@ impl TraceSummary {
             let s = &self.solver;
             let _ = writeln!(
                 out,
-                "solver: {} call(s), {} linear solve(s), hints {}/{} hit, wall \
+                "solver: {} call(s), {} linear solve(s), hints {}/{} hit, \
+                 delta {}/{} hit, wall \
                  p50 {:.1}us p90 {:.1}us p99 {:.1}us max {:.1}us (total {:.3}ms)",
                 s.calls,
                 s.solves,
                 s.hint_hits,
                 s.hinted,
+                s.delta_hits,
+                s.delta,
                 s.wall_p50_secs * 1e6,
                 s.wall_p90_secs * 1e6,
                 s.wall_p99_secs * 1e6,

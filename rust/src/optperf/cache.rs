@@ -1,0 +1,323 @@
+//! Persistent §4.5 solve cache with incremental delta-solves.
+//!
+//! The planner keeps one [`SolveCache`] across its whole lifetime.  Each
+//! entry caches, per candidate total batch size B: the solved overlap
+//! state, its predicted time (for goodput selection without re-solving),
+//! and the common-level sums Σ1/c and Σf/c of the line system that state
+//! selects.  The cache is never thrown away:
+//!
+//! * **Invalidation** ([`SolveCache::invalidate`]) only clears the
+//!   `fresh` flag — the entries survive as warm-start hints, so a
+//!   fingerprint-drift or overlap-state-change rebuild mostly re-solves
+//!   in one linear solve per candidate instead of running Algorithm 1
+//!   cold (the pre-existing planner dropped the hints on two of its
+//!   three invalidation paths).
+//! * **Single-node removal** ([`SolveCache::delta_remove`]) patches each
+//!   entry in place: the departed node's 1/c and f/c terms are subtracted
+//!   from the cached sums, a `Mixed` boundary index is shifted past the
+//!   removal point, and the crossover-order snapshot is remapped — so the
+//!   next [`SolveCache::delta_solve`] can re-derive μ and the full
+//!   allocation in **one** linear solve, KKT-validating against the new
+//!   model and falling back to the full hinted Algorithm 1 only when the
+//!   cached overlap state no longer holds.
+//!
+//! Cache policy: the cache changes *cost only, never answers*.  Every
+//! fast path re-validates against the freshly bound model and the
+//! fallback is the exact cold solver, so allocations and `t_pred` are
+//! bitwise identical to an uncached run whenever a hint validates —
+//! identical modulo float-accumulation order (≤1e-9 relative, asserted
+//! by the property suite) on the patched-sums delta path.
+
+use anyhow::Result;
+
+use crate::obs::probe::{probe_active, probe_push, SolveRecord};
+use crate::perfmodel::ClusterModel;
+
+use super::packed::SolverWorkspace;
+use super::{Allocation, OverlapState};
+
+/// One cached candidate solve.
+#[derive(Clone, Debug)]
+pub struct CacheEntry {
+    /// candidate total batch size
+    pub b: u64,
+    /// predicted batch time at the last (re)solve
+    pub t_pred: f64,
+    /// overlap state at the last (re)solve — the §4.5 warm-start hint
+    pub state: OverlapState,
+    /// Σ 1/c over the state's line system (0.0 = sums not tracked)
+    inv_sum: f64,
+    /// Σ f/c over the state's line system
+    ratio_sum: f64,
+}
+
+/// Planner-lifetime solve cache (see module docs).
+#[derive(Debug, Default)]
+pub struct SolveCache {
+    /// table matches the current model (goodput selection may read
+    /// `t_pred` directly); cleared by any invalidation or membership event
+    fresh: bool,
+    /// cached sums + order still exactly describe the entries' states
+    /// (enables the one-solve delta fast path); cleared when a membership
+    /// patch can't be tracked exactly
+    exact: bool,
+    entries: Vec<CacheEntry>,
+    /// crossover-order snapshot (global node indices) from the last
+    /// rebuild — required to reconstruct a `Mixed` boundary system
+    order: Vec<usize>,
+    /// cluster size the entries were solved against
+    n_nodes: usize,
+    /// membership patches applied since the last full rebuild (ledger)
+    pub delta_patches: usize,
+}
+
+impl SolveCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Entries match the current model; `t_pred` is valid for selection.
+    pub fn is_fresh(&self) -> bool {
+        self.fresh
+    }
+
+    /// Cached sums/order still exactly describe the entries (delta-solve
+    /// fast path available).
+    pub fn is_exact(&self) -> bool {
+        self.exact
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Mark the table stale (model drift, state change, node reset) while
+    /// KEEPING every entry as a §4.5 warm-start hint for the rebuild.
+    pub fn invalidate(&mut self) {
+        self.fresh = false;
+        self.exact = false;
+    }
+
+    /// Warm-start hint for candidate `b`, if we have ever solved it.
+    pub fn hint_for(&self, b: u64) -> Option<OverlapState> {
+        self.entries.iter().find(|e| e.b == b).map(|e| e.state)
+    }
+
+    /// Cached predicted time for candidate `b` (`f64::MAX` when absent, so
+    /// goodput selection never picks an unsolved candidate).
+    pub fn table_time(&self, b: u64) -> f64 {
+        self.entries.iter().find(|e| e.b == b).map(|e| e.t_pred).unwrap_or(f64::MAX)
+    }
+
+    /// Full candidate-table rebuild: solve every candidate against the
+    /// bound model, warm-starting each from the previous entry for the
+    /// same B when one exists.  Returns the total linear solves spent.
+    /// Candidates that fail to solve (e.g. infeasible B) are skipped, as
+    /// the pre-cache planner did.
+    pub fn rebuild(
+        &mut self,
+        ws: &mut SolverWorkspace,
+        model: &ClusterModel,
+        candidates: &[u64],
+        scratch: &mut Allocation,
+    ) -> usize {
+        let old = std::mem::take(&mut self.entries);
+        let mut spent = 0;
+        for &b in candidates {
+            let hint = old.iter().find(|e| e.b == b).map(|e| e.state);
+            if ws.solve_hint_into(model, b as f64, hint, scratch).is_err() {
+                continue;
+            }
+            spent += scratch.solves;
+            let (inv_sum, ratio_sum) = ws.state_sums(scratch.state);
+            self.entries.push(CacheEntry {
+                b,
+                t_pred: scratch.t_pred,
+                state: scratch.state,
+                inv_sum,
+                ratio_sum,
+            });
+        }
+        self.order.clear();
+        self.order.extend_from_slice(ws.full_order());
+        self.n_nodes = model.n();
+        self.fresh = true;
+        self.exact = true;
+        self.delta_patches = 0;
+        spent
+    }
+
+    /// Record the outcome of a re-solve for candidate `b` performed
+    /// outside the cache (the planner's chosen-B solve).  A state change
+    /// invalidates the table (the boundary moved — neighbouring entries
+    /// are stale too) but the updated entry keeps serving as a hint.
+    pub fn observe(&mut self, b: u64, t_pred: f64, state: OverlapState) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.b == b) {
+            if e.state != state {
+                e.state = state;
+                e.t_pred = t_pred;
+                e.inv_sum = 0.0;
+                e.ratio_sum = 0.0;
+                self.fresh = false;
+                self.exact = false;
+            } else {
+                e.t_pred = t_pred;
+            }
+        } else {
+            self.entries.push(CacheEntry { b, t_pred, state, inv_sum: 0.0, ratio_sum: 0.0 });
+        }
+    }
+
+    /// Patch the cache for the removal of global node index `node`.
+    ///
+    /// With `ws` bound to the **old** (pre-removal) model, the departed
+    /// node's 1/c and f/c line terms are subtracted from each entry's
+    /// cached sums and the one-solve fast path stays armed (`exact`).
+    /// With `ws = None` the sums can't be patched — entries degrade to
+    /// plain warm-start hints (still one validated solve per candidate on
+    /// the next rebuild, just not sum-reuse).
+    pub fn delta_remove(&mut self, node: usize, ws: Option<&SolverWorkspace>) {
+        self.fresh = false;
+        self.delta_patches += 1;
+        let pos = self.order.iter().position(|&i| i == node);
+        for e in &mut self.entries {
+            if let (Some(ws), Some(pos), true) = (ws, pos, self.exact) {
+                // the departing node's line terms, classified under the
+                // PRE-patch state (AllComm's system carries no +T_o shift;
+                // only the Mixed boundary system does)
+                let (slope, fixed) = match e.state {
+                    OverlapState::AllCompute => ws.comp_line(node),
+                    OverlapState::AllComm => ws.sync_line(node),
+                    OverlapState::Mixed { n_compute } => {
+                        if pos < n_compute {
+                            ws.comp_line(node)
+                        } else {
+                            let (s, f) = ws.sync_line(node);
+                            (s, f + ws.t_o())
+                        }
+                    }
+                };
+                e.inv_sum -= 1.0 / slope;
+                e.ratio_sum -= fixed / slope;
+            }
+            // shift a Mixed boundary past the removal point
+            if let OverlapState::Mixed { n_compute } = e.state {
+                let c = match pos {
+                    Some(p) if p < n_compute => n_compute - 1,
+                    _ => n_compute,
+                };
+                let n_new = self.n_nodes - 1;
+                if c > 0 && c < n_new {
+                    e.state = OverlapState::Mixed { n_compute: c };
+                } else {
+                    // the split collapsed to a pure regime whose line
+                    // system differs from the boundary one (no +T_o on
+                    // AllComm, different t_pred offset) — degrade this
+                    // entry to a plain warm-start hint
+                    e.state =
+                        if c == 0 { OverlapState::AllComm } else { OverlapState::AllCompute };
+                    e.inv_sum = 0.0;
+                    e.ratio_sum = 0.0;
+                }
+            }
+        }
+        if ws.is_none() || pos.is_none() {
+            self.exact = false;
+        }
+        if let Some(p) = pos {
+            self.order.remove(p);
+            for i in &mut self.order {
+                if *i > node {
+                    *i -= 1;
+                }
+            }
+        } else {
+            self.order.clear();
+            self.exact = false;
+        }
+        self.n_nodes = self.n_nodes.saturating_sub(1);
+    }
+
+    /// Patch the cache for `k` nodes joining.  New nodes have no cached
+    /// line terms, so the sums can't describe the grown system — entries
+    /// degrade to warm-start hints (the overlap state is still a strong
+    /// prior: joins rarely flip the regime).
+    pub fn delta_add(&mut self, k: usize) {
+        self.fresh = false;
+        self.exact = false;
+        self.order.clear();
+        self.n_nodes += k;
+    }
+
+    /// Delta-solve candidate `b` against `model`: try the one-solve
+    /// patched-sums fast path first, then fall back to the full hinted
+    /// Algorithm 1.  Returns `Ok(true)` when the fast path hit.  Exactly
+    /// one probe [`SolveRecord`] (with `delta: true`) is emitted per call
+    /// when a trace is active.
+    pub fn delta_solve(
+        &mut self,
+        ws: &mut SolverWorkspace,
+        model: &ClusterModel,
+        b: u64,
+        out: &mut Allocation,
+    ) -> Result<bool> {
+        let t0 = probe_active().then(std::time::Instant::now);
+        let (res, hinted, delta_hit) = self.delta_solve_raw(ws, model, b, out);
+        if let (Some(t0), Ok(_)) = (t0, &res) {
+            probe_push(SolveRecord {
+                total_b: b as f64,
+                solves: out.solves,
+                state: out.state.label(),
+                hinted,
+                hint_hit: delta_hit,
+                delta: true,
+                delta_hit,
+                wall_secs: t0.elapsed().as_secs_f64(),
+            });
+        }
+        res
+    }
+
+    fn delta_solve_raw(
+        &mut self,
+        ws: &mut SolverWorkspace,
+        model: &ClusterModel,
+        b: u64,
+        out: &mut Allocation,
+    ) -> (Result<bool>, bool, bool) {
+        ws.bind(model);
+        let mut spent = 0;
+        if self.exact && self.n_nodes == model.n() {
+            if let Some(e) = self.entries.iter_mut().find(|e| e.b == b && e.inv_sum != 0.0) {
+                spent = 1;
+                if let Some((t_pred, state)) =
+                    ws.try_state_with_sums(b as f64, e.state, e.inv_sum, e.ratio_sum, &self.order)
+                {
+                    out.batch_sizes.clear();
+                    out.batch_sizes.extend_from_slice(ws.b_full());
+                    out.t_pred = t_pred;
+                    out.state = state;
+                    out.solves = 1;
+                    e.t_pred = t_pred;
+                    return (Ok(true), true, true);
+                }
+            }
+        }
+        // fast path unavailable or KKT-rejected: full hinted Algorithm 1
+        let hint = self.hint_for(b);
+        let hinted = hint.is_some();
+        let (res, _, _) = ws.solve_hint_raw_into(b as f64, hint, out);
+        match res {
+            Ok(()) => {
+                out.solves += spent;
+                self.observe(b, out.t_pred, out.state);
+                (Ok(false), hinted, false)
+            }
+            Err(e) => (Err(e), hinted, false),
+        }
+    }
+}

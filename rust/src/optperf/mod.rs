@@ -14,15 +14,31 @@
 //! (all comm-bottleneck), else a binary search over the bottleneck
 //! boundary after ranking nodes by their state-crossover point.
 //!
+//! The solver body lives in [`packed::SolverWorkspace`] — a reusable
+//! packed-SoA workspace whose hint-hit steady state performs zero heap
+//! allocations (hot-path callers like the planner own a workspace and
+//! call [`packed::SolverWorkspace::solve_hint_into`] directly).  The
+//! free functions here ([`solve`], [`solve_with_hint`],
+//! [`solve_bisection`]) keep the original one-shot API, routing through
+//! a thread-local workspace.  [`cache::SolveCache`] adds the §4.5
+//! persistent candidate table with incremental delta-solves.
+//!
 //! [`solve_bisection`] is an independent water-filling solver for the same
 //! optimum (monotone in μ); the test suite asserts the two agree, which is
 //! a strong cross-check on both derivations.
 
-use anyhow::{bail, Result};
+use std::cell::RefCell;
 
-use crate::obs::probe::{probe_active, probe_push, SolveRecord};
-use crate::perfmodel::{ClusterModel, ComputeModel};
+use anyhow::Result;
+
+use crate::perfmodel::ClusterModel;
 use crate::util::round_preserving_sum;
+
+pub mod cache;
+pub mod packed;
+
+pub use cache::{CacheEntry, SolveCache};
+pub use packed::SolverWorkspace;
 
 /// Which overlap state the optimum landed in (paper Fig. 1–3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -59,6 +75,19 @@ pub struct Allocation {
 }
 
 impl Allocation {
+    /// A zeroed allocation for use as a reusable output buffer with
+    /// [`packed::SolverWorkspace::solve_hint_into`] — after the first few
+    /// solves its `batch_sizes` capacity stabilizes and refills are
+    /// allocation-free.
+    pub fn empty() -> Self {
+        Allocation {
+            batch_sizes: Vec::new(),
+            t_pred: 0.0,
+            state: OverlapState::AllCompute,
+            solves: 0,
+        }
+    }
+
     /// Local mini-batch ratios r = b / B (paper §3.1).
     pub fn ratios(&self) -> Vec<f64> {
         let total: f64 = self.batch_sizes.iter().sum();
@@ -66,74 +95,11 @@ impl Allocation {
     }
 }
 
-// ---------------------------------------------------------------------------
-// Closed-form per-state solvers
-// ---------------------------------------------------------------------------
-
-/// Solve `lineᵢ(bᵢ) = μ ∀ i, Σ bᵢ = B` where lineᵢ has `slope[i]`,
-/// `fixed[i]`: μ = (B + Σ f/c) / Σ 1/c.  One "linear-system solve" in the
-/// paper's accounting.
-fn solve_common_level(slopes: &[f64], fixed: &[f64], total_b: f64) -> (f64, Vec<f64>) {
-    let mut inv_sum = 0.0;
-    let mut ratio_sum = 0.0;
-    for (&c, &f) in slopes.iter().zip(fixed) {
-        inv_sum += 1.0 / c;
-        ratio_sum += f / c;
-    }
-    let mu = (total_b + ratio_sum) / inv_sum;
-    let b: Vec<f64> = slopes.iter().zip(fixed).map(|(&c, &f)| (mu - f) / c).collect();
-    (mu, b)
+thread_local! {
+    /// Workspace backing the one-shot free functions, so casual callers
+    /// (tests, benches, bootstrap paths) still amortize allocations.
+    static WS: RefCell<SolverWorkspace> = RefCell::new(SolverWorkspace::new());
 }
-
-/// Eq. 5/6 validity test: is node i compute-bottleneck at batch b?
-/// `(1-γ)·Pᵢ(bᵢ) >= T_o`
-fn is_compute_bottleneck(m: &ComputeModel, b: f64, gamma: f64, t_o: f64) -> bool {
-    (1.0 - gamma) * m.p(b) >= t_o
-}
-
-/// Assemble the App. A.3 boundary linear system: the first `c` nodes (in
-/// crossover `order`) are compute-classified (t_compute line), the rest
-/// comm-classified (syncStart line shifted by T_o).  Shared by Algorithm
-/// 1's boundary search and the §4.5 warm-start re-validation so the two
-/// paths can never drift.
-fn boundary_system(
-    model: &ClusterModel,
-    order: &[usize],
-    c: usize,
-    gamma: f64,
-    t_o: f64,
-) -> (Vec<f64>, Vec<f64>) {
-    let n = order.len();
-    let mut slopes = Vec::with_capacity(n);
-    let mut fixed = Vec::with_capacity(n);
-    for (pos, &i) in order.iter().enumerate() {
-        let m = &model.nodes[i];
-        if pos < c {
-            slopes.push(m.slope());
-            fixed.push(m.fixed());
-        } else {
-            slopes.push(m.sync_slope(gamma));
-            fixed.push(m.sync_fixed(gamma) + t_o);
-        }
-    }
-    (slopes, fixed)
-}
-
-/// The batch size at which node i crosses from comm- to compute-bottleneck
-/// as μ grows: solve t_compute(b) = syncStart(b) + T_o for the common μ.
-/// Nodes with a smaller crossover μ become compute-bottleneck first.
-fn crossover_mu(m: &ComputeModel, gamma: f64, t_o: f64) -> f64 {
-    // t_compute line: c·b + f;  comm line + T_o: u·b + v + T_o
-    // they’re equal (same b) when (1-γ)·P(b) = T_o  =>  b* = (T_o/(1-γ) - m)/k
-    // μ at that point is t_compute(b*).
-    let k = m.k.max(1e-30);
-    let b_star = (t_o / (1.0 - gamma).max(1e-12) - m.m) / k;
-    m.t_compute(b_star)
-}
-
-// ---------------------------------------------------------------------------
-// Algorithm 1
-// ---------------------------------------------------------------------------
 
 /// Algorithm 1: determine the overlap state and OptPerf configuration.
 ///
@@ -147,395 +113,27 @@ fn crossover_mu(m: &ComputeModel, gamma: f64, t_o: f64) -> f64 {
 /// each entry-point call records its solve count, final overlap state
 /// and wall latency; the untraced path never reads the wall clock.
 pub fn solve(model: &ClusterModel, total_b: f64) -> Result<Allocation> {
-    let t0 = probe_active().then(std::time::Instant::now);
-    let out = solve_raw(model, total_b);
-    if let (Some(t0), Ok(a)) = (t0, &out) {
-        probe_push(SolveRecord {
-            total_b,
-            solves: a.solves,
-            state: a.state.label(),
-            hinted: false,
-            hint_hit: false,
-            wall_secs: t0.elapsed().as_secs_f64(),
-        });
-    }
-    out
+    solve_with_hint(model, total_b, None)
 }
-
-/// The uninstrumented Algorithm 1 body ([`solve`] and
-/// [`solve_with_hint`] both route here so a probed run records exactly
-/// one [`SolveRecord`] per entry-point call).
-fn solve_raw(model: &ClusterModel, total_b: f64) -> Result<Allocation> {
-    let n = model.n();
-    if n == 0 {
-        bail!("empty cluster");
-    }
-    let mut active: Vec<usize> = (0..n).collect();
-    let mut total_solves = 0;
-    loop {
-        let sub = ClusterModel {
-            nodes: active.iter().map(|&i| model.nodes[i]).collect(),
-            gamma: model.gamma,
-            t_comm: model.t_comm,
-            n_buckets: model.n_buckets,
-        };
-        let mut alloc = solve_interior(&sub, total_b)?;
-        total_solves += alloc.solves;
-        let negative: Vec<usize> = alloc
-            .batch_sizes
-            .iter()
-            .enumerate()
-            .filter(|(_, &b)| b < -1e-9)
-            .map(|(pos, _)| pos)
-            .collect();
-        if negative.is_empty() {
-            // scatter back to full-cluster indexing, pinned nodes at 0
-            let mut b = vec![0.0; n];
-            for (pos, &i) in active.iter().enumerate() {
-                b[i] = alloc.batch_sizes[pos].max(0.0);
-            }
-            // pinned nodes' fixed times floor the batch time (Eq. 7)
-            let t_pred = alloc.t_pred.max(predict_batch_time(model, &b));
-            alloc.batch_sizes = b;
-            alloc.t_pred = t_pred;
-            alloc.solves = total_solves;
-            return Ok(alloc);
-        }
-        if negative.len() == active.len() {
-            bail!("no feasible allocation: all nodes pinned at zero");
-        }
-        // pin the offending nodes (remove from the active set) and retry
-        let mut keep = Vec::with_capacity(active.len() - negative.len());
-        for (pos, &i) in active.iter().enumerate() {
-            if !negative.contains(&pos) {
-                keep.push(i);
-            }
-        }
-        active = keep;
-    }
-}
-
-/// Interior Algorithm 1 (assumes the optimum has every node's b > 0).
-fn solve_interior(model: &ClusterModel, total_b: f64) -> Result<Allocation> {
-    let n = model.n();
-    if n == 0 {
-        bail!("empty cluster");
-    }
-    if total_b <= 0.0 {
-        bail!("total batch size must be positive, got {total_b}");
-    }
-    let gamma = model.gamma;
-    let t_o = model.t_o();
-    let t_u = model.t_u();
-    let mut solves = 0;
-
-    let comp_slopes: Vec<f64> = model.nodes.iter().map(|m| m.slope()).collect();
-    let comp_fixed: Vec<f64> = model.nodes.iter().map(|m| m.fixed()).collect();
-    let sync_slopes: Vec<f64> = model.nodes.iter().map(|m| m.sync_slope(gamma)).collect();
-    let sync_fixed: Vec<f64> = model.nodes.iter().map(|m| m.sync_fixed(gamma)).collect();
-
-    // -------- Check 1: all nodes compute-bottleneck (Eq. 5, App. A.1)
-    let (mu1, b1) = solve_common_level(&comp_slopes, &comp_fixed, total_b);
-    solves += 1;
-    let all_compute = b1
-        .iter()
-        .zip(&model.nodes)
-        .all(|(&b, m)| b >= 0.0 && is_compute_bottleneck(m, b, gamma, t_o));
-    if all_compute {
-        return Ok(Allocation {
-            batch_sizes: b1,
-            t_pred: mu1 + t_u,
-            state: OverlapState::AllCompute,
-            solves,
-        });
-    }
-
-    // -------- Check 2: all nodes comm-bottleneck (Eq. 6, App. A.2)
-    let (mu2, b2) = solve_common_level(&sync_slopes, &sync_fixed, total_b);
-    solves += 1;
-    let all_comm = b2
-        .iter()
-        .zip(&model.nodes)
-        .all(|(&b, m)| b >= 0.0 && !is_compute_bottleneck(m, b, gamma, t_o));
-    if all_comm {
-        return Ok(Allocation {
-            batch_sizes: b2,
-            t_pred: mu2 + model.t_comm,
-            state: OverlapState::AllComm,
-            solves,
-        });
-    }
-
-    // -------- Mixed: rank by crossover μ*, binary-search the boundary C.
-    // Nodes are sorted so that compute-bottleneck nodes form a prefix
-    // (smaller crossover μ* ⇒ they become compute-bound at smaller B).
-    let mut order: Vec<usize> = (0..n).collect();
-    let mu_star: Vec<f64> = model.nodes.iter().map(|m| crossover_mu(m, gamma, t_o)).collect();
-    order.sort_by(|&a, &b| mu_star[a].partial_cmp(&mu_star[b]).unwrap());
-
-    // solve with the first `c` (in crossover order) compute-bottleneck:
-    //   compute node: comp_slope·b + comp_fixed = μ
-    //   comm node:    sync_slope·b + sync_fixed + T_o = μ     (App. A.3)
-    let solve_boundary = |c: usize| -> (f64, Vec<f64>) {
-        let (slopes, fixed) = boundary_system(model, &order, c, gamma, t_o);
-        solve_common_level(&slopes, &fixed, total_b)
-    };
-
-    // validity: every node's *other* constraint must hold at μ
-    let valid = |c: usize, mu: f64, b_sorted: &[f64]| -> (bool, bool) {
-        // returns (need_more_compute, need_fewer_compute)
-        let mut need_more = false;
-        let mut need_fewer = false;
-        for (pos, &i) in order.iter().enumerate() {
-            let b = b_sorted[pos];
-            let m = &model.nodes[i];
-            if b < 0.0 {
-                // a negative batch on a comm node means it should not be
-                // comm-classified at this μ (or vice versa); steer by side
-                if pos < c {
-                    need_fewer = true;
-                } else {
-                    need_more = true;
-                }
-                continue;
-            }
-            if pos < c {
-                // compute-classified: its sync line must not exceed μ
-                if m.sync_start(b, gamma) + t_o > mu + 1e-9 {
-                    need_fewer = true;
-                }
-            } else {
-                // comm-classified: its compute line must not exceed μ
-                if m.t_compute(b) > mu + 1e-9 {
-                    need_more = true;
-                }
-            }
-        }
-        (need_more, need_fewer)
-    };
-
-    let (mut lo, mut hi) = (0usize, n);
-    let mut best: Option<(usize, f64, Vec<f64>)> = None;
-    while lo <= hi {
-        let c = (lo + hi) / 2;
-        let (mu, b_sorted) = solve_boundary(c);
-        solves += 1;
-        let (need_more, need_fewer) = valid(c, mu, &b_sorted);
-        match (need_more, need_fewer) {
-            (false, false) => {
-                best = Some((c, mu, b_sorted));
-                break;
-            }
-            (true, false) => {
-                lo = c + 1;
-            }
-            (false, true) => {
-                if c == 0 {
-                    break;
-                }
-                hi = c - 1;
-            }
-            (true, true) => {
-                // inconsistent classification at this boundary — fall back
-                // to a linear scan (robustness; measured, still O(n) solves)
-                break;
-            }
-        }
-        if lo > n {
-            break;
-        }
-    }
-    if best.is_none() {
-        for c in 0..=n {
-            let (mu, b_sorted) = solve_boundary(c);
-            solves += 1;
-            let (need_more, need_fewer) = valid(c, mu, &b_sorted);
-            if !need_more && !need_fewer {
-                best = Some((c, mu, b_sorted));
-                break;
-            }
-        }
-    }
-    let Some((c, mu, b_sorted)) = best else {
-        // No interior-consistent boundary exists — the optimum sits on the
-        // b >= 0 boundary (some node's fixed cost exceeds the common
-        // level).  The water-filling solver handles the clamped case
-        // exactly; keep its allocation and let the caller's pinning loop
-        // finish the accounting.
-        let mut a = solve_bisection(model, total_b);
-        a.solves = solves;
-        return Ok(a);
-    };
-
-    // un-permute
-    let mut b = vec![0.0; n];
-    for (pos, &i) in order.iter().enumerate() {
-        b[i] = b_sorted[pos];
-    }
-    Ok(Allocation {
-        batch_sizes: b,
-        t_pred: mu + t_u,
-        state: OverlapState::Mixed { n_compute: c },
-        solves,
-    })
-}
-
-// ---------------------------------------------------------------------------
-// §4.5 warm start: re-solve from a cached overlap state
-// ---------------------------------------------------------------------------
 
 /// Warm-started solve: try the cached [`OverlapState`] first.  When the
 /// hinted state still validates (the common case across consecutive epochs
 /// and across elastic re-planning — the overlap boundary moves slowly), the
 /// solve costs **one** linear-system solve instead of the full Algorithm-1
-/// search.  Falls back to [`solve`] when the hint no longer holds; a warm
-/// attempt that actually performed a solve is charged to `solves` so the
-/// Table-5 accounting stays honest (structurally inapplicable hints — e.g.
-/// a stale node count — cost nothing and are not charged).
+/// search.  Falls back to the cold search when the hint no longer holds; a
+/// warm attempt that actually performed a solve is charged to `solves` so
+/// the Table-5 accounting stays honest (structurally inapplicable hints —
+/// e.g. a stale node count — cost nothing and are not charged).
 pub fn solve_with_hint(
     model: &ClusterModel,
     total_b: f64,
     hint: Option<OverlapState>,
 ) -> Result<Allocation> {
-    let t0 = probe_active().then(std::time::Instant::now);
-    let (out, hinted, hint_hit) = solve_with_hint_raw(model, total_b, hint);
-    if let (Some(t0), Ok(a)) = (t0, &out) {
-        probe_push(SolveRecord {
-            total_b,
-            solves: a.solves,
-            state: a.state.label(),
-            hinted,
-            hint_hit,
-            wall_secs: t0.elapsed().as_secs_f64(),
-        });
-    }
-    out
-}
-
-/// Body of [`solve_with_hint`]; also reports whether a hint was
-/// supplied and whether it validated (the probe's hint-hit ledger).
-fn solve_with_hint_raw(
-    model: &ClusterModel,
-    total_b: f64,
-    hint: Option<OverlapState>,
-) -> (Result<Allocation>, bool, bool) {
-    let Some(hint) = hint else {
-        return (solve_raw(model, total_b), false, false);
-    };
-    let (attempt, spent) = try_state(model, total_b, hint);
-    if let Some(a) = attempt {
-        return (Ok(a), true, true);
-    }
-    let out = solve_raw(model, total_b).map(|mut a| {
-        a.solves += spent;
-        a
-    });
-    (out, true, false)
-}
-
-/// Solve assuming `state` and verify the KKT validity conditions.  Returns
-/// the allocation if the state is consistent, plus the number of
-/// linear-system solves actually performed (0 when the hint is
-/// structurally inapplicable and was rejected without solving).
-fn try_state(
-    model: &ClusterModel,
-    total_b: f64,
-    state: OverlapState,
-) -> (Option<Allocation>, usize) {
-    let n = model.n();
-    if n == 0 || total_b <= 0.0 {
-        return (None, 0);
-    }
-    let gamma = model.gamma;
-    let t_o = model.t_o();
-    let t_u = model.t_u();
-
-    match state {
-        OverlapState::AllCompute => {
-            let slopes: Vec<f64> = model.nodes.iter().map(|m| m.slope()).collect();
-            let fixed: Vec<f64> = model.nodes.iter().map(|m| m.fixed()).collect();
-            let (mu, b) = solve_common_level(&slopes, &fixed, total_b);
-            let ok = b
-                .iter()
-                .zip(&model.nodes)
-                .all(|(&bi, m)| bi >= 0.0 && is_compute_bottleneck(m, bi, gamma, t_o));
-            if ok {
-                (
-                    Some(Allocation {
-                        batch_sizes: b,
-                        t_pred: mu + t_u,
-                        state: OverlapState::AllCompute,
-                        solves: 1,
-                    }),
-                    1,
-                )
-            } else {
-                (None, 1)
-            }
-        }
-        OverlapState::AllComm => {
-            let slopes: Vec<f64> = model.nodes.iter().map(|m| m.sync_slope(gamma)).collect();
-            let fixed: Vec<f64> = model.nodes.iter().map(|m| m.sync_fixed(gamma)).collect();
-            let (mu, b) = solve_common_level(&slopes, &fixed, total_b);
-            let ok = b
-                .iter()
-                .zip(&model.nodes)
-                .all(|(&bi, m)| bi >= 0.0 && !is_compute_bottleneck(m, bi, gamma, t_o));
-            if ok {
-                (
-                    Some(Allocation {
-                        batch_sizes: b,
-                        t_pred: mu + model.t_comm,
-                        state: OverlapState::AllComm,
-                        solves: 1,
-                    }),
-                    1,
-                )
-            } else {
-                (None, 1)
-            }
-        }
-        OverlapState::Mixed { n_compute: c } => {
-            if c == 0 || c >= n {
-                return (None, 0);
-            }
-            // same crossover ranking + boundary system as solve_interior
-            let mut order: Vec<usize> = (0..n).collect();
-            let mu_star: Vec<f64> =
-                model.nodes.iter().map(|m| crossover_mu(m, gamma, t_o)).collect();
-            order.sort_by(|&a, &b| mu_star[a].partial_cmp(&mu_star[b]).unwrap());
-            let (slopes, fixed) = boundary_system(model, &order, c, gamma, t_o);
-            let (mu, b_sorted) = solve_common_level(&slopes, &fixed, total_b);
-            // validity: non-negative batches + each node's other constraint
-            for (pos, &i) in order.iter().enumerate() {
-                let bi = b_sorted[pos];
-                let m = &model.nodes[i];
-                if bi < 0.0 {
-                    return (None, 1);
-                }
-                if pos < c {
-                    if m.sync_start(bi, gamma) + t_o > mu + 1e-9 {
-                        return (None, 1);
-                    }
-                } else if m.t_compute(bi) > mu + 1e-9 {
-                    return (None, 1);
-                }
-            }
-            let mut b = vec![0.0; n];
-            for (pos, &i) in order.iter().enumerate() {
-                b[i] = b_sorted[pos];
-            }
-            (
-                Some(Allocation {
-                    batch_sizes: b,
-                    t_pred: mu + t_u,
-                    state: OverlapState::Mixed { n_compute: c },
-                    solves: 1,
-                }),
-                1,
-            )
-        }
-    }
+    WS.with(|ws| {
+        let mut out = Allocation::empty();
+        ws.borrow_mut().solve_hint_into(model, total_b, hint, &mut out)?;
+        Ok(out)
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -547,63 +145,11 @@ fn try_state(
 /// constraint binds first); Σbᵢ(μ) is monotone increasing, so bisect μ
 /// until Σ = B.  Used to validate Algorithm 1.
 pub fn solve_bisection(model: &ClusterModel, total_b: f64) -> Allocation {
-    let gamma = model.gamma;
-    let t_o = model.t_o();
-    let t_u = model.t_u();
-    let _ = t_u;
-
-    let b_of_mu = |mu: f64| -> Vec<f64> {
-        model
-            .nodes
-            .iter()
-            .map(|m| {
-                let b_comp = (mu - m.fixed()) / m.slope();
-                let b_comm = (mu - t_o - m.sync_fixed(gamma)) / m.sync_slope(gamma);
-                b_comp.min(b_comm).max(0.0)
-            })
-            .collect()
-    };
-    let sum_at = |mu: f64| -> f64 { b_of_mu(mu).iter().sum() };
-
-    let mut lo = model
-        .nodes
-        .iter()
-        .map(|m| m.fixed().min(m.sync_fixed(gamma) + t_o))
-        .fold(f64::MAX, f64::min);
-    let mut hi = lo.max(1e-9) * 2.0 + 1.0;
-    while sum_at(hi) < total_b {
-        hi *= 2.0;
-    }
-    for _ in 0..200 {
-        let mid = 0.5 * (lo + hi);
-        if sum_at(mid) < total_b {
-            lo = mid;
-        } else {
-            hi = mid;
-        }
-    }
-    let mu = 0.5 * (lo + hi);
-    let mut b = b_of_mu(mu);
-    // fix residual rounding so Σ = B exactly
-    let s: f64 = b.iter().sum();
-    if s > 0.0 {
-        for x in &mut b {
-            *x *= total_b / s;
-        }
-    }
-    let n_compute = b
-        .iter()
-        .zip(&model.nodes)
-        .filter(|(&bb, m)| is_compute_bottleneck(m, bb, gamma, t_o))
-        .count();
-    let state = if n_compute == model.n() {
-        OverlapState::AllCompute
-    } else if n_compute == 0 {
-        OverlapState::AllComm
-    } else {
-        OverlapState::Mixed { n_compute }
-    };
-    Allocation { batch_sizes: b.clone(), t_pred: predict_batch_time(model, &b), state, solves: 0 }
+    WS.with(|ws| {
+        let mut ws = ws.borrow_mut();
+        ws.bind(model);
+        ws.bisection_alloc(total_b)
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -665,17 +211,32 @@ pub fn integer_alloc(batches: &[f64], total_b: u64, caps: &[u64]) -> Vec<u64> {
         }
     }
     let mut out = round_preserving_sum(&want, total_b);
-    // final clamp (rounding may push one unit over a cap)
+    // final clamp (rounding may push a node over its cap): hand the spill
+    // out bounded by each recipient's remaining headroom — a single
+    // recipient one unit under its own cap must not absorb it all
     for i in 0..out.len() {
         if out[i] > caps[i] {
-            let spill = out[i] - caps[i];
+            let mut spill = out[i] - caps[i];
             out[i] = caps[i];
-            // hand spill to the node with most headroom
-            if let Some(j) = (0..out.len())
-                .filter(|&j| j != i)
-                .max_by_key(|&j| caps[j].saturating_sub(out[j]))
-            {
-                out[j] += spill;
+            while spill > 0 {
+                let Some(j) = (0..out.len())
+                    .filter(|&j| j != i && out[j] < caps[j])
+                    .max_by_key(|&j| caps[j] - out[j])
+                else {
+                    break;
+                };
+                let give = spill.min(caps[j] - out[j]);
+                out[j] += give;
+                spill -= give;
+            }
+            if spill > 0 {
+                // Σcaps < B — no headroom anywhere.  Σ = B is the stronger
+                // invariant (callers validate capacity separately), so park
+                // the remainder on the largest-cap other node
+                match (0..out.len()).filter(|&j| j != i).max_by_key(|&j| caps[j]) {
+                    Some(j) => out[j] += spill,
+                    None => out[i] += spill,
+                }
             }
         }
     }
@@ -685,7 +246,7 @@ pub fn integer_alloc(batches: &[f64], total_b: u64, caps: &[u64]) -> Vec<u64> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::perfmodel::ClusterModel;
+    use crate::perfmodel::{ClusterModel, ComputeModel};
 
     fn hetero_model(t_comm: f64) -> ClusterModel {
         // three nodes: fast / medium / slow.  Distinct fixed times AND
@@ -811,6 +372,28 @@ mod tests {
     }
 
     #[test]
+    fn integer_alloc_spill_respects_recipient_caps() {
+        // the float redistribution stalls (every free node has zero
+        // weight), so rounding pushes the last node 3 units over its cap;
+        // no single other node has 3 units of headroom — the spill must be
+        // spread across recipients, never pushing one past its own cap
+        let caps = [6u64, 5, 5, 5];
+        let b = integer_alloc(&[0.0, 0.0, 0.0, 20.0], 20, &caps);
+        assert_eq!(b.iter().sum::<u64>(), 20);
+        for (x, cap) in b.iter().zip(caps) {
+            assert!(*x <= cap, "{x} > cap {cap}");
+        }
+    }
+
+    #[test]
+    fn integer_alloc_parks_remainder_when_cluster_too_small() {
+        // Σcaps < B is the caller's error, but Σ = B must still hold so
+        // the accounting upstream stays consistent
+        let b = integer_alloc(&[4.0, 4.0], 8, &[3, 3]);
+        assert_eq!(b.iter().sum::<u64>(), 8);
+    }
+
+    #[test]
     fn warm_hint_matches_cold_solve_with_fewer_solves() {
         let mut strictly_fewer = 0;
         for t_comm in [1e-5, 0.03, 0.12, 0.5, 2.0] {
@@ -881,6 +464,7 @@ mod tests {
         for r in &recs {
             assert_eq!(r.total_b, 300.0);
             assert_eq!(r.state, cold.state.label());
+            assert!(!r.delta && !r.delta_hit, "free-fn path is not a delta solve");
             assert!(r.wall_secs >= 0.0);
         }
         // probe off again: plain calls record nothing
@@ -906,5 +490,88 @@ mod tests {
             prev = c;
         }
         assert_eq!(prev, 3);
+    }
+
+    #[test]
+    fn workspace_rebind_same_model_is_identity() {
+        // bind() must detect a bitwise-equal model and keep its state
+        // (the crossover sort survives, so repeat solves skip the O(n log n)
+        // rank step); a changed model must rebind
+        let model = hetero_model(0.12);
+        let mut ws = SolverWorkspace::new();
+        let mut a = Allocation::empty();
+        ws.solve_hint_into(&model, 300.0, None, &mut a).unwrap();
+        let first = a.clone();
+        ws.solve_hint_into(&model, 300.0, None, &mut a).unwrap();
+        assert_eq!(a.batch_sizes, first.batch_sizes);
+        assert_eq!(a.t_pred, first.t_pred);
+        let model2 = hetero_model(0.5);
+        ws.solve_hint_into(&model2, 300.0, None, &mut a).unwrap();
+        let fresh = solve(&model2, 300.0).unwrap();
+        assert_eq!(a.batch_sizes, fresh.batch_sizes);
+        assert_eq!(a.t_pred, fresh.t_pred);
+    }
+
+    #[test]
+    fn delta_remove_one_solve_matches_cold() {
+        // build a small cache against a 3-node model, remove the middle
+        // node with exact sum-patching, and check the one-solve fast path
+        // agrees with a cold solve of the shrunken cluster
+        let model = hetero_model(0.12);
+        // 1500 is all-compute for this fixture and stays so after any
+        // removal, so the sweep always has at least one exact-patch hit
+        let cands: Vec<u64> = vec![150, 300, 1500];
+        let mut ws = SolverWorkspace::new();
+        let mut cache = SolveCache::new();
+        let mut scratch = Allocation::empty();
+        cache.rebuild(&mut ws, &model, &cands, &mut scratch);
+        assert!(cache.is_fresh() && cache.is_exact());
+
+        let mut small = model.clone();
+        small.nodes.remove(1);
+        // patch with the OLD-bound workspace, then solve against the new
+        let old_ws = ws;
+        let mut new_ws = SolverWorkspace::new();
+        cache.delta_remove(1, Some(&old_ws));
+        assert!(!cache.is_fresh(), "membership change must mark the table stale");
+        assert_eq!(cache.delta_patches, 1);
+        let mut hits = 0;
+        for &b in &cands {
+            let mut out = Allocation::empty();
+            let hit = cache.delta_solve(&mut new_ws, &small, b, &mut out).unwrap();
+            let cold = solve(&small, b as f64).unwrap();
+            assert_eq!(out.state, cold.state, "B={b}");
+            assert!(
+                (out.t_pred - cold.t_pred).abs() <= 1e-9 * cold.t_pred,
+                "B={b}: delta {} cold {}",
+                out.t_pred,
+                cold.t_pred
+            );
+            for (x, y) in out.batch_sizes.iter().zip(&cold.batch_sizes) {
+                assert!((x - y).abs() <= 1e-9 * (b as f64), "B={b}: {x} vs {y}");
+            }
+            if hit {
+                assert_eq!(out.solves, 1, "fast path is one linear solve");
+                hits += 1;
+            }
+        }
+        assert!(hits >= 1, "no delta fast-path hit across the sweep");
+    }
+
+    #[test]
+    fn cache_invalidate_keeps_hints_and_rebuild_uses_them() {
+        let model = hetero_model(0.12);
+        let cands: Vec<u64> = vec![150, 300, 600];
+        let mut ws = SolverWorkspace::new();
+        let mut cache = SolveCache::new();
+        let mut scratch = Allocation::empty();
+        let cold_spent = cache.rebuild(&mut ws, &model, &cands, &mut scratch);
+        cache.invalidate();
+        assert!(!cache.is_fresh());
+        assert_eq!(cache.len(), cands.len(), "invalidation must keep the entries");
+        // same model ⇒ every hint validates ⇒ one solve per candidate
+        let warm_spent = cache.rebuild(&mut ws, &model, &cands, &mut scratch);
+        assert_eq!(warm_spent, cands.len());
+        assert!(warm_spent < cold_spent, "warm rebuild ({warm_spent}) not cheaper than cold ({cold_spent})");
     }
 }

@@ -1,0 +1,934 @@
+//! Packed solver workspace — the flat-profile hot path for Algorithm 1.
+//!
+//! `ReplanTiming::Immediate` re-solves OptPerf *inside* the epoch and the
+//! planned multi-job arbiter will call it per scheduling decision, so the
+//! per-solve constant factor is a product metric (ROADMAP item 3).  The
+//! original implementation allocated ~6 fresh `Vec`s per solve attempt
+//! (slope/fixed collects in `solve_interior`, the boundary system, the
+//! crossover sort, the result vectors).  [`SolverWorkspace`] packs the
+//! per-node model into SoA arrays once per [`ClusterModel`] via
+//! [`SolverWorkspace::bind`] and reuses scratch buffers across the whole
+//! candidate sweep and every bisection iteration, so the steady-state
+//! hint-hit solve performs **zero heap allocations** (asserted by
+//! `rust/tests/optperf_alloc.rs`).
+//!
+//! Bit-identity contract: every arithmetic expression here reproduces the
+//! original per-call path *exactly* — same per-element groupings (`a(b) =
+//! q·b + s` before `p(b) = k·b + m`), same left-to-right accumulation
+//! order for the Σ1/c and Σf/c common-level sums, and the crossover
+//! ranking uses an allocation-free `sort_unstable_by` over
+//! `(μ*, index)` pairs, which yields the identical permutation to the
+//! original allocating stable sort by μ*.  Results are bitwise equal to
+//! the pre-workspace solver; only the cost changes.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::obs::probe::{probe_active, probe_push, SolveRecord};
+use crate::perfmodel::ClusterModel;
+
+use super::{Allocation, OverlapState};
+
+/// Outcome of one interior / warm-start solve, allocation left in a
+/// workspace buffer (`b_sub` for subset solves, `b_full` for full-cluster
+/// warm starts).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Solved {
+    pub t_pred: f64,
+    pub state: OverlapState,
+    pub solves: usize,
+}
+
+/// Reusable packed-SoA solver state.  `bind` once per model (a bitwise
+/// equality check makes re-binding the same model free), then run any
+/// number of solves without touching the allocator.
+#[derive(Debug, Default)]
+pub struct SolverWorkspace {
+    bound: bool,
+    n: usize,
+    gamma: f64,
+    t_comm: f64,
+    n_buckets: usize,
+    t_u: f64,
+    t_o: f64,
+    // ---- packed per-node model (SoA), filled by `bind`
+    q: Vec<f64>,
+    s: Vec<f64>,
+    k: Vec<f64>,
+    m: Vec<f64>,
+    comp_slope: Vec<f64>,
+    comp_fixed: Vec<f64>,
+    sync_slope: Vec<f64>,
+    sync_fixed: Vec<f64>,
+    /// crossover μ* per node (B-independent, so the ranking is shared by
+    /// every candidate B — the §4.5 sweep sorts once, not per solve)
+    crossover: Vec<f64>,
+    /// node indices 0..n sorted by (crossover μ*, index); computed lazily
+    /// on the first Mixed-state solve after a bind
+    full_order: Vec<usize>,
+    order_sorted: bool,
+    /// identity permutation 0..n (a reusable `idx` slice for full solves)
+    identity: Vec<usize>,
+    // ---- scratch (capacity persists across solves)
+    sort_buf: Vec<(f64, usize)>,
+    order: Vec<usize>,
+    /// boundary-system solution in crossover order
+    b_level: Vec<f64>,
+    /// interior solution in (possibly subset) node order
+    b_sub: Vec<f64>,
+    /// final full-cluster allocation
+    b_full: Vec<f64>,
+    active: Vec<usize>,
+    keep: Vec<usize>,
+}
+
+impl SolverWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub(crate) fn t_o(&self) -> f64 {
+        self.t_o
+    }
+
+    /// (slope, fixed) of node i's compute line.
+    pub(crate) fn comp_line(&self, i: usize) -> (f64, f64) {
+        (self.comp_slope[i], self.comp_fixed[i])
+    }
+
+    /// (slope, fixed) of node i's syncStart line (without the +T_o shift).
+    pub(crate) fn sync_line(&self, i: usize) -> (f64, f64) {
+        (self.sync_slope[i], self.sync_fixed[i])
+    }
+
+    /// The full-cluster allocation of the most recent successful solve.
+    pub(crate) fn b_full(&self) -> &[f64] {
+        &self.b_full
+    }
+
+    fn same_model(&self, model: &ClusterModel) -> bool {
+        if !self.bound
+            || self.n != model.n()
+            || self.gamma != model.gamma
+            || self.t_comm != model.t_comm
+            || self.n_buckets != model.n_buckets
+        {
+            return false;
+        }
+        model
+            .nodes
+            .iter()
+            .enumerate()
+            .all(|(i, m)| self.q[i] == m.q && self.s[i] == m.s && self.k[i] == m.k && self.m[i] == m.m)
+    }
+
+    /// Pack `model` into the SoA arrays.  A bind against a bitwise-equal
+    /// model is a cheap O(n) compare and keeps the crossover sort.  No
+    /// allocation once the buffers have grown to the cluster size.
+    pub fn bind(&mut self, model: &ClusterModel) {
+        if self.same_model(model) {
+            return;
+        }
+        let n = model.n();
+        self.bound = true;
+        self.n = n;
+        self.gamma = model.gamma;
+        self.t_comm = model.t_comm;
+        self.n_buckets = model.n_buckets;
+        self.t_u = model.t_u();
+        self.t_o = model.t_o();
+        let gamma = self.gamma;
+        let t_o = self.t_o;
+        self.q.clear();
+        self.s.clear();
+        self.k.clear();
+        self.m.clear();
+        self.comp_slope.clear();
+        self.comp_fixed.clear();
+        self.sync_slope.clear();
+        self.sync_fixed.clear();
+        self.crossover.clear();
+        for m in &model.nodes {
+            self.q.push(m.q);
+            self.s.push(m.s);
+            self.k.push(m.k);
+            self.m.push(m.m);
+            self.comp_slope.push(m.slope());
+            self.comp_fixed.push(m.fixed());
+            self.sync_slope.push(m.sync_slope(gamma));
+            self.sync_fixed.push(m.sync_fixed(gamma));
+            // crossover μ*: solve (1-γ)·P(b) = T_o, rank by t_compute there
+            let k = m.k.max(1e-30);
+            let b_star = (t_o / (1.0 - gamma).max(1e-12) - m.m) / k;
+            self.crossover.push(m.t_compute(b_star));
+        }
+        self.identity.clear();
+        self.identity.extend(0..n);
+        self.order_sorted = false;
+    }
+
+    /// Crossover order of the bound model (sorted on first use).
+    pub(crate) fn full_order(&mut self) -> &[usize] {
+        self.ensure_full_order();
+        &self.full_order
+    }
+
+    fn ensure_full_order(&mut self) {
+        if self.order_sorted {
+            return;
+        }
+        self.sort_buf.clear();
+        self.sort_buf.extend(self.crossover.iter().copied().enumerate().map(|(i, x)| (x, i)));
+        // unstable sort on (μ*, index) == the original stable sort by μ*,
+        // with zero allocation
+        self.sort_buf
+            .sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        self.full_order.clear();
+        self.full_order.extend(self.sort_buf.iter().map(|p| p.1));
+        self.order_sorted = true;
+    }
+
+    // ---- per-node model lines (exactly the `ComputeModel` groupings) ----
+
+    #[inline]
+    fn a_at(&self, i: usize, b: f64) -> f64 {
+        self.q[i] * b + self.s[i]
+    }
+
+    #[inline]
+    fn p_at(&self, i: usize, b: f64) -> f64 {
+        self.k[i] * b + self.m[i]
+    }
+
+    #[inline]
+    fn t_compute_at(&self, i: usize, b: f64) -> f64 {
+        self.a_at(i, b) + self.p_at(i, b)
+    }
+
+    #[inline]
+    fn sync_start_at(&self, i: usize, b: f64) -> f64 {
+        self.a_at(i, b) + self.gamma * self.p_at(i, b)
+    }
+
+    #[inline]
+    fn is_compute_bn(&self, i: usize, b: f64) -> bool {
+        (1.0 - self.gamma) * self.p_at(i, b) >= self.t_o
+    }
+
+    // ---- entry points ---------------------------------------------------
+
+    /// Warm-startable solve writing into a caller-owned [`Allocation`]
+    /// (reused across calls: the steady-state hint-hit path performs no
+    /// heap allocation).  Probe-recording entry point — exactly one
+    /// [`SolveRecord`] per call when a trace is active.
+    pub fn solve_hint_into(
+        &mut self,
+        model: &ClusterModel,
+        total_b: f64,
+        hint: Option<OverlapState>,
+        out: &mut Allocation,
+    ) -> Result<()> {
+        self.bind(model);
+        let t0 = probe_active().then(std::time::Instant::now);
+        let (res, hinted, hint_hit) = self.solve_hint_raw_into(total_b, hint, out);
+        if let (Some(t0), Ok(())) = (t0, &res) {
+            probe_push(SolveRecord {
+                total_b,
+                solves: out.solves,
+                state: out.state.label(),
+                hinted,
+                hint_hit,
+                delta: false,
+                delta_hit: false,
+                wall_secs: t0.elapsed().as_secs_f64(),
+            });
+        }
+        res
+    }
+
+    /// Uninstrumented warm-start body; reports (result, hinted, hint_hit)
+    /// so callers that own the probe record (the delta cache) can charge
+    /// the attempt themselves.
+    pub(crate) fn solve_hint_raw_into(
+        &mut self,
+        total_b: f64,
+        hint: Option<OverlapState>,
+        out: &mut Allocation,
+    ) -> (Result<()>, bool, bool) {
+        let Some(hint) = hint else {
+            return (self.solve_raw_into(total_b, out), false, false);
+        };
+        let (attempt, spent) = self.try_state_into(total_b, hint);
+        if let Some(sv) = attempt {
+            self.write_out(out, sv);
+            return (Ok(()), true, true);
+        }
+        let res = self.solve_raw_into(total_b, out);
+        if res.is_ok() {
+            // charge the failed warm attempt (Table 5 stays honest)
+            out.solves += spent;
+        }
+        (res, true, false)
+    }
+
+    fn write_out(&self, out: &mut Allocation, sv: Solved) {
+        out.batch_sizes.clear();
+        out.batch_sizes.extend_from_slice(&self.b_full);
+        out.t_pred = sv.t_pred;
+        out.state = sv.state;
+        out.solves = sv.solves;
+    }
+
+    /// Algorithm 1 with b ≥ 0 boundary handling (the pinning loop),
+    /// writing the full-cluster allocation into `out`.  The keep-set is
+    /// built in one O(active) pass per iteration (the original rebuilt it
+    /// through an O(n²) `negative.contains` scan).
+    pub(crate) fn solve_raw_into(&mut self, total_b: f64, out: &mut Allocation) -> Result<()> {
+        let n = self.n;
+        if n == 0 {
+            bail!("empty cluster");
+        }
+        let mut active = std::mem::take(&mut self.active);
+        active.clear();
+        active.extend(0..n);
+        let mut total_solves = 0;
+        let result = loop {
+            let r = match self.interior(&active, total_b) {
+                Ok(r) => r,
+                Err(e) => break Err(e),
+            };
+            total_solves += r.solves;
+            let mut n_neg = 0;
+            for pos in 0..active.len() {
+                if self.b_sub[pos] < -1e-9 {
+                    n_neg += 1;
+                }
+            }
+            if n_neg == 0 {
+                // scatter back to full-cluster indexing, pinned nodes at 0
+                self.b_full.clear();
+                self.b_full.resize(n, 0.0);
+                for (pos, &i) in active.iter().enumerate() {
+                    self.b_full[i] = self.b_sub[pos].max(0.0);
+                }
+                // pinned nodes' fixed times floor the batch time (Eq. 7)
+                let t_pred = r.t_pred.max(self.predict_full());
+                break Ok(Solved { t_pred, state: r.state, solves: total_solves });
+            }
+            if n_neg == active.len() {
+                break Err(anyhow!("no feasible allocation: all nodes pinned at zero"));
+            }
+            // pin the offending nodes (remove from the active set) and retry
+            let mut keep = std::mem::take(&mut self.keep);
+            keep.clear();
+            for (pos, &i) in active.iter().enumerate() {
+                if !(self.b_sub[pos] < -1e-9) {
+                    keep.push(i);
+                }
+            }
+            std::mem::swap(&mut active, &mut keep);
+            self.keep = keep;
+        };
+        self.active = active;
+        let sv = result?;
+        self.write_out(out, sv);
+        Ok(())
+    }
+
+    /// Eq. 7 over the bound model and `b_full`.
+    fn predict_full(&self) -> f64 {
+        let mut worst = 0.0_f64;
+        for i in 0..self.n {
+            let bi = self.b_full[i];
+            let t1 = self.t_compute_at(i, bi) + self.t_u;
+            let t2 = self.sync_start_at(i, bi) + self.t_comm;
+            worst = worst.max(t1.max(t2));
+        }
+        worst
+    }
+
+    // ---- interior Algorithm 1 over an index subset ----------------------
+
+    /// Interior Algorithm 1 (assumes the optimum has every node's b > 0)
+    /// over the nodes in `idx`; solution left in `b_sub` (same order as
+    /// `idx`).
+    fn interior(&mut self, idx: &[usize], total_b: f64) -> Result<Solved> {
+        let nsub = idx.len();
+        if nsub == 0 {
+            bail!("empty cluster");
+        }
+        if total_b <= 0.0 {
+            bail!("total batch size must be positive, got {total_b}");
+        }
+        let mut solves = 0;
+
+        // -------- Check 1: all nodes compute-bottleneck (Eq. 5, App. A.1)
+        let mut inv_sum = 0.0;
+        let mut ratio_sum = 0.0;
+        for &i in idx {
+            let c = self.comp_slope[i];
+            inv_sum += 1.0 / c;
+            ratio_sum += self.comp_fixed[i] / c;
+        }
+        let mu1 = (total_b + ratio_sum) / inv_sum;
+        solves += 1;
+        self.b_sub.clear();
+        for &i in idx {
+            self.b_sub.push((mu1 - self.comp_fixed[i]) / self.comp_slope[i]);
+        }
+        let mut all_compute = true;
+        for (pos, &i) in idx.iter().enumerate() {
+            let b = self.b_sub[pos];
+            if !(b >= 0.0 && self.is_compute_bn(i, b)) {
+                all_compute = false;
+                break;
+            }
+        }
+        if all_compute {
+            return Ok(Solved {
+                t_pred: mu1 + self.t_u,
+                state: OverlapState::AllCompute,
+                solves,
+            });
+        }
+
+        // -------- Check 2: all nodes comm-bottleneck (Eq. 6, App. A.2)
+        let mut inv_sum = 0.0;
+        let mut ratio_sum = 0.0;
+        for &i in idx {
+            let c = self.sync_slope[i];
+            inv_sum += 1.0 / c;
+            ratio_sum += self.sync_fixed[i] / c;
+        }
+        let mu2 = (total_b + ratio_sum) / inv_sum;
+        solves += 1;
+        self.b_sub.clear();
+        for &i in idx {
+            self.b_sub.push((mu2 - self.sync_fixed[i]) / self.sync_slope[i]);
+        }
+        let mut all_comm = true;
+        for (pos, &i) in idx.iter().enumerate() {
+            let b = self.b_sub[pos];
+            if !(b >= 0.0 && !self.is_compute_bn(i, b)) {
+                all_comm = false;
+                break;
+            }
+        }
+        if all_comm {
+            return Ok(Solved {
+                t_pred: mu2 + self.t_comm,
+                state: OverlapState::AllComm,
+                solves,
+            });
+        }
+
+        // -------- Mixed: rank by crossover μ*, binary-search the boundary.
+        let mut order = std::mem::take(&mut self.order);
+        order.clear();
+        if nsub == self.n {
+            // full cluster (idx is the identity): reuse the bind-shared sort
+            self.ensure_full_order();
+            order.extend_from_slice(&self.full_order);
+        } else {
+            let mut buf = std::mem::take(&mut self.sort_buf);
+            buf.clear();
+            for (pos, &i) in idx.iter().enumerate() {
+                buf.push((self.crossover[i], pos));
+            }
+            buf.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            order.extend(buf.iter().map(|p| p.1));
+            self.sort_buf = buf;
+        }
+        let solved = self.interior_mixed(idx, &order, total_b, solves);
+        self.order = order;
+        solved
+    }
+
+    /// Boundary bisection + linear-scan fallback (the tail of the original
+    /// `solve_interior`); `order` holds positions into `idx` sorted by μ*.
+    fn interior_mixed(
+        &mut self,
+        idx: &[usize],
+        order: &[usize],
+        total_b: f64,
+        mut solves: usize,
+    ) -> Result<Solved> {
+        let nsub = idx.len();
+        let (mut lo, mut hi) = (0usize, nsub);
+        let mut best: Option<(usize, f64)> = None;
+        while lo <= hi {
+            let c = (lo + hi) / 2;
+            let mu = self.boundary_solve(idx, order, c, total_b);
+            solves += 1;
+            let (need_more, need_fewer) = self.boundary_valid(idx, order, c, mu);
+            match (need_more, need_fewer) {
+                (false, false) => {
+                    best = Some((c, mu));
+                    break;
+                }
+                (true, false) => {
+                    lo = c + 1;
+                }
+                (false, true) => {
+                    if c == 0 {
+                        break;
+                    }
+                    hi = c - 1;
+                }
+                (true, true) => {
+                    // inconsistent classification at this boundary — fall
+                    // back to a linear scan (robustness; still O(n) solves)
+                    break;
+                }
+            }
+            if lo > nsub {
+                break;
+            }
+        }
+        if best.is_none() {
+            for c in 0..=nsub {
+                let mu = self.boundary_solve(idx, order, c, total_b);
+                solves += 1;
+                let (need_more, need_fewer) = self.boundary_valid(idx, order, c, mu);
+                if !need_more && !need_fewer {
+                    best = Some((c, mu));
+                    break;
+                }
+            }
+        }
+        let Some((c, mu)) = best else {
+            // No interior-consistent boundary exists — the optimum sits on
+            // the b >= 0 boundary.  The water-filling solver handles the
+            // clamped case exactly; keep its allocation and let the
+            // caller's pinning loop finish the accounting.
+            let (t_pred, state) = self.bisection_into(idx, total_b);
+            return Ok(Solved { t_pred, state, solves });
+        };
+        // un-permute (both search loops break as soon as `best` is set, so
+        // `b_level` still holds the accepted boundary's solution)
+        self.b_sub.clear();
+        self.b_sub.resize(nsub, 0.0);
+        for (pos, &sp) in order.iter().enumerate() {
+            self.b_sub[sp] = self.b_level[pos];
+        }
+        Ok(Solved {
+            t_pred: mu + self.t_u,
+            state: OverlapState::Mixed { n_compute: c },
+            solves,
+        })
+    }
+
+    /// App. A.3 boundary system: first `c` nodes (in crossover order) on
+    /// their t_compute line, the rest on syncStart + T_o; solves the
+    /// common level into `b_level` and returns μ.
+    fn boundary_solve(&mut self, idx: &[usize], order: &[usize], c: usize, total_b: f64) -> f64 {
+        let mut inv_sum = 0.0;
+        let mut ratio_sum = 0.0;
+        for (pos, &sp) in order.iter().enumerate() {
+            let i = idx[sp];
+            let (cs, fs) = if pos < c {
+                (self.comp_slope[i], self.comp_fixed[i])
+            } else {
+                (self.sync_slope[i], self.sync_fixed[i] + self.t_o)
+            };
+            inv_sum += 1.0 / cs;
+            ratio_sum += fs / cs;
+        }
+        let mu = (total_b + ratio_sum) / inv_sum;
+        self.b_level.clear();
+        for (pos, &sp) in order.iter().enumerate() {
+            let i = idx[sp];
+            let (cs, fs) = if pos < c {
+                (self.comp_slope[i], self.comp_fixed[i])
+            } else {
+                (self.sync_slope[i], self.sync_fixed[i] + self.t_o)
+            };
+            self.b_level.push((mu - fs) / cs);
+        }
+        mu
+    }
+
+    /// KKT steering for the boundary search: every node's *other*
+    /// constraint must hold at μ; returns (need_more_compute,
+    /// need_fewer_compute).
+    fn boundary_valid(&self, idx: &[usize], order: &[usize], c: usize, mu: f64) -> (bool, bool) {
+        let mut need_more = false;
+        let mut need_fewer = false;
+        for (pos, &sp) in order.iter().enumerate() {
+            let b = self.b_level[pos];
+            let i = idx[sp];
+            if b < 0.0 {
+                // a negative batch on a comm node means it should not be
+                // comm-classified at this μ (or vice versa); steer by side
+                if pos < c {
+                    need_fewer = true;
+                } else {
+                    need_more = true;
+                }
+                continue;
+            }
+            if pos < c {
+                // compute-classified: its sync line must not exceed μ
+                if self.sync_start_at(i, b) + self.t_o > mu + 1e-9 {
+                    need_fewer = true;
+                }
+            } else {
+                // comm-classified: its compute line must not exceed μ
+                if self.t_compute_at(i, b) > mu + 1e-9 {
+                    need_more = true;
+                }
+            }
+        }
+        (need_more, need_fewer)
+    }
+
+    // ---- §4.5 warm start ------------------------------------------------
+
+    /// Solve assuming `state` over the full cluster and verify the KKT
+    /// validity conditions; solution left in `b_full`.  Returns the number
+    /// of linear-system solves performed (0 when the hint is structurally
+    /// inapplicable).
+    pub(crate) fn try_state_into(
+        &mut self,
+        total_b: f64,
+        state: OverlapState,
+    ) -> (Option<Solved>, usize) {
+        let n = self.n;
+        if n == 0 || total_b <= 0.0 {
+            return (None, 0);
+        }
+        match state {
+            OverlapState::AllCompute => {
+                let mut inv_sum = 0.0;
+                let mut ratio_sum = 0.0;
+                for i in 0..n {
+                    let c = self.comp_slope[i];
+                    inv_sum += 1.0 / c;
+                    ratio_sum += self.comp_fixed[i] / c;
+                }
+                let mu = (total_b + ratio_sum) / inv_sum;
+                self.b_full.clear();
+                for i in 0..n {
+                    self.b_full.push((mu - self.comp_fixed[i]) / self.comp_slope[i]);
+                }
+                let mut ok = true;
+                for i in 0..n {
+                    let bi = self.b_full[i];
+                    if !(bi >= 0.0 && self.is_compute_bn(i, bi)) {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    (
+                        Some(Solved {
+                            t_pred: mu + self.t_u,
+                            state: OverlapState::AllCompute,
+                            solves: 1,
+                        }),
+                        1,
+                    )
+                } else {
+                    (None, 1)
+                }
+            }
+            OverlapState::AllComm => {
+                let mut inv_sum = 0.0;
+                let mut ratio_sum = 0.0;
+                for i in 0..n {
+                    let c = self.sync_slope[i];
+                    inv_sum += 1.0 / c;
+                    ratio_sum += self.sync_fixed[i] / c;
+                }
+                let mu = (total_b + ratio_sum) / inv_sum;
+                self.b_full.clear();
+                for i in 0..n {
+                    self.b_full.push((mu - self.sync_fixed[i]) / self.sync_slope[i]);
+                }
+                let mut ok = true;
+                for i in 0..n {
+                    let bi = self.b_full[i];
+                    if !(bi >= 0.0 && !self.is_compute_bn(i, bi)) {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    (
+                        Some(Solved {
+                            t_pred: mu + self.t_comm,
+                            state: OverlapState::AllComm,
+                            solves: 1,
+                        }),
+                        1,
+                    )
+                } else {
+                    (None, 1)
+                }
+            }
+            OverlapState::Mixed { n_compute: c } => {
+                if c == 0 || c >= n {
+                    return (None, 0);
+                }
+                self.ensure_full_order();
+                let order = std::mem::take(&mut self.full_order);
+                let identity = std::mem::take(&mut self.identity);
+                let mu = self.boundary_solve(&identity, &order, c, total_b);
+                // validity: non-negative batches + each node's other constraint
+                let mut ok = true;
+                for (pos, &i) in order.iter().enumerate() {
+                    let bi = self.b_level[pos];
+                    if bi < 0.0 {
+                        ok = false;
+                        break;
+                    }
+                    if pos < c {
+                        if self.sync_start_at(i, bi) + self.t_o > mu + 1e-9 {
+                            ok = false;
+                            break;
+                        }
+                    } else if self.t_compute_at(i, bi) > mu + 1e-9 {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    self.b_full.clear();
+                    self.b_full.resize(n, 0.0);
+                    for (pos, &i) in order.iter().enumerate() {
+                        self.b_full[i] = self.b_level[pos];
+                    }
+                }
+                self.full_order = order;
+                self.identity = identity;
+                if ok {
+                    (
+                        Some(Solved {
+                            t_pred: mu + self.t_u,
+                            state: OverlapState::Mixed { n_compute: c },
+                            solves: 1,
+                        }),
+                        1,
+                    )
+                } else {
+                    (None, 1)
+                }
+            }
+        }
+    }
+
+    /// Delta-solve fast path: re-use cached common-level sums (Σ1/c, Σf/c)
+    /// maintained incrementally by [`super::SolveCache`] instead of
+    /// re-accumulating them, then KKT-validate against the *bound* model.
+    /// `order` is the cache's crossover-order snapshot (global node
+    /// indices, required for `Mixed`).  Solution left in `b_full`; returns
+    /// `(t_pred, state)` only when the cached state still validates.
+    pub(crate) fn try_state_with_sums(
+        &mut self,
+        total_b: f64,
+        state: OverlapState,
+        inv_sum: f64,
+        ratio_sum: f64,
+        order: &[usize],
+    ) -> Option<(f64, OverlapState)> {
+        let n = self.n;
+        if n == 0 || total_b <= 0.0 || !(inv_sum > 0.0) {
+            return None;
+        }
+        let mu = (total_b + ratio_sum) / inv_sum;
+        if !mu.is_finite() {
+            return None;
+        }
+        // Σb must land on B: sums patched against a drifted model produce
+        // a μ whose allocation no longer totals B, which per-node KKT
+        // checks alone cannot catch.
+        let sum_ok = |sum: f64| (sum - total_b).abs() <= 1e-6 * total_b.max(1.0);
+        match state {
+            OverlapState::AllCompute => {
+                self.b_full.clear();
+                let mut sum = 0.0;
+                for i in 0..n {
+                    let bi = (mu - self.comp_fixed[i]) / self.comp_slope[i];
+                    if !(bi >= 0.0 && self.is_compute_bn(i, bi)) {
+                        return None;
+                    }
+                    sum += bi;
+                    self.b_full.push(bi);
+                }
+                sum_ok(sum).then_some((mu + self.t_u, OverlapState::AllCompute))
+            }
+            OverlapState::AllComm => {
+                self.b_full.clear();
+                let mut sum = 0.0;
+                for i in 0..n {
+                    let bi = (mu - self.sync_fixed[i]) / self.sync_slope[i];
+                    if !(bi >= 0.0 && !self.is_compute_bn(i, bi)) {
+                        return None;
+                    }
+                    sum += bi;
+                    self.b_full.push(bi);
+                }
+                sum_ok(sum).then_some((mu + self.t_comm, OverlapState::AllComm))
+            }
+            OverlapState::Mixed { n_compute: c } => {
+                if c == 0 || c >= n || order.len() != n {
+                    return None;
+                }
+                self.b_full.clear();
+                self.b_full.resize(n, 0.0);
+                let mut sum = 0.0;
+                for (pos, &i) in order.iter().enumerate() {
+                    if i >= n {
+                        return None;
+                    }
+                    let (cs, fs) = if pos < c {
+                        (self.comp_slope[i], self.comp_fixed[i])
+                    } else {
+                        (self.sync_slope[i], self.sync_fixed[i] + self.t_o)
+                    };
+                    let bi = (mu - fs) / cs;
+                    if bi < 0.0 {
+                        return None;
+                    }
+                    if pos < c {
+                        if self.sync_start_at(i, bi) + self.t_o > mu + 1e-9 {
+                            return None;
+                        }
+                    } else if self.t_compute_at(i, bi) > mu + 1e-9 {
+                        return None;
+                    }
+                    sum += bi;
+                    self.b_full[i] = bi;
+                }
+                sum_ok(sum).then_some((mu + self.t_u, OverlapState::Mixed { n_compute: c }))
+            }
+        }
+    }
+
+    /// Σ1/c and Σf/c of the line system belonging to `state` against the
+    /// bound model (same accumulation order as the solvers).  Used by the
+    /// cache at rebuild time so later removals can patch the sums
+    /// incrementally.
+    pub(crate) fn state_sums(&mut self, state: OverlapState) -> (f64, f64) {
+        let n = self.n;
+        match state {
+            OverlapState::AllCompute => {
+                let mut inv_sum = 0.0;
+                let mut ratio_sum = 0.0;
+                for i in 0..n {
+                    let c = self.comp_slope[i];
+                    inv_sum += 1.0 / c;
+                    ratio_sum += self.comp_fixed[i] / c;
+                }
+                (inv_sum, ratio_sum)
+            }
+            OverlapState::AllComm => {
+                let mut inv_sum = 0.0;
+                let mut ratio_sum = 0.0;
+                for i in 0..n {
+                    let c = self.sync_slope[i];
+                    inv_sum += 1.0 / c;
+                    ratio_sum += self.sync_fixed[i] / c;
+                }
+                (inv_sum, ratio_sum)
+            }
+            OverlapState::Mixed { n_compute: c } => {
+                self.ensure_full_order();
+                let mut inv_sum = 0.0;
+                let mut ratio_sum = 0.0;
+                for (pos, &i) in self.full_order.iter().enumerate() {
+                    let (cs, fs) = if pos < c {
+                        (self.comp_slope[i], self.comp_fixed[i])
+                    } else {
+                        (self.sync_slope[i], self.sync_fixed[i] + self.t_o)
+                    };
+                    inv_sum += 1.0 / cs;
+                    ratio_sum += fs / cs;
+                }
+                (inv_sum, ratio_sum)
+            }
+        }
+    }
+
+    // ---- water-filling cross-check solver -------------------------------
+
+    /// Independent water-filling solve over the nodes in `idx`; solution
+    /// left in `b_sub`, returns (t_pred, state).  Allocation-free version
+    /// of the original `solve_bisection` (which built a fresh Vec per μ
+    /// probe — 200+ allocations per call).
+    fn bisection_into(&mut self, idx: &[usize], total_b: f64) -> (f64, OverlapState) {
+        let mut lo = f64::MAX;
+        for &i in idx {
+            lo = lo.min(self.comp_fixed[i].min(self.sync_fixed[i] + self.t_o));
+        }
+        let mut hi = lo.max(1e-9) * 2.0 + 1.0;
+        while self.sum_bisect(idx, hi) < total_b {
+            hi *= 2.0;
+        }
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if self.sum_bisect(idx, mid) < total_b {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let mu = 0.5 * (lo + hi);
+        self.b_sub.clear();
+        for &i in idx {
+            let b_comp = (mu - self.comp_fixed[i]) / self.comp_slope[i];
+            let b_comm = (mu - self.t_o - self.sync_fixed[i]) / self.sync_slope[i];
+            self.b_sub.push(b_comp.min(b_comm).max(0.0));
+        }
+        // fix residual rounding so Σ = B exactly
+        let s: f64 = self.b_sub.iter().sum();
+        if s > 0.0 {
+            for x in &mut self.b_sub {
+                *x *= total_b / s;
+            }
+        }
+        let mut n_compute = 0;
+        for (pos, &i) in idx.iter().enumerate() {
+            if self.is_compute_bn(i, self.b_sub[pos]) {
+                n_compute += 1;
+            }
+        }
+        let state = if n_compute == idx.len() {
+            OverlapState::AllCompute
+        } else if n_compute == 0 {
+            OverlapState::AllComm
+        } else {
+            OverlapState::Mixed { n_compute }
+        };
+        let mut worst = 0.0_f64;
+        for (pos, &i) in idx.iter().enumerate() {
+            let bi = self.b_sub[pos];
+            let t1 = self.t_compute_at(i, bi) + self.t_u;
+            let t2 = self.sync_start_at(i, bi) + self.t_comm;
+            worst = worst.max(t1.max(t2));
+        }
+        (worst, state)
+    }
+
+    fn sum_bisect(&self, idx: &[usize], mu: f64) -> f64 {
+        let mut s = 0.0;
+        for &i in idx {
+            let b_comp = (mu - self.comp_fixed[i]) / self.comp_slope[i];
+            let b_comm = (mu - self.t_o - self.sync_fixed[i]) / self.sync_slope[i];
+            s += b_comp.min(b_comm).max(0.0);
+        }
+        s
+    }
+
+    /// Full-cluster water-filling solve returning an owned [`Allocation`]
+    /// (the public [`super::solve_bisection`] routes here).
+    pub(crate) fn bisection_alloc(&mut self, total_b: f64) -> Allocation {
+        let identity = std::mem::take(&mut self.identity);
+        let (t_pred, state) = self.bisection_into(&identity, total_b);
+        self.identity = identity;
+        Allocation { batch_sizes: self.b_sub.clone(), t_pred, state, solves: 0 }
+    }
+}

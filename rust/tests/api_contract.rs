@@ -117,6 +117,8 @@ fn rand_report(rng: &mut Rng) -> RunReport {
         solves: rng.below(2000) as usize,
         hinted: rng.below(400) as usize,
         hint_hits: rng.below(400) as usize,
+        delta: rng.below(100) as usize,
+        delta_hits: rng.below(100) as usize,
         wall_total_secs: rand_f64(rng).abs(),
         wall_p50_secs: rand_f64(rng).abs(),
         wall_p90_secs: rand_f64(rng).abs(),
