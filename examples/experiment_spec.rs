@@ -10,6 +10,7 @@
 use cannikin::api::{compare, run_spec, run_spec_traced, ExperimentSpec, RunReport, SystemRegistry};
 use cannikin::elastic::{ChurnTrace, ClusterEvent, DetectionMode, ReplanTiming};
 use cannikin::obs::{tools, Tracer};
+use cannikin::sched::{self, ArbiterKind, FairnessPolicy, FleetJob, FleetSpec};
 use cannikin::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
@@ -165,6 +166,61 @@ fn main() -> anyhow::Result<()> {
     println!(
         "  export-chrome: {} event(s) — load the JSON in chrome://tracing or Perfetto",
         chrome.req("traceEvents")?.as_arr()?.len()
+    );
+
+    // 8. fleet scheduling (see SCHEDULING.md): N full specs share one
+    // cluster — `cannikin sched fleet.json` on the CLI.  Each round every
+    // live job bids the marginal goodput of gaining/losing a node of each
+    // device class (priced by its own warm §4.5 cache) and the arbiter
+    // moves at most one node; decisions land as injected NodeLeave/NodeJoin
+    // elastic events, so churn traces, detection and checkpoints compose
+    // per job unchanged.  The static-partition arbiter is the ablation —
+    // it lets nodes freed by finished jobs idle.
+    let fleet = FleetSpec {
+        name: "example-fleet".to_string(),
+        cluster: "b".to_string(),
+        jobs: vec![
+            FleetJob {
+                spec: ExperimentSpec {
+                    name: "short-cifar".to_string(),
+                    cluster: "b".to_string(),
+                    workload: "cifar10".to_string(),
+                    trace: Some("spot".to_string()),
+                    seed: 7,
+                    max_epochs: 40,
+                    ..ExperimentSpec::default()
+                },
+                weight: 1.0,
+            },
+            FleetJob {
+                spec: ExperimentSpec {
+                    name: "long-squad".to_string(),
+                    cluster: "b".to_string(),
+                    workload: "squad".to_string(),
+                    seed: 11,
+                    max_epochs: 90,
+                    ..ExperimentSpec::default()
+                },
+                weight: 2.0,
+            },
+        ],
+        arbiter: ArbiterKind::Bid,
+        fairness: FairnessPolicy::MaxGoodput,
+    };
+    let fr = sched::run_fleet(&fleet, &reg)?;
+    let mut static_fleet = fleet.clone();
+    static_fleet.arbiter = ArbiterKind::Static;
+    let fs = sched::run_fleet(&static_fleet, &reg)?;
+    println!(
+        "\nfleet of {} jobs over {} round(s): aggregate goodput {:.1} (static \
+         partition {:.1}), Jain fairness {:.3}, {} grant(s), {} move(s)",
+        fr.jobs.len(),
+        fr.rounds,
+        fr.aggregate_goodput,
+        fs.aggregate_goodput,
+        fr.fairness_index,
+        fr.grants_by_arbiter,
+        fr.preemptions_by_arbiter,
     );
     Ok(())
 }

@@ -1,0 +1,90 @@
+//! Bench: fleet scheduler — the bidding arbiter vs the static-partition
+//! ablation on the committed CI smoke fleet (3 jobs, one shared cluster),
+//! plus the wall time of one full fleet run.  Registered in benchkit
+//! (harness = false); writes `BENCH_sched.json` via
+//! `benchkit::Snapshot::save_at_repo_root`.
+
+use std::path::PathBuf;
+
+use cannikin::api::SystemRegistry;
+use cannikin::benchkit::{report, Bencher, Snapshot, Table};
+use cannikin::sched::{self, ArbiterKind, FleetReport, FleetSpec};
+
+fn main() {
+    let path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("specs").join("fleet-smoke.json");
+    let fleet = FleetSpec::load(&path).expect("committed fleet-smoke spec loads");
+    let reg = SystemRegistry::builtin();
+    println!(
+        "fleet `{}`: {} jobs on cluster `{}`",
+        fleet.name,
+        fleet.jobs.len(),
+        fleet.cluster
+    );
+
+    let mut static_fleet = fleet.clone();
+    static_fleet.arbiter = ArbiterKind::Static;
+
+    let mut tbl = Table::new(&[
+        "arbiter",
+        "aggregate goodput",
+        "jain fairness",
+        "makespan (sim s)",
+        "rounds",
+        "moves",
+        "grants",
+        "idle nodes",
+    ]);
+    let mut run = |label: &str, spec: &FleetSpec| -> FleetReport {
+        let r = sched::run_fleet(spec, &reg).expect("fleet run");
+        tbl.row(vec![
+            label.to_string(),
+            format!("{:.1}", r.aggregate_goodput),
+            format!("{:.3}", r.fairness_index),
+            format!("{:.0}", r.makespan_secs),
+            r.rounds.to_string(),
+            r.preemptions_by_arbiter.to_string(),
+            r.grants_by_arbiter.to_string(),
+            r.nodes_idle.to_string(),
+        ]);
+        r
+    };
+    let r_bid = run("bid (max-goodput)", &fleet);
+    let r_static = run("static partition", &static_fleet);
+    tbl.print("Fleet smoke: bidding arbiter vs static partition (3 jobs, cluster B)");
+    println!(
+        "\nbid vs static aggregate goodput: {:.1} vs {:.1} ({:+.1}%)",
+        r_bid.aggregate_goodput,
+        r_static.aggregate_goodput,
+        (r_bid.aggregate_goodput / r_static.aggregate_goodput - 1.0) * 100.0
+    );
+
+    // wall time of one complete fleet run — the per-round arbitration
+    // overhead (pricing every live job's classes through its warm
+    // SolveCache) is the quantity a production scheduler would pay
+    let mut snap = Snapshot::new("sched");
+    let b = Bencher::new(1, 5);
+    let r = b.run("sched/run-fleet/bid/fleet-smoke", || {
+        sched::run_fleet(&fleet, &reg).expect("fleet run")
+    });
+    report(&r);
+    snap.push(&r);
+    let r = b.run("sched/run-fleet/static/fleet-smoke", || {
+        sched::run_fleet(&static_fleet, &reg).expect("fleet run")
+    });
+    report(&r);
+    snap.push(&r);
+
+    snap.note_str("fleet", "fleet-smoke");
+    snap.note_num("jobs", fleet.jobs.len() as f64);
+    snap.note_num("bid_aggregate_goodput", r_bid.aggregate_goodput);
+    snap.note_num("static_aggregate_goodput", r_static.aggregate_goodput);
+    snap.note_num("bid_fairness_index", r_bid.fairness_index);
+    snap.note_num("bid_rounds", r_bid.rounds as f64);
+    snap.note_num("bid_moves", r_bid.preemptions_by_arbiter as f64);
+    snap.note_num("bid_grants", r_bid.grants_by_arbiter as f64);
+    match snap.save_at_repo_root() {
+        Ok(p) => println!("\nbench snapshot written to {}", p.display()),
+        Err(e) => eprintln!("\nwarning: could not write bench snapshot: {e:#}"),
+    }
+}

@@ -168,11 +168,14 @@ impl CannikinPlanner {
         self.gamma.remove_node(node);
         self.caps.remove(node);
         self.n_nodes -= 1;
-        // patch the §4.5 table in place: the entries survive as hints and
-        // a Mixed boundary is shifted past the removal (the learned model
-        // also changes — T_comm rescale, caps — so the exact-sums fast
-        // path is not armed here; the next rebuild re-solves with hints)
-        self.cache.delta_remove(node, None);
+        // patch the §4.5 table in place: the departing node's line terms
+        // are subtracted from the cached sums against the still-bound
+        // pre-removal model, keeping the exact one-solve delta path armed.
+        // The T_comm rescale that follows (in `replan`) is patched onto
+        // the sums by `rescale_t_comm`; a workspace that is unbound or
+        // already stale-sized (second removal of a batch) degrades to
+        // hint-only patching inside `delta_remove` itself.
+        self.cache.delta_remove(node, Some(&self.ws));
     }
 
     /// The scheduler added `k` nodes (with optional memory caps): their
@@ -244,9 +247,21 @@ impl CannikinPlanner {
             if n_old > 1 && n_new > 1 {
                 let factor = ((n_new - 1) as f64 / n_new as f64)
                     / ((n_old - 1) as f64 / n_old as f64);
+                // carry the §4.5 cached sums across the rescale too: only
+                // the Mixed comm-side `+t_o` terms move, and the cache
+                // tracks their Σ1/c, so the exact delta path stays armed
+                // across the planner's own removals (ROADMAP item 3)
+                if let Some(t_old) = self.comm.t_comm() {
+                    let k = self.n_buckets as f64;
+                    let t_o = |t: f64| t - t / k;
+                    self.cache.rescale_t_comm(t_o(t_old), t_o(t_old * factor));
+                }
                 self.comm.rescale(factor);
             } else {
                 self.comm = CommLearner::new();
+                // T_comm must be re-learned from scratch: the cached sums
+                // no longer describe any reachable model
+                self.cache.invalidate();
             }
         }
         assert_eq!(new_caps.len(), self.n_nodes, "caps must match the new view");

@@ -90,5 +90,5 @@ pub use events::{
 pub use membership::{ElasticCluster, MembershipDelta, HEALTHY_EPS};
 pub use scenario::{
     run_scenario, run_scenario_traced, BoundaryOutcome, ColdRestartCannikin, ElasticDriver,
-    MidEpochEffect, ScenarioConfig,
+    EpochRunner, MidEpochEffect, ScenarioConfig,
 };

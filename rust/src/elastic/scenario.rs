@@ -303,6 +303,11 @@ pub struct ElasticDriver<'a> {
     pub events_noop: usize,
     pub events_hidden: usize,
     pub events_skipped: usize,
+    /// events synthesized by an external scheduler (the fleet arbiter's
+    /// "take node i from A, give it to B" decisions), drained ahead of
+    /// the exogenous trace at the next boundary — empty for single-job
+    /// runs, so their behaviour is bit-identical to pre-scheduler builds
+    injected: Vec<ClusterEvent>,
 }
 
 impl<'a> ElasticDriver<'a> {
@@ -333,7 +338,24 @@ impl<'a> ElasticDriver<'a> {
             events_noop: 0,
             events_hidden: 0,
             events_skipped: 0,
+            injected: Vec::new(),
         }
+    }
+
+    /// Queue a scheduler-synthesized event for the next boundary.  The
+    /// fleet arbiter's reassignments ride the exact same application path
+    /// as exogenous churn (counting, detector sync, replan notification,
+    /// simulator reseed), applied *before* any due trace events so the
+    /// physical indices the arbiter chose are still valid.
+    pub fn inject(&mut self, event: ClusterEvent) {
+        self.injected.push(event);
+    }
+
+    /// Stable physical-node uids, in current physical index order (the
+    /// membership manager's ledger).  The fleet scheduler diffs these
+    /// snapshots across epochs to track node ownership through churn.
+    pub fn uids(&self) -> &[u64] {
+        self.elastic.uids()
     }
 
     /// Announced (system-facing) node count — physical nodes plus ghosts.
@@ -564,6 +586,22 @@ impl<'a> ElasticDriver<'a> {
             skipped: 0,
             new_sim: None,
         };
+        // scheduler-synthesized events first (see [`Self::inject`])
+        for ev in std::mem::take(&mut self.injected) {
+            match self.apply_one(epoch, &ev, false, system) {
+                Applied::Skipped => out.skipped += 1,
+                Applied::Noop => out.noops += 1,
+                Applied::Changed { hidden, new_sim, .. } => {
+                    if hidden {
+                        out.hidden += 1;
+                    }
+                    if new_sim.is_some() {
+                        out.new_sim = new_sim;
+                    }
+                    out.changed.push((ev.kind(), self.n(), hidden));
+                }
+            }
+        }
         loop {
             let due = self.trace.events.get(self.next_event).is_some_and(|te| {
                 te.epoch < epoch || (te.epoch == epoch && te.frac <= 0.0)
@@ -923,6 +961,7 @@ fn drain_solves(tracer: &mut Tracer, acc: &mut Vec<SolveRecord>) {
                 ("hint_hit", Json::Bool(r.hint_hit)),
                 ("delta", Json::Bool(r.delta)),
                 ("delta_hit", Json::Bool(r.delta_hit)),
+                ("pruned", Json::Bool(r.pruned)),
             ],
             vec![("secs", r.wall_secs)],
         );
@@ -946,45 +985,130 @@ pub fn run_scenario_traced(
     cfg: &ScenarioConfig,
     tracer: &mut Tracer,
 ) -> RunReport {
-    let traced = tracer.enabled();
-    if traced {
+    if tracer.enabled() {
         probe_start();
-        tracer.stamp(0, 0.0, 0.0);
-        tracer.rec(
-            "run",
-            "start",
-            vec![
-                ("system", Json::Str(system.name().to_string())),
-                ("cluster", Json::Str(base.name.clone())),
-                ("workload", Json::Str(w.name.to_string())),
-                ("trace", Json::Str(trace.name.clone())),
-                ("seed", Json::Num(cfg.seed as f64)),
-                ("detect", Json::Str(cfg.detect.name().to_string())),
-                ("max_epochs", Json::Num(cfg.max_epochs as f64)),
-            ],
-        );
     }
-    let mut driver = ElasticDriver::new(base, w, trace, cfg.detect, cfg.detector, cfg.seed);
-    let mut sim = ClusterSim::new(&driver.phys_spec(), w, cfg.seed);
-    // the checkpoint schedule rides on the active-training clock: the
-    // cumulative productive batch-processing seconds, advanced below in
-    // exact agreement with the integrator (convergence::segment_steps)
-    let mut ckpt = CheckpointClock::new(cfg.ckpt);
-    let mut active_clock = 0.0f64;
-    let mut replans_immediate = 0usize;
-    let mut dstats = DriverStats::default();
-    let mut all_solves: Vec<SolveRecord> = Vec::new();
-    // (n_nodes, boundary events, mid-epoch events, detected) per epoch
-    let mut side: Vec<(usize, usize, usize, usize)> = Vec::new();
+    let mut runner = EpochRunner::new(base, w, trace, cfg, &*system, tracer);
+    let mut run = convergence::SegmentedRun::new(target_value(w), cfg.max_epochs);
+    while !run.done(w) {
+        let exec = runner.run_epoch(run.epoch(), run.phi(w), system, tracer);
+        run.push(w, exec);
+    }
+    if tracer.enabled() {
+        // catch any solves after the last epoch close, then deactivate
+        runner.drain(tracer);
+        probe_stop();
+    }
+    runner.into_report(run.finish(), &base.name, system, tracer)
+}
 
-    let result = convergence::run_segmented(w, target_value(w), cfg.max_epochs, |epoch, phi| {
-        tracer.stamp(epoch, 0.0, active_clock);
+/// Per-job epoch execution engine — everything [`run_scenario_traced`]
+/// does for one epoch (boundary events, planning, mid-epoch splitting,
+/// checkpointing, detection close, tracing), factored out so an external
+/// driver can interleave the epochs of many jobs: the fleet scheduler
+/// ([`crate::sched`]) holds one `EpochRunner` + one
+/// [`convergence::SegmentedRun`] per job and advances them in lockstep
+/// rounds, injecting arbiter decisions via
+/// [`ElasticDriver::inject`] between rounds.  `run_scenario_traced` is a
+/// thin loop over this runner, so single-job behaviour is bit-identical
+/// to the pre-extraction code by construction.
+///
+/// Probe ownership: the runner never starts or stops the thread-local
+/// solver probe — the outer driver does, once per run (or once per
+/// fleet), so several runners can share it.  The runner drains it at its
+/// own deterministic points ([`drain_solves`]) into its per-job
+/// accumulator.
+pub struct EpochRunner<'a> {
+    pub driver: ElasticDriver<'a>,
+    sim: ClusterSim,
+    /// the checkpoint schedule rides on the active-training clock: the
+    /// cumulative productive batch-processing seconds, advanced in exact
+    /// agreement with the integrator (convergence::segment_steps)
+    ckpt: CheckpointClock,
+    active_clock: f64,
+    replans_immediate: usize,
+    dstats: DriverStats,
+    all_solves: Vec<SolveRecord>,
+    /// (n_nodes, boundary events, mid-epoch events, detected) per epoch
+    side: Vec<(usize, usize, usize, usize)>,
+    cfg: ScenarioConfig,
+    w: &'a Workload,
+}
+
+impl<'a> EpochRunner<'a> {
+    /// Build the runner and emit the `run/start` trace record.  Does NOT
+    /// start the solver probe — that is the caller's job (see the struct
+    /// docs).
+    pub fn new(
+        base: &ClusterSpec,
+        w: &'a Workload,
+        trace: &'a ChurnTrace,
+        cfg: &ScenarioConfig,
+        system: &dyn TrainingSystem,
+        tracer: &mut Tracer,
+    ) -> Self {
+        if tracer.enabled() {
+            tracer.stamp(0, 0.0, 0.0);
+            tracer.rec(
+                "run",
+                "start",
+                vec![
+                    ("system", Json::Str(system.name().to_string())),
+                    ("cluster", Json::Str(base.name.clone())),
+                    ("workload", Json::Str(w.name.to_string())),
+                    ("trace", Json::Str(trace.name.clone())),
+                    ("seed", Json::Num(cfg.seed as f64)),
+                    ("detect", Json::Str(cfg.detect.name().to_string())),
+                    ("max_epochs", Json::Num(cfg.max_epochs as f64)),
+                ],
+            );
+        }
+        let driver = ElasticDriver::new(base, w, trace, cfg.detect, cfg.detector, cfg.seed);
+        let sim = ClusterSim::new(&driver.phys_spec(), w, cfg.seed);
+        EpochRunner {
+            driver,
+            sim,
+            ckpt: CheckpointClock::new(cfg.ckpt),
+            active_clock: 0.0,
+            replans_immediate: 0,
+            dstats: DriverStats::default(),
+            all_solves: Vec::new(),
+            side: Vec::new(),
+            cfg: *cfg,
+            w,
+        }
+    }
+
+    /// Drain the solver probe into this job's trace lane + accumulator
+    /// (an extra deterministic drain point for external drivers; the
+    /// runner already drains after every plan/close inside `run_epoch`).
+    pub fn drain(&mut self, tracer: &mut Tracer) {
+        drain_solves(tracer, &mut self.all_solves);
+    }
+
+    /// Cumulative productive batch-processing seconds so far.
+    pub fn active_clock(&self) -> f64 {
+        self.active_clock
+    }
+
+    /// Execute one epoch: boundary events, plan, mid-epoch splits, final
+    /// segment, detection close.  The exact former loop body of
+    /// `run_scenario_traced`.
+    pub fn run_epoch(
+        &mut self,
+        epoch: usize,
+        phi: f64,
+        system: &mut dyn TrainingSystem,
+        tracer: &mut Tracer,
+    ) -> EpochExec {
+        let traced = tracer.enabled();
+        tracer.stamp(epoch, 0.0, self.active_clock);
         // ---- epoch boundary: apply every event that is now due
-        let replans_at_boundary = driver.replans;
-        let out = driver.boundary(epoch, system);
+        let replans_at_boundary = self.driver.replans;
+        let out = self.driver.boundary(epoch, system);
         let boundary_events = out.effective();
         if let Some(s) = out.new_sim {
-            sim = s;
+            self.sim = s;
         }
         if traced {
             for &(kind, n_after, hidden) in &out.changed {
@@ -1009,11 +1133,11 @@ pub fn run_scenario_traced(
                     ],
                 );
             }
-            if driver.replans > replans_at_boundary {
+            if self.driver.replans > replans_at_boundary {
                 tracer.rec(
                     "replan",
                     "membership",
-                    vec![("count", Json::Num((driver.replans - replans_at_boundary) as f64))],
+                    vec![("count", Json::Num((self.driver.replans - replans_at_boundary) as f64))],
                 );
             }
         }
@@ -1023,10 +1147,10 @@ pub fn run_scenario_traced(
         // restore covers every simultaneous departure at an instant)
         let mut ckpt_wasted = 0.0;
         if out.changed.iter().any(|&(kind, _, _)| kind == "preempt") {
-            let rb = ckpt.rollback_once(active_clock);
+            let rb = self.ckpt.rollback_once(self.active_clock);
             ckpt_wasted += rb;
             if rb > 0.0 {
-                dstats.rollbacks += 1;
+                self.dstats.rollbacks += 1;
                 if traced {
                     tracer.rec("ckpt", "rollback", vec![("secs", Json::Num(rb))]);
                 }
@@ -1039,7 +1163,7 @@ pub fn run_scenario_traced(
         // an Immediate re-solve may change the total mid-epoch, and the
         // post-replan segments carry the fresh plan's total.
         let plan = system.plan_epoch(epoch, phi);
-        drain_solves(tracer, &mut all_solves);
+        drain_solves(tracer, &mut self.all_solves);
         let mut local = plan.local_f64();
         let mut cur_batch = plan.total;
         if traced {
@@ -1068,62 +1192,62 @@ pub fn run_scenario_traced(
         let mut redundant = 0.0;
         let mut ckpt_cost = 0.0;
         let mut mid_events = 0usize;
-        for te in driver.take_mid_epoch(epoch) {
+        for te in self.driver.take_mid_epoch(epoch) {
             // an inert event (no-op replay, stale index) must not split
             // the epoch: it is counted by apply_mid_epoch below, but the
             // run stays bit-identical to one without it
-            if driver.peek_effective(&te) && te.frac > cursor {
-                let t = measure(&mut driver, &mut sim, system, &local, cfg.reps);
+            if self.driver.peek_effective(&te) && te.frac > cursor {
+                let t = measure(&mut self.driver, &mut self.sim, system, &local, self.cfg.reps);
                 let seg = Segment {
                     batch: cur_batch,
                     t_batch: t,
                     weight: te.frac - cursor,
                     wasted_secs: 0.0,
                 };
-                let dur = convergence::segment_steps(w, &seg) * t;
-                let taken_before = ckpt.taken;
-                let cost = ckpt.advance(active_clock, active_clock + dur);
+                let dur = convergence::segment_steps(self.w, &seg) * t;
+                let taken_before = self.ckpt.taken;
+                let cost = self.ckpt.advance(self.active_clock, self.active_clock + dur);
                 ckpt_cost += cost;
-                dstats.segments += 1;
-                dstats.ckpt_writes += ckpt.taken - taken_before;
+                self.dstats.segments += 1;
+                self.dstats.ckpt_writes += self.ckpt.taken - taken_before;
                 if traced {
                     tracer.rec(
                         "segment",
                         "run",
                         vec![
-                            ("t0", Json::Num(active_clock)),
-                            ("t1", Json::Num(active_clock + dur)),
+                            ("t0", Json::Num(self.active_clock)),
+                            ("t1", Json::Num(self.active_clock + dur)),
                             ("batch", Json::Num(cur_batch as f64)),
                             ("t_batch", Json::Num(t)),
                             ("weight", Json::Num(te.frac - cursor)),
                         ],
                     );
-                    if ckpt.taken > taken_before {
+                    if self.ckpt.taken > taken_before {
                         tracer.rec(
                             "ckpt",
                             "write",
                             vec![
-                                ("taken", Json::Num((ckpt.taken - taken_before) as f64)),
+                                ("taken", Json::Num((self.ckpt.taken - taken_before) as f64)),
                                 ("cost_secs", Json::Num(cost)),
                             ],
                         );
                     }
                 }
-                active_clock += dur;
+                self.active_clock += dur;
                 segments.push(seg);
                 cursor = te.frac;
             }
-            tracer.stamp(epoch, te.frac, active_clock);
-            let replans_at_event = driver.replans;
-            let eff = driver.apply_mid_epoch(epoch, &te, system);
+            tracer.stamp(epoch, te.frac, self.active_clock);
+            let replans_at_event = self.driver.replans;
+            let eff = self.driver.apply_mid_epoch(epoch, &te, system);
             if let Some(s) = eff.new_sim {
-                sim = s;
+                self.sim = s;
             }
             if traced {
                 if eff.effective {
                     let mut fields = vec![
                         ("mid", Json::Bool(true)),
-                        ("n_after", Json::Num(driver.n() as f64)),
+                        ("n_after", Json::Num(self.driver.n() as f64)),
                         ("abrupt", Json::Bool(eff.abrupt)),
                         ("added", Json::Num(eff.added as f64)),
                     ];
@@ -1137,11 +1261,11 @@ pub fn run_scenario_traced(
                 } else {
                     tracer.rec("event", "inert", vec![("mid", Json::Bool(true))]);
                 }
-                if driver.replans > replans_at_event {
+                if self.driver.replans > replans_at_event {
                     tracer.rec(
                         "replan",
                         "membership",
-                        vec![("count", Json::Num((driver.replans - replans_at_event) as f64))],
+                        vec![("count", Json::Num((self.driver.replans - replans_at_event) as f64))],
                     );
                 }
             }
@@ -1157,24 +1281,24 @@ pub fn run_scenario_traced(
                 // a fresh §4.5 solve replaces the plan outright (Immediate)
                 let gone = local.remove(a);
                 if eff.abrupt {
-                    if ckpt.enabled() {
-                        let rb = ckpt.rollback_once(active_clock);
+                    if self.ckpt.enabled() {
+                        let rb = self.ckpt.rollback_once(self.active_clock);
                         ckpt_wasted += rb;
                         if rb > 0.0 {
-                            dstats.rollbacks += 1;
+                            self.dstats.rollbacks += 1;
                             if traced {
                                 tracer.rec("ckpt", "rollback", vec![("secs", Json::Num(rb))]);
                             }
                         }
                     } else if total > 0.0 {
-                        redundant += te.frac * w.epoch_samples as f64 * gone / total;
+                        redundant += te.frac * self.w.epoch_samples as f64 * gone / total;
                     }
                 }
-                if cfg.replan == ReplanTiming::Immediate {
+                if self.cfg.replan == ReplanTiming::Immediate {
                     want_replan = true;
                 } else {
                     redispatch(&mut local, gone);
-                    dstats.redispatches += 1;
+                    self.dstats.redispatches += 1;
                     if traced {
                         tracer.rec(
                             "plan",
@@ -1191,25 +1315,25 @@ pub fn run_scenario_traced(
                 // silent death: the slot stays (the system doesn't know,
                 // so not even Immediate timing can replan yet); the
                 // runtime re-dispatches at step time (driver.step)
-                dstats.ghost_transitions += 1;
+                self.dstats.ghost_transitions += 1;
                 if traced {
                     tracer.rec_node("detect", "ghost", a, vec![]);
                 }
-                if ckpt.enabled() {
-                    let rb = ckpt.rollback_once(active_clock);
+                if self.ckpt.enabled() {
+                    let rb = self.ckpt.rollback_once(self.active_clock);
                     ckpt_wasted += rb;
                     if rb > 0.0 {
-                        dstats.rollbacks += 1;
+                        self.dstats.rollbacks += 1;
                         if traced {
                             tracer.rec("ckpt", "rollback", vec![("secs", Json::Num(rb))]);
                         }
                     }
                 } else if total > 0.0 {
-                    redundant += te.frac * w.epoch_samples as f64 * local[a] / total;
+                    redundant += te.frac * self.w.epoch_samples as f64 * local[a] / total;
                 }
             }
             if eff.added > 0 {
-                if cfg.replan == ReplanTiming::Immediate {
+                if self.cfg.replan == ReplanTiming::Immediate {
                     want_replan = true;
                 } else {
                     for _ in 0..eff.added {
@@ -1223,10 +1347,10 @@ pub fn run_scenario_traced(
                 // the event's frac (φ moves slowly — the epoch's value is
                 // current enough) and runs the rest of the epoch under it
                 let fresh = system.plan_epoch(epoch, phi);
-                drain_solves(tracer, &mut all_solves);
+                drain_solves(tracer, &mut self.all_solves);
                 local = fresh.local_f64();
                 cur_batch = fresh.total;
-                replans_immediate += 1;
+                self.replans_immediate += 1;
                 if traced {
                     tracer.rec(
                         "replan",
@@ -1242,51 +1366,51 @@ pub fn run_scenario_traced(
 
         // ---- the remainder of the epoch under the (re-dispatched or
         // re-solved) plan
-        let t = measure(&mut driver, &mut sim, system, &local, cfg.reps);
+        let t = measure(&mut self.driver, &mut self.sim, system, &local, self.cfg.reps);
         let seg = Segment { batch: cur_batch, t_batch: t, weight: 1.0 - cursor, wasted_secs: 0.0 };
-        let dur = convergence::segment_steps(w, &seg) * t;
-        let taken_before = ckpt.taken;
-        let cost = ckpt.advance(active_clock, active_clock + dur);
+        let dur = convergence::segment_steps(self.w, &seg) * t;
+        let taken_before = self.ckpt.taken;
+        let cost = self.ckpt.advance(self.active_clock, self.active_clock + dur);
         ckpt_cost += cost;
-        dstats.segments += 1;
-        dstats.ckpt_writes += ckpt.taken - taken_before;
+        self.dstats.segments += 1;
+        self.dstats.ckpt_writes += self.ckpt.taken - taken_before;
         if traced {
             tracer.rec(
                 "segment",
                 "run",
                 vec![
-                    ("t0", Json::Num(active_clock)),
-                    ("t1", Json::Num(active_clock + dur)),
+                    ("t0", Json::Num(self.active_clock)),
+                    ("t1", Json::Num(self.active_clock + dur)),
                     ("batch", Json::Num(cur_batch as f64)),
                     ("t_batch", Json::Num(t)),
                     ("weight", Json::Num(1.0 - cursor)),
                 ],
             );
-            if ckpt.taken > taken_before {
+            if self.ckpt.taken > taken_before {
                 tracer.rec(
                     "ckpt",
                     "write",
                     vec![
-                        ("taken", Json::Num((ckpt.taken - taken_before) as f64)),
+                        ("taken", Json::Num((self.ckpt.taken - taken_before) as f64)),
                         ("cost_secs", Json::Num(cost)),
                     ],
                 );
             }
         }
-        active_clock += dur;
+        self.active_clock += dur;
         let wasted =
             if cur_batch > 0 { redundant / cur_batch as f64 * t } else { 0.0 };
         segments.push(Segment { wasted_secs: wasted + ckpt_wasted, ..seg });
         if segments.len() > 1 {
-            dstats.mid_epoch_splits += 1;
+            self.dstats.mid_epoch_splits += 1;
         }
 
         // ---- observation-driven detection closes the epoch
-        tracer.stamp(epoch, 1.0, active_clock);
-        let replans_at_close = driver.replans;
-        let detected = driver.end_epoch(epoch, system);
-        drain_solves(tracer, &mut all_solves);
-        dstats.detect_verdicts += detected;
+        tracer.stamp(epoch, 1.0, self.active_clock);
+        let replans_at_close = self.driver.replans;
+        let detected = self.driver.end_epoch(epoch, system);
+        drain_solves(tracer, &mut self.all_solves);
+        self.dstats.detect_verdicts += detected;
         if traced {
             // the exact per-epoch waste contribution: summing these
             // records in epoch order reproduces
@@ -1296,24 +1420,24 @@ pub fn run_scenario_traced(
             if detected > 0 {
                 tracer.rec("detect", "verdicts", vec![("count", Json::Num(detected as f64))]);
             }
-            if let Some(diag) = driver.detector_diagnostics() {
+            if let Some(diag) = self.driver.detector_diagnostics() {
                 for d in diag {
                     let node = d.node;
                     tracer.rec_node("detect", "node", node, d.to_fields());
                 }
             }
-            if driver.replans > replans_at_close {
+            if self.driver.replans > replans_at_close {
                 tracer.rec(
                     "replan",
                     "membership",
-                    vec![("count", Json::Num((driver.replans - replans_at_close) as f64))],
+                    vec![("count", Json::Num((self.driver.replans - replans_at_close) as f64))],
                 );
             }
             tracer.rec(
                 "epoch",
                 "end",
                 vec![
-                    ("n", Json::Num(driver.n() as f64)),
+                    ("n", Json::Num(self.driver.n() as f64)),
                     ("events", Json::Num(boundary_events as f64)),
                     ("mid_events", Json::Num(mid_events as f64)),
                     ("detected", Json::Num(detected as f64)),
@@ -1321,86 +1445,99 @@ pub fn run_scenario_traced(
                 ],
             );
         }
-        side.push((driver.n(), boundary_events, mid_events, detected));
+        self.side.push((self.driver.n(), boundary_events, mid_events, detected));
         // the only overhead charged to the clock is the (deterministic)
         // checkpoint write cost, so the run output stays bit-identical
         // across invocations (planner wall-time is still accumulated
         // planner-side)
         EpochExec { segments, overhead: ckpt_cost }
-    });
-
-    let rows: Vec<EpochRow> = result
-        .epochs
-        .iter()
-        .zip(&side)
-        .map(|(e, &(n_nodes, events, mid_epoch_events, detected))| EpochRow {
-            epoch: e.epoch,
-            n_nodes,
-            total_batch: e.total_batch,
-            t_batch: e.t_batch,
-            wall_secs: e.wall_secs,
-            progress: e.progress,
-            metric: e.metric,
-            events,
-            mid_epoch_events,
-            detected,
-        })
-        .collect();
-
-    let final_n = driver.n();
-    let replans = driver.replans;
-    let (solver_stats, driver_stats) = if traced {
-        // catch any solves after the last epoch close, then deactivate
-        drain_solves(tracer, &mut all_solves);
-        probe_stop();
-        (Some(SolverStats::from_records(&all_solves)), Some(dstats))
-    } else {
-        (None, None)
-    };
-    let report = RunReport {
-        system: system.name().to_string(),
-        cluster: base.name.clone(),
-        workload: w.name.to_string(),
-        trace: trace.name.clone(),
-        seed: cfg.seed,
-        max_epochs: cfg.max_epochs,
-        detect: cfg.detect,
-        rows,
-        time_to_target: result.time_to_target,
-        events_applied: driver.events_applied,
-        events_noop: driver.events_noop,
-        events_hidden: driver.events_hidden,
-        events_skipped: driver.events_skipped,
-        wasted_work_secs: result.epochs.iter().map(|e| e.wasted_secs).sum(),
-        checkpoint_overhead_secs: ckpt.overhead_secs,
-        checkpoints_taken: ckpt.taken,
-        replans,
-        replans_immediate,
-        bootstrap_epochs: system.bootstrap_epochs(),
-        final_n,
-        detection: driver.finish(),
-        solver_stats,
-        driver_stats,
-    };
-    if traced {
-        tracer.rec(
-            "run",
-            "end",
-            vec![
-                ("epochs", Json::Num(report.rows.len() as f64)),
-                (
-                    "time_to_target",
-                    report.time_to_target.map(Json::Num).unwrap_or(Json::Null),
-                ),
-                ("wasted_work_secs", Json::Num(report.wasted_work_secs)),
-                ("checkpoints_taken", Json::Num(report.checkpoints_taken as f64)),
-                ("replans", Json::Num(report.replans as f64)),
-                ("replans_immediate", Json::Num(report.replans_immediate as f64)),
-                ("events_applied", Json::Num(report.events_applied as f64)),
-            ],
-        );
     }
-    report
+
+    /// Assemble the final [`RunReport`] from the integrated result and
+    /// emit the `run/end` record.  Consumes the runner; does NOT stop the
+    /// solver probe (the caller may still be running other jobs on it) —
+    /// the caller drains any trailing solves via [`Self::drain`] before
+    /// this call.
+    pub fn into_report(
+        self,
+        result: convergence::RunResult,
+        cluster_name: &str,
+        system: &mut dyn TrainingSystem,
+        tracer: &mut Tracer,
+    ) -> RunReport {
+        let traced = tracer.enabled();
+        let EpochRunner { driver, ckpt, dstats, all_solves, side, cfg, w, replans_immediate, .. } =
+            self;
+        let rows: Vec<EpochRow> = result
+            .epochs
+            .iter()
+            .zip(&side)
+            .map(|(e, &(n_nodes, events, mid_epoch_events, detected))| EpochRow {
+                epoch: e.epoch,
+                n_nodes,
+                total_batch: e.total_batch,
+                t_batch: e.t_batch,
+                wall_secs: e.wall_secs,
+                progress: e.progress,
+                metric: e.metric,
+                events,
+                mid_epoch_events,
+                detected,
+            })
+            .collect();
+
+        let final_n = driver.n();
+        let replans = driver.replans;
+        let (solver_stats, driver_stats) = if traced {
+            (Some(SolverStats::from_records(&all_solves)), Some(dstats))
+        } else {
+            (None, None)
+        };
+        let report = RunReport {
+            system: system.name().to_string(),
+            cluster: cluster_name.to_string(),
+            workload: w.name.to_string(),
+            trace: driver.trace.name.clone(),
+            seed: cfg.seed,
+            max_epochs: cfg.max_epochs,
+            detect: cfg.detect,
+            rows,
+            time_to_target: result.time_to_target,
+            events_applied: driver.events_applied,
+            events_noop: driver.events_noop,
+            events_hidden: driver.events_hidden,
+            events_skipped: driver.events_skipped,
+            wasted_work_secs: result.epochs.iter().map(|e| e.wasted_secs).sum(),
+            checkpoint_overhead_secs: ckpt.overhead_secs,
+            checkpoints_taken: ckpt.taken,
+            replans,
+            replans_immediate,
+            bootstrap_epochs: system.bootstrap_epochs(),
+            final_n,
+            detection: driver.finish(),
+            solver_stats,
+            driver_stats,
+        };
+        if traced {
+            tracer.rec(
+                "run",
+                "end",
+                vec![
+                    ("epochs", Json::Num(report.rows.len() as f64)),
+                    (
+                        "time_to_target",
+                        report.time_to_target.map(Json::Num).unwrap_or(Json::Null),
+                    ),
+                    ("wasted_work_secs", Json::Num(report.wasted_work_secs)),
+                    ("checkpoints_taken", Json::Num(report.checkpoints_taken as f64)),
+                    ("replans", Json::Num(report.replans as f64)),
+                    ("replans_immediate", Json::Num(report.replans_immediate as f64)),
+                    ("events_applied", Json::Num(report.events_applied as f64)),
+                ],
+            );
+        }
+        report
+    }
 }
 
 #[cfg(test)]

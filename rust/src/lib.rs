@@ -53,6 +53,7 @@ pub mod obs;
 pub mod optperf;
 pub mod perfmodel;
 pub mod runtime;
+pub mod sched;
 pub mod simulator;
 pub mod util;
 

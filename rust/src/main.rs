@@ -5,6 +5,7 @@
 //!   sim       convergence simulation of one system on a static cluster
 //!   elastic   convergence simulation under a cluster churn trace
 //!   run       execute a declarative ExperimentSpec (spec.json)
+//!   sched     run a multi-tenant FleetSpec (N jobs, one shared cluster)
 //!   compare   run one spec once per system in a list
 //!   report    parse a RunReport JSON back (serialization-contract check)
 //!   figures   regenerate the paper's tables & figures (results/*.csv)
@@ -36,6 +37,7 @@ use cannikin::figures;
 use cannikin::obs::{tools, Tracer};
 use cannikin::optperf;
 use cannikin::runtime::Manifest;
+use cannikin::sched::{self, FleetSpec};
 use cannikin::simulator::workload;
 use cannikin::cluster;
 use cannikin::util::json::Json;
@@ -56,6 +58,8 @@ USAGE:
                    [--ckpt-period S] [--ckpt-cost S] [--replan R] [--trace-out FILE]
                    [--json]
   cannikin run     SPEC.json [--trace-out FILE] [--json]
+  cannikin sched   FLEET.json [--arbiter bid|static] [--fairness P] [--trace-out FILE]
+                   [--json]
   cannikin compare SPEC.json [--systems S1,S2,…] [--trace-out FILE] [--json]
   cannikin report  FILE.json|-
   cannikin trace   summarize FILE.jsonl
@@ -84,6 +88,11 @@ replan (R):  boundary  — bridge a mid-epoch departure to the next epoch
              immediate — re-solve the §4.5 plan at the event's offset
 SPEC.json:   a declarative ExperimentSpec — see `rust/src/api/spec.rs` and
              specs/smoke.json; `run --json | cannikin report -` round-trips
+FLEET.json:  a FleetSpec — N jobs (each a full ExperimentSpec) arbitrated
+             over one shared cluster by marginal-goodput bidding; see
+             `rust/src/sched/` and specs/fleet-smoke.json.  --arbiter and
+             --fairness (max-goodput|max-min|weighted-share) override the
+             spec (e.g. `--arbiter static` is the no-arbitration ablation)
 tracing:     --trace-out FILE writes a deterministic JSONL trace of the run
              (simulated-clock stamps; solver wall latencies in wall_* fields
              only — see OBSERVABILITY.md).  `compare` derives one file per
@@ -141,6 +150,12 @@ const ELASTIC_FLAGS: FlagSpec = &[
     ("json", false),
 ];
 const RUN_FLAGS: FlagSpec = &[("trace-out", true), ("json", false)];
+const SCHED_FLAGS: FlagSpec = &[
+    ("arbiter", true),
+    ("fairness", true),
+    ("trace-out", true),
+    ("json", false),
+];
 const COMPARE_FLAGS: FlagSpec = &[("systems", true), ("trace-out", true), ("json", false)];
 const REPORT_FLAGS: FlagSpec = &[];
 const TRACE_FLAGS: FlagSpec = &[("out", true)];
@@ -240,6 +255,10 @@ fn run() -> Result<()> {
             let (pos, flags) = parse_args("run", rest, RUN_FLAGS, 1)?;
             cmd_run(&pos[0], &flags)
         }
+        "sched" => {
+            let (pos, flags) = parse_args("sched", rest, SCHED_FLAGS, 1)?;
+            cmd_sched(&pos[0], &flags)
+        }
         "compare" => {
             let (pos, flags) = parse_args("compare", rest, COMPARE_FLAGS, 1)?;
             cmd_compare(&pos[0], &flags)
@@ -285,8 +304,8 @@ fn run() -> Result<()> {
         }
         other => {
             let subs = [
-                "train", "sim", "elastic", "run", "compare", "report", "figures", "predict",
-                "inspect", "trace",
+                "train", "sim", "elastic", "run", "sched", "compare", "report", "figures",
+                "predict", "inspect", "trace",
             ];
             let hint = suggest(other, subs)
                 .map(|s| format!(" (did you mean `{s}`?)"))
@@ -569,6 +588,60 @@ fn cmd_run(spec_path: &str, flags: &HashMap<String, String>) -> Result<()> {
             println!("{} did not reach {} within {} epochs", r.system, w.target, spec.max_epochs)
         }
     }
+    Ok(())
+}
+
+fn cmd_sched(spec_path: &str, flags: &HashMap<String, String>) -> Result<()> {
+    let mut fleet = FleetSpec::load(Path::new(spec_path))?;
+    if let Some(name) = flags.get("arbiter") {
+        fleet.arbiter = sched::ArbiterKind::by_name(name)
+            .ok_or_else(|| anyhow!("unknown arbiter {name:?} (bid|static)"))?;
+    }
+    if let Some(name) = flags.get("fairness") {
+        fleet.fairness = sched::FairnessPolicy::by_name(name).ok_or_else(|| {
+            anyhow!("unknown fairness policy {name:?} (max-goodput|max-min|weighted-share)")
+        })?;
+    }
+    let reg = SystemRegistry::builtin();
+    let json = flags.contains_key("json");
+    if !json {
+        println!(
+            "fleet {:?}: {} job(s) on cluster {:?} [arbiter={} fairness={}]",
+            fleet.name,
+            fleet.jobs.len(),
+            fleet.cluster,
+            fleet.arbiter.name(),
+            fleet.fairness.name()
+        );
+    }
+    let r = sched::run_fleet_traced(&fleet, &reg, tracer_arg(flags)?)?;
+    if json {
+        println!("{}", r.to_json().to_string_pretty());
+        return Ok(());
+    }
+    let mut tbl = Table::new(&[
+        "job",
+        "workload",
+        "system",
+        "trace",
+        "goodput",
+        "time-to-target (sim s)",
+        "epochs",
+        "final n",
+    ]);
+    for (i, (job, g)) in r.jobs.iter().zip(&r.goodputs).enumerate() {
+        tbl.row(vec![
+            i.to_string(),
+            job.workload.clone(),
+            job.system.clone(),
+            job.trace.clone(),
+            format!("{g:.3}"),
+            job.time_to_target.map(|t| format!("{t:.0}")).unwrap_or_else(|| "-".to_string()),
+            job.rows.len().to_string(),
+            job.final_n.to_string(),
+        ]);
+    }
+    tbl.print(&r.summary());
     Ok(())
 }
 

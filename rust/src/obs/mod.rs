@@ -24,7 +24,8 @@
 //! `chrome://tracing` / Perfetto workflow.
 //!
 //! Categories in the current schema: `run`, `plan`, `solve`, `event`,
-//! `segment`, `detect`, `ckpt`, `waste`, `replan`, `step`, `epoch`.
+//! `segment`, `detect`, `ckpt`, `waste`, `replan`, `step`, `epoch`, and
+//! `sched` (the fleet arbiter's rounds/bids/moves — see `SCHEDULING.md`).
 //!
 //! The `optperf` solver is instrumented through a thread-local probe
 //! ([`probe`]) so the hot path pays nothing when no trace is active;

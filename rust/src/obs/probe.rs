@@ -32,6 +32,9 @@ pub struct SolveRecord {
     pub delta: bool,
     /// the patched-sums fast path validated (one-solve delta hit)
     pub delta_hit: bool,
+    /// the candidate was skipped by dominated-grid pruning at rebuild
+    /// (zero solves, no clock read — `wall_secs` is 0.0 by construction)
+    pub pruned: bool,
     /// wall-clock latency of the call — the ONLY non-deterministic
     /// datum in the whole trace; serialized as `wall_secs`
     pub wall_secs: f64,
@@ -88,6 +91,7 @@ mod tests {
             hint_hit: false,
             delta: false,
             delta_hit: false,
+            pruned: false,
             wall_secs: 0.0,
         }
     }

@@ -34,6 +34,9 @@ pub struct SolverStats {
     pub delta: usize,
     /// delta calls where the patched-sums fast path validated (one solve)
     pub delta_hits: usize,
+    /// candidates skipped by dominated-grid pruning at rebuild (zero
+    /// solves spent)
+    pub pruned: usize,
     pub wall_total_secs: f64,
     pub wall_p50_secs: f64,
     pub wall_p90_secs: f64,
@@ -61,6 +64,7 @@ impl SolverStats {
             hint_hits: records.iter().filter(|r| r.hint_hit).count(),
             delta: records.iter().filter(|r| r.delta).count(),
             delta_hits: records.iter().filter(|r| r.delta_hit).count(),
+            pruned: records.iter().filter(|r| r.pruned).count(),
             wall_total_secs: walls.iter().sum(),
             wall_p50_secs: percentile(&walls, 50.0),
             wall_p90_secs: percentile(&walls, 90.0),
@@ -77,6 +81,7 @@ impl SolverStats {
             ("hint_hits", Json::Num(self.hint_hits as f64)),
             ("delta", Json::Num(self.delta as f64)),
             ("delta_hits", Json::Num(self.delta_hits as f64)),
+            ("pruned", Json::Num(self.pruned as f64)),
             ("wall_total_secs", Json::Num(self.wall_total_secs)),
             ("wall_p50_secs", Json::Num(self.wall_p50_secs)),
             ("wall_p90_secs", Json::Num(self.wall_p90_secs)),
@@ -94,6 +99,8 @@ impl SolverStats {
             // absent in pre-delta-cache reports; default 0 keeps them parsing
             delta: j.get("delta").and_then(|v| v.as_usize().ok()).unwrap_or(0),
             delta_hits: j.get("delta_hits").and_then(|v| v.as_usize().ok()).unwrap_or(0),
+            // absent in pre-pruning reports; default 0 keeps them parsing
+            pruned: j.get("pruned").and_then(|v| v.as_usize().ok()).unwrap_or(0),
             wall_total_secs: j.req("wall_total_secs")?.as_f64()?,
             wall_p50_secs: j.req("wall_p50_secs")?.as_f64()?,
             wall_p90_secs: j.req("wall_p90_secs")?.as_f64()?,
@@ -162,6 +169,7 @@ mod tests {
             hint_hit: hit,
             delta: false,
             delta_hit: false,
+            pruned: false,
             wall_secs: wall,
         }
     }

@@ -122,6 +122,7 @@ pub fn summarize(records: &[Json]) -> Result<TraceSummary> {
                 hint_hit: rec.get("hint_hit").and_then(|b| b.as_bool().ok()).unwrap_or(false),
                 delta: rec.get("delta").and_then(|b| b.as_bool().ok()).unwrap_or(false),
                 delta_hit: rec.get("delta_hit").and_then(|b| b.as_bool().ok()).unwrap_or(false),
+                pruned: rec.get("pruned").and_then(|b| b.as_bool().ok()).unwrap_or(false),
                 wall_secs: f64_field(rec, "wall_secs"),
             }),
             _ => {}

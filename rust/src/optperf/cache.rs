@@ -49,10 +49,16 @@ pub struct CacheEntry {
     inv_sum: f64,
     /// Σ f/c over the state's line system
     ratio_sum: f64,
+    /// Σ 1/c over the *comm side* of a `Mixed` system only (0.0 for pure
+    /// states) — a T_comm rescale moves every comm-side fixed term by the
+    /// same Δt_o, so `ratio_sum` shifts by exactly `Δt_o · comm_inv`
+    comm_inv: f64,
 }
 
-/// Planner-lifetime solve cache (see module docs).
-#[derive(Debug, Default)]
+/// Planner-lifetime solve cache (see module docs).  `Clone` so a fleet
+/// arbiter can price hypothetical node losses on a scratch copy without
+/// disturbing the job's warm table.
+#[derive(Clone, Debug, Default)]
 pub struct SolveCache {
     /// table matches the current model (goodput selection may read
     /// `t_pred` directly); cleared by any invalidation or membership event
@@ -69,6 +75,8 @@ pub struct SolveCache {
     n_nodes: usize,
     /// membership patches applied since the last full rebuild (ledger)
     pub delta_patches: usize,
+    /// candidates skipped by dominated-grid pruning across rebuilds (ledger)
+    pub pruned: usize,
 }
 
 impl SolveCache {
@@ -118,6 +126,20 @@ impl SolveCache {
     /// same B when one exists.  Returns the total linear solves spent.
     /// Candidates that fail to solve (e.g. infeasible B) are skipped, as
     /// the pre-cache planner did.
+    ///
+    /// **Dominated-grid pruning**: a candidate whose *cached* throughput
+    /// is a strict local minimum of the grid (strictly below both
+    /// neighbours) can never be the goodput argmax — for a smaller B with
+    /// higher throughput, `goodput(B) = thr(B)·(φ+B₀)/(φ+B)` dominates at
+    /// every φ, so the left neighbour beats it φ-independently.  Such
+    /// candidates are deferred in a first pass and only re-solved when the
+    /// freshly-solved neighbour throughputs invert the cached ranking;
+    /// still-dominated ones keep their old entry as a plain hint (sums
+    /// zeroed — cost only, never answers) and cost zero solves, recorded
+    /// as `pruned` in the probe/[`crate::obs::SolverStats`].  Endpoints
+    /// are never pruned, and two adjacent candidates can't both be strict
+    /// local minima, so every deferred index has solved neighbours to
+    /// re-check against.
     pub fn rebuild(
         &mut self,
         ws: &mut SolverWorkspace,
@@ -127,21 +149,98 @@ impl SolveCache {
     ) -> usize {
         let old = std::mem::take(&mut self.entries);
         let mut spent = 0;
-        for &b in candidates {
+        let m = candidates.len();
+        // cached throughput per grid position (None = never solved)
+        let thr_old: Vec<Option<f64>> = candidates
+            .iter()
+            .map(|&b| {
+                old.iter()
+                    .find(|e| e.b == b && e.t_pred > 0.0 && e.t_pred < f64::MAX)
+                    .map(|e| b as f64 / e.t_pred)
+            })
+            .collect();
+        let deferred: Vec<bool> = (0..m)
+            .map(|i| {
+                i > 0
+                    && i + 1 < m
+                    && matches!(
+                        (thr_old[i - 1], thr_old[i], thr_old[i + 1]),
+                        (Some(l), Some(c), Some(r)) if c < l && c < r
+                    )
+            })
+            .collect();
+        let mut slots: Vec<Option<CacheEntry>> = vec![None; m];
+        // pass 1: solve everything not deferred
+        for (i, &b) in candidates.iter().enumerate() {
+            if deferred[i] {
+                continue;
+            }
             let hint = old.iter().find(|e| e.b == b).map(|e| e.state);
             if ws.solve_hint_into(model, b as f64, hint, scratch).is_err() {
                 continue;
             }
             spent += scratch.solves;
-            let (inv_sum, ratio_sum) = ws.state_sums(scratch.state);
-            self.entries.push(CacheEntry {
+            let (inv_sum, ratio_sum, comm_inv) = ws.state_sums(scratch.state);
+            slots[i] = Some(CacheEntry {
                 b,
                 t_pred: scratch.t_pred,
                 state: scratch.state,
                 inv_sum,
                 ratio_sum,
+                comm_inv,
             });
         }
+        // pass 2: re-check deferred candidates against fresh neighbours
+        for (i, &b) in candidates.iter().enumerate() {
+            if !deferred[i] {
+                continue;
+            }
+            let fresh_thr = |s: &Option<CacheEntry>| {
+                s.as_ref().map(|e| e.b as f64 / e.t_pred)
+            };
+            let still_dominated = matches!(
+                (fresh_thr(&slots[i - 1]), thr_old[i], fresh_thr(&slots[i + 1])),
+                (Some(l), Some(c), Some(r)) if c < l && c < r
+            );
+            if still_dominated {
+                let mut e = old.iter().find(|e| e.b == b).cloned().unwrap();
+                e.inv_sum = 0.0;
+                e.ratio_sum = 0.0;
+                e.comm_inv = 0.0;
+                self.pruned += 1;
+                if probe_active() {
+                    probe_push(SolveRecord {
+                        total_b: b as f64,
+                        solves: 0,
+                        state: e.state.label(),
+                        hinted: true,
+                        hint_hit: true,
+                        delta: false,
+                        delta_hit: false,
+                        pruned: true,
+                        wall_secs: 0.0,
+                    });
+                }
+                slots[i] = Some(e);
+                continue;
+            }
+            // rank inversion: the cached ordering no longer holds
+            let hint = old.iter().find(|e| e.b == b).map(|e| e.state);
+            if ws.solve_hint_into(model, b as f64, hint, scratch).is_err() {
+                continue;
+            }
+            spent += scratch.solves;
+            let (inv_sum, ratio_sum, comm_inv) = ws.state_sums(scratch.state);
+            slots[i] = Some(CacheEntry {
+                b,
+                t_pred: scratch.t_pred,
+                state: scratch.state,
+                inv_sum,
+                ratio_sum,
+                comm_inv,
+            });
+        }
+        self.entries.extend(slots.into_iter().flatten());
         self.order.clear();
         self.order.extend_from_slice(ws.full_order());
         self.n_nodes = model.n();
@@ -162,13 +261,21 @@ impl SolveCache {
                 e.t_pred = t_pred;
                 e.inv_sum = 0.0;
                 e.ratio_sum = 0.0;
+                e.comm_inv = 0.0;
                 self.fresh = false;
                 self.exact = false;
             } else {
                 e.t_pred = t_pred;
             }
         } else {
-            self.entries.push(CacheEntry { b, t_pred, state, inv_sum: 0.0, ratio_sum: 0.0 });
+            self.entries.push(CacheEntry {
+                b,
+                t_pred,
+                state,
+                inv_sum: 0.0,
+                ratio_sum: 0.0,
+                comm_inv: 0.0,
+            });
         }
     }
 
@@ -183,6 +290,10 @@ impl SolveCache {
     pub fn delta_remove(&mut self, node: usize, ws: Option<&SolverWorkspace>) {
         self.fresh = false;
         self.delta_patches += 1;
+        // a workspace bound to a different-sized model (e.g. the second of
+        // two removals in one replan, before any re-bind) can't describe
+        // the departing node's line terms — degrade to hint-only patching
+        let ws = ws.filter(|w| w.n() == self.n_nodes && node < self.n_nodes);
         let pos = self.order.iter().position(|&i| i == node);
         for e in &mut self.entries {
             if let (Some(ws), Some(pos), true) = (ws, pos, self.exact) {
@@ -197,6 +308,9 @@ impl SolveCache {
                             ws.comp_line(node)
                         } else {
                             let (s, f) = ws.sync_line(node);
+                            // the node leaves the comm side: its share of
+                            // the T_comm-rescale patch base goes with it
+                            e.comm_inv -= 1.0 / s;
                             (s, f + ws.t_o())
                         }
                     }
@@ -222,6 +336,7 @@ impl SolveCache {
                         if c == 0 { OverlapState::AllComm } else { OverlapState::AllCompute };
                     e.inv_sum = 0.0;
                     e.ratio_sum = 0.0;
+                    e.comm_inv = 0.0;
                 }
             }
         }
@@ -253,6 +368,31 @@ impl SolveCache {
         self.n_nodes += k;
     }
 
+    /// Patch the cached sums for a T_comm rescale (the ring changed size:
+    /// T_comm scales as 2(n−1)/n, and with it the overlap offset
+    /// `t_o = T_comm − T_comm/K`).  Only `Mixed` entries carry t_o — their
+    /// comm-side fixed terms are `f + t_o`, so the ratio sum moves by
+    /// exactly `Δt_o · Σ_comm 1/c` (tracked as `comm_inv`); `AllCompute`
+    /// and `AllComm` line systems are t_o-free.  This is what lets the
+    /// planner's own removals keep the exact one-solve delta path armed:
+    /// every patched sum is still re-validated per-node (KKT + Σb) by
+    /// [`SolverWorkspace::try_state_with_sums`] before an answer is used.
+    pub fn rescale_t_comm(&mut self, t_o_old: f64, t_o_new: f64) {
+        if !self.exact {
+            return;
+        }
+        let d = t_o_new - t_o_old;
+        if d == 0.0 || !d.is_finite() {
+            return;
+        }
+        self.fresh = false; // cached t_pred values predate the rescale
+        for e in &mut self.entries {
+            if matches!(e.state, OverlapState::Mixed { .. }) && e.inv_sum != 0.0 {
+                e.ratio_sum += d * e.comm_inv;
+            }
+        }
+    }
+
     /// Delta-solve candidate `b` against `model`: try the one-solve
     /// patched-sums fast path first, then fall back to the full hinted
     /// Algorithm 1.  Returns `Ok(true)` when the fast path hit.  Exactly
@@ -276,6 +416,7 @@ impl SolveCache {
                 hint_hit: delta_hit,
                 delta: true,
                 delta_hit,
+                pruned: false,
                 wall_secs: t0.elapsed().as_secs_f64(),
             });
         }

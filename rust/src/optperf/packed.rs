@@ -243,6 +243,7 @@ impl SolverWorkspace {
                 hint_hit,
                 delta: false,
                 delta_hit: false,
+                pruned: false,
                 wall_secs: t0.elapsed().as_secs_f64(),
             });
         }
@@ -808,11 +809,15 @@ impl SolverWorkspace {
         }
     }
 
-    /// Σ1/c and Σf/c of the line system belonging to `state` against the
-    /// bound model (same accumulation order as the solvers).  Used by the
-    /// cache at rebuild time so later removals can patch the sums
-    /// incrementally.
-    pub(crate) fn state_sums(&mut self, state: OverlapState) -> (f64, f64) {
+    /// Σ1/c, Σf/c, and Σ_comm 1/c of the line system belonging to `state`
+    /// against the bound model (same accumulation order as the solvers).
+    /// Used by the cache at rebuild time so later removals — and T_comm
+    /// rescales, via the comm-side inverse-slope sum — can patch the sums
+    /// incrementally.  The third component is nonzero only for `Mixed`:
+    /// the comm-side fixed terms there carry `+ t_o`, so a T_comm rescale
+    /// shifts `ratio_sum` by exactly `Δt_o · Σ_comm 1/c` (`AllCompute` and
+    /// `AllComm` sums are t_o-free).
+    pub(crate) fn state_sums(&mut self, state: OverlapState) -> (f64, f64, f64) {
         let n = self.n;
         match state {
             OverlapState::AllCompute => {
@@ -823,7 +828,7 @@ impl SolverWorkspace {
                     inv_sum += 1.0 / c;
                     ratio_sum += self.comp_fixed[i] / c;
                 }
-                (inv_sum, ratio_sum)
+                (inv_sum, ratio_sum, 0.0)
             }
             OverlapState::AllComm => {
                 let mut inv_sum = 0.0;
@@ -833,12 +838,13 @@ impl SolverWorkspace {
                     inv_sum += 1.0 / c;
                     ratio_sum += self.sync_fixed[i] / c;
                 }
-                (inv_sum, ratio_sum)
+                (inv_sum, ratio_sum, 0.0)
             }
             OverlapState::Mixed { n_compute: c } => {
                 self.ensure_full_order();
                 let mut inv_sum = 0.0;
                 let mut ratio_sum = 0.0;
+                let mut comm_inv = 0.0;
                 for (pos, &i) in self.full_order.iter().enumerate() {
                     let (cs, fs) = if pos < c {
                         (self.comp_slope[i], self.comp_fixed[i])
@@ -847,8 +853,11 @@ impl SolverWorkspace {
                     };
                     inv_sum += 1.0 / cs;
                     ratio_sum += fs / cs;
+                    if pos >= c {
+                        comm_inv += 1.0 / cs;
+                    }
                 }
-                (inv_sum, ratio_sum)
+                (inv_sum, ratio_sum, comm_inv)
             }
         }
     }

@@ -1,0 +1,669 @@
+//! The fleet driver: N concurrent jobs advanced in lockstep scheduling
+//! rounds over one shared heterogeneous cluster.
+//!
+//! Round structure (one round = one epoch of every live job):
+//!
+//! 1. every live job runs one epoch through its own [`EpochRunner`] and
+//!    integrates it into its [`SegmentedRun`];
+//! 2. ownership is re-synced: the fleet diffs each job's stable worker
+//!    uids ([`ElasticDriver::uids`]) against the previous snapshot — an
+//!    arbiter-reclaimed uid vanishing is a *move*, any other vanishing
+//!    uid left the fleet (spot churn), a new uid consumes a pending
+//!    arbiter grant (injected joins apply before trace joins, so
+//!    positional matching is exact) or mints a fresh fleet node (trace
+//!    join = new hardware);
+//! 3. jobs that reached their stop rule release their nodes to the free
+//!    pool and produce their [`RunReport`];
+//! 4. under [`ArbiterKind::Bid`], every live job prices its marginal
+//!    goodput per device class ([`JobPricer`]), freed nodes are placed
+//!    ([`arbiter::place`]) and at most one take-from-donor move is chosen
+//!    ([`arbiter::decide`]).  Decisions materialize as injected
+//!    [`ClusterEvent`]s applied at each job's next boundary — ahead of
+//!    its exogenous trace, so the chosen physical indices are still
+//!    valid.  Under [`ArbiterKind::Static`] nothing moves and freed nodes
+//!    idle (the ablation baseline).
+//!
+//! The [`FleetLedger`] enforces conservation every round: no fleet node
+//! owned twice, none leaked (modulo exogenous losses and joins).
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use anyhow::{bail, Result};
+
+use crate::api::spec::resolve_cluster_name;
+use crate::api::{BuildOptions, RunReport, SystemRegistry, TrainingSystem};
+use crate::cluster::{ClusterSpec, DeviceProfile};
+use crate::elastic::scenario::EpochRunner;
+use crate::elastic::{ChurnTrace, ClusterEvent, ScenarioConfig};
+use crate::figures::target_value;
+use crate::obs::{probe_drain, probe_start, probe_stop, Tracer};
+use crate::sched::arbiter::{self, JobPrice};
+use crate::sched::report::jain_index;
+use crate::sched::{ArbiterKind, FleetReport, FleetSpec, JobPricer};
+use crate::simulator::convergence::SegmentedRun;
+use crate::simulator::Workload;
+use crate::util::json::Json;
+
+/// Fleet-node ownership ledger.  Fleet node ids are stable for the life
+/// of the run (arbiter moves carry the id from donor to recipient); each
+/// job's side of the mapping is keyed by its driver's stable worker uids.
+#[derive(Debug)]
+pub struct FleetLedger {
+    /// per job: driver uid → fleet node id
+    owned: Vec<BTreeMap<u64, usize>>,
+    /// per job: uids the arbiter reclaimed (their `NodeLeave` is queued;
+    /// they must vanish at the job's next boundary)
+    expected: Vec<Vec<u64>>,
+    /// per job: fleet nodes granted (`NodeJoin` queued), consumed in
+    /// order as new uids materialize
+    granted: Vec<VecDeque<(usize, DeviceProfile)>>,
+    next_id: usize,
+    /// fleet nodes lost to exogenous churn
+    pub lost: usize,
+    /// fleet nodes minted by exogenous trace joins
+    pub minted: usize,
+}
+
+impl FleetLedger {
+    pub fn new(n_jobs: usize) -> Self {
+        FleetLedger {
+            owned: vec![BTreeMap::new(); n_jobs],
+            expected: vec![Vec::new(); n_jobs],
+            granted: vec![VecDeque::new(); n_jobs],
+            next_id: 0,
+            lost: 0,
+            minted: 0,
+        }
+    }
+
+    /// Register a job's initial uids (fresh fleet ids, in uid order).
+    pub fn seed(&mut self, job: usize, uids: &[u64]) {
+        for &uid in uids {
+            self.owned[job].insert(uid, self.next_id);
+            self.next_id += 1;
+        }
+    }
+
+    /// The arbiter takes `uid` from `job`: un-own it now (its `NodeLeave`
+    /// is being injected) and return the fleet id to hand the recipient.
+    pub fn reclaim(&mut self, job: usize, uid: u64) -> Option<usize> {
+        let fid = self.owned[job].remove(&uid)?;
+        self.expected[job].push(uid);
+        Some(fid)
+    }
+
+    /// The arbiter grants fleet node `fid` (of class `dev`) to `job`; the
+    /// matching `NodeJoin` is being injected.
+    pub fn grant(&mut self, job: usize, fid: usize, dev: DeviceProfile) {
+        self.granted[job].push_back((fid, dev));
+    }
+
+    /// Re-sync one job after an epoch: diff its current uids against the
+    /// ledger.  Returns `(lost, joined)` exogenous counts.
+    pub fn sync(&mut self, job: usize, now: &[u64]) -> (usize, usize) {
+        let now_set: BTreeSet<u64> = now.iter().copied().collect();
+        // arbiter-reclaimed uids must have departed at the boundary this
+        // epoch opened with (injected events drain first)
+        for uid in self.expected[job].drain(..) {
+            assert!(!now_set.contains(&uid), "arbiter NodeLeave for uid {uid} did not apply");
+        }
+        let gone: Vec<u64> =
+            self.owned[job].keys().filter(|u| !now_set.contains(u)).copied().collect();
+        let lost = gone.len();
+        for uid in gone {
+            self.owned[job].remove(&uid);
+            self.lost += 1;
+        }
+        let mut joined = 0;
+        for &uid in now {
+            if self.owned[job].contains_key(&uid) {
+                continue;
+            }
+            // injected joins apply before trace joins, so pending grants
+            // match the earliest new uids; anything left is new hardware
+            let fid = match self.granted[job].pop_front() {
+                Some((fid, _dev)) => fid,
+                None => {
+                    let fid = self.next_id;
+                    self.next_id += 1;
+                    self.minted += 1;
+                    fid
+                }
+            };
+            self.owned[job].insert(uid, fid);
+            joined += 1;
+        }
+        (lost, joined)
+    }
+
+    /// Fleet id currently mapped to `uid` under `job`.
+    pub fn fleet_id(&self, job: usize, uid: u64) -> Option<usize> {
+        self.owned[job].get(&uid).copied()
+    }
+
+    /// A finished job returns everything: its owned mapping (the caller
+    /// pairs uids with devices via the driver's physical order) and any
+    /// never-materialized grants.
+    pub fn release(&mut self, job: usize) -> (BTreeMap<u64, usize>, Vec<(usize, DeviceProfile)>) {
+        assert!(self.expected[job].is_empty(), "released a job with a pending reclaim");
+        (std::mem::take(&mut self.owned[job]), self.granted[job].drain(..).collect())
+    }
+
+    /// Conservation invariant: every fleet id lives in exactly one place
+    /// (some job's ledger, a pending grant, or the free pool), and the
+    /// total accounts for every id ever minted minus exogenous losses.
+    pub fn check(&self, free: &[usize]) {
+        let mut seen = BTreeSet::new();
+        let mut count = 0usize;
+        for m in &self.owned {
+            for &fid in m.values() {
+                assert!(seen.insert(fid), "fleet node {fid} owned twice");
+                count += 1;
+            }
+        }
+        for q in &self.granted {
+            for &(fid, _) in q {
+                assert!(seen.insert(fid), "fleet node {fid} double-granted");
+                count += 1;
+            }
+        }
+        for &fid in free {
+            assert!(seen.insert(fid), "fleet node {fid} free while owned");
+            count += 1;
+        }
+        assert_eq!(count + self.lost, self.next_id, "fleet nodes leaked");
+    }
+}
+
+/// Deal the fleet's nodes to jobs: indices sorted by device speed
+/// descending (stable on ties), dealt round-robin so every job gets a
+/// comparable speed mix, then each hand restored to ascending fleet
+/// order — a 1-job fleet therefore receives the cluster *verbatim*,
+/// which is what makes the single-job bit-identity guarantee hold.
+pub fn partition_indices(base: &ClusterSpec, n_jobs: usize) -> Vec<Vec<usize>> {
+    let mut order: Vec<usize> = (0..base.n()).collect();
+    order.sort_by(|&a, &b| {
+        base.nodes[b]
+            .device
+            .speed
+            .partial_cmp(&base.nodes[a].device.speed)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut parts = vec![Vec::new(); n_jobs];
+    for (k, &i) in order.iter().enumerate() {
+        parts[k % n_jobs].push(i);
+    }
+    for p in &mut parts {
+        p.sort_unstable();
+    }
+    parts
+}
+
+struct JobCtx {
+    name: String,
+    system_name: String,
+    weight: f64,
+    w: Workload,
+    trace: ChurnTrace,
+    part: ClusterSpec,
+    cfg: ScenarioConfig,
+}
+
+/// Run a fleet spec (untraced).
+pub fn run_fleet(spec: &FleetSpec, registry: &SystemRegistry) -> Result<FleetReport> {
+    run_fleet_traced(spec, registry, Tracer::disabled())
+}
+
+/// [`run_fleet`] with a [`Tracer`] threaded through every job's driver
+/// plus the arbiter lane (`sched` records: `start` / `lane` / `round` /
+/// `move` / `grant` / `pricing` / `end`).  The tracer is finished before
+/// the report is returned.
+pub fn run_fleet_traced(
+    fleet: &FleetSpec,
+    registry: &SystemRegistry,
+    mut tracer: Tracer,
+) -> Result<FleetReport> {
+    let n_jobs = fleet.jobs.len();
+    if n_jobs == 0 {
+        bail!("a fleet needs at least one job");
+    }
+    let base = resolve_cluster_name(&fleet.cluster)?;
+    if base.n() < n_jobs {
+        bail!("fleet cluster {:?} has {} nodes for {} jobs", fleet.cluster, base.n(), n_jobs);
+    }
+    // fail fast on any bad name before anything runs
+    for job in &fleet.jobs {
+        registry.check(&job.spec.system)?;
+    }
+
+    let parts = partition_indices(&base, n_jobs);
+    let mut ctxs: Vec<JobCtx> = Vec::with_capacity(n_jobs);
+    for (job, idxs) in fleet.jobs.iter().zip(&parts) {
+        let w = job.spec.resolve_workload()?;
+        let devices: Vec<DeviceProfile> =
+            idxs.iter().map(|&i| base.nodes[i].device.clone()).collect();
+        // partitions keep the fleet cluster's name and interconnect: a
+        // job's slice is the same fabric, just fewer ring members
+        let part = ClusterSpec::new(&base.name, devices, base.net_gbps);
+        let trace = job.spec.resolve_trace(&part)?;
+        ctxs.push(JobCtx {
+            name: job.spec.name.clone(),
+            system_name: job.spec.system.clone(),
+            weight: job.weight,
+            cfg: job.spec.scenario_config(),
+            w,
+            trace,
+            part,
+        });
+    }
+    let mut systems: Vec<Box<dyn TrainingSystem>> = Vec::with_capacity(n_jobs);
+    for (job, ctx) in fleet.jobs.iter().zip(&ctxs) {
+        let opts = BuildOptions { policy: job.spec.policy, ..Default::default() };
+        systems.push(registry.build(&job.spec.system, &ctx.part, &ctx.w, &opts)?);
+    }
+
+    let traced = tracer.enabled();
+    if traced {
+        probe_start();
+        tracer.stamp(0, 0.0, 0.0);
+        tracer.rec(
+            "sched",
+            "start",
+            vec![
+                ("name", Json::Str(fleet.name.clone())),
+                ("cluster", Json::Str(base.name.clone())),
+                ("jobs", Json::Num(n_jobs as f64)),
+                ("arbiter", Json::Str(fleet.arbiter.name().to_string())),
+                ("fairness", Json::Str(fleet.fairness.name().to_string())),
+            ],
+        );
+    }
+
+    let mut runners: Vec<Option<EpochRunner>> = Vec::with_capacity(n_jobs);
+    for (ctx, system) in ctxs.iter().zip(&systems) {
+        runners.push(Some(EpochRunner::new(
+            &ctx.part,
+            &ctx.w,
+            &ctx.trace,
+            &ctx.cfg,
+            &**system,
+            &mut tracer,
+        )));
+    }
+    let mut steppers: Vec<SegmentedRun> =
+        ctxs.iter().map(|c| SegmentedRun::new(target_value(&c.w), c.cfg.max_epochs)).collect();
+    let mut pricers: Vec<JobPricer> = ctxs.iter().map(|c| JobPricer::new(&c.w)).collect();
+    // gain pricing catalog: the fleet's device classes, first-seen order
+    let mut classes: Vec<DeviceProfile> = Vec::new();
+    for node in &base.nodes {
+        if !classes.iter().any(|d| d.name == node.device.name) {
+            classes.push(node.device.clone());
+        }
+    }
+
+    let mut ledger = FleetLedger::new(n_jobs);
+    for (j, r) in runners.iter().enumerate() {
+        ledger.seed(j, r.as_ref().unwrap().driver.uids());
+    }
+    let mut reports: Vec<Option<RunReport>> = (0..n_jobs).map(|_| None).collect();
+    let mut free_pool: Vec<(usize, DeviceProfile)> = Vec::new();
+    let mut rounds = 0usize;
+    let mut preemptions = 0usize;
+    let mut grants = 0usize;
+    let round_cap = ctxs.iter().map(|c| c.cfg.max_epochs).max().unwrap_or(0) + 1;
+
+    while reports.iter().any(Option::is_none) {
+        assert!(rounds <= round_cap, "fleet failed to converge in {round_cap} rounds");
+        // ---- 1-3: one epoch per live job; sync ownership; harvest
+        for j in 0..n_jobs {
+            if reports[j].is_some() {
+                continue;
+            }
+            if !steppers[j].done(&ctxs[j].w) {
+                if traced {
+                    tracer.rec(
+                        "sched",
+                        "lane",
+                        vec![
+                            ("job", Json::Num(j as f64)),
+                            ("name", Json::Str(ctxs[j].name.clone())),
+                        ],
+                    );
+                }
+                let runner = runners[j].as_mut().unwrap();
+                let exec = runner.run_epoch(
+                    steppers[j].epoch(),
+                    steppers[j].phi(&ctxs[j].w),
+                    systems[j].as_mut(),
+                    &mut tracer,
+                );
+                steppers[j].push(&ctxs[j].w, exec);
+                ledger.sync(j, runner.driver.uids());
+            }
+            if steppers[j].done(&ctxs[j].w) {
+                // job over: release every node to the free pool, report
+                let mut runner = runners[j].take().unwrap();
+                let spec_j = runner.driver.phys_spec();
+                let uids: Vec<u64> = runner.driver.uids().to_vec();
+                let (owned, pending) = ledger.release(j);
+                for (i, uid) in uids.iter().enumerate() {
+                    if let Some(&fid) = owned.get(uid) {
+                        free_pool.push((fid, spec_j.nodes[i].device.clone()));
+                    }
+                }
+                free_pool.extend(pending);
+                if traced {
+                    runner.drain(&mut tracer);
+                }
+                reports[j] = Some(runner.into_report(
+                    steppers[j].clone().finish(),
+                    &ctxs[j].part.name,
+                    systems[j].as_mut(),
+                    &mut tracer,
+                ));
+            }
+        }
+        // ---- 4: arbitration
+        let live: Vec<usize> = (0..n_jobs).filter(|&j| reports[j].is_none()).collect();
+        if fleet.arbiter == ArbiterKind::Bid
+            && !live.is_empty()
+            && (live.len() >= 2 || !free_pool.is_empty())
+        {
+            let mut prices: Vec<JobPrice> = Vec::with_capacity(live.len());
+            for &j in &live {
+                let driver = &runners[j].as_ref().unwrap().driver;
+                let spec_j = driver.phys_spec();
+                if spec_j.n() == 0 {
+                    continue;
+                }
+                prices.push(pricers[j].price(
+                    j,
+                    ctxs[j].weight,
+                    &ctxs[j].w,
+                    &spec_j,
+                    steppers[j].phi(&ctxs[j].w),
+                    &classes,
+                ));
+            }
+            if traced {
+                // bid solves land in the arbiter lane, never in a job's
+                // solver_stats: drain the probe before any job's next epoch
+                let solve_records = probe_drain().len();
+                tracer.rec(
+                    "sched",
+                    "pricing",
+                    vec![
+                        ("jobs", Json::Num(prices.len() as f64)),
+                        ("solve_records", Json::Num(solve_records as f64)),
+                    ],
+                );
+            }
+            // 4a: place freed nodes (finished-job redistribution)
+            let mut still_free = Vec::new();
+            for (fid, dev) in free_pool.drain(..) {
+                match arbiter::place(fleet.fairness, &prices, &dev.name) {
+                    Some(to) => {
+                        let runner = runners[to].as_mut().unwrap();
+                        runner.driver.inject(ClusterEvent::NodeJoin {
+                            device: dev.clone(),
+                            uid: None,
+                        });
+                        ledger.grant(to, fid, dev.clone());
+                        grants += 1;
+                        if traced {
+                            tracer.rec(
+                                "sched",
+                                "grant",
+                                vec![
+                                    ("to", Json::Num(to as f64)),
+                                    ("class", Json::Str(dev.name.clone())),
+                                    ("fleet_node", Json::Num(fid as f64)),
+                                ],
+                            );
+                        }
+                    }
+                    None => still_free.push((fid, dev)),
+                }
+            }
+            free_pool = still_free;
+            // 4b: at most one take-from-donor move per round
+            if live.len() >= 2 {
+                if let Some(mv) = arbiter::decide(fleet.fairness, &prices) {
+                    let donor = runners[mv.from].as_mut().unwrap();
+                    let dev = donor.driver.phys_spec().nodes[mv.victim].device.clone();
+                    let uid = donor.driver.uids()[mv.victim];
+                    let fid = ledger.reclaim(mv.from, uid).expect("victim uid is owned");
+                    donor.driver.inject(ClusterEvent::NodeLeave { node: mv.victim });
+                    let recipient = runners[mv.to].as_mut().unwrap();
+                    recipient
+                        .driver
+                        .inject(ClusterEvent::NodeJoin { device: dev.clone(), uid: None });
+                    ledger.grant(mv.to, fid, dev.clone());
+                    preemptions += 1;
+                    if traced {
+                        tracer.rec(
+                            "sched",
+                            "move",
+                            vec![
+                                ("from", Json::Num(mv.from as f64)),
+                                ("to", Json::Num(mv.to as f64)),
+                                ("class", Json::Str(mv.class.clone())),
+                                ("fleet_node", Json::Num(fid as f64)),
+                            ],
+                        );
+                    }
+                }
+            }
+        }
+        let free_ids: Vec<usize> = free_pool.iter().map(|&(fid, _)| fid).collect();
+        ledger.check(&free_ids);
+        if traced {
+            tracer.rec(
+                "sched",
+                "round",
+                vec![
+                    ("round", Json::Num(rounds as f64)),
+                    ("live", Json::Num(live.len() as f64)),
+                    ("free", Json::Num(free_pool.len() as f64)),
+                ],
+            );
+        }
+        rounds += 1;
+    }
+
+    if traced {
+        tracer.rec(
+            "sched",
+            "end",
+            vec![
+                ("rounds", Json::Num(rounds as f64)),
+                ("preemptions", Json::Num(preemptions as f64)),
+                ("grants", Json::Num(grants as f64)),
+            ],
+        );
+        probe_stop();
+    }
+    tracer.finish()?;
+
+    let jobs: Vec<RunReport> = reports.into_iter().map(|r| r.expect("all jobs finished")).collect();
+    let goodputs: Vec<f64> = jobs
+        .iter()
+        .map(|r| match r.rows.last() {
+            Some(row) if row.wall_secs > 0.0 => row.progress / row.wall_secs,
+            _ => 0.0,
+        })
+        .collect();
+    let aggregate_goodput = goodputs.iter().sum();
+    let makespan_secs = jobs
+        .iter()
+        .filter_map(|r| r.rows.last())
+        .map(|row| row.wall_secs)
+        .fold(0.0, f64::max);
+    Ok(FleetReport {
+        name: fleet.name.clone(),
+        cluster: base.name.clone(),
+        arbiter: fleet.arbiter.name().to_string(),
+        fairness: fleet.fairness.name().to_string(),
+        fairness_index: jain_index(&goodputs),
+        aggregate_goodput,
+        makespan_secs,
+        preemptions_by_arbiter: preemptions,
+        grants_by_arbiter: grants,
+        rounds,
+        nodes_lost: ledger.lost,
+        nodes_joined: ledger.minted,
+        nodes_idle: free_pool.len(),
+        weights: ctxs.iter().map(|c| c.weight).collect(),
+        goodputs,
+        jobs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn partition_deals_speed_sorted_round_robin() {
+        let b = cluster::cluster_b(); // 4×A100, 4×V100, 8×RTX6000
+        let parts = partition_indices(&b, 3);
+        assert_eq!(parts.iter().map(Vec::len).sum::<usize>(), 16);
+        // every index exactly once
+        let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..16).collect::<Vec<_>>());
+        // the four A100s (indices 0-3) spread across jobs, never stacked
+        for p in &parts {
+            let a100s = p.iter().filter(|&&i| i < 4).count();
+            assert!(a100s <= 2, "{parts:?}");
+        }
+        // hands come back in ascending fleet order
+        for p in &parts {
+            assert!(p.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn one_job_partition_is_the_cluster_verbatim() {
+        let b = cluster::cluster_b();
+        assert_eq!(partition_indices(&b, 1), vec![(0..16).collect::<Vec<_>>()]);
+    }
+
+    #[test]
+    fn ledger_tracks_a_move_end_to_end() {
+        let mut l = FleetLedger::new(2);
+        l.seed(0, &[10, 11, 12]);
+        l.seed(1, &[20]);
+        l.check(&[]);
+        // arbiter takes uid 11 from job 0, grants its fleet id to job 1
+        let fid = l.reclaim(0, 11).unwrap();
+        assert_eq!(fid, 1);
+        l.grant(1, fid, cluster::devices::v100());
+        l.check(&[]);
+        // job 0's boundary applied the leave; job 1's join minted uid 21
+        l.sync(0, &[10, 12]);
+        l.sync(1, &[20, 21]);
+        assert_eq!(l.fleet_id(1, 21), Some(1));
+        assert_eq!(l.fleet_id(0, 11), None);
+        l.check(&[]);
+        assert_eq!(l.lost, 0);
+        assert_eq!(l.minted, 0);
+    }
+
+    #[test]
+    fn ledger_counts_exogenous_churn() {
+        let mut l = FleetLedger::new(1);
+        l.seed(0, &[1, 2, 3]);
+        // node 2 preempted by the trace, a brand-new node 9 joined
+        let (lost, joined) = l.sync(0, &[1, 3, 9]);
+        assert_eq!((lost, joined), (1, 1));
+        assert_eq!(l.lost, 1);
+        assert_eq!(l.minted, 1);
+        l.check(&[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "owned twice")]
+    fn ledger_check_catches_double_ownership() {
+        let mut l = FleetLedger::new(2);
+        l.seed(0, &[1]);
+        // corrupt: job 1 claims the same fleet id via a forged grant+sync
+        l.grant(1, 0, cluster::devices::v100());
+        l.sync(1, &[7]);
+        l.check(&[]);
+    }
+
+    /// Conservation property: across random interleavings of churn,
+    /// reclaims, grants and releases, every fleet id stays uniquely owned
+    /// and the totals balance.
+    #[test]
+    fn prop_ledger_conserves_the_fleet() {
+        let mut rng = Rng::new(0xF1EE7);
+        for case in 0..200 {
+            let n_jobs = 2 + rng.below(3) as usize;
+            let mut l = FleetLedger::new(n_jobs);
+            let mut next_uid = 100u64;
+            let mut uids: Vec<Vec<u64>> = Vec::new();
+            let mut pool: Vec<usize> = Vec::new();
+            for j in 0..n_jobs {
+                let k = 1 + rng.below(4) as usize;
+                let us: Vec<u64> = (0..k).map(|i| next_uid + i as u64).collect();
+                next_uid += k as u64;
+                l.seed(j, &us);
+                uids.push(us);
+            }
+            l.check(&pool);
+            for _step in 0..30 {
+                let j = rng.below(n_jobs as u64) as usize;
+                match rng.below(4) {
+                    // exogenous loss
+                    0 if uids[j].len() > 1 => {
+                        let v = rng.below(uids[j].len() as u64) as usize;
+                        uids[j].remove(v);
+                        l.sync(j, &uids[j]);
+                    }
+                    // exogenous join
+                    1 => {
+                        uids[j].push(next_uid);
+                        next_uid += 1;
+                        l.sync(j, &uids[j]);
+                    }
+                    // arbiter move j → k
+                    2 if uids[j].len() >= 2 => {
+                        let k = rng.below(n_jobs as u64) as usize;
+                        if k != j {
+                            let v = rng.below(uids[j].len() as u64) as usize;
+                            let uid = uids[j].remove(v);
+                            let fid = l.reclaim(j, uid).unwrap();
+                            l.grant(k, fid, cluster::devices::rtx6000());
+                            l.sync(j, &uids[j]);
+                            uids[k].push(next_uid);
+                            next_uid += 1;
+                            l.sync(k, &uids[k]);
+                        }
+                    }
+                    // release to the pool and re-seed the job
+                    3 if uids[j].len() >= 1 => {
+                        let (owned, pending) = l.release(j);
+                        pool.extend(owned.values().copied());
+                        pool.extend(pending.iter().map(|&(fid, _)| fid));
+                        uids[j].clear();
+                        uids[j].push(next_uid);
+                        next_uid += 1;
+                        // re-grant one pooled node if any, else mint
+                        if let Some(fid) = pool.pop() {
+                            l.grant(j, fid, cluster::devices::v100());
+                        }
+                        l.sync(j, &uids[j]);
+                    }
+                    _ => {}
+                }
+                l.check(&pool);
+            }
+            let _ = case;
+        }
+    }
+}

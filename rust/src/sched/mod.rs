@@ -1,0 +1,36 @@
+//! Fleet scheduler — multi-tenant Cannikin arbitration over one shared
+//! heterogeneous cluster (ROADMAP item 2; see `SCHEDULING.md`).
+//!
+//! Runs N concurrent jobs — each a full [`crate::api::ExperimentSpec`]
+//! with its own workload, training system, churn trace, checkpoint
+//! policy and detection mode — on one shared fleet.  Every scheduling
+//! round (one epoch of every live job, in lockstep) each job *bids* the
+//! marginal goodput of gaining or losing one node of each device class,
+//! priced by the §4.5 OptPerf solver through a per-job warm
+//! [`crate::optperf::SolveCache`] ([`pricer::JobPricer`]); the arbiter
+//! ([`arbiter::decide`]) picks at most one reassignment per round under
+//! a pluggable [`FairnessPolicy`].
+//!
+//! Arbiter decisions are *elastic events*: "take node 3 from job A, give
+//! it to job B" materializes as a synthesized
+//! [`crate::elastic::ClusterEvent::NodeLeave`] for A and a `NodeJoin`
+//! for B, queued via [`crate::elastic::ElasticDriver::inject`] and
+//! applied through the exact same boundary path as exogenous churn — so
+//! spot traces, Observed-mode detection, checkpoint rollback and
+//! `ReplanTiming::Immediate` all compose unchanged per job.  A
+//! single-job fleet injects nothing and reproduces [`crate::api::run`]
+//! bit-for-bit; the [`ArbiterKind::Static`] baseline never moves a node
+//! (freed nodes idle), which is the ablation the bidding arbiter must
+//! beat on aggregate goodput.
+
+pub mod arbiter;
+pub mod fleet;
+pub mod pricer;
+mod report;
+mod spec;
+
+pub use arbiter::{decide, place, ClassPrice, JobPrice, Move};
+pub use fleet::{run_fleet, run_fleet_traced, FleetLedger};
+pub use pricer::JobPricer;
+pub use report::{jain_index, FleetReport};
+pub use spec::{ArbiterKind, FairnessPolicy, FleetJob, FleetSpec};

@@ -1,0 +1,191 @@
+//! [`JobPricer`] — one job's marginal-goodput bid function, priced by the
+//! §4.5 OptPerf solver against the job's ground-truth cluster model.
+//!
+//! Each pricer owns a warm [`SolveCache`] (plus workspace and scratch
+//! allocation) that persists across scheduling rounds, so round-over-round
+//! pricing costs a handful of warm-started solves, not cold Algorithm 1
+//! table builds:
+//!
+//! * **current goodput** — rebuild the cache on the job's current cluster
+//!   (dominance pruning applies), then `goodput::select` over the cached
+//!   `table_time`s at the job's current φ;
+//! * **loss per held class** — clone the warm cache, patch it with
+//!   [`SolveCache::delta_remove`] (the workspace is still bound to the
+//!   pre-removal model, arming the exact one-solve sum path), and
+//!   delta-solve the candidate grid against the without-victim model;
+//! * **gain per fleet class** — hinted solves against the plus-one-node
+//!   model, warm-started from the current table's overlap states (a join
+//!   rarely flips the regime, so the hint usually hits).
+//!
+//! Pricing runs between epochs, outside any job's own planning, and the
+//! fleet drains the solver probe right after the pricing pass — so bid
+//! solves land in the arbiter's trace lane, never in a job's
+//! `solver_stats`.
+
+use crate::cluster::{ClusterSpec, DeviceProfile};
+use crate::goodput;
+use crate::optperf::{Allocation, SolveCache, SolverWorkspace};
+use crate::sched::arbiter::{ClassPrice, JobPrice};
+use crate::simulator::Workload;
+
+pub struct JobPricer {
+    ws: SolverWorkspace,
+    cache: SolveCache,
+    scratch: Allocation,
+    cands: Vec<u64>,
+}
+
+impl JobPricer {
+    pub fn new(w: &Workload) -> Self {
+        JobPricer {
+            ws: SolverWorkspace::new(),
+            cache: SolveCache::new(),
+            scratch: Allocation::empty(),
+            cands: goodput::candidates(w.b0, w.b_max, 6),
+        }
+    }
+
+    /// Price one round: current goodput, per-held-class losses, per-fleet-
+    /// class gains.  `spec` is the job's physical ground truth
+    /// (`ElasticDriver::phys_spec`); `classes` the fleet's device catalog.
+    pub fn price(
+        &mut self,
+        job: usize,
+        weight: f64,
+        w: &Workload,
+        spec: &ClusterSpec,
+        phi: f64,
+        classes: &[DeviceProfile],
+    ) -> JobPrice {
+        let JobPricer { ws, cache, scratch, cands } = self;
+        let model = w.cluster_model(spec);
+        cache.rebuild(ws, &model, cands, scratch);
+        let (best, _) = goodput::select(phi, w.b0, cands, |b| cache.table_time(b));
+        let g0 = best.goodput;
+
+        // ---- losses: one victim per distinct held class (the highest
+        // physical index of the class — deterministic, and removal keeps
+        // lower indices stable for any same-round trace events)
+        let mut losses: Vec<ClassPrice> = Vec::new();
+        if spec.n() >= 2 {
+            for (i, node) in spec.nodes.iter().enumerate() {
+                let class = &node.device.name;
+                match losses.iter_mut().find(|cp| cp.class == *class) {
+                    Some(cp) => cp.victim = cp.victim.max(i),
+                    None => losses.push(ClassPrice {
+                        class: class.clone(),
+                        victim: i,
+                        loss: 0.0,
+                    }),
+                }
+            }
+            for cp in &mut losses {
+                let minus = spec.without_nodes(&[cp.victim]);
+                let model_minus = w.cluster_model(&minus);
+                // re-bind to the PRE-removal model: delta_remove reads the
+                // departing node's line terms from the bound workspace
+                ws.bind(&model);
+                let mut patched = cache.clone();
+                patched.delta_remove(cp.victim, Some(ws));
+                let (best, _) = goodput::select(phi, w.b0, cands, |b| {
+                    match patched.delta_solve(ws, &model_minus, b, scratch) {
+                        Ok(_) => scratch.t_pred,
+                        Err(_) => f64::MAX,
+                    }
+                });
+                cp.loss = g0 - best.goodput;
+            }
+        }
+
+        // ---- gains: one more node of each fleet class
+        let mut gains: Vec<(String, f64)> = Vec::new();
+        for dev in classes {
+            if gains.iter().any(|(c, _)| c == &dev.name) {
+                continue;
+            }
+            let plus = spec.with_nodes(vec![dev.clone()]);
+            let model_plus = w.cluster_model(&plus);
+            let (best, _) = goodput::select(phi, w.b0, cands, |b| {
+                let hint = cache.hint_for(b);
+                match ws.solve_hint_into(&model_plus, b as f64, hint, scratch) {
+                    Ok(()) => scratch.t_pred,
+                    Err(_) => f64::MAX,
+                }
+            });
+            gains.push((dev.name.clone(), best.goodput - g0));
+        }
+
+        JobPrice { job, n_nodes: spec.n(), goodput: g0, weight, losses, gains }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster;
+    use crate::simulator::workload;
+
+    #[test]
+    fn prices_are_finite_and_losses_ordered_by_speed() {
+        let w = workload::cifar10();
+        let c = cluster::cluster_b(); // 4×A100, 4×V100, 8×RTX6000
+        let mut pricer = JobPricer::new(&w);
+        let p = pricer.price(0, 1.0, &w, &c, w.phi0, &c.nodes.iter().map(|n| n.device.clone()).collect::<Vec<_>>());
+        assert!(p.goodput.is_finite() && p.goodput > 0.0);
+        assert_eq!(p.n_nodes, 16);
+        assert_eq!(p.losses.len(), 3, "one price per held class");
+        assert_eq!(p.gains.len(), 3, "fleet catalog deduped by class");
+        for cp in &p.losses {
+            assert!(cp.loss.is_finite(), "{cp:?}");
+            assert!(cp.victim < c.n());
+            assert_eq!(c.nodes[cp.victim].device.name, cp.class);
+        }
+        // losing an A100 must cost at least as much as losing an RTX6000
+        let loss_of = |name: &str| {
+            p.losses.iter().find(|cp| cp.class == name).unwrap().loss
+        };
+        assert!(
+            loss_of("A100") >= loss_of("RTX6000") - 1e-9,
+            "A100 {} vs RTX6000 {}",
+            loss_of("A100"),
+            loss_of("RTX6000")
+        );
+    }
+
+    #[test]
+    fn warm_repricing_matches_cold_pricing() {
+        // round-over-round warm cache reuse must not change the answers:
+        // a fresh pricer and a reused one agree bit-for-bit
+        let w = workload::squad();
+        let c = cluster::cluster_b();
+        let classes: Vec<DeviceProfile> = vec![c.nodes[0].device.clone(), c.nodes[8].device.clone()];
+        let mut warm = JobPricer::new(&w);
+        let phis = [w.phi0, w.phi0 * 2.0, w.phi0 * 5.0];
+        for (round, &phi) in phis.iter().enumerate() {
+            let a = warm.price(0, 1.0, &w, &c, phi, &classes);
+            let b = JobPricer::new(&w).price(0, 1.0, &w, &c, phi, &classes);
+            assert_eq!(a.goodput.to_bits(), b.goodput.to_bits(), "round {round}");
+            for (x, y) in a.losses.iter().zip(&b.losses) {
+                assert_eq!(x.victim, y.victim, "round {round}");
+                assert!((x.loss - y.loss).abs() <= 1e-9 * x.loss.abs().max(1.0),
+                    "round {round}: warm {} vs cold {}", x.loss, y.loss);
+            }
+            for (x, y) in a.gains.iter().zip(&b.gains) {
+                assert!((x.1 - y.1).abs() <= 1e-9 * x.1.abs().max(1.0),
+                    "round {round}: warm {} vs cold {}", x.1, y.1);
+            }
+        }
+    }
+
+    #[test]
+    fn single_node_job_prices_no_losses() {
+        let w = workload::cifar10();
+        let c = ClusterSpec::new("solo", vec![cluster::devices::rtx6000()], 10.0);
+        let mut pricer = JobPricer::new(&w);
+        let p = pricer.price(3, 2.0, &w, &c, w.phi0, &c.nodes.iter().map(|n| n.device.clone()).collect::<Vec<_>>());
+        assert!(p.losses.is_empty(), "a 1-node job cannot donate");
+        assert_eq!(p.job, 3);
+        assert_eq!(p.weight, 2.0);
+        assert_eq!(p.gains.len(), 1);
+    }
+}

@@ -1,0 +1,285 @@
+//! [`FleetReport`] — the machine-readable result of one fleet run: every
+//! job's full [`RunReport`] plus the arbiter-level columns (aggregate
+//! goodput, makespan, Jain fairness, preemptions/grants).
+//!
+//! Serialization follows the [`RunReport`] contract: lossless round trip,
+//! and **absent-field tolerance** on parse — every arbiter column
+//! defaults when missing, so fleet report files written by earlier
+//! revisions of this schema (or hand-trimmed ones) still load.
+
+use anyhow::Result;
+
+use crate::api::RunReport;
+use crate::util::json::Json;
+
+/// Full result of one fleet run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetReport {
+    pub name: String,
+    pub cluster: String,
+    /// arbiter kind name (`"bid"` / `"static"`)
+    pub arbiter: String,
+    /// fairness policy name
+    pub fairness: String,
+    /// per-job reports, in fleet job order
+    pub jobs: Vec<RunReport>,
+    /// per-job fair-share weights (same order)
+    pub weights: Vec<f64>,
+    /// per-job goodput: final progress / final wall seconds (same order)
+    pub goodputs: Vec<f64>,
+    /// Σ per-job goodput — the quantity the bid arbiter maximizes
+    pub aggregate_goodput: f64,
+    /// Jain's fairness index over the per-job goodputs: (Σx)²/(N·Σx²),
+    /// 1 = perfectly even, 1/N = one job got everything
+    pub fairness_index: f64,
+    /// max over jobs of final wall seconds
+    pub makespan_secs: f64,
+    /// arbiter-decided take-from-donor moves
+    pub preemptions_by_arbiter: usize,
+    /// freed nodes re-granted to live jobs (finished-job redistribution)
+    pub grants_by_arbiter: usize,
+    /// scheduling rounds executed (lockstep epochs across live jobs)
+    pub rounds: usize,
+    /// fleet nodes lost to exogenous churn (left the fleet entirely)
+    pub nodes_lost: usize,
+    /// fleet nodes minted by trace joins (new hardware entered)
+    pub nodes_joined: usize,
+    /// nodes idle in the free pool at the end (nobody bid > 0 for them)
+    pub nodes_idle: usize,
+}
+
+/// Jain's fairness index (Σx)²/(N·Σx²); 1.0 for an empty or all-zero set
+/// (nothing is unfair about nothing).
+pub fn jain_index(xs: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if n == 0.0 || sq == 0.0 {
+        return 1.0;
+    }
+    sum * sum / (n * sq)
+}
+
+impl FleetReport {
+    /// One-line human summary (the `sched` subcommand's headline).
+    pub fn summary(&self) -> String {
+        format!(
+            "fleet {:?} on {} [{}/{}]: {} jobs, {} rounds, aggregate goodput {:.3}, \
+             Jain {:.3}, makespan {:.0}s, {} preemption(s), {} grant(s), \
+             {} lost / {} joined / {} idle",
+            self.name,
+            self.cluster,
+            self.arbiter,
+            self.fairness,
+            self.jobs.len(),
+            self.rounds,
+            self.aggregate_goodput,
+            self.fairness_index,
+            self.makespan_secs,
+            self.preemptions_by_arbiter,
+            self.grants_by_arbiter,
+            self.nodes_lost,
+            self.nodes_joined,
+            self.nodes_idle,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let nums = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("cluster", Json::Str(self.cluster.clone())),
+            ("arbiter", Json::Str(self.arbiter.clone())),
+            ("fairness", Json::Str(self.fairness.clone())),
+            ("jobs", Json::Arr(self.jobs.iter().map(|r| r.to_json()).collect())),
+            ("weights", nums(&self.weights)),
+            ("goodputs", nums(&self.goodputs)),
+            ("aggregate_goodput", Json::Num(self.aggregate_goodput)),
+            ("fairness_index", Json::Num(self.fairness_index)),
+            ("makespan_secs", Json::Num(self.makespan_secs)),
+            ("preemptions_by_arbiter", Json::Num(self.preemptions_by_arbiter as f64)),
+            ("grants_by_arbiter", Json::Num(self.grants_by_arbiter as f64)),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("nodes_lost", Json::Num(self.nodes_lost as f64)),
+            ("nodes_joined", Json::Num(self.nodes_joined as f64)),
+            ("nodes_idle", Json::Num(self.nodes_idle as f64)),
+        ])
+    }
+
+    /// Parse a fleet report.  Only `jobs` is required; every arbiter
+    /// column tolerates absence (defaulting to zero / empty / recomputed),
+    /// mirroring [`RunReport::from_json`]'s treatment of fields that
+    /// post-date a report file.
+    pub fn from_json(j: &Json) -> Result<FleetReport> {
+        let jobs = j
+            .req("jobs")?
+            .as_arr()?
+            .iter()
+            .map(RunReport::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let opt_str = |key: &str, d: &str| -> Result<String> {
+            match j.get(key) {
+                None | Some(Json::Null) => Ok(d.to_string()),
+                Some(v) => Ok(v.as_str()?.to_string()),
+            }
+        };
+        let opt_f64 = |key: &str, d: f64| -> Result<f64> {
+            match j.get(key) {
+                None | Some(Json::Null) => Ok(d),
+                Some(v) => v.as_f64(),
+            }
+        };
+        let opt_usize = |key: &str| -> Result<usize> {
+            match j.get(key) {
+                None | Some(Json::Null) => Ok(0),
+                Some(v) => v.as_usize(),
+            }
+        };
+        let opt_nums = |key: &str, d: Vec<f64>| -> Result<Vec<f64>> {
+            match j.get(key) {
+                None | Some(Json::Null) => Ok(d),
+                Some(v) => v.as_arr()?.iter().map(|x| x.as_f64()).collect(),
+            }
+        };
+        let goodputs = opt_nums(
+            "goodputs",
+            jobs.iter()
+                .map(|r| match r.rows.last() {
+                    Some(row) if row.wall_secs > 0.0 => row.progress / row.wall_secs,
+                    _ => 0.0,
+                })
+                .collect(),
+        )?;
+        Ok(FleetReport {
+            name: opt_str("name", "fleet")?,
+            cluster: opt_str("cluster", "")?,
+            arbiter: opt_str("arbiter", "bid")?,
+            fairness: opt_str("fairness", "max-goodput")?,
+            weights: opt_nums("weights", vec![1.0; jobs.len()])?,
+            aggregate_goodput: opt_f64("aggregate_goodput", goodputs.iter().sum())?,
+            fairness_index: opt_f64("fairness_index", jain_index(&goodputs))?,
+            makespan_secs: opt_f64("makespan_secs", 0.0)?,
+            preemptions_by_arbiter: opt_usize("preemptions_by_arbiter")?,
+            grants_by_arbiter: opt_usize("grants_by_arbiter")?,
+            rounds: opt_usize("rounds")?,
+            nodes_lost: opt_usize("nodes_lost")?,
+            nodes_joined: opt_usize("nodes_joined")?,
+            nodes_idle: opt_usize("nodes_idle")?,
+            goodputs,
+            jobs,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .map_err(|e| anyhow::anyhow!("writing fleet report {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<FleetReport> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::EpochRow;
+    use crate::elastic::DetectionMode;
+
+    fn tiny_run(progress: f64, wall: f64) -> RunReport {
+        RunReport {
+            system: "cannikin".into(),
+            cluster: "cluster-b".into(),
+            workload: "cifar10".into(),
+            trace: "static".into(),
+            seed: 7,
+            max_epochs: 1,
+            detect: DetectionMode::Oracle,
+            rows: vec![EpochRow {
+                epoch: 0,
+                n_nodes: 2,
+                total_batch: 64,
+                t_batch: 0.1,
+                wall_secs: wall,
+                progress,
+                metric: 1.0,
+                events: 0,
+                mid_epoch_events: 0,
+                detected: 0,
+            }],
+            time_to_target: None,
+            events_applied: 0,
+            events_noop: 0,
+            events_hidden: 0,
+            events_skipped: 0,
+            wasted_work_secs: 0.0,
+            checkpoint_overhead_secs: 0.0,
+            checkpoints_taken: 0,
+            replans: 0,
+            replans_immediate: 0,
+            bootstrap_epochs: 0,
+            final_n: 2,
+            detection: None,
+            solver_stats: None,
+            driver_stats: None,
+        }
+    }
+
+    fn sample() -> FleetReport {
+        FleetReport {
+            name: "pair".into(),
+            cluster: "cluster-b".into(),
+            arbiter: "bid".into(),
+            fairness: "max-min".into(),
+            jobs: vec![tiny_run(10.0, 100.0), tiny_run(30.0, 100.0)],
+            weights: vec![1.0, 2.0],
+            goodputs: vec![0.1, 0.3],
+            aggregate_goodput: 0.4,
+            fairness_index: jain_index(&[0.1, 0.3]),
+            makespan_secs: 100.0,
+            preemptions_by_arbiter: 3,
+            grants_by_arbiter: 1,
+            rounds: 42,
+            nodes_lost: 1,
+            nodes_joined: 2,
+            nodes_idle: 1,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let r = sample();
+        let back = FleetReport::from_json(&Json::parse(&r.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn absent_arbiter_columns_default() {
+        // a fleet report trimmed to its jobs array still parses, with the
+        // derived columns recomputed from the rows
+        let jobs_only = Json::obj(vec![(
+            "jobs",
+            Json::Arr(vec![tiny_run(10.0, 100.0).to_json(), tiny_run(30.0, 100.0).to_json()]),
+        )]);
+        let r = FleetReport::from_json(&jobs_only).unwrap();
+        assert_eq!(r.jobs.len(), 2);
+        assert_eq!(r.weights, vec![1.0, 1.0]);
+        assert!((r.goodputs[0] - 0.1).abs() < 1e-12);
+        assert!((r.aggregate_goodput - 0.4).abs() < 1e-12);
+        assert!((r.fairness_index - jain_index(&[0.1, 0.3])).abs() < 1e-12);
+        assert_eq!(r.preemptions_by_arbiter, 0);
+        assert_eq!(r.rounds, 0);
+    }
+
+    #[test]
+    fn jain_index_bounds() {
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
+        assert!((jain_index(&[1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+        let skewed = jain_index(&[1.0, 0.0, 0.0, 0.0]);
+        assert!((skewed - 0.25).abs() < 1e-12, "{skewed}");
+        let j = jain_index(&[2.0, 1.0]);
+        assert!(j > 0.25 && j < 1.0, "{j}");
+    }
+}

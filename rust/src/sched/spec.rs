@@ -1,0 +1,312 @@
+//! [`FleetSpec`] — a declarative, JSON-round-trippable description of one
+//! multi-tenant fleet run, mirroring [`ExperimentSpec`]'s conventions
+//! (preset-or-`*.json` cluster names, unknown-key rejection with a typo
+//! suggestion, optional fields defaulting).
+//!
+//! ```json
+//! { "name": "fleet-smoke", "cluster": "b",
+//!   "arbiter": "bid", "fairness": "max-goodput",
+//!   "jobs": [
+//!     { "spec": { "cluster": "b", "workload": "cifar10",
+//!                 "system": "cannikin", "max_epochs": 120 },
+//!       "weight": 1.0 },
+//!     { "spec": { "cluster": "b", "workload": "squad",
+//!                 "system": "cannikin", "trace": "spot" } }
+//!   ] }
+//! ```
+//!
+//! Each job wraps a full [`ExperimentSpec`] (so the per-job JSON shape —
+//! and its validation — is exactly the single-run one; the job's own
+//! `cluster` field is ignored at fleet runtime, where the job runs on its
+//! arbitrated slice of the *fleet* cluster).  `weight` only matters under
+//! the `weighted-share` fairness policy; it defaults to 1.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::api::ExperimentSpec;
+use crate::util::json::Json;
+use crate::util::text::suggest;
+
+/// How the arbiter divides marginal goodput between jobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FairnessPolicy {
+    /// move a node whenever the recipient's marginal gain exceeds the
+    /// donor's marginal loss (maximizes aggregate goodput, may starve)
+    MaxGoodput,
+    /// the strict-minimum-goodput job receives any move that helps it
+    /// (starvation-free: a feasible positive bid is granted immediately)
+    MaxMin,
+    /// MaxGoodput on weight-scaled marginals (`gain·w_to − loss·w_from`);
+    /// all-equal weights reduce to MaxGoodput exactly
+    WeightedShare,
+}
+
+impl FairnessPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FairnessPolicy::MaxGoodput => "max-goodput",
+            FairnessPolicy::MaxMin => "max-min",
+            FairnessPolicy::WeightedShare => "weighted-share",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<FairnessPolicy> {
+        match name {
+            "max-goodput" => Some(FairnessPolicy::MaxGoodput),
+            "max-min" => Some(FairnessPolicy::MaxMin),
+            "weighted-share" => Some(FairnessPolicy::WeightedShare),
+            _ => None,
+        }
+    }
+}
+
+/// Which arbiter runs between rounds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArbiterKind {
+    /// marginal-goodput bidding (the Cannikin fleet scheduler)
+    Bid,
+    /// static partition: the initial round-robin deal never changes and
+    /// freed nodes idle — the ablation baseline the bidder must beat
+    Static,
+}
+
+impl ArbiterKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArbiterKind::Bid => "bid",
+            ArbiterKind::Static => "static",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ArbiterKind> {
+        match name {
+            "bid" => Some(ArbiterKind::Bid),
+            "static" => Some(ArbiterKind::Static),
+            _ => None,
+        }
+    }
+}
+
+/// One tenant: a full single-run spec plus its fair-share weight.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetJob {
+    pub spec: ExperimentSpec,
+    pub weight: f64,
+}
+
+/// One fleet run, declaratively.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetSpec {
+    pub name: String,
+    /// the shared cluster every job's slice is carved from: a preset
+    /// (`a` / `b` / `c`) or a cluster-config `*.json` path
+    pub cluster: String,
+    pub jobs: Vec<FleetJob>,
+    pub arbiter: ArbiterKind,
+    pub fairness: FairnessPolicy,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        FleetSpec {
+            name: "fleet".to_string(),
+            cluster: "b".to_string(),
+            jobs: Vec::new(),
+            arbiter: ArbiterKind::Bid,
+            fairness: FairnessPolicy::MaxGoodput,
+        }
+    }
+}
+
+impl FleetSpec {
+    pub fn to_json(&self) -> Json {
+        let jobs = self
+            .jobs
+            .iter()
+            .map(|j| {
+                Json::obj(vec![
+                    ("spec", j.spec.to_json()),
+                    ("weight", Json::Num(j.weight)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("cluster", Json::Str(self.cluster.clone())),
+            ("arbiter", Json::Str(self.arbiter.name().to_string())),
+            ("fairness", Json::Str(self.fairness.name().to_string())),
+            ("jobs", Json::Arr(jobs)),
+        ])
+    }
+
+    /// Parse a fleet spec.  `cluster` and a non-empty `jobs` array are
+    /// required; everything else falls back to [`FleetSpec::default`].
+    /// Unknown keys error with a typo suggestion, same contract as
+    /// [`ExperimentSpec::from_json`].
+    pub fn from_json(j: &Json) -> Result<FleetSpec> {
+        const KEYS: [&str; 5] = ["name", "cluster", "arbiter", "fairness", "jobs"];
+        for key in j.as_obj()?.keys() {
+            if !KEYS.contains(&key.as_str()) {
+                let hint = suggest(key, KEYS)
+                    .map(|s| format!(" (did you mean {s:?}?)"))
+                    .unwrap_or_default();
+                bail!("unknown fleet key {key:?}{hint}; known keys: {}", KEYS.join(", "));
+            }
+        }
+        let d = FleetSpec::default();
+        let opt_str = |key: &str| -> Result<Option<String>> {
+            match j.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(v) => Ok(Some(v.as_str()?.to_string())),
+            }
+        };
+        let arbiter = match opt_str("arbiter")? {
+            Some(name) => ArbiterKind::by_name(&name)
+                .ok_or_else(|| anyhow!("unknown arbiter {name:?} (bid|static)"))?,
+            None => d.arbiter,
+        };
+        let fairness = match opt_str("fairness")? {
+            Some(name) => FairnessPolicy::by_name(&name).ok_or_else(|| {
+                anyhow!("unknown fairness policy {name:?} (max-goodput|max-min|weighted-share)")
+            })?,
+            None => d.fairness,
+        };
+        const JOB_KEYS: [&str; 2] = ["spec", "weight"];
+        let mut jobs = Vec::new();
+        for (i, job) in j.req("jobs")?.as_arr()?.iter().enumerate() {
+            for key in job.as_obj()?.keys() {
+                if !JOB_KEYS.contains(&key.as_str()) {
+                    bail!(
+                        "jobs[{i}]: unknown key {key:?}; known keys: {}",
+                        JOB_KEYS.join(", ")
+                    );
+                }
+            }
+            let spec = ExperimentSpec::from_json(job.req("spec")?)?;
+            let weight = match job.get("weight") {
+                None | Some(Json::Null) => 1.0,
+                Some(v) => v.as_f64()?,
+            };
+            if !(weight > 0.0 && weight.is_finite()) {
+                bail!("jobs[{i}]: weight must be a finite positive number, got {weight}");
+            }
+            jobs.push(FleetJob { spec, weight });
+        }
+        if jobs.is_empty() {
+            bail!("a fleet needs at least one job");
+        }
+        Ok(FleetSpec {
+            name: opt_str("name")?.unwrap_or(d.name),
+            cluster: j.req("cluster")?.as_str()?.to_string(),
+            jobs,
+            arbiter,
+            fairness,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .map_err(|e| anyhow!("writing fleet spec {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<FleetSpec> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::planner::BatchPolicy;
+
+    fn sample() -> FleetSpec {
+        FleetSpec {
+            name: "pair".to_string(),
+            cluster: "b".to_string(),
+            jobs: vec![
+                FleetJob {
+                    spec: ExperimentSpec {
+                        workload: "squad".to_string(),
+                        trace: Some("spot".to_string()),
+                        policy: BatchPolicy::Fixed(128),
+                        max_epochs: 77,
+                        ..Default::default()
+                    },
+                    weight: 2.5,
+                },
+                FleetJob { spec: ExperimentSpec::default(), weight: 1.0 },
+            ],
+            arbiter: ArbiterKind::Static,
+            fairness: FairnessPolicy::WeightedShare,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_all_fields() {
+        let spec = sample();
+        let back =
+            FleetSpec::from_json(&Json::parse(&spec.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn missing_optionals_take_defaults() {
+        let j = Json::parse(
+            r#"{"cluster":"a","jobs":[{"spec":{"cluster":"a","workload":"cifar10","system":"ddp"}}]}"#,
+        )
+        .unwrap();
+        let spec = FleetSpec::from_json(&j).unwrap();
+        assert_eq!(spec.name, "fleet");
+        assert_eq!(spec.arbiter, ArbiterKind::Bid);
+        assert_eq!(spec.fairness, FairnessPolicy::MaxGoodput);
+        assert_eq!(spec.jobs[0].weight, 1.0);
+    }
+
+    #[test]
+    fn rejects_bad_fleets() {
+        for src in [
+            // no jobs
+            r#"{"cluster":"a","jobs":[]}"#,
+            // jobs missing
+            r#"{"cluster":"a"}"#,
+            // cluster missing
+            r#"{"jobs":[{"spec":{"cluster":"a","workload":"cifar10","system":"ddp"}}]}"#,
+            // bad arbiter / fairness
+            r#"{"cluster":"a","arbiter":"psychic","jobs":[{"spec":{"cluster":"a","workload":"cifar10","system":"ddp"}}]}"#,
+            r#"{"cluster":"a","fairness":"lottery","jobs":[{"spec":{"cluster":"a","workload":"cifar10","system":"ddp"}}]}"#,
+            // bad weight
+            r#"{"cluster":"a","jobs":[{"spec":{"cluster":"a","workload":"cifar10","system":"ddp"},"weight":0}]}"#,
+            r#"{"cluster":"a","jobs":[{"spec":{"cluster":"a","workload":"cifar10","system":"ddp"},"weight":-1}]}"#,
+            // unknown keys at both levels
+            r#"{"cluster":"a","arbiters":"bid","jobs":[{"spec":{"cluster":"a","workload":"cifar10","system":"ddp"}}]}"#,
+            r#"{"cluster":"a","jobs":[{"spec":{"cluster":"a","workload":"cifar10","system":"ddp"},"wait":1}]}"#,
+            // a bad inner spec is rejected by the inner validator
+            r#"{"cluster":"a","jobs":[{"spec":{"cluster":"a","workload":"cifar10"}}]}"#,
+        ] {
+            assert!(FleetSpec::from_json(&Json::parse(src).unwrap()).is_err(), "{src}");
+        }
+    }
+
+    #[test]
+    fn unknown_fleet_key_suggests_a_fix() {
+        let src = r#"{"cluster":"a","fairnes":"max-min","jobs":[{"spec":{"cluster":"a","workload":"cifar10","system":"ddp"}}]}"#;
+        let err = FleetSpec::from_json(&Json::parse(src).unwrap()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("fairness"), "{msg}");
+    }
+
+    #[test]
+    fn policy_and_arbiter_names_roundtrip() {
+        for p in [
+            FairnessPolicy::MaxGoodput,
+            FairnessPolicy::MaxMin,
+            FairnessPolicy::WeightedShare,
+        ] {
+            assert_eq!(FairnessPolicy::by_name(p.name()), Some(p));
+        }
+        for a in [ArbiterKind::Bid, ArbiterKind::Static] {
+            assert_eq!(ArbiterKind::by_name(a.name()), Some(a));
+        }
+    }
+}

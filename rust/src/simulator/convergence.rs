@@ -104,32 +104,77 @@ pub fn segment_steps(workload: &Workload, seg: &Segment) -> f64 {
     (workload.epoch_samples as f64 * seg.weight / batch as f64).ceil().max(1.0)
 }
 
-/// Drive a convergence run whose epochs may be split into segments by
-/// mid-epoch cluster events.  Per segment: its share of the epoch's
-/// samples runs at its plan's total batch and measured batch time
-/// (midpoint-φ progress integration, sequential across segments);
-/// `wasted_secs` is added to the clock with no progress.  Target crossing
-/// interpolates linearly across the epoch, as before.
-pub fn run_segmented(
-    workload: &Workload,
+/// Incremental form of [`run_segmented`]: the same integration, advanced
+/// one epoch at a time by an external driver.  The fleet scheduler runs
+/// many jobs in lockstep rounds — each job holds one `SegmentedRun` and
+/// is fed one [`EpochExec`] per round; `run_segmented` itself is a thin
+/// loop over this stepper, so the two are bit-identical by construction.
+#[derive(Clone, Debug)]
+pub struct SegmentedRun {
     target_value: f64,
     max_epochs: usize,
-    mut policy: impl FnMut(usize, f64) -> EpochExec,
-) -> RunResult {
-    let mut progress = 0.0;
-    let mut wall = 0.0;
-    let mut epochs = Vec::new();
-    let mut time_to_target = None;
+    progress: f64,
+    wall: f64,
+    epochs: Vec<EpochStat>,
+    time_to_target: Option<f64>,
+    next_epoch: usize,
+}
 
-    for epoch in 0..max_epochs {
-        let phi = workload.phi_at(progress);
-        let exec = policy(epoch, phi);
+impl SegmentedRun {
+    pub fn new(target_value: f64, max_epochs: usize) -> Self {
+        SegmentedRun {
+            target_value,
+            max_epochs,
+            progress: 0.0,
+            wall: 0.0,
+            epochs: Vec::new(),
+            time_to_target: None,
+            next_epoch: 0,
+        }
+    }
+
+    /// Index of the next epoch to integrate.
+    pub fn epoch(&self) -> usize {
+        self.next_epoch
+    }
+
+    /// GNS at the current progress — the φ the next epoch's plan sees.
+    pub fn phi(&self, workload: &Workload) -> f64 {
+        workload.phi_at(self.progress)
+    }
+
+    pub fn progress(&self) -> f64 {
+        self.progress
+    }
+
+    pub fn wall_secs(&self) -> f64 {
+        self.wall
+    }
+
+    pub fn time_to_target(&self) -> Option<f64> {
+        self.time_to_target
+    }
+
+    /// The run is over: epoch budget exhausted, or target reached with
+    /// the 2% overshoot margin integrated (same stop rule as the loop in
+    /// [`run_segmented`] — checked *before* each epoch, which matches the
+    /// original break-after-push placement exactly).
+    pub fn done(&self, workload: &Workload) -> bool {
+        self.next_epoch >= self.max_epochs
+            || (self.time_to_target.is_some() && self.progress > workload.s_target * 1.02)
+    }
+
+    /// Integrate one epoch's execution (the loop body of the original
+    /// `run_segmented`, verbatim).
+    pub fn push(&mut self, workload: &Workload, exec: EpochExec) {
         debug_assert!(!exec.segments.is_empty(), "an epoch needs at least one segment");
+        let epoch = self.next_epoch;
+        self.next_epoch += 1;
 
         let mut dp = 0.0;
         let mut active_secs = 0.0;
         let mut wasted_secs = 0.0;
-        let mut p_run = progress;
+        let mut p_run = self.progress;
         for seg in &exec.segments {
             let batch = seg.batch.max(1);
             let steps = segment_steps(workload, seg);
@@ -148,28 +193,48 @@ pub fn run_segmented(
         let first = exec.segments[0];
 
         // did we cross the target inside this epoch?  linear interpolation
-        if time_to_target.is_none() && progress + dp >= workload.s_target {
-            let frac = (workload.s_target - progress) / dp;
-            time_to_target = Some(wall + frac * epoch_secs);
+        if self.time_to_target.is_none() && self.progress + dp >= workload.s_target {
+            let frac = (workload.s_target - self.progress) / dp;
+            self.time_to_target = Some(self.wall + frac * epoch_secs);
         }
-        progress += dp;
-        wall += epoch_secs;
-        epochs.push(EpochStat {
+        self.progress += dp;
+        self.wall += epoch_secs;
+        self.epochs.push(EpochStat {
             epoch,
             total_batch: first.batch.max(1),
             t_batch: first.t_batch,
             epoch_secs,
-            wall_secs: wall,
-            progress,
-            metric: workload.metric_at(progress, target_value),
-            phi: workload.phi_at(progress),
+            wall_secs: self.wall,
+            progress: self.progress,
+            metric: workload.metric_at(self.progress, self.target_value),
+            phi: workload.phi_at(self.progress),
             wasted_secs,
         });
-        if time_to_target.is_some() && progress > workload.s_target * 1.02 {
-            break;
-        }
     }
-    RunResult { epochs, time_to_target }
+
+    pub fn finish(self) -> RunResult {
+        RunResult { epochs: self.epochs, time_to_target: self.time_to_target }
+    }
+}
+
+/// Drive a convergence run whose epochs may be split into segments by
+/// mid-epoch cluster events.  Per segment: its share of the epoch's
+/// samples runs at its plan's total batch and measured batch time
+/// (midpoint-φ progress integration, sequential across segments);
+/// `wasted_secs` is added to the clock with no progress.  Target crossing
+/// interpolates linearly across the epoch, as before.
+pub fn run_segmented(
+    workload: &Workload,
+    target_value: f64,
+    max_epochs: usize,
+    mut policy: impl FnMut(usize, f64) -> EpochExec,
+) -> RunResult {
+    let mut run = SegmentedRun::new(target_value, max_epochs);
+    while !run.done(workload) {
+        let exec = policy(run.epoch(), run.phi(workload));
+        run.push(workload, exec);
+    }
+    run.finish()
 }
 
 #[cfg(test)]

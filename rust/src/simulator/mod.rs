@@ -11,6 +11,6 @@ pub mod convergence;
 pub mod timing;
 pub mod workload;
 
-pub use convergence::{run as run_convergence, EpochExec, EpochStat, RunResult, Segment};
+pub use convergence::{run as run_convergence, EpochExec, EpochStat, RunResult, Segment, SegmentedRun};
 pub use timing::{BatchSim, ClusterSim, NodeBatchObs};
 pub use workload::Workload;

@@ -119,6 +119,7 @@ fn rand_report(rng: &mut Rng) -> RunReport {
         hint_hits: rng.below(400) as usize,
         delta: rng.below(100) as usize,
         delta_hits: rng.below(100) as usize,
+        pruned: rng.below(5000) as usize,
         wall_total_secs: rand_f64(rng).abs(),
         wall_p50_secs: rand_f64(rng).abs(),
         wall_p90_secs: rand_f64(rng).abs(),
@@ -285,6 +286,25 @@ fn golden_pre_checkpoint_report_still_parses_and_roundtrips() {
     // the `cannikin report` contract: our parse re-serializes losslessly
     let again = RunReport::from_json(&r.to_json()).unwrap();
     assert_eq!(r, again);
+}
+
+/// Backward compat for the PR-8 `pruned` counter: a golden traced-era
+/// `solver_stats` block written *before* candidate-grid pruning existed
+/// carries no `pruned` key — it must still parse (defaulting to 0) and
+/// survive the round trip.
+#[test]
+fn golden_pre_pruning_solver_stats_still_parses() {
+    let golden = r#"{
+      "calls": 12, "solves": 96, "hinted": 10, "hint_hits": 8,
+      "delta": 3, "delta_hits": 2,
+      "wall_total_secs": 0.5, "wall_p50_secs": 0.001, "wall_p90_secs": 0.002,
+      "wall_p99_secs": 0.004, "wall_max_secs": 0.01
+    }"#;
+    let s = SolverStats::from_json(&Json::parse(golden).unwrap()).unwrap();
+    assert_eq!(s.calls, 12);
+    assert_eq!(s.pruned, 0, "absent `pruned` must default to the legacy semantics");
+    let again = SolverStats::from_json(&s.to_json()).unwrap();
+    assert_eq!(s, again);
 }
 
 /// A spec without a checkpoint block must run with the legacy semantics

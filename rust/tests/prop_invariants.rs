@@ -177,6 +177,64 @@ fn prop_delta_solve_matches_cold_solve_after_node_removal() {
 }
 
 #[test]
+fn prop_delta_remove_with_t_comm_rescale_matches_cold() {
+    // the planner's real removal sequence: sum-patch the victim out
+    // against the old-bound workspace, then carry T_comm across the ring
+    // resize analytically (2(n−1)/n) and patch the cached sums with
+    // `rescale_t_comm` — the delta path must stay armed and agree with a
+    // cold solve of the rescaled model to 1e-9.
+    check(
+        "delta-rescale-vs-cold",
+        30,
+        |rng| {
+            let n = 3 + rng.below(62) as usize; // 3..=64
+            let cluster = random_cluster(rng, n);
+            let ws = workload::all();
+            let w = &ws[rng.below(ws.len() as u64) as usize];
+            let model = w.cluster_model(&cluster);
+            let victim = rng.below(n as u64) as usize;
+            let base = (8 + rng.below(56)) * n as u64;
+            let cands: Vec<u64> = (0..4).map(|i| base << i).collect();
+            (model, victim, cands)
+        },
+        |(model, victim, cands)| {
+            let mut ws = SolverWorkspace::new();
+            let mut cache = SolveCache::new();
+            let mut scratch = Allocation::empty();
+            cache.rebuild(&mut ws, model, cands, &mut scratch);
+            ensure(cache.is_exact(), "rebuild must arm the exact-sums path")?;
+
+            // the shrunken model after a ring resize: n → n−1 nodes and
+            // T_comm scaled by ((n−2)/(n−1)) / ((n−1)/n)
+            let n = model.n();
+            let factor =
+                ((n - 2) as f64 / (n - 1) as f64) / ((n - 1) as f64 / n as f64);
+            let mut small = model.clone();
+            small.nodes.remove(*victim);
+            small.t_comm = model.t_comm * factor;
+
+            let old_ws = ws;
+            let mut new_ws = SolverWorkspace::new();
+            cache.delta_remove(*victim, Some(&old_ws));
+            cache.rescale_t_comm(model.t_o(), small.t_o());
+
+            for &b in cands.iter() {
+                let mut out = Allocation::empty();
+                cache
+                    .delta_solve(&mut new_ws, &small, b, &mut out)
+                    .map_err(|e| e.to_string())?;
+                let cold = optperf::solve(&small, b as f64).map_err(|e| e.to_string())?;
+                close(out.t_pred, cold.t_pred, 1e-9, "t_pred delta+rescale vs cold")?;
+                for (x, y) in out.batch_sizes.iter().zip(&cold.batch_sizes) {
+                    close(*x, *y, 1e-9, "per-node allocation delta+rescale vs cold")?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_predicted_time_is_monotone_in_total_batch() {
     check(
         "optperf-monotone-in-B",
