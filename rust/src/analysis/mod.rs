@@ -1,0 +1,405 @@
+//! `cannikin lint` — a dependency-free determinism & NaN-safety static
+//! analyzer for this crate.
+//!
+//! The repo's core contract is byte-identical traces and bit-for-bit
+//! reports per seed (OBSERVABILITY.md).  Runtime tests defend it after
+//! the fact; this pass defends it at the source level, on every file,
+//! on every PR.  Rules (full rationale in `ANALYSIS.md`):
+//!
+//! - **D1** wall-clock quarantine — `Instant::now`/`SystemTime` only at
+//!   registered drain sites (`benchkit`, the solver probe's
+//!   `probe_active`-gated capture, the leader's `wall_*` fields).
+//! - **D2** NaN-unsafe float ordering — `partial_cmp(..)` chained into
+//!   `unwrap`/`expect`/`unwrap_or*` inside ordering code; use
+//!   `f64::total_cmp`.
+//! - **D3** unordered-map types in emission modules — iteration order
+//!   is emission order there.
+//! - **D4** registry-only system construction (supersedes the old grep
+//!   test in `tests/api_contract.rs`).
+//! - **D5** hot-path panic/alloc policy for the `optperf::packed`
+//!   hint-hit path — static complement of `tests/optperf_alloc.rs`.
+//! - **D6** absent-field-tolerant report parsing through the
+//!   `util::json` `opt_*` getters.
+//! - **A0** allow hygiene — every inline allow must name a real rule
+//!   and carry a written reason.
+//!
+//! A finding is suppressed by an inline directive on the same line or
+//! the line above:
+//!
+//! ```text
+//! // lint: allow(D1): feeds the overhead study only, never sim state
+//! ```
+//!
+//! A directive with an unknown rule or an empty reason still suppresses
+//! (so a typo can't page the build twice) but raises **A0**, so the
+//! tree can never be "clean" with an undocumented allow.
+
+mod rules;
+pub mod scan;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RuleId {
+    /// Wall-clock quarantine.
+    D1,
+    /// NaN-unsafe float ordering.
+    D2,
+    /// Unordered-map iteration feeding emission.
+    D3,
+    /// Registry-only system construction.
+    D4,
+    /// Hot-path panic/alloc policy.
+    D5,
+    /// Absent-field-tolerant report parsing.
+    D6,
+    /// Allow-directive hygiene.
+    A0,
+}
+
+/// Every rule, in reporting order.  `lint_root` runs all of them.
+pub const ALL_RULES: &[RuleId] = &[
+    RuleId::D1,
+    RuleId::D2,
+    RuleId::D3,
+    RuleId::D4,
+    RuleId::D5,
+    RuleId::D6,
+    RuleId::A0,
+];
+
+impl RuleId {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RuleId::D1 => "D1",
+            RuleId::D2 => "D2",
+            RuleId::D3 => "D3",
+            RuleId::D4 => "D4",
+            RuleId::D5 => "D5",
+            RuleId::D6 => "D6",
+            RuleId::A0 => "A0",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RuleId> {
+        ALL_RULES.iter().copied().find(|r| r.as_str() == s)
+    }
+
+    /// All current rules guard the determinism/NaN-safety contract;
+    /// violations are errors, not warnings.
+    pub fn severity(self) -> &'static str {
+        "error"
+    }
+}
+
+impl fmt::Display for RuleId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One lint violation.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: RuleId,
+    /// `/`-normalized path as scanned (repo-relative when walked from
+    /// the repo root).
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+    /// The offending source line, trimmed (from the *unmasked* text).
+    pub snippet: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}: [{}] {}\n    {}",
+            self.path, self.line, self.rule, self.message, self.snippet
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rule", Json::Str(self.rule.as_str().to_string())),
+            ("severity", Json::Str(self.rule.severity().to_string())),
+            ("path", Json::Str(self.path.clone())),
+            ("line", Json::Num(self.line as f64)),
+            ("message", Json::Str(self.message.clone())),
+            ("snippet", Json::Str(self.snippet.clone())),
+        ])
+    }
+}
+
+/// Result of linting a tree.
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    /// Findings suppressed by well-formed inline allows.
+    pub suppressed: usize,
+}
+
+impl LintReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            ("suppressed", Json::Num(self.suppressed as f64)),
+            ("findings", Json::Arr(self.findings.iter().map(|f| f.to_json()).collect())),
+        ])
+    }
+}
+
+/// A parsed inline allow directive (see the module docs for the
+/// `allow(<RULE>): <reason>` syntax).
+#[derive(Clone, Debug)]
+struct Allow {
+    /// Line the directive sits on (it covers this line and the next).
+    line: usize,
+    /// `None` when the rule name didn't parse.
+    rule: Option<RuleId>,
+    /// True when a non-empty reason follows the rule.
+    reason_ok: bool,
+    /// The directive text, for A0 messages.
+    raw: String,
+}
+
+/// One masked source file plus its parsed allow directives.  Rules
+/// receive this and call [`Source::finding`].
+pub struct Source {
+    pub path: String,
+    pub masked: String,
+    line_starts: Vec<usize>,
+    raw_lines: Vec<String>,
+    allows: Vec<Allow>,
+}
+
+impl Source {
+    pub fn new(path: &str, src: &str) -> Source {
+        let m = scan::mask(src);
+        let mut line_starts = vec![0usize];
+        for (i, b) in m.text.bytes().enumerate() {
+            if b == b'\n' {
+                line_starts.push(i + 1);
+            }
+        }
+        let allows = m.comments.iter().filter_map(|(line, text)| parse_allow(*line, text)).collect();
+        Source {
+            path: path.replace('\\', "/"),
+            masked: m.text,
+            line_starts,
+            raw_lines: src.lines().map(|l| l.to_string()).collect(),
+            allows,
+        }
+    }
+
+    /// 1-based line of a byte offset into `masked`.
+    fn line_of(&self, at: usize) -> usize {
+        self.line_starts.partition_point(|&s| s <= at)
+    }
+
+    /// The masked text of a 1-based line (no trailing newline).
+    fn masked_line(&self, line: usize) -> &str {
+        let start = self.line_starts[line - 1];
+        let end = self.line_starts.get(line).map(|&e| e - 1).unwrap_or(self.masked.len());
+        &self.masked[start..end]
+    }
+
+    fn finding(&self, rule: RuleId, line: usize, message: String) -> Finding {
+        Finding {
+            rule,
+            path: self.path.clone(),
+            line,
+            message,
+            snippet: self.raw_lines.get(line - 1).map(|s| s.trim().to_string()).unwrap_or_default(),
+        }
+    }
+}
+
+/// Parse an allow directive out of one line comment, if present.
+fn parse_allow(line: usize, comment: &str) -> Option<Allow> {
+    let at = comment.find("lint:")?;
+    let rest = comment[at + "lint:".len()..].trim_start();
+    let raw = comment[at..].to_string();
+    let Some(body) = rest.strip_prefix("allow(") else {
+        // the marker is present but the allow(...) shape is not — malformed
+        return Some(Allow { line, rule: None, reason_ok: false, raw });
+    };
+    let Some(close) = body.find(')') else {
+        return Some(Allow { line, rule: None, reason_ok: false, raw });
+    };
+    let rule = RuleId::parse(body[..close].trim());
+    let after = body[close + 1..].trim_start();
+    let reason_ok = matches!(after.strip_prefix(':'), Some(r) if !r.trim().is_empty());
+    Some(Allow { line, rule, reason_ok, raw })
+}
+
+/// Lint one in-memory source file against `rules` and return the
+/// surviving findings (the fixture suite's entry point).
+pub fn lint_source(path: &str, src: &str, rules_wanted: &[RuleId]) -> Vec<Finding> {
+    lint_source_counted(path, src, rules_wanted).0
+}
+
+fn lint_source_counted(path: &str, src: &str, rules_wanted: &[RuleId]) -> (Vec<Finding>, usize) {
+    let s = Source::new(path, src);
+    let mut raw = Vec::new();
+    for &r in rules_wanted {
+        rules::check(&s, r, &mut raw);
+    }
+    let mut out = Vec::new();
+    let mut suppressed = 0usize;
+    for f in raw {
+        let allowed = s
+            .allows
+            .iter()
+            .any(|a| a.rule == Some(f.rule) && (f.line == a.line || f.line == a.line + 1));
+        if allowed {
+            suppressed += 1;
+        } else {
+            out.push(f);
+        }
+    }
+    if rules_wanted.contains(&RuleId::A0) {
+        for a in &s.allows {
+            if a.rule.is_none() || !a.reason_ok {
+                out.push(s.finding(
+                    RuleId::A0,
+                    a.line,
+                    format!(
+                        "allow directive must name a known rule and carry a \
+                         reason (`// lint: allow(<RULE>): <reason>`): `{}`",
+                        a.raw.trim()
+                    ),
+                ));
+            }
+        }
+    }
+    out.sort_by(|x, y| x.line.cmp(&y.line).then(x.rule.cmp(&y.rule)));
+    (out, suppressed)
+}
+
+/// Lint every Rust source under `root` with all rules enabled.
+pub fn lint_root(root: &Path) -> Result<LintReport> {
+    lint_root_rules(root, ALL_RULES)
+}
+
+/// Lint every Rust source under `root` with a selected rule set
+/// (`tests/api_contract.rs` runs `[D4]` alone through this).
+pub fn lint_root_rules(root: &Path, rules_wanted: &[RuleId]) -> Result<LintReport> {
+    let mut findings = Vec::new();
+    let mut files_scanned = 0usize;
+    let mut suppressed = 0usize;
+    for path in collect_sources(root)? {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        let (mut f, s) = lint_source_counted(&rel, &src, rules_wanted);
+        findings.append(&mut f);
+        suppressed += s;
+        files_scanned += 1;
+    }
+    // already sorted within a file; the walk itself is sorted, so the
+    // report order is deterministic across runs and platforms
+    Ok(LintReport { findings, files_scanned, suppressed })
+}
+
+/// The scanned tree: all `.rs` files under the crate's source roots,
+/// in sorted order.  `lint_fixtures` (intentionally-bad snippets) and
+/// vendored crates are excluded.
+fn collect_sources(root: &Path) -> Result<Vec<PathBuf>> {
+    const ROOTS: &[&str] = &["rust/src", "rust/benches", "rust/tests", "examples"];
+    let mut out = Vec::new();
+    for sub in ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            walk(&dir, &mut out)?;
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow!("reading dir {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name == "lint_fixtures" || name == "vendor" || name == "target" {
+            continue;
+        }
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_directive_parses() {
+        let a = parse_allow(7, "// lint: allow(D1): feeds the overhead study only").unwrap();
+        assert_eq!(a.rule, Some(RuleId::D1));
+        assert!(a.reason_ok);
+
+        let b = parse_allow(3, "// lint: allow(D2)").unwrap();
+        assert_eq!(b.rule, Some(RuleId::D2));
+        assert!(!b.reason_ok);
+
+        let c = parse_allow(4, "// lint: allow(D9): no such rule").unwrap();
+        assert!(c.rule.is_none());
+
+        assert!(parse_allow(1, "// ordinary comment").is_none());
+    }
+
+    #[test]
+    fn reasonless_allow_suppresses_but_raises_a0() {
+        let src = "fn f(v: &mut Vec<f64>) {\n    // lint: allow(D2)\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+        let f = lint_source("rust/src/x.rs", src, ALL_RULES);
+        assert!(f.iter().all(|f| f.rule != RuleId::D2), "{f:#?}");
+        assert!(f.iter().any(|f| f.rule == RuleId::A0), "{f:#?}");
+    }
+
+    #[test]
+    fn reasoned_allow_is_clean() {
+        let src = "fn f(v: &mut Vec<f64>) {\n    // lint: allow(D2): inputs are validated finite upstream\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+        let f = lint_source("rust/src/x.rs", src, ALL_RULES);
+        assert!(f.is_empty(), "{f:#?}");
+    }
+
+    #[test]
+    fn trailing_allow_on_the_same_line_works() {
+        let src = "fn f(v: &mut Vec<f64>) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap()); // lint: allow(D2): finite by construction\n}\n";
+        let f = lint_source("rust/src/x.rs", src, ALL_RULES);
+        assert!(f.is_empty(), "{f:#?}");
+    }
+
+    #[test]
+    fn findings_sort_and_render_deterministically() {
+        let src = "use std::collections::HashMap;\nfn g() { let _ = std::time::Instant::now(); }\n";
+        let f = lint_source("rust/src/obs/emit.rs", src, ALL_RULES);
+        assert_eq!(f.len(), 2, "{f:#?}");
+        assert_eq!(f[0].rule, RuleId::D3); // line 1 (the import is not `Instant::now`)
+        assert_eq!(f[1].rule, RuleId::D1); // line 2
+        assert!(f[1].render().contains("rust/src/obs/emit.rs:2: [D1]"));
+        let j = f[0].to_json();
+        assert_eq!(j.req("rule").unwrap().as_str().unwrap(), "D3");
+        assert_eq!(j.req("line").unwrap().as_usize().unwrap(), 1);
+    }
+}

@@ -1,0 +1,427 @@
+//! The D1–D6 rule implementations.
+//!
+//! Each rule scans the masked text of one file (see [`crate::analysis::scan`])
+//! and pushes [`Finding`]s.  Rules are scoped by path: registries below
+//! are suffix-matched against the `/`-normalized repo-relative path, so
+//! the same rule set works from the repo root, from `CARGO_MANIFEST_DIR`
+//! in tests, and on the virtual paths the fixture suite passes in.
+//!
+//! Rationale and the full allowlist contract live in `ANALYSIS.md`.
+
+use super::{Finding, RuleId, Source};
+
+/// D1: files where wall-clock reads are part of the contract.
+/// `benchkit` measures wall time by definition.
+const D1_FILE_ALLOW: &[&str] = &["src/benchkit.rs"];
+
+/// D1: (file suffix, line token) pairs registering individual drain
+/// sites: the solver probe's `wall_secs` capture is gated on
+/// `probe_active` and stripped by `trace diff`; the real-numerics
+/// leader's `wall_*` report fields are measurements, not sim state.
+const D1_LINE_ALLOW: &[(&str, &str)] = &[
+    ("src/optperf/packed.rs", "probe_active"),
+    ("src/optperf/cache.rs", "probe_active"),
+    ("src/coordinator/leader.rs", "t_start"),
+];
+
+const D1_TOKENS: &[&str] = &["Instant::now", "SystemTime"];
+
+/// D3: modules that serialize reports/traces — iteration order there is
+/// emission order, so unordered maps break byte-identity.
+const D3_SCOPE_DIRS: &[&str] = &["src/obs/", "src/api/", "src/sched/", "src/figures/"];
+const D3_SCOPE_FILES: &[&str] = &["src/elastic/events.rs", "src/benchkit.rs"];
+const D3_TOKENS: &[&str] = &["HashMap", "HashSet"];
+
+/// D4: the registry is the sole construction point for systems
+/// (supersedes the old grep test in `tests/api_contract.rs`, same
+/// allowlist: the registry itself plus ColdRestartCannikin's inner
+/// planner in the scenario driver).
+const D4_ALLOW: &[&str] = &["src/api/registry.rs", "src/elastic/scenario.rs"];
+const D4_PATTERNS: &[&str] = &[
+    "CannikinPlanner::new(",
+    "ColdRestartCannikin::new(",
+    "AdaptDl::new(",
+    "LbBsp::new(",
+    "Ddp::new(",
+    "Ddp::with_total(",
+];
+
+/// D5: the `optperf::packed` hint-hit path — every function a
+/// `solve_hint_into` call can reach.  Static complement of the runtime
+/// counting in `tests/optperf_alloc.rs`.
+const D5_FILE: &str = "src/optperf/packed.rs";
+const D5_HOT_FNS: &[&str] = &[
+    "solve_hint_into",
+    "solve_hint_raw_into",
+    "write_out",
+    "try_state_into",
+    "try_state_with_sums",
+    "bind",
+    "same_model",
+    "ensure_full_order",
+    "boundary_solve",
+    "boundary_valid",
+];
+/// Panic or allocation tokens forbidden inside a hot body.
+const D5_FORBIDDEN: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "vec!",
+    ".collect(",
+    ".collect::<",
+    ".to_vec()",
+    "Vec::new(",
+    "String::new(",
+    "format!",
+    "Box::new(",
+    ".clone()",
+];
+
+/// D6: report readers that must stay absent-field tolerant via the
+/// `util::json` `opt_*` getters (the getters themselves live in
+/// `util/json.rs`, which is outside this scope by construction).
+const D6_READERS: &[&str] = &["src/api/report.rs", "src/sched/report.rs", "src/obs/stats.rs"];
+
+fn path_matches(path: &str, suffix: &str) -> bool {
+    // suffix entries are repo-relative fragments like "src/benchkit.rs";
+    // anchor on a path separator so "xsrc/benchkit.rs" can't match.
+    path == suffix || path.ends_with(&format!("/{}", suffix))
+}
+
+fn in_dir(path: &str, dir: &str) -> bool {
+    path.contains(dir)
+}
+
+/// True when `text[at]` starts token `tok` at an identifier boundary.
+/// Boundary checks only apply on the ends of `tok` that are themselves
+/// identifier characters (so patterns ending in `(` still match a call
+/// with arguments right after the paren).
+fn token_at(text: &str, at: usize, tok: &str) -> bool {
+    let bytes = text.as_bytes();
+    let tb = tok.as_bytes();
+    let ident = |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    if at > 0 && ident(tb[0]) && ident(bytes[at - 1]) {
+        return false;
+    }
+    let end = at + tok.len();
+    if end < bytes.len() && ident(tb[tb.len() - 1]) && ident(bytes[end]) {
+        return false;
+    }
+    true
+}
+
+/// All identifier-boundary occurrences of `tok` in `text`.
+fn find_tokens(text: &str, tok: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = text[from..].find(tok) {
+        let at = from + p;
+        if token_at(text, at, tok) {
+            out.push(at);
+        }
+        from = at + tok.len();
+    }
+    out
+}
+
+pub(super) fn check(src: &Source, rule: RuleId, out: &mut Vec<Finding>) {
+    match rule {
+        RuleId::D1 => d1(src, out),
+        RuleId::D2 => d2(src, out),
+        RuleId::D3 => d3(src, out),
+        RuleId::D4 => d4(src, out),
+        RuleId::D5 => d5(src, out),
+        RuleId::D6 => d6(src, out),
+        // A0 (allow hygiene) is checked by the engine over parsed
+        // allows, not over source text.
+        RuleId::A0 => {}
+    }
+}
+
+/// D1 — wall-clock quarantine.
+fn d1(src: &Source, out: &mut Vec<Finding>) {
+    // only library/binary source is quarantined; tests and benches may
+    // measure wall time freely (it never reaches a trace or report)
+    if !src.path.contains("src/") {
+        return;
+    }
+    if D1_FILE_ALLOW.iter().any(|f| path_matches(&src.path, f)) {
+        return;
+    }
+    for tok in D1_TOKENS {
+        for at in find_tokens(&src.masked, tok) {
+            let line = src.line_of(at);
+            let text = src.masked_line(line);
+            // `use std::time::Instant;`-style imports are inert
+            if text.trim_start().starts_with("use ") {
+                continue;
+            }
+            if D1_LINE_ALLOW
+                .iter()
+                .any(|(f, mark)| path_matches(&src.path, f) && text.contains(mark))
+            {
+                continue;
+            }
+            out.push(src.finding(
+                RuleId::D1,
+                line,
+                format!(
+                    "wall-clock read `{}` outside the registered drain sites; \
+                     wall time must never feed sim state, traces, or reports",
+                    tok
+                ),
+            ));
+        }
+    }
+}
+
+/// D2 — NaN-unsafe float ordering: `partial_cmp(..)` immediately
+/// chained into `.unwrap()` / `.expect(..)` / `.unwrap_or(..)` /
+/// `.unwrap_or_else(..)`.  The unwraps panic on NaN; the unwrap_ors
+/// silently collapse NaN to a fake ordering — both lose the total
+/// order `f64::total_cmp` provides.
+fn d2(src: &Source, out: &mut Vec<Finding>) {
+    let text = &src.masked;
+    let bytes = text.as_bytes();
+    for at in find_tokens(text, "partial_cmp") {
+        let mut i = at + "partial_cmp".len();
+        // opening paren of the argument list
+        while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        if i >= bytes.len() || bytes[i] != b'(' {
+            continue;
+        }
+        // balance parens over the argument (masking guarantees no
+        // stray parens from strings/comments)
+        let mut depth = 0i32;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'(' => depth += 1,
+                b')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        i += 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        // next chained call, possibly across newlines
+        while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        if i >= bytes.len() || bytes[i] != b'.' {
+            continue;
+        }
+        i += 1;
+        while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        let start = i;
+        while i < bytes.len() && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_') {
+            i += 1;
+        }
+        let ident = &text[start..i];
+        if matches!(ident, "unwrap" | "expect" | "unwrap_or" | "unwrap_or_else") {
+            out.push(src.finding(
+                RuleId::D2,
+                src.line_of(at),
+                format!(
+                    "NaN-unsafe float ordering: `partial_cmp(..).{}` — \
+                     use `f64::total_cmp` (total order, NaN sorts last)",
+                    ident
+                ),
+            ));
+        }
+    }
+}
+
+/// D3 — unordered-map types in emission modules.  Any use (not just
+/// iteration) is flagged: once a `HashMap` exists in a serializer
+/// module, iteration is one refactor away from the output path.
+fn d3(src: &Source, out: &mut Vec<Finding>) {
+    let scoped = D3_SCOPE_DIRS.iter().any(|d| in_dir(&src.path, d))
+        || D3_SCOPE_FILES.iter().any(|f| path_matches(&src.path, f));
+    if !scoped || !src.path.contains("src/") {
+        return;
+    }
+    for tok in D3_TOKENS {
+        for at in find_tokens(&src.masked, tok) {
+            let line = src.line_of(at);
+            out.push(src.finding(
+                RuleId::D3,
+                line,
+                format!(
+                    "`{}` in an emission module: iteration order is \
+                     emission order here — use BTreeMap/BTreeSet or a \
+                     sorted collect",
+                    tok
+                ),
+            ));
+        }
+    }
+}
+
+/// D4 — registry-only system construction outside `#[cfg(test)]`.
+/// Unlike D1 this scans benches and integration tests too (matching the
+/// grep test it supersedes): those must also build through the registry
+/// so `--system` coverage and construction coverage can't diverge.
+fn d4(src: &Source, out: &mut Vec<Finding>) {
+    if D4_ALLOW.iter().any(|f| path_matches(&src.path, f)) {
+        return;
+    }
+    // only production code: stop at the first test module marker
+    let prod_end = src.masked.find("#[cfg(test)]").unwrap_or(src.masked.len());
+    let prod = &src.masked[..prod_end];
+    for pat in D4_PATTERNS {
+        let mut from = 0usize;
+        while let Some(p) = prod[from..].find(pat) {
+            let at = from + p;
+            from = at + pat.len();
+            if !token_at(prod, at, pat) {
+                continue;
+            }
+            out.push(src.finding(
+                RuleId::D4,
+                src.line_of(at),
+                format!(
+                    "direct system construction `{}..)` — all systems must be \
+                     built through api::SystemRegistry",
+                    &pat[..pat.len() - 1]
+                ),
+            ));
+        }
+    }
+}
+
+/// D5 — hot-path panic/alloc policy for the `optperf::packed` hint-hit
+/// path.  Brace-matches each registered hot function's body and flags
+/// forbidden tokens plus literal indexing (`buf[0]`-style).
+fn d5(src: &Source, out: &mut Vec<Finding>) {
+    if !path_matches(&src.path, D5_FILE) {
+        return;
+    }
+    let text = &src.masked;
+    let bytes = text.as_bytes();
+    for name in D5_HOT_FNS {
+        let decl = format!("fn {}", name);
+        for at in find_tokens(text, &decl) {
+            // must be a declaration: next non-ws char after the name is
+            // `(` or `<`
+            let mut i = at + decl.len();
+            while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+                i += 1;
+            }
+            if i >= bytes.len() || (bytes[i] != b'(' && bytes[i] != b'<') {
+                continue;
+            }
+            // find the body's opening brace, then brace-match
+            let Some(open_rel) = text[i..].find('{') else {
+                continue;
+            };
+            let open = i + open_rel;
+            let mut depth = 0i32;
+            let mut end = open;
+            while end < bytes.len() {
+                match bytes[end] {
+                    b'{' => depth += 1,
+                    b'}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                end += 1;
+            }
+            let body = &text[open..end.min(bytes.len())];
+            for tok in D5_FORBIDDEN {
+                let mut from = 0usize;
+                while let Some(p) = body[from..].find(tok) {
+                    let at_body = from + p;
+                    from = at_body + tok.len();
+                    out.push(src.finding(
+                        RuleId::D5,
+                        src.line_of(open + at_body),
+                        format!(
+                            "`{}` inside hot-path fn `{}` — the hint-hit \
+                             path must be panic-free and allocation-free",
+                            tok, name
+                        ),
+                    ));
+                }
+            }
+            // literal indexing `[<digits>]` — a panic site with no guard
+            let bb = body.as_bytes();
+            let mut k = 0usize;
+            while k < bb.len() {
+                if bb[k] == b'[' {
+                    let mut j = k + 1;
+                    while j < bb.len() && bb[j].is_ascii_digit() {
+                        j += 1;
+                    }
+                    if j > k + 1 && j < bb.len() && bb[j] == b']' {
+                        // `#[..]` attributes never contain bare digit
+                        // indices, so this is a real index expression
+                        out.push(src.finding(
+                            RuleId::D5,
+                            src.line_of(open + k),
+                            format!(
+                                "literal index `{}` inside hot-path fn `{}` — \
+                                 a panic site with no guard",
+                                &body[k..=j],
+                                name
+                            ),
+                        ));
+                    }
+                }
+                k += 1;
+            }
+        }
+    }
+}
+
+/// D6 — report readers must stay absent-field tolerant through the
+/// `util::json` `opt_*` getters.  Flags hand-rolled tolerance (the
+/// `None | Some(Json::Null)` match) and type-error swallowing
+/// (`as_*().ok()`), both of which drift from the shared semantics:
+/// absent/null → default, present-but-wrong-type → hard error.
+fn d6(src: &Source, out: &mut Vec<Finding>) {
+    if !D6_READERS.iter().any(|f| path_matches(&src.path, f)) {
+        return;
+    }
+    for (idx, raw_line) in src.masked.lines().enumerate() {
+        let line = idx + 1;
+        let squashed: String = raw_line.chars().filter(|c| !c.is_whitespace()).collect();
+        if squashed.contains("None|Some(Json::Null)") || squashed.contains("Some(Json::Null)|None")
+        {
+            out.push(src.finding(
+                RuleId::D6,
+                line,
+                "hand-rolled absent-field tolerance — use the util::json \
+                 opt_* getters so all readers share one semantics"
+                    .to_string(),
+            ));
+        }
+        // `.as_usize().ok()`-style: swallows type errors, not just absence
+        if let Some(p) = squashed.find("().ok()") {
+            let back = squashed[..p].rfind("as_").map(|q| p - q);
+            if matches!(back, Some(d) if d <= 24) {
+                out.push(src.finding(
+                    RuleId::D6,
+                    line,
+                    "`as_*().ok()` swallows type errors as absence — use the \
+                     util::json opt_* getters (absent → default, wrong type \
+                     → error)"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+}

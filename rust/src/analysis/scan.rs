@@ -1,0 +1,309 @@
+//! Source masking for the token-level lint rules.
+//!
+//! [`mask`] walks a Rust source file once and blanks every comment and
+//! every string/char-literal *content* with spaces, preserving newlines
+//! (and therefore line numbers) exactly.  Rules then scan the masked
+//! text, so a pattern like `partial_cmp(...).unwrap()` quoted inside a
+//! doc comment, an error message, or a test-fixture string can never
+//! produce a finding.  Line comments are additionally collected verbatim
+//! so the engine can parse inline `allow(<RULE>): <reason>` directives
+//! out of them.
+//!
+//! The lexer understands the token shapes that matter for masking real
+//! Rust: nested block comments, escaped string literals, byte strings,
+//! raw strings (`r"…"`, `r#"…"#`, `br"…"`), byte/char literals, and the
+//! char-literal-vs-lifetime ambiguity (`'a'` vs `&'a T`).  It is not a
+//! full lexer — it only needs to agree with one on where comments and
+//! literals begin and end.
+
+/// A masked source file: `text` has the same line structure as the
+/// input with comments and literals blanked; `comments` holds each line
+/// comment (`//…`, including doc comments) verbatim with its 1-based
+/// line number.
+pub struct Masked {
+    pub text: String,
+    pub comments: Vec<(usize, String)>,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Blank a `"…"` string body (cursor on the opening quote).
+fn mask_string(chars: &[char], i: &mut usize, out: &mut String, line: &mut usize) {
+    out.push(' '); // opening quote
+    *i += 1;
+    while *i < chars.len() {
+        match chars[*i] {
+            '\\' => {
+                out.push(' ');
+                *i += 1;
+                if *i < chars.len() {
+                    if chars[*i] == '\n' {
+                        out.push('\n');
+                        *line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    *i += 1;
+                }
+            }
+            '"' => {
+                out.push(' ');
+                *i += 1;
+                return;
+            }
+            '\n' => {
+                out.push('\n');
+                *line += 1;
+                *i += 1;
+            }
+            _ => {
+                out.push(' ');
+                *i += 1;
+            }
+        }
+    }
+}
+
+/// Blank a `'…'` char/byte literal body (cursor on the opening quote).
+fn mask_char_literal(chars: &[char], i: &mut usize, out: &mut String, line: &mut usize) {
+    out.push(' ');
+    *i += 1;
+    while *i < chars.len() {
+        match chars[*i] {
+            '\\' => {
+                out.push(' ');
+                *i += 1;
+                if *i < chars.len() {
+                    out.push(' ');
+                    *i += 1;
+                }
+            }
+            '\'' => {
+                out.push(' ');
+                *i += 1;
+                return;
+            }
+            // a newline inside a char literal is malformed source; stop
+            // masking rather than swallow the rest of the file
+            '\n' => {
+                out.push('\n');
+                *line += 1;
+                *i += 1;
+                return;
+            }
+            _ => {
+                out.push(' ');
+                *i += 1;
+            }
+        }
+    }
+}
+
+/// Mask comments and literals out of `src` (see module docs).
+pub fn mask(src: &str) -> Masked {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = String::with_capacity(src.len());
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    let mut prev = '\0';
+    while i < n {
+        let c = chars[i];
+        // ---- line comment (also doc comments `///` and `//!`)
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let mut text = String::new();
+            while i < n && chars[i] != '\n' {
+                text.push(chars[i]);
+                out.push(' ');
+                i += 1;
+            }
+            comments.push((line, text));
+            prev = ' ';
+            continue;
+        }
+        // ---- block comment (Rust block comments nest)
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 0usize;
+            while i < n {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth = depth.saturating_sub(1);
+                    out.push_str("  ");
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    if chars[i] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    i += 1;
+                }
+            }
+            prev = ' ';
+            continue;
+        }
+        // ---- r"…" / r#"…"# / br"…" / b"…" / b'…' prefixes (only at a
+        // non-identifier boundary: `number"` is not a raw string)
+        if (c == 'r' || c == 'b') && !is_ident(prev) {
+            if c == 'b' && i + 1 < n && chars[i + 1] == '\'' {
+                out.push(' ');
+                i += 1;
+                mask_char_literal(&chars, &mut i, &mut out, &mut line);
+                prev = ' ';
+                continue;
+            }
+            if c == 'b' && i + 1 < n && chars[i + 1] == '"' {
+                out.push(' ');
+                i += 1;
+                mask_string(&chars, &mut i, &mut out, &mut line);
+                prev = ' ';
+                continue;
+            }
+            let pre = if c == 'r' {
+                1
+            } else if i + 1 < n && chars[i + 1] == 'r' {
+                2
+            } else {
+                0
+            };
+            if pre > 0 {
+                let mut j = i + pre;
+                let mut hashes = 0usize;
+                while j < n && chars[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && chars[j] == '"' {
+                    // raw string: blank prefix + hashes + opening quote…
+                    for _ in i..=j {
+                        out.push(' ');
+                    }
+                    i = j + 1;
+                    // …then everything up to `"` followed by `hashes` #s
+                    while i < n {
+                        if chars[i] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes && i + 1 + k < n && chars[i + 1 + k] == '#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                for _ in 0..=hashes {
+                                    out.push(' ');
+                                }
+                                i += 1 + hashes;
+                                break;
+                            }
+                        }
+                        if chars[i] == '\n' {
+                            out.push('\n');
+                            line += 1;
+                        } else {
+                            out.push(' ');
+                        }
+                        i += 1;
+                    }
+                    prev = ' ';
+                    continue;
+                }
+                // `r#ident` raw identifier or a plain ident starting with
+                // r/b — fall through and copy verbatim
+            }
+        }
+        // ---- plain string literal
+        if c == '"' {
+            mask_string(&chars, &mut i, &mut out, &mut line);
+            prev = ' ';
+            continue;
+        }
+        // ---- char literal vs lifetime
+        if c == '\'' {
+            if i + 1 < n && chars[i + 1] == '\\' {
+                mask_char_literal(&chars, &mut i, &mut out, &mut line);
+                prev = ' ';
+                continue;
+            }
+            if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' && chars[i + 1] != '\n' {
+                // 'x' — any single char then a closing quote
+                out.push_str("   ");
+                i += 3;
+                prev = ' ';
+                continue;
+            }
+            // lifetime ('a, 'static, '_) — keep as-is
+            out.push('\'');
+            prev = '\'';
+            i += 1;
+            continue;
+        }
+        if c == '\n' {
+            line += 1;
+        }
+        out.push(c);
+        prev = c;
+        i += 1;
+    }
+    Masked { text: out, comments }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_and_block_comments_are_blanked_and_collected() {
+        let src = "let x = 1; // trailing note\n/* block\nspans */ let y = 2;\n";
+        let m = mask(src);
+        assert!(!m.text.contains("trailing"));
+        assert!(!m.text.contains("spans"));
+        assert!(m.text.contains("let y = 2;"));
+        assert_eq!(m.comments.len(), 1);
+        assert_eq!(m.comments[0].0, 1);
+        assert!(m.comments[0].1.contains("trailing note"));
+        // line structure intact
+        assert_eq!(m.text.matches('\n').count(), src.matches('\n').count());
+    }
+
+    #[test]
+    fn strings_and_raw_strings_are_blanked() {
+        let src = r##"let a = "partial_cmp(x).unwrap()"; let b = r#"Instant::now"#; let c = 1;"##;
+        let m = mask(src);
+        assert!(!m.text.contains("partial_cmp"));
+        assert!(!m.text.contains("Instant"));
+        assert!(m.text.contains("let c = 1;"));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) -> char { let q = '\\''; let z = 'y'; q.max(z) }";
+        let m = mask(src);
+        assert!(m.text.contains("fn f<'a>(x: &'a str)"));
+        assert!(!m.text.contains("'y'"));
+        assert!(m.text.contains("q.max(z)"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner */ still-a-comment */ let live = 3;";
+        let m = mask(src);
+        assert!(!m.text.contains("still-a-comment"));
+        assert!(m.text.contains("let live = 3;"));
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_terminate_strings() {
+        let src = r#"let s = "he said \"vec![]\" loudly"; let t = 9;"#;
+        let m = mask(src);
+        assert!(!m.text.contains("vec!"));
+        assert!(m.text.contains("let t = 9;"));
+    }
+}

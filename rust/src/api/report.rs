@@ -185,15 +185,10 @@ impl RunReport {
 
     pub fn from_json(j: &Json) -> Result<RunReport> {
         // fields introduced by the mid-epoch-semantics release default to
-        // zero when absent, so report files written by older binaries
-        // still parse (the writer always emits them, so round trips of
-        // current reports stay lossless)
-        let opt_usize = |key: &str| -> Result<usize> {
-            match j.get(key) {
-                None | Some(Json::Null) => Ok(0),
-                Some(v) => v.as_usize(),
-            }
-        };
+        // zero when absent (via the tolerant util::json getters — rule
+        // D6), so report files written by older binaries still parse
+        // (the writer always emits them, so round trips of current
+        // reports stay lossless)
         let detect_name = j.req("detect")?.as_str()?;
         let detect = DetectionMode::by_name(detect_name)
             .ok_or_else(|| anyhow::anyhow!("unknown detection mode {detect_name:?}"))?;
@@ -203,24 +198,12 @@ impl RunReport {
             .iter()
             .map(row_from_json)
             .collect::<Result<Vec<_>>>()?;
-        let time_to_target = match j.req("time_to_target")? {
-            Json::Null => None,
-            other => Some(other.as_f64()?),
-        };
-        let detection = match j.req("detection")? {
-            Json::Null => None,
-            other => Some(detection_from_json(other)?),
-        };
+        let time_to_target = j.opt("time_to_target").map(|v| v.as_f64()).transpose()?;
+        let detection = j.opt("detection").map(detection_from_json).transpose()?;
         // tracing-era rollups: absent (pre-observability reports and all
         // untraced runs) means None, not an error
-        let solver_stats = match j.get("solver_stats") {
-            None | Some(Json::Null) => None,
-            Some(v) => Some(SolverStats::from_json(v)?),
-        };
-        let driver_stats = match j.get("driver_stats") {
-            None | Some(Json::Null) => None,
-            Some(v) => Some(DriverStats::from_json(v)?),
-        };
+        let solver_stats = j.opt("solver_stats").map(SolverStats::from_json).transpose()?;
+        let driver_stats = j.opt("driver_stats").map(DriverStats::from_json).transpose()?;
         Ok(RunReport {
             system: j.req("system")?.as_str()?.to_string(),
             cluster: j.req("cluster")?.as_str()?.to_string(),
@@ -232,22 +215,16 @@ impl RunReport {
             rows,
             time_to_target,
             events_applied: j.req("events_applied")?.as_usize()?,
-            events_noop: opt_usize("events_noop")?,
+            events_noop: j.opt_usize("events_noop")?,
             events_hidden: j.req("events_hidden")?.as_usize()?,
             events_skipped: j.req("events_skipped")?.as_usize()?,
-            wasted_work_secs: match j.get("wasted_work_secs") {
-                None | Some(Json::Null) => 0.0,
-                Some(v) => v.as_f64()?,
-            },
+            wasted_work_secs: j.opt_f64("wasted_work_secs", 0.0)?,
             // checkpoint + replan-timing fields arrived with the
             // checkpoint-interval release: absent in older report files
-            checkpoint_overhead_secs: match j.get("checkpoint_overhead_secs") {
-                None | Some(Json::Null) => 0.0,
-                Some(v) => v.as_f64()?,
-            },
-            checkpoints_taken: opt_usize("checkpoints_taken")?,
-            replans: opt_usize("replans")?,
-            replans_immediate: opt_usize("replans_immediate")?,
+            checkpoint_overhead_secs: j.opt_f64("checkpoint_overhead_secs", 0.0)?,
+            checkpoints_taken: j.opt_usize("checkpoints_taken")?,
+            replans: j.opt_usize("replans")?,
+            replans_immediate: j.opt_usize("replans_immediate")?,
             bootstrap_epochs: j.req("bootstrap_epochs")?.as_usize()?,
             final_n: j.req("final_n")?.as_usize()?,
             detection,
@@ -292,10 +269,7 @@ fn row_from_json(j: &Json) -> Result<EpochRow> {
         metric: j.req("metric")?.as_f64()?,
         events: j.req("events")?.as_usize()?,
         // absent in pre-mid-epoch report files: default 0
-        mid_epoch_events: match j.get("mid_epoch_events") {
-            None | Some(Json::Null) => 0,
-            Some(v) => v.as_usize()?,
-        },
+        mid_epoch_events: j.opt_usize("mid_epoch_events")?,
         detected: j.req("detected")?.as_usize()?,
     })
 }
@@ -320,18 +294,9 @@ fn detection_from_json(j: &Json) -> Result<DetectionStats> {
     let usizes = |key: &str| -> Result<Vec<usize>> {
         j.req(key)?.as_arr()?.iter().map(|l| l.as_usize()).collect()
     };
-    // membership-inference fields default to empty when absent (reports
-    // written before the missing-heartbeat rule existed)
-    let opt_usize = |key: &str| -> Result<usize> {
-        match j.get(key) {
-            None | Some(Json::Null) => Ok(0),
-            Some(v) => v.as_usize(),
-        }
-    };
-    let preempt_latencies = match j.get("preempt_latencies") {
-        None | Some(Json::Null) => Vec::new(),
-        Some(v) => v.as_arr()?.iter().map(|l| l.as_usize()).collect::<Result<Vec<_>>>()?,
-    };
+    // membership-inference fields default to zero/empty when absent
+    // (reports written before the missing-heartbeat rule existed) —
+    // via the tolerant util::json getters (rule D6)
     Ok(DetectionStats {
         emitted_slowdowns: j.req("emitted_slowdowns")?.as_usize()?,
         emitted_recovers: j.req("emitted_recovers")?.as_usize()?,
@@ -339,10 +304,10 @@ fn detection_from_json(j: &Json) -> Result<DetectionStats> {
         false_recovers: j.req("false_recovers")?.as_usize()?,
         latencies: usizes("latencies")?,
         missed: j.req("missed")?.as_usize()?,
-        inferred_preempts: opt_usize("inferred_preempts")?,
-        false_preempts: opt_usize("false_preempts")?,
-        preempt_latencies,
-        missed_preempts: opt_usize("missed_preempts")?,
+        inferred_preempts: j.opt_usize("inferred_preempts")?,
+        false_preempts: j.opt_usize("false_preempts")?,
+        preempt_latencies: j.opt_usizes("preempt_latencies")?,
+        missed_preempts: j.opt_usize("missed_preempts")?,
     })
 }
 
@@ -416,6 +381,7 @@ mod tests {
                 hint_hits: 8,
                 delta: 3,
                 delta_hits: 2,
+                pruned: 4,
                 wall_total_secs: 0.0123,
                 wall_p50_secs: 0.0008,
                 wall_p90_secs: 0.0021,

@@ -312,6 +312,10 @@ impl TrainingSystem for CannikinPlanner {
     }
 
     fn plan_epoch(&mut self, epoch: usize, phi: f64) -> Plan {
+        // Plan.overhead feeds only the real-numerics planner_secs ledger
+        // and the figures overhead study; the sim driver substitutes the
+        // deterministic ckpt_cost model, so this never reaches a trace.
+        // lint: allow(D1): wall overhead is report-only, never sim state
         let t0 = Instant::now();
         let plan = self.plan_inner(epoch, phi);
         let overhead = t0.elapsed().as_secs_f64();

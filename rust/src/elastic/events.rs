@@ -242,11 +242,10 @@ impl ChurnTrace {
             };
             events.push(TimedEvent { epoch, frac, event });
         }
-        // stable, so same-position events keep file order (frac is domain-
-        // checked above: the partial order on it is total here)
-        events.sort_by(|a, b| {
-            a.epoch.cmp(&b.epoch).then(a.frac.partial_cmp(&b.frac).expect("frac is finite"))
-        });
+        // stable, so same-position events keep file order (total_cmp is
+        // total outright; frac is domain-checked above anyway, so the
+        // ordering is unchanged from the old finite-only comparator)
+        events.sort_by(|a, b| a.epoch.cmp(&b.epoch).then(a.frac.total_cmp(&b.frac)));
         Ok(ChurnTrace { name, events })
     }
 

@@ -35,7 +35,11 @@
 //!   `cannikin trace` tooling, and the solver probe behind
 //!   `RunReport.solver_stats`); traces are bit-identical per seed once
 //!   `wall_*` fields are stripped (see `OBSERVABILITY.md`).
+//! * **Static analysis** — [`analysis`] is `cannikin lint`: the
+//!   determinism & NaN-safety rules (D1–D6) that defend the contracts
+//!   above at the source level (see `ANALYSIS.md`).
 
+pub mod analysis;
 pub mod api;
 pub mod baselines;
 pub mod benchkit;

@@ -105,7 +105,7 @@ pub fn solve(a: &Mat, b: &[f64]) -> Result<Vec<f64>> {
     for col in 0..n {
         // pivot
         let piv = (col..n)
-            .max_by(|&i, &j| m[(i, col)].abs().partial_cmp(&m[(j, col)].abs()).unwrap())
+            .max_by(|&i, &j| m[(i, col)].abs().total_cmp(&m[(j, col)].abs()))
             .unwrap();
         if m[(piv, col)].abs() < 1e-300 {
             bail!("solve: singular matrix at column {col}");
@@ -152,7 +152,7 @@ pub fn invert(a: &Mat) -> Result<Mat> {
     let mut inv = Mat::eye(n);
     for col in 0..n {
         let piv = (col..n)
-            .max_by(|&i, &j| m[(i, col)].abs().partial_cmp(&m[(j, col)].abs()).unwrap())
+            .max_by(|&i, &j| m[(i, col)].abs().total_cmp(&m[(j, col)].abs()))
             .unwrap();
         if m[(piv, col)].abs() < 1e-300 {
             bail!("invert: singular matrix at column {col}");

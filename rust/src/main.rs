@@ -12,6 +12,7 @@
 //!   predict   print the OptPerf allocation for a cluster + batch size
 //!   inspect   show an artifact directory's manifest
 //!   trace     tooling over --trace-out files: summarize / diff / export-chrome
+//!   lint      determinism & NaN-safety static analysis over the source tree
 //!
 //! Every system is constructed through the `api::SystemRegistry` —
 //! `--system help` enumerates it — and `sim` / `elastic` / `run` /
@@ -68,6 +69,7 @@ USAGE:
   cannikin figures [--fig 5|6|7|8|9|10|t5|pred|overlap|c|all]
   cannikin predict [--cluster a|b|c] [--workload W] --batch B
   cannikin inspect [--artifacts DIR]
+  cannikin lint    [PATH] [--json]
 
 workloads:   imagenet cifar10 librispeech squad movielens
 systems (S): resolved via the system registry — `--system help` lists them
@@ -99,7 +101,14 @@ tracing:     --trace-out FILE writes a deterministic JSONL trace of the run
              system from FILE.  `trace summarize` prints per-category counts,
              solver latency percentiles and the wasted-work ledger;
              `trace diff` compares two traces ignoring wall_* fields;
-             `trace export-chrome` emits chrome://tracing / Perfetto JSON";
+             `trace export-chrome` emits chrome://tracing / Perfetto JSON
+lint:        static determinism & NaN-safety analysis (rules D1–D6, see
+             ANALYSIS.md) over the crate's source tree.  PATH defaults to
+             the current directory (run from the repo root); exits non-zero
+             on any finding.  --json emits machine-readable findings.
+             Suppress a finding in place with
+             `// lint: allow(<RULE>): <reason>` — reasonless allows are
+             themselves findings (rule A0)";
 
 /// (flag, takes-value) validation spec of one subcommand.
 type FlagSpec = &'static [(&'static str, bool)];
@@ -167,6 +176,7 @@ const PREDICT_FLAGS: FlagSpec = &[
     ("batch", true),
 ];
 const INSPECT_FLAGS: FlagSpec = &[("artifacts", true)];
+const LINT_FLAGS: FlagSpec = &[("json", false)];
 
 /// Parse `args` against `spec`: leading non-flag tokens become
 /// positionals, `--flag [value]` pairs are validated (unknown flags error
@@ -298,6 +308,13 @@ fn run() -> Result<()> {
             let (_, flags) = parse_args("inspect", rest, INSPECT_FLAGS, 0)?;
             cmd_inspect(&flags)
         }
+        "lint" => {
+            // PATH is optional: count the non-flag tokens (lint's only
+            // flag is valueless, so every non-flag token is positional)
+            let n_pos = rest.iter().filter(|a| !a.starts_with("--")).count().min(1);
+            let (pos, flags) = parse_args("lint", rest, LINT_FLAGS, n_pos)?;
+            cmd_lint(pos.first().map(|s| s.as_str()), &flags)
+        }
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -305,7 +322,7 @@ fn run() -> Result<()> {
         other => {
             let subs = [
                 "train", "sim", "elastic", "run", "sched", "compare", "report", "figures",
-                "predict", "inspect", "trace",
+                "predict", "inspect", "trace", "lint",
             ];
             let hint = suggest(other, subs)
                 .map(|s| format!(" (did you mean `{s}`?)"))
@@ -873,6 +890,35 @@ fn cmd_inspect(flags: &HashMap<String, String>) -> Result<()> {
     }
     if m.params.len() > 8 {
         println!("  … {} more", m.params.len() - 8);
+    }
+    Ok(())
+}
+
+fn cmd_lint(path: Option<&str>, flags: &HashMap<String, String>) -> Result<()> {
+    let root = PathBuf::from(path.unwrap_or("."));
+    let report = cannikin::analysis::lint_root(&root)?;
+    if report.files_scanned == 0 {
+        bail!(
+            "lint found no Rust sources under {:?} — run it from the repo \
+             root or pass the repo path",
+            root
+        );
+    }
+    if flags.contains_key("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        for f in &report.findings {
+            println!("{}", f.render());
+        }
+        eprintln!(
+            "lint: {} file(s) scanned, {} finding(s), {} suppressed by inline allows",
+            report.files_scanned,
+            report.findings.len(),
+            report.suppressed
+        );
+    }
+    if !report.findings.is_empty() {
+        bail!("lint: {} finding(s)", report.findings.len());
     }
     Ok(())
 }

@@ -56,7 +56,7 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
 impl SolverStats {
     pub fn from_records(records: &[SolveRecord]) -> Self {
         let mut walls: Vec<f64> = records.iter().map(|r| r.wall_secs).collect();
-        walls.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        walls.sort_by(|a, b| a.total_cmp(b));
         SolverStats {
             calls: records.len(),
             solves: records.iter().map(|r| r.solves).sum(),
@@ -97,10 +97,10 @@ impl SolverStats {
             hinted: j.req("hinted")?.as_usize()?,
             hint_hits: j.req("hint_hits")?.as_usize()?,
             // absent in pre-delta-cache reports; default 0 keeps them parsing
-            delta: j.get("delta").and_then(|v| v.as_usize().ok()).unwrap_or(0),
-            delta_hits: j.get("delta_hits").and_then(|v| v.as_usize().ok()).unwrap_or(0),
+            delta: j.opt_usize("delta")?,
+            delta_hits: j.opt_usize("delta_hits")?,
             // absent in pre-pruning reports; default 0 keeps them parsing
-            pruned: j.get("pruned").and_then(|v| v.as_usize().ok()).unwrap_or(0),
+            pruned: j.opt_usize("pruned")?,
             wall_total_secs: j.req("wall_total_secs")?.as_f64()?,
             wall_p50_secs: j.req("wall_p50_secs")?.as_f64()?,
             wall_p90_secs: j.req("wall_p90_secs")?.as_f64()?,
@@ -194,6 +194,19 @@ mod tests {
     fn empty_rollup_is_all_zero() {
         let s = SolverStats::from_records(&[]);
         assert_eq!(s, SolverStats::default());
+    }
+
+    /// D2 regression: a NaN wall sample (a clock that went sideways)
+    /// must not panic the percentile rollup.  `total_cmp` sorts NaN
+    /// last, so the low percentiles stay finite and only the max — the
+    /// statistic that honestly touched the bad sample — reads NaN.
+    #[test]
+    fn nan_wall_sample_does_not_panic_percentiles() {
+        let recs = vec![rec(1, false, false, 1.0), rec(1, false, false, f64::NAN), rec(1, false, false, 2.0)];
+        let s = SolverStats::from_records(&recs);
+        assert_eq!(s.calls, 3);
+        assert!(s.wall_p50_secs.is_finite());
+        assert!(s.wall_max_secs.is_nan());
     }
 
     #[test]

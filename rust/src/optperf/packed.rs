@@ -185,7 +185,7 @@ impl SolverWorkspace {
         // unstable sort on (μ*, index) == the original stable sort by μ*,
         // with zero allocation
         self.sort_buf
-            .sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            .sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         self.full_order.clear();
         self.full_order.extend(self.sort_buf.iter().map(|p| p.1));
         self.order_sorted = true;
@@ -439,7 +439,7 @@ impl SolverWorkspace {
             for (pos, &i) in idx.iter().enumerate() {
                 buf.push((self.crossover[i], pos));
             }
-            buf.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            buf.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
             order.extend(buf.iter().map(|p| p.1));
             self.sort_buf = buf;
         }

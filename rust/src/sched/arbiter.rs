@@ -97,9 +97,7 @@ pub fn decide(policy: FairnessPolicy, prices: &[JobPrice]) -> Option<Move> {
             // donor class with a positive gain for it is eligible, ranked
             // by net score.  This grants a feasible positive bid in the
             // same round it appears — the starvation-freedom property.
-            let b = prices.iter().min_by(|x, y| {
-                x.goodput.partial_cmp(&y.goodput).unwrap_or(std::cmp::Ordering::Equal)
-            })?;
+            let b = prices.iter().min_by(|x, y| x.goodput.total_cmp(&y.goodput))?;
             for a in prices.iter().filter(|p| p.n_nodes >= 2 && p.job != b.job) {
                 for cp in &a.losses {
                     let gain = b.gain(&cp.class);
@@ -128,21 +126,13 @@ pub fn place(policy: FairnessPolicy, prices: &[JobPrice], class: &str) -> Option
     let mut cands: Vec<&JobPrice> = prices.iter().filter(|p| p.gain(class) > EPS).collect();
     match policy {
         FairnessPolicy::MaxGoodput => {
-            cands.sort_by(|a, b| {
-                b.gain(class).partial_cmp(&a.gain(class)).unwrap_or(std::cmp::Ordering::Equal)
-            });
+            cands.sort_by(|a, b| b.gain(class).total_cmp(&a.gain(class)));
         }
         FairnessPolicy::MaxMin => {
-            cands.sort_by(|a, b| {
-                a.goodput.partial_cmp(&b.goodput).unwrap_or(std::cmp::Ordering::Equal)
-            });
+            cands.sort_by(|a, b| a.goodput.total_cmp(&b.goodput));
         }
         FairnessPolicy::WeightedShare => {
-            cands.sort_by(|a, b| {
-                (b.gain(class) * b.weight)
-                    .partial_cmp(&(a.gain(class) * a.weight))
-                    .unwrap_or(std::cmp::Ordering::Equal)
-            });
+            cands.sort_by(|a, b| (b.gain(class) * b.weight).total_cmp(&(a.gain(class) * a.weight)));
         }
     }
     cands.first().map(|p| p.job)
@@ -259,7 +249,7 @@ mod tests {
                 .collect();
             let min = prices
                 .iter()
-                .min_by(|x, y| x.goodput.partial_cmp(&y.goodput).unwrap())
+                .min_by(|x, y| x.goodput.total_cmp(&y.goodput))
                 .unwrap()
                 .job;
             // a feasible positive bid: some other job can donate (n ≥ 2)
@@ -287,6 +277,34 @@ mod tests {
                 "case {case}: min job {min} starved {starved} rounds with a feasible bid"
             );
         }
+    }
+
+    /// D2 regression: a NaN bid (a price whose goodput model diverged)
+    /// must never panic the arbiter and must never win a ranking —
+    /// `total_cmp` sorts NaN last, and the `gain > EPS` feasibility
+    /// filter is false for NaN gains.
+    #[test]
+    fn nan_bids_never_panic_and_never_win() {
+        // NaN goodput: under MaxMin, NaN is *greatest* in the total
+        // order, so the finite minimum (job 1) stays the recipient.
+        let prices = vec![
+            price(0, 4, f64::NAN, 1.0, 0.2, 2.0),
+            price(1, 2, 1.0, 1.0, 0.9, 1.5),
+            price(2, 4, 10.0, 1.0, 0.2, 0.0),
+        ];
+        let mv = decide(FairnessPolicy::MaxMin, &prices).unwrap();
+        assert_eq!(mv.to, 1);
+        // placement: the NaN-goodput job bids (gain 2.0 > EPS) but sorts
+        // after every finite-goodput bid
+        assert_eq!(place(FairnessPolicy::MaxMin, &prices, "gpu"), Some(1));
+        // NaN *gain* is filtered by the feasibility check, not ranked
+        let nan_gain = vec![price(0, 2, 5.0, 1.0, 0.0, f64::NAN), price(1, 2, 9.0, 1.0, 0.0, 0.5)];
+        assert_eq!(place(FairnessPolicy::MaxGoodput, &nan_gain, "gpu"), Some(1));
+        assert_eq!(place(FairnessPolicy::WeightedShare, &nan_gain, "gpu"), Some(1));
+        // all-NaN prices: no panic, and nobody qualifies for placement
+        let all_nan = vec![price(0, 2, f64::NAN, 1.0, f64::NAN, f64::NAN)];
+        let _ = decide(FairnessPolicy::MaxMin, &all_nan);
+        assert_eq!(place(FairnessPolicy::MaxGoodput, &all_nan, "gpu"), None);
     }
 
     #[test]

@@ -183,12 +183,7 @@ impl FleetLedger {
 pub fn partition_indices(base: &ClusterSpec, n_jobs: usize) -> Vec<Vec<usize>> {
     let mut order: Vec<usize> = (0..base.n()).collect();
     order.sort_by(|&a, &b| {
-        base.nodes[b]
-            .device
-            .speed
-            .partial_cmp(&base.nodes[a].device.speed)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
+        base.nodes[b].device.speed.total_cmp(&base.nodes[a].device.speed).then(a.cmp(&b))
     });
     let mut parts = vec![Vec::new(); n_jobs];
     for (k, &i) in order.iter().enumerate() {

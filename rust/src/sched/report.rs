@@ -117,31 +117,7 @@ impl FleetReport {
             .iter()
             .map(RunReport::from_json)
             .collect::<Result<Vec<_>>>()?;
-        let opt_str = |key: &str, d: &str| -> Result<String> {
-            match j.get(key) {
-                None | Some(Json::Null) => Ok(d.to_string()),
-                Some(v) => Ok(v.as_str()?.to_string()),
-            }
-        };
-        let opt_f64 = |key: &str, d: f64| -> Result<f64> {
-            match j.get(key) {
-                None | Some(Json::Null) => Ok(d),
-                Some(v) => v.as_f64(),
-            }
-        };
-        let opt_usize = |key: &str| -> Result<usize> {
-            match j.get(key) {
-                None | Some(Json::Null) => Ok(0),
-                Some(v) => v.as_usize(),
-            }
-        };
-        let opt_nums = |key: &str, d: Vec<f64>| -> Result<Vec<f64>> {
-            match j.get(key) {
-                None | Some(Json::Null) => Ok(d),
-                Some(v) => v.as_arr()?.iter().map(|x| x.as_f64()).collect(),
-            }
-        };
-        let goodputs = opt_nums(
+        let goodputs = j.opt_f64s(
             "goodputs",
             jobs.iter()
                 .map(|r| match r.rows.last() {
@@ -151,20 +127,20 @@ impl FleetReport {
                 .collect(),
         )?;
         Ok(FleetReport {
-            name: opt_str("name", "fleet")?,
-            cluster: opt_str("cluster", "")?,
-            arbiter: opt_str("arbiter", "bid")?,
-            fairness: opt_str("fairness", "max-goodput")?,
-            weights: opt_nums("weights", vec![1.0; jobs.len()])?,
-            aggregate_goodput: opt_f64("aggregate_goodput", goodputs.iter().sum())?,
-            fairness_index: opt_f64("fairness_index", jain_index(&goodputs))?,
-            makespan_secs: opt_f64("makespan_secs", 0.0)?,
-            preemptions_by_arbiter: opt_usize("preemptions_by_arbiter")?,
-            grants_by_arbiter: opt_usize("grants_by_arbiter")?,
-            rounds: opt_usize("rounds")?,
-            nodes_lost: opt_usize("nodes_lost")?,
-            nodes_joined: opt_usize("nodes_joined")?,
-            nodes_idle: opt_usize("nodes_idle")?,
+            name: j.opt_str("name", "fleet")?,
+            cluster: j.opt_str("cluster", "")?,
+            arbiter: j.opt_str("arbiter", "bid")?,
+            fairness: j.opt_str("fairness", "max-goodput")?,
+            weights: j.opt_f64s("weights", vec![1.0; jobs.len()])?,
+            aggregate_goodput: j.opt_f64("aggregate_goodput", goodputs.iter().sum())?,
+            fairness_index: j.opt_f64("fairness_index", jain_index(&goodputs))?,
+            makespan_secs: j.opt_f64("makespan_secs", 0.0)?,
+            preemptions_by_arbiter: j.opt_usize("preemptions_by_arbiter")?,
+            grants_by_arbiter: j.opt_usize("grants_by_arbiter")?,
+            rounds: j.opt_usize("rounds")?,
+            nodes_lost: j.opt_usize("nodes_lost")?,
+            nodes_joined: j.opt_usize("nodes_joined")?,
+            nodes_idle: j.opt_usize("nodes_idle")?,
             goodputs,
             jobs,
         })

@@ -80,6 +80,53 @@ impl Json {
         }
     }
 
+    // ------------------------------------------------- tolerant accessors
+    /// Absent-field-tolerant lookup: a missing key and an explicit
+    /// `null` both read as "not provided".  Report readers must go
+    /// through these getters (lint rule D6, see ANALYSIS.md) so every
+    /// parser shares one semantics: absent/null → default,
+    /// present-but-wrong-type → hard error, never silently swallowed.
+    pub fn opt(&self, key: &str) -> Option<&Json> {
+        self.get(key).filter(|v| !matches!(v, Json::Null))
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.as_f64(),
+        }
+    }
+
+    /// Absent counters read as zero (reports predating a field).
+    pub fn opt_usize(&self, key: &str) -> Result<usize> {
+        match self.opt(key) {
+            None => Ok(0),
+            Some(v) => v.as_usize(),
+        }
+    }
+
+    pub fn opt_str(&self, key: &str, default: &str) -> Result<String> {
+        match self.opt(key) {
+            None => Ok(default.to_string()),
+            Some(v) => Ok(v.as_str()?.to_string()),
+        }
+    }
+
+    /// Absent lists read as empty.
+    pub fn opt_usizes(&self, key: &str) -> Result<Vec<usize>> {
+        match self.opt(key) {
+            None => Ok(Vec::new()),
+            Some(v) => v.as_arr()?.iter().map(|x| x.as_usize()).collect(),
+        }
+    }
+
+    pub fn opt_f64s(&self, key: &str, default: Vec<f64>) -> Result<Vec<f64>> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.as_arr()?.iter().map(|x| x.as_f64()).collect(),
+        }
+    }
+
     // --------------------------------------------------------- construction
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
@@ -403,5 +450,37 @@ mod tests {
     fn unicode_escape() {
         let v = Json::parse(r#""é""#).unwrap();
         assert_eq!(v.as_str().unwrap(), "é");
+    }
+
+    #[test]
+    fn tolerant_getters_treat_absent_and_null_alike() {
+        let v = Json::parse(r#"{"a": 1.5, "b": null, "s": "x", "ns": [1, 2], "fs": [0.5]}"#).unwrap();
+        // present → parsed
+        assert_eq!(v.opt_f64("a", 9.0).unwrap(), 1.5);
+        assert_eq!(v.opt_str("s", "d").unwrap(), "x");
+        assert_eq!(v.opt_usizes("ns").unwrap(), vec![1, 2]);
+        assert_eq!(v.opt_f64s("fs", vec![]).unwrap(), vec![0.5]);
+        // absent and explicit null → default
+        assert_eq!(v.opt_f64("missing", 9.0).unwrap(), 9.0);
+        assert_eq!(v.opt_f64("b", 9.0).unwrap(), 9.0);
+        assert_eq!(v.opt_usize("missing").unwrap(), 0);
+        assert_eq!(v.opt_usize("b").unwrap(), 0);
+        assert_eq!(v.opt_str("b", "d").unwrap(), "d");
+        assert!(v.opt_usizes("b").unwrap().is_empty());
+        assert_eq!(v.opt_f64s("b", vec![3.0]).unwrap(), vec![3.0]);
+        assert!(v.opt("b").is_none());
+        assert!(v.opt("a").is_some());
+    }
+
+    #[test]
+    fn tolerant_getters_reject_wrong_types() {
+        // wrong type must stay a hard error — tolerance covers absence,
+        // not schema drift
+        let v = Json::parse(r#"{"a": "not-a-number", "ns": [1, "x"]}"#).unwrap();
+        assert!(v.opt_f64("a", 0.0).is_err());
+        assert!(v.opt_usize("a").is_err());
+        assert!(v.opt_usizes("ns").is_err());
+        assert!(v.opt_str("a", "d").is_ok()); // it IS a string
+        assert!(v.opt_f64s("a", vec![]).is_err());
     }
 }

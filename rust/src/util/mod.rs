@@ -39,7 +39,7 @@ pub fn round_preserving_sum(xs: &[f64], total: u64) -> Vec<u64> {
         .enumerate()
         .map(|(i, &x)| (i, x.max(0.0) - x.max(0.0).floor()))
         .collect();
-    rem.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    rem.sort_by(|a, b| b.1.total_cmp(&a.1));
     let mut left = total - used;
     let mut k = 0;
     while left > 0 {
@@ -79,5 +79,15 @@ mod tests {
     fn round_shaves_when_over() {
         let out = round_preserving_sum(&[6.0, 6.0], 10);
         assert_eq!(out.iter().sum::<u64>(), 10);
+    }
+
+    /// D2 regression: a NaN share acts like the negative-noise case
+    /// (`NaN.max(0.0) == 0.0`), so the remainder sort sees no NaN keys
+    /// and the exact-total contract still holds — no panic either way.
+    #[test]
+    fn round_tolerates_nan_shares() {
+        let out = round_preserving_sum(&[f64::NAN, 5.2, 4.8], 10);
+        assert_eq!(out.iter().sum::<u64>(), 10);
+        assert_eq!(out[0], 0);
     }
 }

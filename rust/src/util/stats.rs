@@ -105,7 +105,7 @@ impl Ema {
 pub fn median(xs: &[f64]) -> f64 {
     assert!(!xs.is_empty());
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -174,6 +174,19 @@ mod tests {
     fn median_odd_even() {
         assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
         assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    /// D2 regression: NaN samples (a node reporting a diverged timing)
+    /// must not panic the robust statistics.  Under `total_cmp` NaN
+    /// sorts last, so it lands in the tail like any other outlier.
+    #[test]
+    fn median_and_mad_tolerate_nan_inputs() {
+        // sorted under total_cmp: [1.0, 2.0, NaN] → median picks 2.0
+        assert_eq!(median(&[1.0, f64::NAN, 2.0]), 2.0);
+        // deviations from 2.0: [1.0, NaN, 0.0] → sorted [0.0, 1.0, NaN]
+        assert_eq!(mad(&[1.0, f64::NAN, 2.0]), 1.0);
+        // all-NaN degenerates to NaN, never a panic
+        assert!(median(&[f64::NAN, f64::NAN]).is_nan());
     }
 
     #[test]

@@ -8,10 +8,11 @@
 //! * the `sim`-vs-`elastic` caps regression — a static run and an
 //!   eventless elastic run agree bit-for-bit, and registry-built planners
 //!   respect memory caps (the historical `cmd_sim` bug);
-//! * grep enforcement — no production code constructs a training system
-//!   outside the `SystemRegistry`.
+//! * registry-only construction — the static analyzer's D4 rule proves no
+//!   production code constructs a training system outside the
+//!   `SystemRegistry`.
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
 use cannikin::api::{
     self, run_spec, BuildOptions, EpochRow, ExperimentSpec, RunReport, SystemRegistry,
@@ -448,24 +449,14 @@ fn registry_applies_memory_caps_on_the_static_path() {
 }
 
 // ---------------------------------------------------------------------------
-// grep enforcement: SystemRegistry is the only construction point
+// registry-only construction: the analyzer's D4 rule is the enforcement
 // ---------------------------------------------------------------------------
 
-fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
-    for entry in std::fs::read_dir(dir).unwrap() {
-        let path = entry.unwrap().path();
-        if path.is_dir() {
-            rust_files(&path, out);
-        } else if path.extension().is_some_and(|e| e == "rs") {
-            out.push(path);
-        }
-    }
-}
-
 /// ISSUE 3 acceptance: zero direct constructions of the system types
-/// outside the `SystemRegistry` and unit tests.  `#[cfg(test)]` blocks
-/// (all repo files keep them at the bottom) are stripped before matching.
-/// Allowlisted:
+/// outside the `SystemRegistry` and unit tests.  Originally a grep loop in
+/// this file; now it delegates to `cannikin::analysis` rule D4 (same
+/// patterns, same `#[cfg(test)]` stripping, same allowlist) so the test
+/// and `cannikin lint` can never disagree.  Allowlisted:
 /// * `api/registry.rs` — the registry itself;
 /// * `elastic/scenario.rs` — `ColdRestartCannikin` *is* a system whose
 ///   cold-restart semantics consist of constructing a fresh inner
@@ -473,47 +464,16 @@ fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
 #[test]
 fn no_direct_system_construction_outside_the_registry() {
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
-    let mut files = Vec::new();
-    for dir in ["rust/src", "rust/benches", "rust/tests", "examples"] {
-        rust_files(&root.join(dir), &mut files);
-    }
-    assert!(files.len() > 30, "walker must see the whole tree ({} files)", files.len());
-
-    let allow = ["rust/src/api/registry.rs", "rust/src/elastic/scenario.rs"];
-    // built by concatenation so this file does not match itself
-    let joiner = "::";
-    let patterns: Vec<String> = [
-        ("CannikinPlanner", "new("),
-        ("ColdRestartCannikin", "new("),
-        ("AdaptDl", "new("),
-        ("LbBsp", "new("),
-        ("Ddp", "new("),
-        ("Ddp", "with_total("),
-    ]
-    .iter()
-    .map(|(ty, ctor)| format!("{ty}{joiner}{ctor}"))
-    .collect();
-
-    let mut violations = Vec::new();
-    for file in &files {
-        let rel = file.strip_prefix(&root).unwrap().to_string_lossy().replace('\\', "/");
-        if allow.contains(&rel.as_str()) {
-            continue;
-        }
-        let text = std::fs::read_to_string(file).unwrap();
-        // unit-test blocks sit at the bottom of every file in this repo
-        let prod = text.split("#[cfg(test)]").next().unwrap();
-        for (lineno, line) in prod.lines().enumerate() {
-            for pat in &patterns {
-                if line.contains(pat.as_str()) {
-                    violations.push(format!("{rel}:{}: {}", lineno + 1, line.trim()));
-                }
-            }
-        }
-    }
+    let report =
+        cannikin::analysis::lint_root_rules(&root, &[cannikin::analysis::RuleId::D4]).unwrap();
     assert!(
-        violations.is_empty(),
+        report.files_scanned > 30,
+        "walker must see the whole tree ({} files)",
+        report.files_scanned
+    );
+    assert!(
+        report.findings.is_empty(),
         "systems must be constructed through api::SystemRegistry only:\n{}",
-        violations.join("\n")
+        report.findings.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n")
     );
 }

@@ -1,0 +1,22 @@
+//! The tree passes its own analyzer: `cannikin lint` over the repo with
+//! every rule enabled reports zero findings.  A0 is part of the rule
+//! set, so a reasonless or typo'd inline allow fails this test too —
+//! the tree can never be "clean" with an undocumented suppression.
+
+use std::path::PathBuf;
+
+#[test]
+fn repo_tree_is_lint_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let report = cannikin::analysis::lint_root(&root).unwrap();
+    assert!(
+        report.files_scanned > 40,
+        "walker must see the whole tree (saw {} files)",
+        report.files_scanned
+    );
+    assert!(
+        report.findings.is_empty(),
+        "`cannikin lint` must exit clean on this tree:\n{}",
+        report.findings.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n")
+    );
+}

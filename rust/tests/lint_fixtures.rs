@@ -1,0 +1,115 @@
+//! The analyzer's fixture suite: one intentionally-bad snippet per rule
+//! under `lint_fixtures/` (a directory the real scan excludes), each
+//! linted under a virtual in-scope path.  Every rule must fire on its
+//! fixture at the expected lines — and go silent when the same text is
+//! linted under an out-of-scope or allowlisted path, proving the scoping
+//! is what suppresses it, not luck.
+
+use std::path::PathBuf;
+
+use cannikin::analysis::{lint_source, Finding, RuleId};
+
+fn fixture(name: &str) -> String {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/lint_fixtures")
+        .join(name);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading fixture {}: {e}", path.display()))
+}
+
+fn lines(findings: &[Finding], rule: RuleId) -> Vec<usize> {
+    findings.iter().filter(|f| f.rule == rule).map(|f| f.line).collect()
+}
+
+#[test]
+fn d1_fires_on_wall_clock_outside_registered_sites() {
+    let src = fixture("d1_wall_clock.rs");
+    let f = lint_source("rust/src/simulator/convergence.rs", &src, &[RuleId::D1]);
+    assert_eq!(lines(&f, RuleId::D1), vec![5], "{f:#?}");
+
+    // tests and benches may measure wall time freely
+    let f = lint_source("rust/tests/some_e2e.rs", &src, &[RuleId::D1]);
+    assert!(f.is_empty(), "{f:#?}");
+    // benchkit measures wall time by definition (file allowlist)
+    let f = lint_source("rust/src/benchkit.rs", &src, &[RuleId::D1]);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn d2_fires_on_partial_cmp_unwrap_chains() {
+    let src = fixture("d2_partial_cmp.rs");
+    let f = lint_source("rust/src/sched/arbiter.rs", &src, &[RuleId::D2]);
+    // line 4: single-line `.unwrap()`; line 9: `.expect(..)` across a
+    // newline — the chain scanner must cross whitespace
+    assert_eq!(lines(&f, RuleId::D2), vec![4, 9], "{f:#?}");
+
+    // D2 is scope-free: the same chain in a test file still fires
+    let f = lint_source("rust/tests/anything.rs", &src, &[RuleId::D2]);
+    assert_eq!(lines(&f, RuleId::D2), vec![4, 9], "{f:#?}");
+
+    // the fixed spelling is clean
+    let good = "fn s(v: &mut [f64]) { v.sort_by(|a, b| a.total_cmp(b)); }\n";
+    let f = lint_source("rust/src/sched/arbiter.rs", good, &[RuleId::D2]);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn d3_fires_on_unordered_maps_in_emission_modules() {
+    let src = fixture("d3_hashmap_emitter.rs");
+    let f = lint_source("rust/src/obs/emit.rs", &src, &[RuleId::D3]);
+    // line 1: the import; line 6: the signature — any use is flagged
+    assert_eq!(lines(&f, RuleId::D3), vec![1, 6], "{f:#?}");
+
+    // out of the emission scope the same text is fine
+    let f = lint_source("rust/src/coordinator/leader.rs", &src, &[RuleId::D3]);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn d4_fires_on_direct_construction_and_respects_test_regions() {
+    let src = fixture("d4_direct_construction.rs");
+    let f = lint_source("rust/src/figures/sneaky.rs", &src, &[RuleId::D4]);
+    // only the pre-`#[cfg(test)]` construction fires
+    assert_eq!(lines(&f, RuleId::D4), vec![4], "{f:#?}");
+
+    // the registry itself is the allowed construction point
+    let f = lint_source("rust/src/api/registry.rs", &src, &[RuleId::D4]);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn d5_fires_inside_hot_functions_only() {
+    let src = fixture("d5_hot_path_alloc.rs");
+    let f = lint_source("rust/src/optperf/packed.rs", &src, &[RuleId::D5]);
+    // line 6: `.unwrap()`; line 8: `.to_vec()`; line 9: literal `[0]`.
+    // `cold_path`'s unwrap on line 14 must NOT appear.
+    assert_eq!(lines(&f, RuleId::D5), vec![6, 8, 9], "{f:#?}");
+
+    // the rule is pinned to the packed solver file
+    let f = lint_source("rust/src/optperf/mod.rs", &src, &[RuleId::D5]);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn d6_fires_on_hand_rolled_tolerance_in_readers() {
+    let src = fixture("d6_handrolled_tolerance.rs");
+    let f = lint_source("rust/src/api/report.rs", &src, &[RuleId::D6]);
+    // line 6: `None | Some(Json::Null)` match; line 9: `as_*().ok()`
+    assert_eq!(lines(&f, RuleId::D6), vec![6, 9], "{f:#?}");
+
+    // outside the registered readers the same text is fine
+    let f = lint_source("rust/src/coordinator/planner.rs", &src, &[RuleId::D6]);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn fixtures_are_invisible_to_the_tree_scan() {
+    // the real scan must skip lint_fixtures/, or the clean-tree test and
+    // this suite would fight forever
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let report = cannikin::analysis::lint_root(&root).unwrap();
+    assert!(
+        !report.findings.iter().any(|f| f.path.contains("lint_fixtures/")),
+        "fixture findings leaked into the tree scan"
+    );
+}

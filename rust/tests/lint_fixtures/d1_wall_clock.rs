@@ -1,0 +1,7 @@
+// Fixture: D1 must fire — wall-clock read in unregistered library code.
+// The driver lints this under the virtual path rust/src/simulator/convergence.rs.
+
+pub fn elapsed_secs() -> f64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,12 @@
+// Fixture: D2 must fire — partial_cmp chained into unwrap/expect in a sort.
+
+pub fn sort_desc(v: &mut Vec<f64>) {
+    v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+}
+
+pub fn sort_multiline(v: &mut [f64]) {
+    v.sort_by(|a, b| {
+        a.partial_cmp(b)
+            .expect("comparable")
+    });
+}

@@ -1,0 +1,12 @@
+use std::collections::HashMap;
+
+// Fixture: D3 must fire — an unordered map in an emission module means
+// iteration order is emission order.  The driver lints this under the
+// virtual path rust/src/obs/emit.rs.
+pub fn emit(rows: &HashMap<String, f64>) -> String {
+    let mut out = String::new();
+    for (k, v) in rows {
+        out.push_str(&format!("{k}={v}\n"));
+    }
+    out
+}

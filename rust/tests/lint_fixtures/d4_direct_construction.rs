@@ -1,0 +1,13 @@
+// Fixture: D4 must fire — a planner constructed outside the registry.
+
+pub fn sneaky() {
+    let _p = CannikinPlanner::new(Default::default());
+}
+
+#[cfg(test)]
+mod tests {
+    // constructions below the test marker are allowed and must NOT fire
+    fn in_tests() {
+        let _p = CannikinPlanner::new(Default::default());
+    }
+}

@@ -1,0 +1,15 @@
+// Fixture: D5 must fire — panic and allocation sites inside a registered
+// hot function.  The driver lints this under the virtual path
+// rust/src/optperf/packed.rs.
+
+pub fn solve_hint_into(xs: &[f64], out: &mut Vec<f64>) {
+    let first = xs.first().unwrap();
+    out.push(*first);
+    let copy = xs.to_vec();
+    let _ = copy[0];
+}
+
+pub fn cold_path(xs: &[f64]) -> f64 {
+    // not a registered hot fn: this unwrap must NOT fire
+    *xs.first().unwrap()
+}

@@ -1,0 +1,11 @@
+// Fixture: D6 must fire — hand-rolled absent-field tolerance in a report
+// reader.  The driver lints this under the virtual path rust/src/api/report.rs.
+
+pub fn parse(j: &Json) -> usize {
+    let rounds = match j.get("rounds") {
+        None | Some(Json::Null) => 0,
+        Some(v) => v.as_usize().unwrap_or(0),
+    };
+    let extra = j.get("extra").and_then(|v| v.as_usize().ok()).unwrap_or(0);
+    rounds + extra
+}

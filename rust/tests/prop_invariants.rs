@@ -426,9 +426,7 @@ fn random_trace(rng: &mut Rng) -> ChurnTrace {
 
 /// Stable `(epoch, frac)` sort — the order `from_json` promises.
 fn sort_by_position(events: &mut [TimedEvent]) {
-    events.sort_by(|a, b| {
-        a.epoch.cmp(&b.epoch).then(a.frac.partial_cmp(&b.frac).expect("frac is finite"))
-    });
+    events.sort_by(|a, b| a.epoch.cmp(&b.epoch).then(a.frac.total_cmp(&b.frac)));
 }
 
 #[test]
