@@ -1,0 +1,144 @@
+//! Bench: fleet-scale scaling sweep (ROADMAP item 1) — the three hot
+//! paths the 1k–100k-node generators stress (membership event apply,
+//! detector end-of-epoch, ledger round diff), fleet/trace generation
+//! itself, and one full spot-churn scenario through the unified driver.
+//!
+//! `--quick` (CI fleet-smoke) runs n ∈ {64, 1k} and a 1k-node, 50-epoch
+//! scenario; the full sweep runs n ∈ {64, 1k, 10k, 100k} plus the
+//! acceptance scenario (10k nodes, 200 epochs).  Results land in
+//! `BENCH_fleetscale.json` — see PERF_fleetscale.md for the per-path
+//! before/after complexity story.
+
+use cannikin::api::{self, BuildOptions, SystemRegistry};
+use cannikin::benchkit::{report, Bencher, Snapshot};
+use cannikin::elastic::{
+    self, DetectionMode, DetectorConfig, ElasticCluster, HazardCurve, ScenarioConfig,
+    StragglerDetector,
+};
+use cannikin::sched::FleetLedger;
+use cannikin::simulator::timing::NodeBatchObs;
+use cannikin::simulator::workload;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let sizes: &[usize] = if quick { &[64, 1000] } else { &[64, 1000, 10_000, 100_000] };
+    let b = if quick { Bencher::new(1, 3) } else { Bencher::new(1, 5) };
+    let hazard = HazardCurve::spot();
+    let mut snap = Snapshot::new("fleetscale");
+
+    for &n in sizes {
+        // 100k-node membership replay is O(events · n) memmove by
+        // nature; trim its horizon so the full sweep stays minutes, and
+        // say so instead of hiding it
+        let epochs = if n >= 100_000 { 50 } else { 200 };
+        if epochs != 200 {
+            println!("n={n}: trace horizon trimmed to {epochs} epochs");
+        }
+        let cluster = elastic::fleet_cluster(n, 42);
+        let trace = elastic::fleet_churn(&cluster, epochs, &hazard, 42).expect("valid hazard");
+        println!(
+            "n={n}: {} events ({} departures, {} joins) over {epochs} epochs",
+            trace.len(),
+            trace.counts().departures(),
+            trace.counts().joins
+        );
+        snap.note_num(&format!("events_n{n}"), trace.len() as f64);
+
+        let r = b.run(&format!("fleetscale/fleetgen/n={n}"), || {
+            let c = elastic::fleet_cluster(n, 42);
+            elastic::fleet_churn(&c, epochs, &hazard, 42).expect("valid hazard")
+        });
+        report(&r);
+        snap.push(&r);
+
+        // hot path 1: ElasticCluster event apply (no per-event clones of
+        // the removed set / nominal profiles any more)
+        let r = b.run(&format!("fleetscale/membership-apply/n={n}"), || {
+            let mut ec = ElasticCluster::new(&cluster);
+            for te in &trace.events {
+                ec.apply(&te.event).expect("generated traces replay cleanly");
+            }
+            ec.spec().n()
+        });
+        report(&r);
+        snap.push(&r);
+
+        // hot path 2: StragglerDetector end-of-epoch under a constant
+        // plan (the steady state — allocation-free after warm-up)
+        let obs: Vec<NodeBatchObs> = (0..n)
+            .map(|i| NodeBatchObs {
+                b: 32.0,
+                a_time: 0.010 + 1e-5 * (i % 7) as f64,
+                p_time: 0.020,
+                gamma_obs: 0.5,
+                t_comm_obs: 0.005,
+                finish: 0.035,
+            })
+            .collect();
+        let mut det = StragglerDetector::new(n, DetectorConfig::default());
+        let mut epoch = 0usize;
+        let r = b.run(&format!("fleetscale/detector-end-epoch/n={n}"), || {
+            det.observe(&obs);
+            let ev = det.end_epoch(epoch);
+            epoch += 1;
+            ev.len()
+        });
+        report(&r);
+        snap.push(&r);
+
+        // hot path 3: FleetLedger round diff (sorted-index sync + the
+        // conservation check) at steady membership
+        let uids: Vec<u64> = (0..n as u64).collect();
+        let mut ledger = FleetLedger::new(1);
+        ledger.seed(0, &uids);
+        let r = b.run(&format!("fleetscale/ledger-round/n={n}"), || {
+            let (lost, grants) = ledger.sync(0, &uids);
+            ledger.check(&[]);
+            (lost, grants)
+        });
+        report(&r);
+        snap.push(&r);
+    }
+
+    // full spot-churn scenario through the unified driver — the
+    // acceptance run: every epoch exercises ElasticDriver::step, the
+    // observation fold, and (Observed mode) the straggler detector
+    let (sc_n, sc_epochs) = if quick { (1000, 50) } else { (10_000, 200) };
+    let c = elastic::fleet_cluster(sc_n, 7);
+    let w = workload::cifar10();
+    let sc_trace = elastic::fleet_churn(&c, sc_epochs, &hazard, 7).expect("valid hazard");
+    let reg = SystemRegistry::builtin();
+    let cfg = ScenarioConfig {
+        max_epochs: sc_epochs,
+        seed: 7,
+        detect: DetectionMode::Observed,
+        ..Default::default()
+    };
+    let mut events_applied = 0usize;
+    let sb = Bencher::new(0, 1);
+    let r = sb.run(&format!("fleetscale/scenario/even/n={sc_n}-e={sc_epochs}"), || {
+        let mut sys = reg.build("even", &c, &w, &BuildOptions::default()).unwrap();
+        let rep = api::run(&c, &w, &sc_trace, sys.as_mut(), &cfg);
+        events_applied = rep.events_applied;
+        rep
+    });
+    report(&r);
+    snap.push(&r);
+    println!(
+        "scenario: {} nodes, {} epochs, {} trace events, {} applied",
+        sc_n,
+        sc_epochs,
+        sc_trace.len(),
+        events_applied
+    );
+
+    snap.note_str("mode", if quick { "quick" } else { "full" });
+    snap.note_num("scenario_nodes", sc_n as f64);
+    snap.note_num("scenario_epochs", sc_epochs as f64);
+    snap.note_num("scenario_trace_events", sc_trace.len() as f64);
+    snap.note_num("scenario_events_applied", events_applied as f64);
+    match snap.save_at_repo_root() {
+        Ok(p) => println!("\nbench snapshot written to {}", p.display()),
+        Err(e) => eprintln!("\nwarning: could not write bench snapshot: {e:#}"),
+    }
+}

@@ -284,7 +284,7 @@ mod tests {
         // the repo commits one BENCH_<name>.json per bench binary; a
         // placeholder awaiting hardware carries measured=false, but the
         // schema must always hold so CI/tools can diff them
-        for name in ["elastic", "optperf", "sched"] {
+        for name in ["elastic", "optperf", "sched", "fleetscale"] {
             let p = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
                 .join(format!("BENCH_{name}.json"));
             let j = Json::parse_file(&p).unwrap_or_else(|e| panic!("{}: {e:#}", p.display()));

@@ -66,14 +66,14 @@ pub mod devices {
 }
 
 /// One data-parallel worker (the paper treats each GPU as a node).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct NodeSpec {
     pub id: usize,
     pub device: DeviceProfile,
 }
 
 /// A heterogeneous cluster: nodes + interconnect.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ClusterSpec {
     pub name: String,
     pub nodes: Vec<NodeSpec>,
@@ -113,6 +113,33 @@ impl ClusterSpec {
         let max = speeds.iter().cloned().fold(f64::MIN, f64::max);
         let min = speeds.iter().cloned().fold(f64::MAX, f64::min);
         max / min
+    }
+
+    // ----------------------- incremental mutators (elastic membership)
+    //
+    // The elastic membership manager maintains a long-lived materialized
+    // spec through churn; these keep the contiguous-id invariant without
+    // rebuilding the node list (the rebuild was O(n) device clones per
+    // event — quadratic over a fleet-scale trace).
+
+    /// Append a node, assigning the next contiguous id.
+    pub fn push_node(&mut self, device: DeviceProfile) {
+        let id = self.nodes.len();
+        self.nodes.push(NodeSpec { id, device });
+    }
+
+    /// Remove node `i`, closing the gap and renumbering the ids after it
+    /// (integer writes only — no heap work).
+    pub fn remove_node(&mut self, i: usize) {
+        self.nodes.remove(i);
+        for (id, node) in self.nodes.iter_mut().enumerate().skip(i) {
+            node.id = id;
+        }
+    }
+
+    /// Rewrite node `i`'s effective speed in place.
+    pub fn set_speed(&mut self, i: usize, speed: f64) {
+        self.nodes[i].device.speed = speed;
     }
 }
 
@@ -282,6 +309,38 @@ impl ClusterSpec {
         Self::from_json(&Json::parse_file(path)?)
     }
 
+    /// Writer counterpart of [`ClusterSpec::from_json`].  Every node is
+    /// emitted through the `"custom"` device path with all four profile
+    /// parameters spelled out, so generated fleets (fractional shares,
+    /// degraded speeds, exotic mixes) roundtrip exactly regardless of
+    /// whether the profile matches a catalog entry.
+    pub fn to_json(&self) -> Json {
+        let nodes: Vec<Json> = self
+            .nodes
+            .iter()
+            .map(|n| {
+                Json::obj(vec![
+                    ("device", Json::Str("custom".to_string())),
+                    ("label", Json::Str(n.device.name.clone())),
+                    ("speed", Json::Num(n.device.speed)),
+                    ("mem_gb", Json::Num(n.device.mem_gb)),
+                    ("gamma_noise", Json::Num(n.device.gamma_noise)),
+                    ("time_noise", Json::Num(n.device.time_noise)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("net_gbps", Json::Num(self.net_gbps)),
+            ("nodes", Json::Arr(nodes)),
+        ])
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .map_err(|e| anyhow::anyhow!("writing cluster {}: {e}", path.display()))
+    }
+
     /// Elasticity (paper §6 "Adapt to schedulers"): a new spec with nodes
     /// removed (by id) or added.
     pub fn without_nodes(&self, remove: &[usize]) -> ClusterSpec {
@@ -325,6 +384,27 @@ mod json_tests {
     fn rejects_bad_configs() {
         assert!(ClusterSpec::from_json(&Json::parse(r#"{"name":"x","net_gbps":10,"nodes":[]}"#).unwrap()).is_err());
         assert!(ClusterSpec::from_json(&Json::parse(r#"{"name":"x","net_gbps":10,"nodes":[{"device":"GTX9999"}]}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn json_writer_roundtrips_exactly() {
+        // fractional share → non-catalog speed/noise; must survive the trip
+        let mut c = cluster_b();
+        c.nodes[3].device = c.nodes[3].device.fraction(0.5);
+        let back =
+            ClusterSpec::from_json(&Json::parse(&c.to_json().to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn json_writer_file_roundtrip() {
+        let c = cluster_a();
+        let path = std::env::temp_dir()
+            .join(format!("cannikin-cluster-{}.json", std::process::id()));
+        c.save(&path).unwrap();
+        let back = ClusterSpec::from_json_file(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(c, back);
     }
 
     #[test]

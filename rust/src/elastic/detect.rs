@@ -55,7 +55,7 @@ use crate::elastic::membership::MembershipDelta;
 use crate::linalg::fit_line;
 use crate::simulator::NodeBatchObs;
 use crate::util::json::Json;
-use crate::util::stats::{mad, median};
+use crate::util::stats::median_inplace;
 
 /// How a run treats the trace's `SlowDown` / `Recover` events.  Membership
 /// events (join / leave / preempt) are always visible to the system:
@@ -253,6 +253,12 @@ struct NodeState {
     /// (ratio, drift, gate) of the last judged epoch — diagnostics for
     /// the tracing layer, never fed back into detection
     last_diag: Option<(f64, f64, f64)>,
+    /// scratch: guard-lagged (b, t) points gathered for a reference refit
+    fit_pts: Vec<(f64, f64)>,
+    /// scratch: robust-statistics working buffer, sorted in place by
+    /// [`median_inplace`] — reused so the per-epoch close allocates
+    /// nothing once warm
+    robust: Vec<f64>,
 }
 
 impl NodeState {
@@ -273,6 +279,8 @@ impl NodeState {
             silent_epochs: 0,
             gone: false,
             last_diag: None,
+            fit_pts: Vec::new(),
+            robust: Vec::new(),
         }
     }
 
@@ -288,31 +296,41 @@ impl NodeState {
         }
     }
 
-    fn refit(&self, epoch: usize, cfg: &DetectorConfig) -> Option<(f64, f64)> {
-        let pts: Vec<(f64, f64)> = self
-            .hist
-            .iter()
-            .filter(|&&(e, _, _)| e + cfg.guard <= epoch)
-            .map(|&(_, b, t)| (b, t))
-            .collect();
-        if pts.len() < cfg.min_epochs {
+    fn refit(&mut self, epoch: usize, cfg: &DetectorConfig) -> Option<(f64, f64)> {
+        self.fit_pts.clear();
+        self.fit_pts.extend(
+            self.hist
+                .iter()
+                .filter(|&&(e, _, _)| e + cfg.guard <= epoch)
+                .map(|&(_, b, t)| (b, t)),
+        );
+        if self.fit_pts.len() < cfg.min_epochs {
             return None;
         }
-        let bs: Vec<f64> = pts.iter().map(|p| p.0).collect();
-        let lo = bs.iter().cloned().fold(f64::MAX, f64::min);
-        let hi = bs.iter().cloned().fold(f64::MIN, f64::max);
-        if hi - lo < B_SPREAD_MIN * median(&bs).max(1.0) {
+        self.robust.clear();
+        self.robust.extend(self.fit_pts.iter().map(|p| p.0));
+        let lo = self.robust.iter().cloned().fold(f64::MAX, f64::min);
+        let hi = self.robust.iter().cloned().fold(f64::MIN, f64::max);
+        if hi - lo < B_SPREAD_MIN * median_inplace(&mut self.robust).max(1.0) {
             return None; // slope unidentifiable: keep the last diverse fit
         }
-        let (slope, fixed) = fit_line(&pts).ok()?;
+        let (slope, fixed) = fit_line(&self.fit_pts).ok()?;
         // physical sanity, as in ComputeLearner: times can't shrink with b
         Some((slope.max(0.0), fixed.max(0.0)))
     }
 
-    fn baseline(&self, cfg: &DetectorConfig) -> (f64, f64) {
+    fn baseline(&mut self, cfg: &DetectorConfig) -> (f64, f64) {
         if self.ratios.len() >= cfg.min_epochs {
-            let v: Vec<f64> = self.ratios.iter().copied().collect();
-            (median(&v).max(1e-9), (1.4826 * mad(&v)).max(SPREAD_FLOOR))
+            // median → |x − m| in place → median again: same multisets as
+            // the copying median/mad pair, so the result is bit-identical
+            self.robust.clear();
+            self.robust.extend(self.ratios.iter().copied());
+            let m = median_inplace(&mut self.robust);
+            for x in self.robust.iter_mut() {
+                *x = (*x - m).abs();
+            }
+            let spread = median_inplace(&mut self.robust);
+            (m.max(1e-9), (1.4826 * spread).max(SPREAD_FLOOR))
         } else {
             (1.0, SPREAD_FLOOR)
         }
@@ -354,8 +372,8 @@ impl NodeState {
         if self.batch_b.is_empty() {
             return None; // node idle this epoch (but alive): nothing to judge
         }
-        let b = median(&self.batch_b);
-        let t = median(&self.batch_t);
+        let b = median_inplace(&mut self.batch_b);
+        let t = median_inplace(&mut self.batch_t);
         self.batch_b.clear();
         self.batch_t.clear();
 
@@ -385,7 +403,8 @@ impl NodeState {
                     self.strikes += 1;
                     self.streak.push(ratio);
                     if self.strikes >= cfg.k_confirm {
-                        let factor = (center / median(&self.streak)).clamp(0.05, 0.95);
+                        let factor =
+                            (center / median_inplace(&mut self.streak)).clamp(0.05, 0.95);
                         self.status = Status::Flagged { factor };
                         self.strikes = 0;
                         self.streak.clear();
@@ -424,7 +443,7 @@ impl NodeState {
                         .last_emit
                         .map_or(true, |e| epoch.saturating_sub(e) >= cfg.reemit_gap);
                     if self.deepen >= cfg.k_confirm && gap_ok {
-                        let f = (center / median(&self.streak)).clamp(0.05, 0.95);
+                        let f = (center / median_inplace(&mut self.streak)).clamp(0.05, 0.95);
                         self.status = Status::Flagged { factor: f };
                         self.deepen = 0;
                         self.streak.clear();

@@ -1,0 +1,305 @@
+//! Fleet-scale generators (ROADMAP item 1): parameterized
+//! [`ClusterSpec`] builders for 1k–100k-node mixed-device fleets and
+//! seeded spot-churn [`ChurnTrace`] streams driven by hazard curves.
+//!
+//! Everything here is deterministic per seed: the same `(n, seed)` pair
+//! always yields the same fleet, and the same `(cluster, epochs, hazard,
+//! seed)` tuple always yields byte-identical traces.  Generation keeps a
+//! membership mirror (view-order uid list) so every emitted event names a
+//! node index that is valid *at the moment the event applies* — traces
+//! replay through [`super::ElasticCluster`] without a single rejected
+//! event.
+//!
+//! Scale notes: victim sampling is O(n) per epoch and the membership
+//! mirror is compacted with one `retain` pass per churn epoch, so a
+//! 100k-node, 200-epoch trace generates in O(n·epochs) with no per-event
+//! O(n) work.
+
+use anyhow::{ensure, Result};
+
+use super::events::{ChurnTrace, ClusterEvent};
+use crate::cluster::{devices, ClusterSpec, DeviceProfile};
+use crate::util::rng::Rng;
+
+/// Per-epoch, per-node departure probability with periodic surge windows
+/// — the "spot market reclaims a rack" shape.  `rate(e)` is `base`
+/// outside surge windows and `base + surge` for the first `width` epochs
+/// of every `period`-epoch cycle.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HazardCurve {
+    pub base: f64,
+    pub surge: f64,
+    pub period: usize,
+    pub width: usize,
+}
+
+impl HazardCurve {
+    /// Spot-market default: a steady trickle plus a 10×-hazard reclaim
+    /// window covering 10% of epochs.
+    pub fn spot() -> Self {
+        HazardCurve { base: 2e-3, surge: 2e-2, period: 50, width: 5 }
+    }
+
+    /// Flat hazard — every epoch identical.
+    pub fn constant(rate: f64) -> Self {
+        HazardCurve { base: rate, surge: 0.0, period: 0, width: 0 }
+    }
+
+    pub fn rate(&self, epoch: usize) -> f64 {
+        if self.period > 0 && epoch % self.period < self.width {
+            self.base + self.surge
+        } else {
+            self.base
+        }
+    }
+
+    /// Mean per-node-epoch hazard over `epochs` — what the generated
+    /// trace's empirical departure rate should match in expectation.
+    pub fn mean(&self, epochs: usize) -> f64 {
+        assert!(epochs > 0);
+        (0..epochs).map(|e| self.rate(e)).sum::<f64>() / epochs as f64
+    }
+
+    fn validate(&self) -> Result<()> {
+        let peak = self.base + self.surge;
+        ensure!(
+            (0.0..=1.0).contains(&self.base) && (0.0..=1.0).contains(&peak),
+            "hazard rates must lie in [0, 1]: base {} peak {}",
+            self.base,
+            peak
+        );
+        Ok(())
+    }
+}
+
+/// Datacenter-like device-class mix (weight, catalog entry): mid-range
+/// cards dominate, flagship and budget cards sit in the tails.
+const DEVICE_MIX: &[(u64, fn() -> DeviceProfile)] = &[
+    (1, devices::a100),
+    (2, devices::v100),
+    (3, devices::rtx6000),
+    (2, devices::a5000),
+    (2, devices::a4000),
+    (1, devices::p4000),
+];
+
+fn fleet_name(n: usize) -> String {
+    if n >= 1000 && n % 1000 == 0 {
+        format!("fleet-{}k", n / 1000)
+    } else {
+        format!("fleet-{n}")
+    }
+}
+
+/// Build an `n`-node fleet with a weighted mixed-device composition,
+/// deterministic per `(n, seed)`.
+pub fn fleet_cluster(n: usize, seed: u64) -> ClusterSpec {
+    assert!(n > 0, "a fleet needs at least one node");
+    let total: u64 = DEVICE_MIX.iter().map(|&(w, _)| w).sum();
+    let mut rng = Rng::new(seed ^ 0xf1ee_7000);
+    let devs: Vec<DeviceProfile> = (0..n)
+        .map(|_| {
+            let mut roll = rng.below(total);
+            for &(w, make) in DEVICE_MIX {
+                if roll < w {
+                    return make();
+                }
+                roll -= w;
+            }
+            unreachable!("weights sum to total")
+        })
+        .collect();
+    ClusterSpec::new(&fleet_name(n), devs, 25.0)
+}
+
+/// Generate a spot-churn trace for `cluster` over `epochs` epochs.
+///
+/// Every epoch, each currently-present node departs with probability
+/// `hazard.rate(epoch)` as a mid-epoch [`ClusterEvent::Preempt`] (fracs
+/// strictly increasing within the epoch, so the events are genuinely
+/// sequential).  Reclaimed capacity returns 1–3 epochs later as a
+/// boundary [`ClusterEvent::NodeJoin`] of the same device class with an
+/// explicitly minted uid — uids start at `cluster.n()` and increment, so
+/// they can never collide with the initial workers or each other.  The
+/// fleet is never preempted below one node, and rejoins past the horizon
+/// are dropped.
+pub fn fleet_churn(
+    cluster: &ClusterSpec,
+    epochs: usize,
+    hazard: &HazardCurve,
+    seed: u64,
+) -> Result<ChurnTrace> {
+    ensure!(epochs > 0, "churn horizon must be at least one epoch");
+    hazard.validate()?;
+    let mut rng = Rng::new(seed ^ 0xc4a2_4b1d);
+    let mut trace = ChurnTrace::new(&format!("{}-spot", cluster.name));
+
+    // membership mirror in view order (matches ElasticCluster: removals
+    // compact in place, joins append)
+    let mut members: Vec<(u64, DeviceProfile)> = cluster
+        .nodes
+        .iter()
+        .map(|node| (node.id as u64, node.device.clone()))
+        .collect();
+    let mut next_uid = cluster.n() as u64;
+    // (rejoin epoch, device) — scanned per epoch; stays small because
+    // rejoin delays are 1–3 epochs
+    let mut pending: Vec<(usize, DeviceProfile)> = Vec::new();
+
+    for epoch in 0..epochs {
+        // boundary joins first: frac 0 sorts ahead of every mid-epoch
+        // preempt, so trace order matches mirror order
+        let mut still = Vec::new();
+        for (when, device) in pending.drain(..) {
+            if when == epoch {
+                trace.push(
+                    epoch,
+                    ClusterEvent::NodeJoin { device: device.clone(), uid: Some(next_uid) },
+                );
+                members.push((next_uid, device));
+                next_uid += 1;
+            } else {
+                still.push((when, device));
+            }
+        }
+        pending = still;
+
+        // sample victims against the epoch-start membership; ascending
+        // view indices, capped so the fleet keeps at least one node
+        let h = hazard.rate(epoch);
+        let mut victims: Vec<usize> = (0..members.len()).filter(|_| rng.f64() < h).collect();
+        victims.truncate(members.len().saturating_sub(1));
+        if victims.is_empty() {
+            continue;
+        }
+
+        // the j-th preempt (ascending epoch-start index `vi`) applies
+        // after j earlier removals, all at smaller indices — its
+        // apply-time index is exactly vi - j
+        let denom = (victims.len() + 1) as f64;
+        for (j, &vi) in victims.iter().enumerate() {
+            trace.push_at(
+                epoch,
+                (j + 1) as f64 / denom,
+                ClusterEvent::Preempt { node: vi - j },
+            );
+            let delay = 1 + rng.below(3) as usize;
+            if epoch + delay < epochs {
+                pending.push((epoch + delay, members[vi].1.clone()));
+            }
+        }
+
+        // compact the mirror in one pass (victims are ascending)
+        let mut vit = victims.iter().peekable();
+        let mut idx = 0usize;
+        members.retain(|_| {
+            let keep = vit.peek() != Some(&&idx);
+            if !keep {
+                vit.next();
+            }
+            idx += 1;
+            keep
+        });
+    }
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elastic::membership::ElasticCluster;
+
+    #[test]
+    fn fleet_cluster_is_deterministic_and_mixed() {
+        let a = fleet_cluster(1000, 7);
+        let b = fleet_cluster(1000, 7);
+        assert_eq!(a, b);
+        assert_ne!(a, fleet_cluster(1000, 8));
+        assert_eq!(a.name, "fleet-1k");
+        assert_eq!(fleet_cluster(1234, 0).name, "fleet-1234");
+        // all six device classes show up in a 1k-node fleet
+        for name in ["A100", "V100", "RTX6000", "A5000", "A4000", "P4000"] {
+            assert!(a.nodes.iter().any(|n| n.device.name == name), "{name} missing");
+        }
+        // ids contiguous
+        assert!(a.nodes.iter().enumerate().all(|(i, n)| n.id == i));
+    }
+
+    #[test]
+    fn fleet_churn_is_deterministic_per_seed() {
+        let c = fleet_cluster(500, 3);
+        let h = HazardCurve::spot();
+        let a = fleet_churn(&c, 100, &h, 11).unwrap();
+        let b = fleet_churn(&c, 100, &h, 11).unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, fleet_churn(&c, 100, &h, 12).unwrap());
+        assert!(!a.is_empty(), "spot hazard over 100 epochs should produce churn");
+    }
+
+    #[test]
+    fn timeline_is_sorted_with_valid_fracs() {
+        let c = fleet_cluster(300, 1);
+        let t = fleet_churn(&c, 120, &HazardCurve::spot(), 5).unwrap();
+        assert!(t.events.windows(2).all(|w| w[0].position() <= w[1].position()));
+        assert!(t.events.iter().all(|te| (0.0..1.0).contains(&te.frac)));
+    }
+
+    #[test]
+    fn minted_uids_are_unique_and_fresh() {
+        let c = fleet_cluster(300, 2);
+        let t = fleet_churn(&c, 150, &HazardCurve::spot(), 9).unwrap();
+        let mut uids: Vec<u64> = t
+            .events
+            .iter()
+            .filter_map(|te| match te.event {
+                ClusterEvent::NodeJoin { uid, .. } => Some(uid.expect("fleetgen mints uids")),
+                _ => None,
+            })
+            .collect();
+        assert!(!uids.is_empty());
+        let n = uids.len();
+        uids.sort_unstable();
+        uids.dedup();
+        assert_eq!(uids.len(), n, "duplicate minted uid");
+        // fresh: never collides with the initial workers 0..n
+        assert!(uids.iter().all(|&u| u >= c.n() as u64));
+    }
+
+    #[test]
+    fn empirical_departure_rate_tracks_the_hazard_curve() {
+        let c = fleet_cluster(1000, 4);
+        let epochs = 200;
+        let h = HazardCurve::spot();
+        let t = fleet_churn(&c, epochs, &h, 21).unwrap();
+        let departures = t.counts().departures() as f64;
+        // replacements keep membership ≈ n, so expected departures ≈
+        // mean hazard × node-epochs; the rejoin lag only dents it a little
+        let expected = h.mean(epochs) * c.n() as f64 * epochs as f64;
+        let ratio = departures / expected;
+        assert!((0.75..=1.25).contains(&ratio), "departures {departures} vs expected {expected}");
+    }
+
+    #[test]
+    fn trace_replays_cleanly_through_the_membership_view() {
+        let c = fleet_cluster(200, 6);
+        let t = fleet_churn(&c, 100, &HazardCurve::spot(), 13).unwrap();
+        let mut ec = ElasticCluster::new(&c);
+        for te in &t.events {
+            ec.apply(&te.event).unwrap_or_else(|e| panic!("event {te:?} rejected: {e}"));
+            assert!(ec.spec().n() >= 1);
+        }
+    }
+
+    #[test]
+    fn hazard_curve_shapes() {
+        let h = HazardCurve::spot();
+        assert_eq!(h.rate(0), h.base + h.surge);
+        assert_eq!(h.rate(h.width), h.base);
+        let flat = HazardCurve::constant(0.01);
+        assert_eq!(flat.rate(0), flat.rate(999));
+        assert!((flat.mean(50) - 0.01).abs() < 1e-15);
+        // out-of-domain hazards are rejected
+        let c = fleet_cluster(8, 0);
+        assert!(fleet_churn(&c, 10, &HazardCurve::constant(1.5), 0).is_err());
+    }
+}

@@ -58,10 +58,17 @@ impl MembershipDelta {
     /// gap (descending index order), joins append `fill()`-initialized
     /// entries.  Used by every consumer that mirrors per-node state
     /// (driver bookkeeping, detector node states).
+    ///
+    /// `removed` is produced sorted ascending (each applied event removes
+    /// at most one node; multi-removal deltas are only ever assembled in
+    /// ascending order), so a reverse walk visits indices descending —
+    /// no clone, no per-event heap work.
     pub fn resync_view<T>(&self, view: &mut Vec<T>, mut fill: impl FnMut() -> T) {
-        let mut removed = self.removed.clone();
-        removed.sort_unstable_by(|a, b| b.cmp(a));
-        for i in removed {
+        debug_assert!(
+            self.removed.windows(2).all(|w| w[0] <= w[1]),
+            "delta.removed must be sorted ascending"
+        );
+        for &i in self.removed.iter().rev() {
             if i < view.len() {
                 view.remove(i);
             }
@@ -74,27 +81,43 @@ impl MembershipDelta {
 
 /// The mutable cluster view.
 pub struct ElasticCluster {
-    name: String,
-    net_gbps: f64,
     /// nominal (as-provisioned) profile per current node
     nominal: Vec<DeviceProfile>,
     /// current slowdown factor per node (1.0 = nominal)
     slow: Vec<f64>,
     /// stable worker uid per current node
     uid: Vec<u64>,
+    /// `uid` re-sorted ascending — the O(log n) duplicate-join index
+    /// (`uid` itself stays in view order; this mirror is maintained by
+    /// `apply`, never rebuilt)
+    uid_sorted: Vec<u64>,
     /// next auto-assigned uid
     next_uid: u64,
+    /// incrementally-maintained materialization of the current view:
+    /// nominal profiles with effective speeds, contiguous ids.  Updated
+    /// in place by `apply` (a join clones one device, a removal shifts
+    /// ids, a degradation rewrites one speed) so `spec()` is a borrow —
+    /// the pre-fleet-scale implementation recloned every
+    /// [`DeviceProfile`] per call, which made churn application
+    /// quadratic over a trace.
+    materialized: ClusterSpec,
 }
 
 impl ElasticCluster {
     pub fn new(spec: &ClusterSpec) -> Self {
+        let mut uid_sorted: Vec<u64> = (0..spec.n() as u64).collect();
+        uid_sorted.sort_unstable();
         ElasticCluster {
-            name: spec.name.clone(),
-            net_gbps: spec.net_gbps,
             nominal: spec.nodes.iter().map(|n| n.device.clone()).collect(),
             slow: vec![1.0; spec.n()],
             uid: (0..spec.n() as u64).collect(),
+            uid_sorted,
             next_uid: spec.n() as u64,
+            materialized: ClusterSpec::new(
+                &spec.name,
+                spec.nodes.iter().map(|n| n.device.clone()).collect(),
+                spec.net_gbps,
+            ),
         }
     }
 
@@ -119,22 +142,23 @@ impl ElasticCluster {
         &self.uid
     }
 
-    /// Materialize the current view as a [`ClusterSpec`]: nominal profiles
-    /// with effective speeds, contiguous ids.
-    pub fn spec(&self) -> ClusterSpec {
-        let devs: Vec<DeviceProfile> = self
-            .nominal
-            .iter()
-            .zip(&self.slow)
-            .map(|(d, &s)| {
-                if (s - 1.0).abs() <= HEALTHY_EPS {
-                    d.clone()
-                } else {
-                    DeviceProfile { speed: d.speed * s, ..d.clone() }
-                }
-            })
-            .collect();
-        ClusterSpec::new(&self.name, devs, self.net_gbps)
+    /// The current view as a [`ClusterSpec`]: nominal profiles with
+    /// effective speeds, contiguous ids.  A borrow of the incrementally
+    /// maintained materialization — O(1), no per-call rebuild.
+    pub fn spec(&self) -> &ClusterSpec {
+        &self.materialized
+    }
+
+    /// Effective speed the materialization must carry for node `i`:
+    /// exactly the nominal bits while healthy (the shared-epsilon
+    /// contract), `nominal · factor` otherwise.
+    fn effective_speed(&self, i: usize) -> f64 {
+        let s = self.slow[i];
+        if (s - 1.0).abs() <= HEALTHY_EPS {
+            self.nominal[i].speed
+        } else {
+            self.nominal[i].speed * s
+        }
     }
 
     /// Read-only validation + effect prediction for one event: `Err` iff
@@ -149,7 +173,7 @@ impl ElasticCluster {
         match ev {
             ClusterEvent::NodeJoin { uid, .. } => {
                 if let Some(u) = uid {
-                    if self.uid.contains(u) {
+                    if self.uid_sorted.binary_search(u).is_ok() {
                         bail!("join with duplicate worker uid {u}");
                     }
                 }
@@ -212,23 +236,35 @@ impl ElasticCluster {
                 self.nominal.push(device.clone());
                 self.slow.push(1.0);
                 self.uid.push(id);
+                let at = self.uid_sorted.partition_point(|&u| u < id);
+                self.uid_sorted.insert(at, id);
+                self.materialized.push_node(device.clone());
                 delta.added = 1;
             }
             ClusterEvent::NodeLeave { node } | ClusterEvent::Preempt { node } => {
                 let node = *node;
+                let gone = self.uid[node];
+                let at = self
+                    .uid_sorted
+                    .binary_search(&gone)
+                    .expect("sorted uid index mirrors the view");
+                self.uid_sorted.remove(at);
                 self.nominal.remove(node);
                 self.slow.remove(node);
                 self.uid.remove(node);
+                self.materialized.remove_node(node);
                 delta.removed.push(node);
             }
             ClusterEvent::SlowDown { node, factor } => {
                 let node = *node;
                 self.slow[node] = *factor;
+                self.materialized.set_speed(node, self.effective_speed(node));
                 delta.degraded.push(node);
             }
             ClusterEvent::Recover { node } => {
                 let node = *node;
                 self.slow[node] = 1.0;
+                self.materialized.set_speed(node, self.effective_speed(node));
                 delta.degraded.push(node);
             }
         }

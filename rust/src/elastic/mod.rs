@@ -13,6 +13,11 @@
 //!   in-flight shard work (re-processed by survivors, charged as
 //!   `wasted_work_secs`) and, under Observed detection, is *inferred*
 //!   rather than announced.  The spot preset emits mid-epoch preempts.
+//! * [`fleetgen`] — fleet-scale generators: weighted mixed-device
+//!   [`ClusterSpec`](crate::cluster::ClusterSpec) builders (1k–100k
+//!   nodes) and hazard-curve spot-churn traces ([`HazardCurve`],
+//!   [`fleet_cluster`], [`fleet_churn`]), deterministic per seed and
+//!   guaranteed to replay cleanly through [`ElasticCluster`].
 //! * [`membership`] — [`ElasticCluster`], the mutable cluster view:
 //!   applies events one at a time and reports a [`MembershipDelta`] naming
 //!   exactly which per-node learned state is now stale.  Every node has a
@@ -78,6 +83,7 @@
 pub mod checkpoint;
 pub mod detect;
 pub mod events;
+pub mod fleetgen;
 pub mod membership;
 pub mod scenario;
 
@@ -87,6 +93,7 @@ pub use events::{
     maintenance_window, preset, spot_instance, straggler_drift, ChurnTrace, ClusterEvent,
     EventCounts, TimedEvent,
 };
+pub use fleetgen::{fleet_churn, fleet_cluster, HazardCurve};
 pub use membership::{ElasticCluster, MembershipDelta, HEALTHY_EPS};
 pub use scenario::{
     run_scenario, run_scenario_traced, BoundaryOutcome, ColdRestartCannikin, ElasticDriver,

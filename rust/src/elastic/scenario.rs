@@ -308,6 +308,15 @@ pub struct ElasticDriver<'a> {
     /// the exogenous trace at the next boundary — empty for single-job
     /// runs, so their behaviour is bit-identical to pre-scheduler builds
     injected: Vec<ClusterEvent>,
+    /// per announced slot: the workload's memory cap, maintained
+    /// incrementally (caps depend only on device memory, so joins push,
+    /// removals close the gap, degradations leave it untouched) —
+    /// replaces the per-notification O(n) recompute
+    caps: Vec<u64>,
+    /// scratch: physical-space batch sizes for the ghost-path `step`
+    phys_b: Vec<f64>,
+    /// scratch: per-slot presence mask for ghost-mode detector feeds
+    present: Vec<bool>,
 }
 
 impl<'a> ElasticDriver<'a> {
@@ -339,6 +348,9 @@ impl<'a> ElasticDriver<'a> {
             events_hidden: 0,
             events_skipped: 0,
             injected: Vec::new(),
+            caps: base.nodes.iter().map(|n| w.max_local_batch(n)).collect(),
+            phys_b: Vec::new(),
+            present: Vec::new(),
         }
     }
 
@@ -373,9 +385,18 @@ impl<'a> ElasticDriver<'a> {
     /// profile they died with — the system's picture until the departure
     /// is inferred.
     pub fn spec(&self) -> ClusterSpec {
+        self.announced_spec().into_owned()
+    }
+
+    /// Borrowing form of [`Self::spec`]: with no ghosts in the view (the
+    /// steady state) this is the membership manager's incrementally
+    /// maintained materialization — no per-call rebuild; only a view with
+    /// ghosts (bounded by the missing-heartbeat window) pays for an owned
+    /// assembly.
+    fn announced_spec(&self) -> std::borrow::Cow<'_, ClusterSpec> {
         let phys = self.elastic.spec();
         if self.view.iter().all(|s| s.phys.is_some()) {
-            return phys;
+            return std::borrow::Cow::Borrowed(phys);
         }
         let devs: Vec<DeviceProfile> = self
             .view
@@ -386,11 +407,11 @@ impl<'a> ElasticDriver<'a> {
                 _ => unreachable!("a view slot is physical xor ghost"),
             })
             .collect();
-        ClusterSpec::new(&phys.name, devs, phys.net_gbps)
+        std::borrow::Cow::Owned(ClusterSpec::new(&phys.name, devs, phys.net_gbps))
     }
 
     /// Materialized *physical* ground truth (what the simulator runs).
-    pub fn phys_spec(&self) -> ClusterSpec {
+    pub fn phys_spec(&self) -> &ClusterSpec {
         self.elastic.spec()
     }
 
@@ -403,10 +424,6 @@ impl<'a> ElasticDriver<'a> {
         }
     }
 
-    fn caps(&self, spec: &ClusterSpec) -> Vec<u64> {
-        spec.nodes.iter().map(|n| self.w.max_local_batch(n)).collect()
-    }
-
     fn announced_of_phys(&self, p: usize) -> Option<usize> {
         self.view.iter().position(|s| s.phys == Some(p))
     }
@@ -415,7 +432,7 @@ impl<'a> ElasticDriver<'a> {
     fn reseed_sim(&mut self) -> ClusterSim {
         self.reseeds += 1;
         ClusterSim::new(
-            &self.elastic.spec(),
+            self.elastic.spec(),
             self.w,
             self.seed ^ self.reseeds.wrapping_mul(0x9E37_79B9_7F4A_7C15),
         )
@@ -430,6 +447,7 @@ impl<'a> ElasticDriver<'a> {
             let a = self.announced_of_phys(r).expect("removed phys node must be in the view");
             out.removed.push(a);
             self.view.remove(a);
+            self.caps.remove(a);
             for s in &mut self.view {
                 if let Some(p) = &mut s.phys {
                     if *p > r {
@@ -441,7 +459,9 @@ impl<'a> ElasticDriver<'a> {
         for k in 0..phys_delta.added {
             // joins append in both spaces
             let p = self.elastic.n() - phys_delta.added + k;
+            let cap = self.w.max_local_batch(&self.elastic.spec().nodes[p]);
             self.view.push(ViewSlot { phys: Some(p), ghost: None });
+            self.caps.push(cap);
         }
         out.added = phys_delta.added;
         for &d in &phys_delta.degraded {
@@ -455,9 +475,8 @@ impl<'a> ElasticDriver<'a> {
     /// Deliver a visible announced-space delta to the system and keep the
     /// per-slot side state (pending bookkeeping, detector) aligned.
     fn notify(&mut self, announced: &MembershipDelta, system: &mut dyn TrainingSystem) {
-        let spec = self.spec();
-        let caps = self.caps(&spec);
-        system.on_cluster_change(announced, &spec, &caps);
+        let spec = self.announced_spec();
+        system.on_cluster_change(announced, &spec, &self.caps);
         if announced.membership_changed() {
             self.replans += 1;
             // a pending (undetected) slowdown departing with its node can
@@ -496,8 +515,10 @@ impl<'a> ElasticDriver<'a> {
                 }
                 let a = self.announced_of_phys(p).expect("phys node is in the view");
                 // freeze the profile the system believes in: the announced
-                // spec keeps describing the ghost until inference
-                let dev = self.spec().nodes[a].device.clone();
+                // spec keeps describing the ghost until inference (slot `a`
+                // is physical here, so its announced device is the
+                // materialized physical one — no announced-spec rebuild)
+                let dev = self.elastic.spec().nodes[p].device.clone();
                 return match self.elastic.apply(event) {
                     Err(_) => Applied::Skipped,
                     Ok(_phys_delta) => {
@@ -694,10 +715,23 @@ impl<'a> ElasticDriver<'a> {
     /// missing-heartbeat rule keys on.  With no ghosts this is the legacy
     /// direct `sim.step`, bit for bit.
     pub fn step(&mut self, sim: &mut ClusterSim, local: &[f64]) -> (f64, Vec<NodeBatchObs>) {
+        let mut obs = Vec::new();
+        let t = self.step_into(sim, local, &mut obs);
+        (t, obs)
+    }
+
+    /// [`Self::step`] into a caller-owned observation buffer — the epoch
+    /// loop's steady path reuses one buffer across every segment and rep,
+    /// so a warm run performs no per-step allocation here.
+    pub fn step_into(
+        &mut self,
+        sim: &mut ClusterSim,
+        local: &[f64],
+        obs: &mut Vec<NodeBatchObs>,
+    ) -> f64 {
         assert_eq!(local.len(), self.view.len(), "plan width must match the system view");
         if self.view.iter().all(|s| s.phys.is_some()) {
-            let out = sim.step(local);
-            return (out.t_batch, out.per_node);
+            return sim.step_into(local, obs);
         }
         let orphaned: f64 = self
             .view
@@ -712,14 +746,18 @@ impl<'a> ElasticDriver<'a> {
             .filter_map(|(s, &b)| s.phys.is_some().then_some(b))
             .sum();
         let n_phys = self.elastic.n();
-        let mut phys_b = vec![0.0; n_phys];
+        self.phys_b.clear();
+        self.phys_b.resize(n_phys, 0.0);
         for (s, &b) in self.view.iter().zip(local) {
             if let Some(p) = s.phys {
-                phys_b[p] =
+                self.phys_b[p] =
                     if live > 0.0 { b * (1.0 + orphaned / live) } else { orphaned / n_phys as f64 };
             }
         }
-        let out = sim.step(&phys_b);
+        let t_batch = sim.step_into(&self.phys_b, obs);
+        // obs currently holds the physical observations; fold them out to
+        // the announced view in place, back to front (announced slots ≥
+        // physical slots — ghosts only add), so no second buffer is needed
         let silent = NodeBatchObs {
             b: 0.0,
             a_time: 0.0,
@@ -728,15 +766,14 @@ impl<'a> ElasticDriver<'a> {
             t_comm_obs: 0.0,
             finish: 0.0,
         };
-        let obs = self
-            .view
-            .iter()
-            .map(|s| match s.phys {
-                Some(p) => out.per_node[p],
+        obs.resize(self.view.len(), silent);
+        for (a, s) in self.view.iter().enumerate().rev() {
+            obs[a] = match s.phys {
+                Some(p) => obs[p],
                 None => silent,
-            })
-            .collect();
-        (out.t_batch, obs)
+            };
+        }
+        t_batch
     }
 
     /// Feed one batch worth of per-node timing observations to the
@@ -744,13 +781,15 @@ impl<'a> ElasticDriver<'a> {
     /// are reported absent — transport-level silence, not an idle
     /// heartbeat.
     pub fn observe(&mut self, obs: &[NodeBatchObs]) {
-        if let Some(d) = &mut self.detector {
-            if self.view.iter().all(|s| s.phys.is_some()) {
-                d.observe(obs);
-            } else {
-                let present: Vec<bool> = self.view.iter().map(|s| s.phys.is_some()).collect();
-                d.observe_present(obs, &present);
-            }
+        let Some(d) = &mut self.detector else {
+            return;
+        };
+        if self.view.iter().all(|s| s.phys.is_some()) {
+            d.observe(obs);
+        } else {
+            self.present.clear();
+            self.present.extend(self.view.iter().map(|s| s.phys.is_some()));
+            d.observe_present(obs, &self.present);
         }
     }
 
@@ -792,6 +831,7 @@ impl<'a> ElasticDriver<'a> {
                         let announced =
                             MembershipDelta { removed: vec![node], added: 0, degraded: vec![] };
                         self.view.remove(node);
+                        self.caps.remove(node);
                         self.notify(&announced, system);
                         removed_this_epoch.push(raw);
                         n_events += 1;
@@ -828,9 +868,8 @@ impl<'a> ElasticDriver<'a> {
                 _ => {}
             }
             let delta = MembershipDelta { removed: vec![], added: 0, degraded: vec![node] };
-            let spec = self.spec();
-            let caps = self.caps(&spec);
-            system.on_cluster_change(&delta, &spec, &caps);
+            let spec = self.announced_spec();
+            system.on_cluster_change(&delta, &spec, &self.caps);
             n_events += 1;
         }
         n_events
@@ -897,14 +936,15 @@ fn measure(
     system: &mut dyn TrainingSystem,
     local: &[f64],
     reps: usize,
+    obs: &mut Vec<NodeBatchObs>,
 ) -> f64 {
     let reps = reps.max(1);
     let mut t_mean = 0.0;
     for _ in 0..reps {
-        let (t, obs) = driver.step(sim, local);
+        let t = driver.step_into(sim, local, obs);
         t_mean += t;
-        system.observe_epoch(&obs, t);
-        driver.observe(&obs);
+        system.observe_epoch(obs, t);
+        driver.observe(obs);
     }
     t_mean / reps as f64
 }
@@ -1033,6 +1073,8 @@ pub struct EpochRunner<'a> {
     side: Vec<(usize, usize, usize, usize)>,
     cfg: ScenarioConfig,
     w: &'a Workload,
+    /// per-batch observation buffer reused across every segment and epoch
+    obs_scratch: Vec<NodeBatchObs>,
 }
 
 impl<'a> EpochRunner<'a> {
@@ -1064,7 +1106,7 @@ impl<'a> EpochRunner<'a> {
             );
         }
         let driver = ElasticDriver::new(base, w, trace, cfg.detect, cfg.detector, cfg.seed);
-        let sim = ClusterSim::new(&driver.phys_spec(), w, cfg.seed);
+        let sim = ClusterSim::new(driver.phys_spec(), w, cfg.seed);
         EpochRunner {
             driver,
             sim,
@@ -1076,6 +1118,7 @@ impl<'a> EpochRunner<'a> {
             side: Vec::new(),
             cfg: *cfg,
             w,
+            obs_scratch: Vec::new(),
         }
     }
 
@@ -1197,7 +1240,14 @@ impl<'a> EpochRunner<'a> {
             // the epoch: it is counted by apply_mid_epoch below, but the
             // run stays bit-identical to one without it
             if self.driver.peek_effective(&te) && te.frac > cursor {
-                let t = measure(&mut self.driver, &mut self.sim, system, &local, self.cfg.reps);
+                let t = measure(
+                    &mut self.driver,
+                    &mut self.sim,
+                    system,
+                    &local,
+                    self.cfg.reps,
+                    &mut self.obs_scratch,
+                );
                 let seg = Segment {
                     batch: cur_batch,
                     t_batch: t,
@@ -1366,7 +1416,14 @@ impl<'a> EpochRunner<'a> {
 
         // ---- the remainder of the epoch under the (re-dispatched or
         // re-solved) plan
-        let t = measure(&mut self.driver, &mut self.sim, system, &local, self.cfg.reps);
+        let t = measure(
+            &mut self.driver,
+            &mut self.sim,
+            system,
+            &local,
+            self.cfg.reps,
+            &mut self.obs_scratch,
+        );
         let seg = Segment { batch: cur_batch, t_batch: t, weight: 1.0 - cursor, wasted_secs: 0.0 };
         let dur = convergence::segment_steps(self.w, &seg) * t;
         let taken_before = self.ckpt.taken;

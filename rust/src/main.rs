@@ -70,6 +70,8 @@ USAGE:
   cannikin predict [--cluster a|b|c] [--workload W] --batch B
   cannikin inspect [--artifacts DIR]
   cannikin lint    [PATH] [--json]
+  cannikin fleetgen [--nodes N] [--epochs N] [--seed N] [--hazard spot|flat:R]
+                   [--out-cluster F.json] [--out-trace F.json]
 
 workloads:   imagenet cifar10 librispeech squad movielens
 systems (S): resolved via the system registry — `--system help` lists them
@@ -108,7 +110,13 @@ lint:        static determinism & NaN-safety analysis (rules D1–D6, see
              on any finding.  --json emits machine-readable findings.
              Suppress a finding in place with
              `// lint: allow(<RULE>): <reason>` — reasonless allows are
-             themselves findings (rule A0)";
+             themselves findings (rule A0)
+fleetgen:    deterministic fleet-scale generators: an N-node mixed-device
+             cluster (default 1000) plus a hazard-curve spot-churn trace
+             over --epochs (default 200).  --hazard spot (surging spot
+             market, default) or flat:R (constant per-node-epoch departure
+             rate R).  --out-cluster / --out-trace write JSON files
+             consumable by --cluster-file and --trace";
 
 /// (flag, takes-value) validation spec of one subcommand.
 type FlagSpec = &'static [(&'static str, bool)];
@@ -177,6 +185,14 @@ const PREDICT_FLAGS: FlagSpec = &[
 ];
 const INSPECT_FLAGS: FlagSpec = &[("artifacts", true)];
 const LINT_FLAGS: FlagSpec = &[("json", false)];
+const FLEETGEN_FLAGS: FlagSpec = &[
+    ("nodes", true),
+    ("epochs", true),
+    ("seed", true),
+    ("hazard", true),
+    ("out-cluster", true),
+    ("out-trace", true),
+];
 
 /// Parse `args` against `spec`: leading non-flag tokens become
 /// positionals, `--flag [value]` pairs are validated (unknown flags error
@@ -315,6 +331,10 @@ fn run() -> Result<()> {
             let (pos, flags) = parse_args("lint", rest, LINT_FLAGS, n_pos)?;
             cmd_lint(pos.first().map(|s| s.as_str()), &flags)
         }
+        "fleetgen" => {
+            let (_, flags) = parse_args("fleetgen", rest, FLEETGEN_FLAGS, 0)?;
+            cmd_fleetgen(&flags)
+        }
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -322,7 +342,7 @@ fn run() -> Result<()> {
         other => {
             let subs = [
                 "train", "sim", "elastic", "run", "sched", "compare", "report", "figures",
-                "predict", "inspect", "trace", "lint",
+                "predict", "inspect", "trace", "lint", "fleetgen",
             ];
             let hint = suggest(other, subs)
                 .map(|s| format!(" (did you mean `{s}`?)"))
@@ -571,6 +591,49 @@ fn cmd_elastic(flags: &HashMap<String, String>) -> Result<()> {
     match r.time_to_target {
         Some(t) => println!("{} reached {} in {t:.0} simulated seconds", r.system, w.target),
         None => println!("{} did not reach {} within {epochs} epochs", r.system, w.target),
+    }
+    Ok(())
+}
+
+fn cmd_fleetgen(flags: &HashMap<String, String>) -> Result<()> {
+    let nodes: usize = get(flags, "nodes", "1000").parse()?;
+    let epochs: usize = get(flags, "epochs", "200").parse()?;
+    let seed: u64 = get(flags, "seed", "0").parse()?;
+    let hazard = match get(flags, "hazard", "spot") {
+        "spot" => elastic::HazardCurve::spot(),
+        other => match other.strip_prefix("flat:") {
+            Some(rate) => elastic::HazardCurve::constant(rate.parse()?),
+            None => bail!("unknown hazard {other:?} (expected `spot` or `flat:R`)"),
+        },
+    };
+    let c = elastic::fleet_cluster(nodes, seed);
+    let trace = elastic::fleet_churn(&c, epochs, &hazard, seed)?;
+    let counts = trace.counts();
+    println!(
+        "{}: {} nodes ({:.2}x heterogeneity), {} epochs, {} events \
+         ({} departures, {} joins)",
+        c.name,
+        c.n(),
+        c.heterogeneity(),
+        epochs,
+        trace.len(),
+        counts.departures(),
+        counts.joins
+    );
+    // per-class composition, catalog order
+    for name in ["A100", "V100", "RTX6000", "A5000", "A4000", "P4000"] {
+        let k = c.nodes.iter().filter(|n| n.device.name == name).count();
+        if k > 0 {
+            println!("  {name:<8} x{k}");
+        }
+    }
+    if let Some(path) = flags.get("out-cluster") {
+        c.save(Path::new(path))?;
+        eprintln!("cluster saved to {path}");
+    }
+    if let Some(path) = flags.get("out-trace") {
+        trace.save(Path::new(path))?;
+        eprintln!("trace saved to {path}");
     }
     Ok(())
 }

@@ -26,7 +26,7 @@
 //! The [`FleetLedger`] enforces conservation every round: no fleet node
 //! owned twice, none leaked (modulo exogenous losses and joins).
 
-use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::collections::VecDeque;
 
 use anyhow::{bail, Result};
 
@@ -49,8 +49,11 @@ use crate::util::json::Json;
 /// job's side of the mapping is keyed by its driver's stable worker uids.
 #[derive(Debug)]
 pub struct FleetLedger {
-    /// per job: driver uid → fleet node id
-    owned: Vec<BTreeMap<u64, usize>>,
+    /// per job: `(driver uid, fleet node id)` sorted ascending by uid —
+    /// a packed binary-searchable index (the pre-fleet-scale ledger kept
+    /// per-uid tree nodes and rebuilt a `BTreeSet` of the view every
+    /// round, O(n log n) allocating work per job per round)
+    owned: Vec<Vec<(u64, usize)>>,
     /// per job: uids the arbiter reclaimed (their `NodeLeave` is queued;
     /// they must vanish at the job's next boundary)
     expected: Vec<Vec<u64>>,
@@ -62,24 +65,32 @@ pub struct FleetLedger {
     pub lost: usize,
     /// fleet nodes minted by exogenous trace joins
     pub minted: usize,
+    /// scratch for [`Self::sync`]: the job's current uids, sorted
+    now_sorted: Vec<u64>,
+    /// scratch for [`Self::check`]: every placed fleet id, tagged with
+    /// where it was found (0 = owned, 1 = granted, 2 = free pool)
+    seen: Vec<(usize, u8)>,
 }
 
 impl FleetLedger {
     pub fn new(n_jobs: usize) -> Self {
         FleetLedger {
-            owned: vec![BTreeMap::new(); n_jobs],
+            owned: vec![Vec::new(); n_jobs],
             expected: vec![Vec::new(); n_jobs],
             granted: vec![VecDeque::new(); n_jobs],
             next_id: 0,
             lost: 0,
             minted: 0,
+            now_sorted: Vec::new(),
+            seen: Vec::new(),
         }
     }
 
     /// Register a job's initial uids (fresh fleet ids, in uid order).
     pub fn seed(&mut self, job: usize, uids: &[u64]) {
         for &uid in uids {
-            self.owned[job].insert(uid, self.next_id);
+            let at = self.owned[job].partition_point(|p| p.0 < uid);
+            self.owned[job].insert(at, (uid, self.next_id));
             self.next_id += 1;
         }
     }
@@ -87,7 +98,8 @@ impl FleetLedger {
     /// The arbiter takes `uid` from `job`: un-own it now (its `NodeLeave`
     /// is being injected) and return the fleet id to hand the recipient.
     pub fn reclaim(&mut self, job: usize, uid: u64) -> Option<usize> {
-        let fid = self.owned[job].remove(&uid)?;
+        let at = self.owned[job].binary_search_by_key(&uid, |p| p.0).ok()?;
+        let (_, fid) = self.owned[job].remove(at);
         self.expected[job].push(uid);
         Some(fid)
     }
@@ -101,27 +113,37 @@ impl FleetLedger {
     /// Re-sync one job after an epoch: diff its current uids against the
     /// ledger.  Returns `(lost, joined)` exogenous counts.
     pub fn sync(&mut self, job: usize, now: &[u64]) -> (usize, usize) {
-        let now_set: BTreeSet<u64> = now.iter().copied().collect();
+        self.now_sorted.clear();
+        self.now_sorted.extend_from_slice(now);
+        self.now_sorted.sort_unstable();
         // arbiter-reclaimed uids must have departed at the boundary this
         // epoch opened with (injected events drain first)
         for uid in self.expected[job].drain(..) {
-            assert!(!now_set.contains(&uid), "arbiter NodeLeave for uid {uid} did not apply");
+            assert!(
+                self.now_sorted.binary_search(&uid).is_err(),
+                "arbiter NodeLeave for uid {uid} did not apply"
+            );
         }
-        let gone: Vec<u64> =
-            self.owned[job].keys().filter(|u| !now_set.contains(u)).copied().collect();
-        let lost = gone.len();
-        for uid in gone {
-            self.owned[job].remove(&uid);
-            self.lost += 1;
-        }
+        // vanished uids left the fleet (exogenous loss); retain keeps the
+        // index sorted
+        let now_sorted = &self.now_sorted;
+        let owned = &mut self.owned[job];
+        let mut lost = 0usize;
+        owned.retain(|&(uid, _)| {
+            let alive = now_sorted.binary_search(&uid).is_ok();
+            lost += usize::from(!alive);
+            alive
+        });
+        self.lost += lost;
+        let granted = &mut self.granted[job];
         let mut joined = 0;
         for &uid in now {
-            if self.owned[job].contains_key(&uid) {
+            if owned.binary_search_by_key(&uid, |p| p.0).is_ok() {
                 continue;
             }
             // injected joins apply before trace joins, so pending grants
             // match the earliest new uids; anything left is new hardware
-            let fid = match self.granted[job].pop_front() {
+            let fid = match granted.pop_front() {
                 Some((fid, _dev)) => fid,
                 None => {
                     let fid = self.next_id;
@@ -130,7 +152,8 @@ impl FleetLedger {
                     fid
                 }
             };
-            self.owned[job].insert(uid, fid);
+            let at = owned.partition_point(|p| p.0 < uid);
+            owned.insert(at, (uid, fid));
             joined += 1;
         }
         (lost, joined)
@@ -138,13 +161,14 @@ impl FleetLedger {
 
     /// Fleet id currently mapped to `uid` under `job`.
     pub fn fleet_id(&self, job: usize, uid: u64) -> Option<usize> {
-        self.owned[job].get(&uid).copied()
+        let m = &self.owned[job];
+        m.binary_search_by_key(&uid, |p| p.0).ok().map(|i| m[i].1)
     }
 
-    /// A finished job returns everything: its owned mapping (the caller
-    /// pairs uids with devices via the driver's physical order) and any
-    /// never-materialized grants.
-    pub fn release(&mut self, job: usize) -> (BTreeMap<u64, usize>, Vec<(usize, DeviceProfile)>) {
+    /// A finished job returns everything: its owned mapping (sorted by
+    /// uid; the caller pairs uids with devices via the driver's physical
+    /// order) and any never-materialized grants.
+    pub fn release(&mut self, job: usize) -> (Vec<(u64, usize)>, Vec<(usize, DeviceProfile)>) {
         assert!(self.expected[job].is_empty(), "released a job with a pending reclaim");
         (std::mem::take(&mut self.owned[job]), self.granted[job].drain(..).collect())
     }
@@ -152,24 +176,29 @@ impl FleetLedger {
     /// Conservation invariant: every fleet id lives in exactly one place
     /// (some job's ledger, a pending grant, or the free pool), and the
     /// total accounts for every id ever minted minus exogenous losses.
-    pub fn check(&self, free: &[usize]) {
-        let mut seen = BTreeSet::new();
-        let mut count = 0usize;
+    pub fn check(&mut self, free: &[usize]) {
+        let seen = &mut self.seen;
+        seen.clear();
         for m in &self.owned {
-            for &fid in m.values() {
-                assert!(seen.insert(fid), "fleet node {fid} owned twice");
-                count += 1;
-            }
+            seen.extend(m.iter().map(|&(_, fid)| (fid, 0u8)));
         }
         for q in &self.granted {
-            for &(fid, _) in q {
-                assert!(seen.insert(fid), "fleet node {fid} double-granted");
-                count += 1;
-            }
+            seen.extend(q.iter().map(|&(fid, _)| (fid, 1u8)));
         }
-        for &fid in free {
-            assert!(seen.insert(fid), "fleet node {fid} free while owned");
-            count += 1;
+        seen.extend(free.iter().map(|&fid| (fid, 2u8)));
+        let count = seen.len();
+        // duplicates become adjacent; the tag orders a pair's two homes
+        // the same way the old sequential-insert check visited them, so
+        // the panic message names the same violation
+        seen.sort_unstable();
+        for w in seen.windows(2) {
+            if w[0].0 == w[1].0 {
+                match w[1].1 {
+                    0 => panic!("fleet node {} owned twice", w[1].0),
+                    1 => panic!("fleet node {} double-granted", w[1].0),
+                    _ => panic!("fleet node {} free while owned", w[1].0),
+                }
+            }
         }
         assert_eq!(count + self.lost, self.next_id, "fleet nodes leaked");
     }
@@ -306,6 +335,7 @@ pub fn run_fleet_traced(
     let mut rounds = 0usize;
     let mut preemptions = 0usize;
     let mut grants = 0usize;
+    let mut free_ids: Vec<usize> = Vec::new();
     let round_cap = ctxs.iter().map(|c| c.cfg.max_epochs).max().unwrap_or(0) + 1;
 
     while reports.iter().any(Option::is_none) {
@@ -343,8 +373,8 @@ pub fn run_fleet_traced(
                 let uids: Vec<u64> = runner.driver.uids().to_vec();
                 let (owned, pending) = ledger.release(j);
                 for (i, uid) in uids.iter().enumerate() {
-                    if let Some(&fid) = owned.get(uid) {
-                        free_pool.push((fid, spec_j.nodes[i].device.clone()));
+                    if let Ok(k) = owned.binary_search_by_key(uid, |p| p.0) {
+                        free_pool.push((owned[k].1, spec_j.nodes[i].device.clone()));
                     }
                 }
                 free_pool.extend(pending);
@@ -376,7 +406,7 @@ pub fn run_fleet_traced(
                     j,
                     ctxs[j].weight,
                     &ctxs[j].w,
-                    &spec_j,
+                    spec_j,
                     steppers[j].phi(&ctxs[j].w),
                     &classes,
                 ));
@@ -451,7 +481,8 @@ pub fn run_fleet_traced(
                 }
             }
         }
-        let free_ids: Vec<usize> = free_pool.iter().map(|&(fid, _)| fid).collect();
+        free_ids.clear();
+        free_ids.extend(free_pool.iter().map(|&(fid, _)| fid));
         ledger.check(&free_ids);
         if traced {
             tracer.rec(
@@ -643,7 +674,7 @@ mod tests {
                     // release to the pool and re-seed the job
                     3 if uids[j].len() >= 1 => {
                         let (owned, pending) = l.release(j);
-                        pool.extend(owned.values().copied());
+                        pool.extend(owned.iter().map(|&(_, fid)| fid));
                         pool.extend(pending.iter().map(|&(fid, _)| fid));
                         uids[j].clear();
                         uids[j].push(next_uid);

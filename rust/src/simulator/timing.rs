@@ -52,12 +52,25 @@ pub struct ClusterSim {
     /// per-batch physical jitter of the overlap ratio (0 in noiseless mode)
     phys_gamma_jitter: f64,
     rng: Rng,
+    scratch: StepScratch,
 }
 
 #[derive(Clone, Copy, Debug)]
 struct NodeNoise {
     time_sigma: f64,
     gamma_sigma: f64,
+}
+
+/// Per-step SoA scratch (per-node phase arrays + per-bucket sync ends),
+/// reused across [`ClusterSim::step_into`] calls so the fleet-scale epoch
+/// loop performs no per-batch allocation here.
+#[derive(Default)]
+struct StepScratch {
+    a_time: Vec<f64>,
+    p_time: Vec<f64>,
+    gamma_i: Vec<f64>,
+    gamma_obs: Vec<f64>,
+    sync_end: Vec<f64>,
 }
 
 impl ClusterSim {
@@ -79,6 +92,7 @@ impl ClusterSim {
             noise,
             phys_gamma_jitter: 0.01,
             rng: Rng::new(seed ^ 0x5eed_cafe),
+            scratch: StepScratch::default(),
         }
     }
 
@@ -93,6 +107,7 @@ impl ClusterSim {
             noise,
             phys_gamma_jitter: 0.0,
             rng: Rng::new(0),
+            scratch: StepScratch::default(),
         }
     }
 
@@ -102,6 +117,16 @@ impl ClusterSim {
 
     /// Simulate one synchronized batch with local sizes `b`.
     pub fn step(&mut self, b: &[f64]) -> BatchSim {
+        let mut per_node = Vec::new();
+        let t_batch = self.step_into(b, &mut per_node);
+        BatchSim { t_batch, per_node }
+    }
+
+    /// [`Self::step`] into a caller-owned observation buffer.  All
+    /// intermediate per-node/per-bucket state lives in reused scratch, so
+    /// a warm caller pays zero allocations per batch.  Bit-identical to
+    /// `step` (same RNG draw order, same float op order).
+    pub fn step_into(&mut self, b: &[f64], per_node: &mut Vec<NodeBatchObs>) -> f64 {
         assert_eq!(b.len(), self.n());
         let n = self.n();
         let k = self.n_buckets;
@@ -115,10 +140,15 @@ impl ClusterSim {
         // per-GPU spread).  This is exactly what makes plain averaging
         // across nodes costly and inverse-variance weighting worthwhile
         // (§5.3).
-        let mut a_time = vec![0.0; n];
-        let mut p_time = vec![0.0; n];
-        let mut gamma_i = vec![0.0; n]; // physical, drives bucket timing
-        let mut gamma_obs = vec![0.0; n]; // what the node's agent measures
+        let StepScratch { a_time, p_time, gamma_i, gamma_obs, sync_end } = &mut self.scratch;
+        a_time.clear();
+        a_time.resize(n, 0.0);
+        p_time.clear();
+        p_time.resize(n, 0.0);
+        gamma_i.clear(); // physical, drives bucket timing
+        gamma_i.resize(n, 0.0);
+        gamma_obs.clear(); // what the node's agent measures
+        gamma_obs.resize(n, 0.0);
         for i in 0..n {
             let nz = self.noise[i];
             a_time[i] = self.models[i].a(b[i]) * self.rng.noise(nz.time_sigma);
@@ -138,7 +168,8 @@ impl ClusterSim {
         };
 
         // sequential ring all-reduce per bucket
-        let mut sync_end = vec![0.0; k];
+        sync_end.clear();
+        sync_end.resize(k, 0.0);
         let mut prev_end = 0.0;
         for j in 0..k {
             let all_ready = (0..n).map(|i| ready(i, j)).fold(0.0_f64, f64::max);
@@ -148,24 +179,23 @@ impl ClusterSim {
         }
         let t_batch = sync_end[k - 1];
 
-        let per_node = (0..n)
-            .map(|i| {
-                let sync_start_i = ready(i, 0);
-                NodeBatchObs {
-                    b: b[i],
-                    a_time: a_time[i],
-                    p_time: p_time[i],
-                    gamma_obs: gamma_obs[i],
-                    // node i sees "sync activity" from its first bucket
-                    // ready to the final bucket done — wait-inflated unless
-                    // it is the last node to get ready (paper §4.5)
-                    t_comm_obs: t_batch - sync_start_i,
-                    finish: t_batch,
-                }
-            })
-            .collect();
+        per_node.clear();
+        per_node.extend((0..n).map(|i| {
+            let sync_start_i = ready(i, 0);
+            NodeBatchObs {
+                b: b[i],
+                a_time: a_time[i],
+                p_time: p_time[i],
+                gamma_obs: gamma_obs[i],
+                // node i sees "sync activity" from its first bucket
+                // ready to the final bucket done — wait-inflated unless
+                // it is the last node to get ready (paper §4.5)
+                t_comm_obs: t_batch - sync_start_i,
+                finish: t_batch,
+            }
+        }));
 
-        BatchSim { t_batch, per_node }
+        t_batch
     }
 
     /// Average batch time over `reps` stochastic repetitions.

@@ -114,6 +114,22 @@ pub fn median(xs: &[f64]) -> f64 {
     }
 }
 
+/// [`median`] over a caller-owned buffer, sorting it in place (ascending
+/// under `total_cmp`) — the allocation-free variant for per-epoch hot
+/// paths.  The buffer keeps the same multiset of values, so chained
+/// robust statistics (median → absolute deviations → median) can reuse
+/// one buffer with bit-identical results to the copying [`median`].
+pub fn median_inplace(xs: &mut [f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.sort_unstable_by(|a, b| a.total_cmp(b));
+    let n = xs.len();
+    if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        0.5 * (xs[n / 2 - 1] + xs[n / 2])
+    }
+}
+
 /// Median absolute deviation — the robust scale companion to [`median`]
 /// (σ ≈ 1.4826·MAD for Gaussian data).  The straggler detector uses it to
 /// set drift gates that outliers cannot inflate.
@@ -174,6 +190,56 @@ mod tests {
     fn median_odd_even() {
         assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
         assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn median_inplace_matches_median_bitwise() {
+        for xs in [
+            vec![3.0, 1.0, 2.0],
+            vec![4.0, 1.0, 2.0, 3.0],
+            vec![1.0, f64::NAN, 2.0],
+            vec![-0.0, 0.0, 5.0, -1.0],
+        ] {
+            let want = median(&xs);
+            let mut buf = xs.clone();
+            let got = median_inplace(&mut buf);
+            assert_eq!(got.to_bits(), want.to_bits(), "{xs:?}");
+            // same multiset after the in-place sort
+            let mut a = xs.clone();
+            a.sort_by(|x, y| x.total_cmp(y));
+            assert_eq!(a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                       buf.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+        }
+    }
+
+    /// Lock for the straggler detector's in-place baseline: the chained
+    /// median → |x − m| → median over ONE reused buffer must reproduce
+    /// the copying `median`/`mad` pair to the bit, on adversarial inputs
+    /// (ties, NaN, ±0.0, singletons).  This is the equivalence the
+    /// allocation-free detector hot path rests on.
+    #[test]
+    fn chained_inplace_median_mad_matches_copying_mad_bitwise() {
+        let mut rng = crate::util::rng::Rng::new(0xBA5E11E);
+        for case in 0..200 {
+            let len = 1 + (rng.below(16) as usize);
+            let mut xs: Vec<f64> = (0..len).map(|_| (rng.below(8) as f64) * 0.25).collect();
+            if case % 7 == 0 {
+                xs[0] = f64::NAN;
+            }
+            if case % 11 == 0 && len > 1 {
+                xs[1] = -0.0;
+            }
+            let want_m = median(&xs);
+            let want_spread = mad(&xs);
+            let mut buf = xs.clone();
+            let m = median_inplace(&mut buf);
+            for x in buf.iter_mut() {
+                *x = (*x - m).abs();
+            }
+            let spread = median_inplace(&mut buf);
+            assert_eq!(m.to_bits(), want_m.to_bits(), "{xs:?}");
+            assert_eq!(spread.to_bits(), want_spread.to_bits(), "{xs:?}");
+        }
     }
 
     /// D2 regression: NaN samples (a node reporting a diverged timing)

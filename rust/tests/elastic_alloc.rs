@@ -1,0 +1,134 @@
+//! Steady-state allocation audit for the fleet-scale elastic hot paths
+//! (ISSUE 10 satellites): membership event apply, straggler-detector
+//! end-of-epoch, and ledger round diffing.
+//!
+//! The scale-revealed regressions this locks out:
+//! * `ElasticCluster::apply` used to clone the full `removed` set per
+//!   event and rebuild `nominal` with per-node `DeviceProfile` clones —
+//!   O(n) heap work per event.  Now the per-event allocation count must
+//!   be independent of the cluster size.
+//! * `StragglerDetector::end_epoch` used to collect fresh `Vec<f64>`s per
+//!   node per epoch; with the scratch buffers hoisted into `NodeState`
+//!   the steady state (constant plan, no verdicts) is allocation-free.
+//! * `FleetLedger::sync`/`check` used to rebuild `BTreeSet`s per round;
+//!   the sorted-vec index plus reusable scratches make a steady round
+//!   allocation-free.
+//!
+//! Keep this file to a SINGLE #[test]: the counter is process-global, and
+//! a concurrently running test would pollute the measured windows.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use cannikin::cluster::devices;
+use cannikin::elastic::{
+    fleet_cluster, ClusterEvent, DetectorConfig, ElasticCluster, StragglerDetector,
+};
+use cannikin::sched::FleetLedger;
+use cannikin::simulator::timing::NodeBatchObs;
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Allocations for a fixed number of preempt/join pairs applied to an
+/// `n`-node view, measured after one warm cycle has grown every buffer.
+fn apply_allocs(n: usize, pairs: usize) -> usize {
+    let c = fleet_cluster(n, 1);
+    let mut ec = ElasticCluster::new(&c);
+    let mut cycle = |count: bool| {
+        let before = ALLOC_CALLS.load(Ordering::Relaxed);
+        for _ in 0..pairs {
+            ec.apply(&ClusterEvent::Preempt { node: 0 }).unwrap();
+            ec.apply(&ClusterEvent::NodeJoin { device: devices::a100(), uid: None }).unwrap();
+        }
+        if count {
+            ALLOC_CALLS.load(Ordering::Relaxed) - before
+        } else {
+            0
+        }
+    };
+    cycle(false); // warm-up: capacities reach steady state
+    cycle(true)
+}
+
+#[test]
+fn fleet_hot_paths_are_allocation_disciplined() {
+    // ---- membership: per-event allocations independent of cluster size.
+    // The pre-fix behavior (per-event O(n) clones) would make the 2048-
+    // node count ~32x the 64-node count; post-fix they are equal.
+    let pairs = 64;
+    let small = apply_allocs(64, pairs);
+    let big = apply_allocs(2048, pairs);
+    assert!(
+        big <= small + 8,
+        "event-apply allocations must not scale with cluster size: \
+         {small} allocs at n=64 vs {big} at n=2048 ({pairs} preempt/join pairs)"
+    );
+
+    // ---- detector: constant plan, healthy fleet — after the warm-up has
+    // grown the per-node scratches, observe + end_epoch touch no heap
+    let n = 64;
+    let obs: Vec<NodeBatchObs> = (0..n)
+        .map(|i| NodeBatchObs {
+            b: 32.0,
+            a_time: 0.010 + 1e-5 * (i % 7) as f64,
+            p_time: 0.020,
+            gamma_obs: 0.5,
+            t_comm_obs: 0.005,
+            finish: 0.035,
+        })
+        .collect();
+    let mut det = StragglerDetector::new(n, DetectorConfig::default());
+    for epoch in 0..48 {
+        det.observe(&obs);
+        assert!(det.end_epoch(epoch).is_empty(), "healthy fleet must stay quiet");
+    }
+    let before = ALLOC_CALLS.load(Ordering::Relaxed);
+    for epoch in 48..80 {
+        det.observe(&obs);
+        assert!(det.end_epoch(epoch).is_empty());
+    }
+    let det_allocs = ALLOC_CALLS.load(Ordering::Relaxed) - before;
+    assert_eq!(
+        det_allocs, 0,
+        "steady-state detector epochs must be allocation-free ({det_allocs} allocs in 32 epochs)"
+    );
+
+    // ---- ledger: steady membership round (sync + conservation check)
+    let uids: Vec<u64> = (0..256).collect();
+    let mut ledger = FleetLedger::new(2);
+    ledger.seed(0, &uids);
+    ledger.sync(0, &uids); // warm-up: scratches reach capacity
+    ledger.check(&[]);
+    let before = ALLOC_CALLS.load(Ordering::Relaxed);
+    for _ in 0..32 {
+        let (lost, grants) = ledger.sync(0, &uids);
+        assert_eq!((lost, grants), (0, 0));
+        ledger.check(&[]);
+    }
+    let ledger_allocs = ALLOC_CALLS.load(Ordering::Relaxed) - before;
+    assert_eq!(
+        ledger_allocs, 0,
+        "steady-state ledger rounds must be allocation-free ({ledger_allocs} allocs in 32 rounds)"
+    );
+}

@@ -615,3 +615,40 @@ fn tracing_does_not_perturb_the_run() {
     stripped.driver_stats = None;
     assert_eq!(stripped, untraced, "tracing must not perturb the run");
 }
+
+/// Acceptance (ISSUE 10): a paper-scale fleet (10k generated nodes under
+/// generated spot churn) runs through the unified driver and is
+/// bit-identical per seed — two fresh runs agree on every report field,
+/// and the final simulated clock matches to the bit.
+#[test]
+fn fleet_scale_10k_node_run_is_bit_identical_per_seed() {
+    let c = elastic::fleet_cluster(10_000, 5);
+    assert_eq!(c.n(), 10_000);
+    let trace = elastic::fleet_churn(&c, 12, &elastic::HazardCurve::spot(), 5)
+        .expect("spot hazard is in-domain");
+    assert!(trace.counts().departures() > 0, "surge epochs must churn a 10k fleet");
+    let run = |seed: u64| {
+        let w = workload::cifar10();
+        let mut sys = build("even", &c, &w);
+        let cfg = ScenarioConfig {
+            max_epochs: 12,
+            seed,
+            detect: DetectionMode::Observed,
+            ..Default::default()
+        };
+        api::run(&c, &w, &trace, sys.as_mut(), &cfg)
+    };
+    let a = run(5);
+    let b = run(5);
+    assert_eq!(a, b, "same seed must reproduce the run exactly");
+    let clock = |r: &RunReport| r.rows.last().expect("12 epochs ran").wall_secs;
+    assert_eq!(clock(&a).to_bits(), clock(&b).to_bits(), "simulated clock must match bitwise");
+    assert!(a.events_applied > 0, "the generated churn must actually apply");
+    // and the seed genuinely matters (the determinism is not vacuous)
+    let c2 = run(6);
+    assert_ne!(
+        clock(&a).to_bits(),
+        clock(&c2).to_bits(),
+        "different seeds must diverge"
+    );
+}
